@@ -1,0 +1,71 @@
+//! Table-IV-style comparison: run all eight study partitioners on one
+//! instance/topology and print exact cut / communication volume /
+//! imbalance / time rows.
+//!
+//! Run: `cargo run --release --example compare_partitioners -- \
+//!         --family tri2d --n 20000 --k 48 --topo topo2 --fast-speed 16 --fast-mem 13.8`
+
+use hetpart::coordinator::{instance, run_one};
+use hetpart::gen::Family;
+use hetpart::partitioners::ALL_NAMES;
+use hetpart::topology::{topo1, topo2, Pu, Topo1Spec, Topo2Spec, Topology};
+use hetpart::util::cli::Args;
+use hetpart::util::fmt_f64;
+use hetpart::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let fam: String = args.get("family", "tri2d".to_string());
+    let family = Family::parse(&fam).expect("unknown --family");
+    let n = args.get("n", 10_000usize);
+    let k = args.get("k", 24usize);
+    let seed = args.get("seed", 1u64);
+    let (name, g) = instance(family, n, seed);
+
+    let fast = Pu {
+        speed: args.get("fast-speed", 16.0),
+        memory: args.get("fast-mem", 13.8),
+    };
+    let kind: String = args.get("topo", "topo1".to_string());
+    let num_fast = args.get("num-fast", (k / 12).max(1));
+    let topo: Topology = match kind.as_str() {
+        "topo1" => topo1(Topo1Spec { k, num_fast, fast }),
+        "topo2" => topo2(Topo2Spec { k, num_fast, fast }),
+        _ => Topology::homogeneous(k, 1.0, 2.0),
+    };
+    println!(
+        "instance {name}: n={} m={} | topology {} (k={k})",
+        g.n(),
+        g.m(),
+        topo.label
+    );
+
+    let mut t = Table::new(vec![
+        "algo", "finalCut", "maxCommVol", "imbalance", "ldhtObj", "timePart(s)",
+    ]);
+    let mut best_cut = f64::INFINITY;
+    let mut rows = Vec::new();
+    for algo in ALL_NAMES {
+        match run_one(&name, &g, &topo, algo, 0.03, seed) {
+            Ok((r, _)) => {
+                best_cut = best_cut.min(r.cut);
+                rows.push(r);
+            }
+            Err(e) => eprintln!("WARN {algo}: {e}"),
+        }
+    }
+    for r in &rows {
+        let marker = if r.cut == best_cut { " *" } else { "" };
+        t.row(vec![
+            format!("{}{marker}", r.algo),
+            fmt_f64(r.cut),
+            fmt_f64(r.max_comm_volume),
+            format!("{:+.3}", r.imbalance),
+            format!("{:.3}", r.ldht_objective),
+            format!("{:.3}", r.time_partition),
+        ]);
+    }
+    print!("{}", t.to_text());
+    println!("(* = best cut; paper Table IV marks the best in bold)");
+    Ok(())
+}

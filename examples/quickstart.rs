@@ -1,0 +1,46 @@
+//! Quickstart: generate a mesh, model a heterogeneous system, compute
+//! optimal block sizes with Algorithm 1, partition, and print quality
+//! metrics — the library's 30-line tour.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hetpart::blocksizes::block_sizes;
+use hetpart::gen::rdg_2d;
+use hetpart::partition::metrics;
+use hetpart::partitioners::{by_name, Ctx};
+use hetpart::topology::{topo1, Pu, Topo1Spec};
+
+fn main() -> anyhow::Result<()> {
+    // A random Delaunay mesh of ~10k vertices (Table II's rdg_2d family).
+    let g = rdg_2d(10_000, 42);
+    println!("graph: n={} m={} (avg degree {:.2})", g.n(), g.m(), 2.0 * g.m() as f64 / g.n() as f64);
+
+    // A TOPO1-style system: 24 PUs, 4 of them 8x faster with more memory.
+    let topo = topo1(Topo1Spec {
+        k: 24,
+        num_fast: 4,
+        fast: Pu { speed: 8.0, memory: 8.5 },
+    })
+    .scaled_for_load(g.n() as f64, hetpart::blocksizes::TABLE3_FILL);
+
+    // Phase 1 (paper §IV): optimal target block sizes.
+    let bs = block_sizes(g.n() as f64, &topo)?;
+    println!(
+        "targets: fast block {:.0} vertices, slow block {:.0} (ratio {:.2})",
+        bs.tw[0],
+        bs.tw[23],
+        bs.ratio(0, 23)
+    );
+
+    // Phase 2: feed the targets to a partitioner.
+    let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.03, seed: 1 };
+    for algo in ["zSFC", "geoKM", "geoRef"] {
+        let p = by_name(algo).unwrap().partition(&ctx)?;
+        let m = metrics(&g, &p, &bs.tw);
+        println!(
+            "{algo:>8}: cut={:<6.0} maxCommVol={:<5.0} imbalance={:+.3}",
+            m.cut, m.max_comm_volume, m.imbalance
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Render benchmark CSVs from results/ as ASCII charts.
+
+The bench harness writes one CSV per paper table/figure; this renders
+quick terminal views of them without any plotting dependency (the image
+is offline). Examples:
+
+    python python/analysis.py results/fig2a.csv --value rel_cut --group algo
+    python python/analysis.py results/fig5.csv --value 'simCG_t/iter(ms)' --group algo
+    python python/analysis.py results/table3.csv
+"""
+
+import argparse
+import csv
+import sys
+from collections import defaultdict
+
+
+def read_rows(path):
+    with open(path, newline="") as f:
+        return list(csv.DictReader(f))
+
+
+def geomean(xs):
+    import math
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def bar_chart(items, width=48):
+    """items: list of (label, value). Renders horizontal bars."""
+    if not items:
+        return "(no data)"
+    vmax = max(v for _, v in items) or 1.0
+    lw = max(len(l) for l, _ in items)
+    lines = []
+    for label, v in items:
+        n = int(round(width * v / vmax))
+        lines.append(f"{label:<{lw}}  {'#' * n} {v:.3g}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("csv_path")
+    ap.add_argument("--value", help="numeric column to aggregate")
+    ap.add_argument("--group", help="column to group by (geomean per group)")
+    ap.add_argument("--width", type=int, default=48)
+    args = ap.parse_args()
+
+    rows = read_rows(args.csv_path)
+    if not rows:
+        print("empty CSV", file=sys.stderr)
+        return 1
+
+    if not args.value or not args.group:
+        # Plain aligned dump.
+        cols = list(rows[0].keys())
+        widths = {c: max(len(c), *(len(r[c]) for r in rows)) for c in cols}
+        print("  ".join(f"{c:<{widths[c]}}" for c in cols))
+        for r in rows:
+            print("  ".join(f"{r[c]:<{widths[c]}}" for c in cols))
+        return 0
+
+    groups = defaultdict(list)
+    for r in rows:
+        try:
+            groups[r[args.group]].append(float(r[args.value]))
+        except (ValueError, KeyError):
+            continue
+    items = sorted(
+        ((g, geomean(vs)) for g, vs in groups.items()), key=lambda kv: kv[1]
+    )
+    print(f"{args.csv_path}: geomean of {args.value} by {args.group}")
+    print(bar_chart(items, args.width))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+  spmv_{n}x{w}.hlo.txt      — one SpMV       (4 inputs, 1-tuple output)
+  cg_{n}x{w}_i{it}.hlo.txt  — full CG scan   (4 inputs, 2-tuple output)
+  manifest.txt              — one line per artifact: name n w [iters]
+
+Run via `make artifacts`; python never runs on the request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The AOT shape set. Row counts are multiples of BLOCK_ROWS (1024) so the
+# Pallas grid divides evenly; widths cover 2-D (w=8) and 3-D (w=16) meshes.
+SPMV_SHAPES = [(4096, 8), (16384, 8), (16384, 16), (65536, 8)]
+CG_SHAPES = [(16384, 8, 64)]  # (n, w, iters)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spmv(n: int, w: int) -> str:
+    # Donating x would let XLA alias the output buffer, but the rust
+    # driver reuses inputs across calls, so no donation for spmv.
+    # block_rows = n: whole-array Pallas tile for the CPU-interpret
+    # artifact (the grid loop costs 12x on XLA-CPU; TPU lowering would
+    # pass the VMEM-sized default instead — see model.spmv).
+    fn = lambda values, cols, diag, x: model.spmv(values, cols, diag, x, block_rows=n)
+    lowered = jax.jit(fn).lower(*model.spmv_shapes(n, w))
+    return to_hlo_text(lowered)
+
+
+def lower_cg(n: int, w: int, iters: int) -> str:
+    fn = lambda values, cols, diag, b: model.cg_run(
+        values, cols, diag, b, iters, block_rows=n
+    )
+    lowered = jax.jit(fn).lower(*model.cg_shapes(n, w))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest spmv shape (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    spmv_shapes = SPMV_SHAPES[:1] if args.quick else SPMV_SHAPES
+    for n, w in spmv_shapes:
+        name = f"spmv_{n}x{w}"
+        text = lower_spmv(n, w)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {n} {w}")
+        print(f"wrote {path} ({len(text)} chars)")
+    if not args.quick:
+        for n, w, iters in CG_SHAPES:
+            name = f"cg_{n}x{w}_i{iters}"
+            text = lower_cg(n, w, iters)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{name} {n} {w} {iters}")
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the L1 kernel and the L2 CG model.
+
+Everything here is deliberately naive: dense matrices and textbook CG.
+pytest compares the Pallas kernel and the lowered artifacts against these.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(values, cols, x):
+    """Reference ELL SpMV: y[i] = sum_j values[i,j] * x[cols[i,j]]."""
+    return jnp.sum(values * x[cols], axis=1)
+
+
+def ell_to_dense(values, cols, n):
+    """Expand an ELL matrix to dense (for small-shape cross-checks).
+
+    Padding entries (value 0) contribute nothing regardless of their
+    column index, matching the kernel's convention.
+    """
+    a = jnp.zeros((n, n), dtype=values.dtype)
+    rows = jnp.arange(n)[:, None] * jnp.ones_like(cols)
+    return a.at[rows.reshape(-1), cols.reshape(-1)].add(values.reshape(-1))
+
+
+def spmv_dense_ref(values, cols, diag, x):
+    """Full shifted-Laplacian SpMV via a dense matrix."""
+    n = x.shape[0]
+    a = ell_to_dense(values, cols, n) + jnp.diag(diag)
+    return a @ x
+
+
+def cg_ref(values, cols, diag, b, iters):
+    """Textbook conjugate gradients on A = diag + ELL, fixed iterations.
+
+    Returns (x, residual_norms) with residual_norms of length `iters`.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = jnp.dot(r, r)
+    norms = []
+    tiny = jnp.asarray(1e-30, b.dtype)
+    for _ in range(iters):
+        ap = diag * p + spmv_ell_ref(values, cols, p)
+        alpha = rs / jnp.maximum(jnp.dot(p, ap), tiny)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, tiny)
+        p = r + beta * p
+        rs = rs_new
+        norms.append(jnp.sqrt(rs_new))
+    return x, jnp.stack(norms)

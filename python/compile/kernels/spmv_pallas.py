@@ -1,0 +1,95 @@
+"""L1 — Pallas blocked-ELL SpMV kernel.
+
+The application hot-spot of the paper's benchmarks (SpMV inside CG,
+§VI-a), written as a Pallas kernel with a TPU-shaped layout:
+
+* **ELL format**: the shifted-Laplacian rows are stored as dense
+  ``values[n, w]`` / ``cols[n, w]`` with zero-padding — mesh graphs have
+  bounded degree, so the padding waste is small (w = 8 for 2-D meshes,
+  16 for 3-D). Dense tiles are what the TPU's VPU (8×128 lanes) wants;
+  this is the TPU analogue of a GPU warp-per-row CSR kernel (see
+  DESIGN.md §Hardware-Adaptation).
+* **BlockSpec schedule**: the grid walks row tiles of ``BLOCK_ROWS``;
+  ``values``/``cols`` stream tile-by-tile through VMEM while ``x`` stays
+  resident (the gather target must be fully addressable). With the
+  largest AOT shape (n = 65536, f32) x occupies 256 KiB — comfortably
+  inside the ~16 MiB VMEM budget; a values/cols tile is
+  1024×8×4 B = 32 KiB each.
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls, so the kernel is lowered to plain HLO. Real-TPU
+  performance is *estimated* from the VMEM footprint in DESIGN.md; the
+  interpret path provides the numerics for every test and artifact.
+
+The diagonal is kept separate (``y = diag·x + ELL(values, cols)·x``):
+the rank-1 diagonal product fuses into the surrounding XLA graph for
+free and halves the ELL width needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 1024×8 f32 tiles = 32 KiB per operand in VMEM.
+BLOCK_ROWS = 1024
+
+
+def _spmv_ell_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    """One row-tile: o[i] = Σ_j vals[i, j] · x[cols[i, j]]."""
+    vals = vals_ref[...]  # (bn, w)
+    cols = cols_ref[...]  # (bn, w) int32
+    x = x_ref[...]  # (n,) resident in VMEM
+    o_ref[...] = jnp.sum(vals * x[cols], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(values, cols, x, *, block_rows: int = BLOCK_ROWS):
+    """ELL SpMV via the Pallas kernel (off-diagonal part only).
+
+    Args:
+      values: (n, w) float32 — padded row entries (0 in padding slots).
+      cols:   (n, w) int32   — column of each entry (0 in padding slots;
+              padding values are 0 so the gathered x contributes nothing).
+      x:      (n,) float32.
+
+    Returns: (n,) float32 — ``A_ell @ x``.
+    """
+    n, w = values.shape
+    bn = min(block_rows, n)
+    if n % bn != 0:
+        # AOT shapes are multiples of BLOCK_ROWS; tests may use odd sizes.
+        bn = _largest_divisor(n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(values, cols, x)
+
+
+def _largest_divisor(n: int, at_most: int) -> int:
+    d = min(at_most, n)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def vmem_footprint_bytes(n: int, w: int, block_rows: int = BLOCK_ROWS) -> dict:
+    """Static VMEM budget estimate for DESIGN.md §Perf (no TPU here, so
+    the schedule is validated by arithmetic, not wallclock)."""
+    bn = min(block_rows, n)
+    return {
+        "values_tile": bn * w * 4,
+        "cols_tile": bn * w * 4,
+        "x_resident": n * 4,
+        "out_tile": bn * 4,
+        "total": bn * w * 8 + n * 4 + bn * 4,
+    }

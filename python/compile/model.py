@@ -1,0 +1,85 @@
+"""L2 — the JAX compute graph the rust coordinator executes via PJRT.
+
+Two entry points, both calling the L1 Pallas kernel:
+
+* :func:`spmv`: one shifted-Laplacian SpMV ``y = diag·x + A_ell·x`` —
+  the per-block hot path of the distributed CG driver (rust runs one of
+  these per PU per iteration, on that PU's padded row block).
+* :func:`cg_run`: a whole conjugate-gradient solve as a single fused
+  ``lax.scan`` — `iters` CG steps with no host round-trips, used by the
+  end-to-end example for the single-executable baseline and by L2 perf
+  measurements. Buffers are donated at lowering time (see aot.py) so XLA
+  reuses the state in place.
+
+Python never runs at request time: `aot.py` lowers these once to HLO
+text; the rust runtime compiles and executes them through the PJRT C
+API.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.spmv_pallas import spmv_ell
+
+
+def spmv(values, cols, diag, x, block_rows=None):
+    """Shifted-Laplacian SpMV: ``(diag(d) + ELL) @ x``.
+
+    `block_rows` picks the Pallas tile height. On real TPUs the default
+    (1024) keeps tiles inside VMEM; for the CPU-interpret artifacts the
+    grid loop lowers to a serialized dynamic-slice `while`, so the AOT
+    path uses one whole-array tile (block_rows = n) — measured 12x faster
+    on XLA-CPU with identical numerics (EXPERIMENTS.md §Perf).
+    """
+    br = block_rows if block_rows is not None else 1024
+    return diag * x + spmv_ell(values, cols, x, block_rows=br)
+
+
+def cg_run(values, cols, diag, b, iters: int, block_rows=None):
+    """`iters` steps of conjugate gradients from x0 = 0.
+
+    Returns (x, residual_norms[iters]).
+    """
+
+    tiny = jnp.asarray(1e-30, b.dtype)
+
+    def step(state, _):
+        # Guarded divisions: a fixed-length scan keeps stepping after
+        # convergence, where rs and p'Ap underflow to 0 (0/0 = NaN).
+        x, r, p, rs = state
+        ap = spmv(values, cols, diag, p, block_rows=block_rows)
+        alpha = rs / jnp.maximum(jnp.dot(p, ap), tiny)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, tiny)
+        p = r + beta * p
+        return (x, r, p, rs_new), jnp.sqrt(rs_new)
+
+    x0 = jnp.zeros_like(b)
+    init = (x0, b, b, jnp.dot(b, b))
+    (x, _r, _p, _rs), norms = lax.scan(step, init, None, length=iters)
+    return x, norms
+
+
+def spmv_shapes(n: int, w: int):
+    """Example-argument shapes for lowering `spmv`."""
+    f = jax.ShapeDtypeStruct
+    return (
+        f((n, w), jnp.float32),   # values
+        f((n, w), jnp.int32),     # cols
+        f((n,), jnp.float32),     # diag
+        f((n,), jnp.float32),     # x
+    )
+
+
+def cg_shapes(n: int, w: int):
+    """Example-argument shapes for lowering `cg_run` (iters is static)."""
+    f = jax.ShapeDtypeStruct
+    return (
+        f((n, w), jnp.float32),
+        f((n, w), jnp.int32),
+        f((n,), jnp.float32),
+        f((n,), jnp.float32),     # b
+    )

@@ -1,0 +1,70 @@
+"""Tests for the results-CSV analysis helper."""
+
+import subprocess
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import analysis
+
+
+class TestHelpers:
+    def test_geomean(self):
+        assert abs(analysis.geomean([1.0, 4.0]) - 2.0) < 1e-12
+        assert abs(analysis.geomean([2.0, 2.0]) - 2.0) < 1e-12
+
+    def test_geomean_skips_nonpositive(self):
+        assert abs(analysis.geomean([0.0, 4.0]) - 4.0) < 1e-12
+
+    def test_bar_chart_shape(self):
+        out = analysis.bar_chart([("a", 1.0), ("bb", 2.0)], width=10)
+        lines = out.splitlines()
+        assert len(lines) == 2
+        assert lines[1].count("#") == 10  # max value gets full width
+        assert lines[0].count("#") == 5
+
+
+class TestCli:
+    @pytest.fixture
+    def sample_csv(self, tmp_path):
+        p = tmp_path / "fig.csv"
+        p.write_text(
+            "topology,algo,rel_cut\n"
+            "t1,geoKM,1.0\nt1,zSFC,1.4\nt2,geoKM,1.0\nt2,zSFC,1.2\n"
+        )
+        return p
+
+    def test_grouped_chart(self, sample_csv):
+        r = subprocess.run(
+            [
+                sys.executable,
+                os.path.join(os.path.dirname(__file__), "..", "analysis.py"),
+                str(sample_csv),
+                "--value",
+                "rel_cut",
+                "--group",
+                "algo",
+            ],
+            capture_output=True,
+            text=True,
+        )
+        assert r.returncode == 0
+        assert "geoKM" in r.stdout and "zSFC" in r.stdout
+        # zSFC's bar longer than geoKM's.
+        lines = {l.split()[0]: l.count("#") for l in r.stdout.splitlines() if "#" in l}
+        assert lines["zSFC"] > lines["geoKM"]
+
+    def test_plain_dump(self, sample_csv):
+        r = subprocess.run(
+            [
+                sys.executable,
+                os.path.join(os.path.dirname(__file__), "..", "analysis.py"),
+                str(sample_csv),
+            ],
+            capture_output=True,
+            text=True,
+        )
+        assert r.returncode == 0
+        assert "topology" in r.stdout

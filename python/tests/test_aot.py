@@ -1,0 +1,63 @@
+"""AOT lowering pipeline tests: manifest format, HLO-text properties,
+and the interchange constraints the rust loader depends on."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+class TestHloText:
+    def test_spmv_text_is_parseable_hlo(self):
+        text = aot.lower_spmv(4096, 8)
+        # Structural properties the rust loader relies on.
+        assert text.startswith("HloModule")
+        assert "ROOT" in text
+        # One tuple output (return_tuple=True).
+        assert "tuple(" in text.replace(" ", "")
+
+    def test_no_serialized_proto_artifacts(self):
+        # The interchange is text; 64-bit-id protos would break
+        # xla_extension 0.5.1 (see /opt/xla-example/README.md).
+        text = aot.lower_spmv(4096, 8)
+        assert not text.startswith(b"\x08".decode("latin1"))
+
+    def test_shapes_embedded(self):
+        text = aot.lower_spmv(4096, 8)
+        assert "f32[4096,8]" in text
+        assert "s32[4096,8]" in text
+        assert "f32[4096]" in text
+
+    def test_cg_contains_loop_and_both_outputs(self):
+        text = aot.lower_cg(4096, 8, 16)
+        assert "while" in text
+        # Output tuple: x (n) and norms (iters).
+        assert "f32[4096]" in text
+        assert "f32[16]" in text
+
+    def test_spmv_shape_set_is_pallas_compatible(self):
+        # AOT row counts must divide by the kernel grid (whole-array tile
+        # ⇒ always true, but keep the invariant if tiles return).
+        for n, w in aot.SPMV_SHAPES:
+            assert n >= 1 and w >= 1
+            assert n % 1024 == 0, f"{n} not a BLOCK_ROWS multiple"
+
+
+class TestManifest:
+    def test_quick_run_writes_manifest(self, tmp_path):
+        out = tmp_path / "arts"
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        manifest = (out / "manifest.txt").read_text().strip().splitlines()
+        assert len(manifest) == 1
+        name, n, w = manifest[0].split()
+        assert name == f"spmv_{n}x{w}"
+        assert (out / f"{name}.hlo.txt").exists()
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert text.startswith("HloModule")

@@ -1,0 +1,110 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+The Pallas kernel runs under interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); hypothesis sweeps shapes, widths and degree
+distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ell_to_dense, spmv_dense_ref, spmv_ell_ref
+from compile.kernels.spmv_pallas import spmv_ell, vmem_footprint_bytes
+
+
+def random_ell(rng, n, w, frac_filled=0.7, dtype=np.float32):
+    """Random padded ELL matrix: ~frac_filled of slots used."""
+    values = rng.standard_normal((n, w)).astype(dtype)
+    cols = rng.integers(0, n, size=(n, w)).astype(np.int32)
+    mask = rng.random((n, w)) < frac_filled
+    values = np.where(mask, values, 0.0).astype(dtype)
+    cols = np.where(mask, cols, 0).astype(np.int32)
+    return jnp.asarray(values), jnp.asarray(cols)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("n,w", [(8, 2), (64, 4), (256, 8), (1000, 7), (2048, 16)])
+    def test_matches_ref(self, n, w):
+        rng = np.random.default_rng(n * 31 + w)
+        values, cols = random_ell(rng, n, w)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        got = spmv_ell(values, cols, x)
+        want = spmv_ell_ref(values, cols, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_dense(self):
+        n, w = 64, 4
+        rng = np.random.default_rng(7)
+        values, cols = random_ell(rng, n, w)
+        diag = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        got = diag * x + spmv_ell(values, cols, x)
+        want = spmv_dense_ref(values, cols, diag, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_padding_is_inert(self):
+        # Fully padded rows must produce exactly 0.
+        n, w = 32, 4
+        values = jnp.zeros((n, w), jnp.float32)
+        cols = jnp.zeros((n, w), jnp.int32)
+        x = jnp.ones(n, jnp.float32) * 3.0
+        got = spmv_ell(values, cols, x)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros(n, np.float32))
+
+    def test_identity_rows(self):
+        # One entry per row pointing at itself with value 1 → y = x.
+        n, w = 128, 3
+        values = jnp.zeros((n, w), jnp.float32).at[:, 0].set(1.0)
+        cols = jnp.zeros((n, w), jnp.int32).at[:, 0].set(jnp.arange(n, dtype=jnp.int32))
+        x = jnp.arange(n, dtype=jnp.float32)
+        got = spmv_ell(values, cols, x)
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(4, 300),
+        w=st.integers(1, 12),
+        frac=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, w, frac, seed):
+        rng = np.random.default_rng(seed)
+        values, cols = random_ell(rng, n, w, frac_filled=frac)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        got = spmv_ell(values, cols, x)
+        want = spmv_ell_ref(values, cols, x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(block=st.sampled_from([1, 2, 8, 64, 1024]))
+    def test_block_size_invariance(self, block):
+        # The grid decomposition must not change the numbers.
+        n, w = 256, 6
+        rng = np.random.default_rng(3)
+        values, cols = random_ell(rng, n, w)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        got = spmv_ell(values, cols, x, block_rows=block)
+        want = spmv_ell(values, cols, x, block_rows=n)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_ell_to_dense_roundtrip(self):
+        n, w = 16, 3
+        rng = np.random.default_rng(11)
+        values, cols = random_ell(rng, n, w, frac_filled=1.0)
+        dense = ell_to_dense(values, cols, n)
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        np.testing.assert_allclose(
+            dense @ x, spmv_ell_ref(values, cols, x), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestVmemBudget:
+    def test_largest_aot_shape_fits(self):
+        # DESIGN.md §Hardware-Adaptation: tiles + resident x within VMEM.
+        fp = vmem_footprint_bytes(65536, 8)
+        assert fp["values_tile"] == 32 * 1024
+        assert fp["x_resident"] == 256 * 1024
+        assert fp["total"] < 16 * 1024 * 1024  # TPU VMEM budget

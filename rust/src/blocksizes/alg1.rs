@@ -1,0 +1,408 @@
+//! Algorithm 1: calculate target block sizes for the LDHT problem.
+
+use crate::topology::Topology;
+use anyhow::{bail, Result};
+
+/// Result of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct BlockSizes {
+    /// Target weight per PU, in the original PU order (`tw(b_i)`).
+    pub tw: Vec<f64>,
+    /// Which PUs ended saturated (assigned their full memory capacity).
+    pub saturated: Vec<bool>,
+    /// The achieved objective `max_i tw(b_i)/c_s(p_i)`.
+    pub max_ratio: f64,
+}
+
+impl BlockSizes {
+    /// Total assigned load (= n when feasible).
+    pub fn total(&self) -> f64 {
+        self.tw.iter().sum()
+    }
+
+    /// tw(fast)/tw(slow) style ratio between two PU indices (Table III's
+    /// last column).
+    pub fn ratio(&self, fast: usize, slow: usize) -> f64 {
+        self.tw[fast] / self.tw[slow]
+    }
+}
+
+/// Feasibility: the load must fit in total memory, and (for a meaningful
+/// LDHT instance) at least one PU must end non-saturated.
+pub fn check_feasible(n: f64, topo: &Topology) -> Result<()> {
+    if n <= 0.0 {
+        bail!("load must be positive, got {n}");
+    }
+    let mcap = topo.total_memory();
+    if n > mcap {
+        bail!("infeasible: load {n} exceeds total memory {mcap}");
+    }
+    if topo.pus.iter().any(|p| p.speed <= 0.0 || p.memory <= 0.0) {
+        bail!("PU speeds and memories must be positive");
+    }
+    Ok(())
+}
+
+/// **Algorithm 1** (paper §IV). Computes the optimal `tw(b_i)` for load
+/// `n` on `topo`, in `O(k log k)`.
+pub fn block_sizes(n: f64, topo: &Topology) -> Result<BlockSizes> {
+    check_feasible(n, topo)?;
+    let k = topo.k();
+    // Line 1: sort PUs by decreasing c_s/m_cap.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let ra = topo.pus[a].speed / topo.pus[a].memory;
+        let rb = topo.pus[b].speed / topo.pus[b].memory;
+        rb.partial_cmp(&ra).unwrap()
+    });
+    // Lines 2–3: joint load and joint speed.
+    let mut j_load = n;
+    let mut j_speed = topo.total_speed();
+    let mut tw = vec![0.0; k];
+    let mut saturated = vec![false; k];
+    // Lines 4–12: greedy assignment in sorted order.
+    for &i in &order {
+        let pu = &topo.pus[i];
+        let des_w = pu.speed * j_load / j_speed; // Line 5
+        if des_w > pu.memory {
+            tw[i] = pu.memory; // Line 7: saturated
+            saturated[i] = true;
+        } else {
+            tw[i] = des_w; // Line 10: non-saturated
+        }
+        j_load -= tw[i]; // Line 11
+        j_speed -= pu.speed; // Line 12
+    }
+    let max_ratio = (0..k)
+        .map(|i| tw[i] / topo.pus[i].speed)
+        .fold(0.0, f64::max);
+    Ok(BlockSizes { tw, saturated, max_ratio })
+}
+
+/// Algorithm 1 applied to PU *subsets* (for hierarchical partitioning):
+/// each subset is treated as one aggregate PU (speed/memory summed, the
+/// paper's recursive inner-node accumulation), and the returned targets
+/// are per subset.
+pub fn block_sizes_for_subsets(
+    n: f64,
+    topo: &Topology,
+    subsets: &[Vec<usize>],
+) -> Result<Vec<f64>> {
+    use crate::topology::Pu;
+    let agg: Vec<Pu> = subsets
+        .iter()
+        .map(|s| {
+            s.iter().fold(Pu { speed: 0.0, memory: 0.0 }, |acc, &i| Pu {
+                speed: acc.speed + topo.pus[i].speed,
+                memory: acc.memory + topo.pus[i].memory,
+            })
+        })
+        .collect();
+    let agg_topo = Topology::flat(agg, "subsets");
+    Ok(block_sizes(n, &agg_topo)?.tw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, gens, Gen};
+    use crate::topology::{topo1, topo2, Pu, Topo1Spec, Topo2Spec, Topology, TABLE3_STEPS};
+    use crate::util::rng::Rng;
+
+    fn topo_from(pus: Vec<Pu>) -> Topology {
+        Topology::flat(pus, "test")
+    }
+
+    #[test]
+    fn homogeneous_is_uniform() {
+        let t = Topology::homogeneous(4, 1.0, 100.0);
+        let bs = block_sizes(100.0, &t).unwrap();
+        for &w in &bs.tw {
+            assert!((w - 25.0).abs() < 1e-9);
+        }
+        assert!(bs.saturated.iter().all(|&s| !s));
+        assert!((bs.total() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unconstrained_is_speed_proportional() {
+        // Eq. (4): tw*(b_i) = n * c_s(p_i) / C_s when memory is ample.
+        let t = topo_from(vec![
+            Pu { speed: 3.0, memory: 1e9 },
+            Pu { speed: 1.0, memory: 1e9 },
+        ]);
+        let bs = block_sizes(100.0, &t).unwrap();
+        assert!((bs.tw[0] - 75.0).abs() < 1e-9);
+        assert!((bs.tw[1] - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturation_spills_to_others() {
+        // Fast PU would want 75 but only has memory 50; the rest goes to
+        // the slow PU.
+        let t = topo_from(vec![
+            Pu { speed: 3.0, memory: 50.0 },
+            Pu { speed: 1.0, memory: 1e9 },
+        ]);
+        let bs = block_sizes(100.0, &t).unwrap();
+        assert_eq!(bs.tw[0], 50.0);
+        assert!(bs.saturated[0]);
+        assert!((bs.tw[1] - 50.0).abs() < 1e-9);
+        assert!(!bs.saturated[1]);
+        assert!((bs.total() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_fit_boundary() {
+        // desW == m_cap exactly → non-saturated branch (not >).
+        let t = topo_from(vec![
+            Pu { speed: 1.0, memory: 50.0 },
+            Pu { speed: 1.0, memory: 50.0 },
+        ]);
+        let bs = block_sizes(100.0, &t).unwrap();
+        assert_eq!(bs.tw, vec![50.0, 50.0]);
+        assert!(bs.saturated.iter().all(|&s| !s));
+    }
+
+    #[test]
+    fn infeasible_rejected() {
+        let t = topo_from(vec![Pu { speed: 1.0, memory: 10.0 }]);
+        assert!(block_sizes(11.0, &t).is_err());
+        assert!(block_sizes(-5.0, &t).is_err());
+    }
+
+    #[test]
+    fn table3_ratios_reproduced() {
+        // Reproduce Table III's last column: tw(fast)/tw(slow) for
+        // |F| = k/12 and k/6 at k = 96. Paper values: 1–1, 2–2, 3.2–3.5,
+        // 5.5–6.1, 9.4–11.5 (approximate). The paper's ratios are
+        // consistent with the load filling ≈84% of total system memory
+        // (back-solved from the step-5 row; all ten values then agree
+        // within a few percent), so that is our calibration.
+        let paper = [
+            (1.0, 1.0),
+            (2.0, 2.0),
+            (3.2, 3.5),
+            (5.5, 6.1),
+            (9.4, 11.5),
+        ];
+        let k = 96;
+        for (step, &(lo, hi)) in TABLE3_STEPS.iter().zip(paper.iter()) {
+            let fast = Pu { speed: step.0, memory: step.1 };
+            for (num_fast, expect) in [(k / 12, lo), (k / 6, hi)] {
+                let t = topo1(Topo1Spec { k, num_fast, fast });
+                let n = crate::blocksizes::TABLE3_FILL * t.total_memory();
+                let bs = block_sizes(n, &t).unwrap();
+                let ratio = bs.ratio(0, k - 1);
+                assert!(
+                    (ratio - expect).abs() / expect < 0.1,
+                    "step {step:?} f{num_fast}: ratio {ratio:.2} vs paper {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topo2_order_fast_s1_s2() {
+        // In TOPO2, tw(F) ≥ tw(S1) ≥ tw(S2).
+        let fast = Pu { speed: 16.0, memory: 13.8 };
+        let t = topo2(Topo2Spec { k: 48, num_fast: 8, fast });
+        let bs = block_sizes(48.0, &t).unwrap();
+        assert!(bs.tw[0] >= bs.tw[8] - 1e-9);
+        assert!(bs.tw[8] >= bs.tw[47] - 1e-9);
+    }
+
+    // ---------- property tests ----------
+
+    /// Random feasible LDHT instance generator.
+    struct InstanceGen;
+    impl Gen for InstanceGen {
+        type Value = (f64, Vec<(f64, f64)>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let k = 1 + rng.usize(12);
+            let pus: Vec<(f64, f64)> = (0..k)
+                .map(|_| {
+                    (
+                        0.1 + 10.0 * rng.f64(),
+                        0.1 + 10.0 * rng.f64(),
+                    )
+                })
+                .collect();
+            let mcap: f64 = pus.iter().map(|p| p.1).sum();
+            // Load at 5–95% of total memory to stay feasible.
+            let n = mcap * (0.05 + 0.9 * rng.f64());
+            (n, pus)
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let (n, pus) = v;
+            let mut out = Vec::new();
+            if pus.len() > 1 {
+                out.push((n * 0.5, pus[..pus.len() / 2].to_vec()));
+                out.push((n * 0.5, pus[1..].to_vec()));
+            }
+            out
+        }
+    }
+
+    fn make(v: &(f64, Vec<(f64, f64)>)) -> (f64, Topology) {
+        let pus = v.1.iter().map(|&(s, m)| Pu { speed: s, memory: m }).collect();
+        (v.0, topo_from(pus))
+    }
+
+    #[test]
+    fn prop_conservation_and_constraints() {
+        check("alg1 conserves load & respects memory", 300, 0xA161, InstanceGen, |v| {
+            let (n, t) = make(v);
+            let bs = match block_sizes(n, &t) {
+                Ok(b) => b,
+                Err(_) => return Ok(()), // shrunk instance became infeasible
+            };
+            if (bs.total() - n).abs() > 1e-6 * n.max(1.0) {
+                return Err(format!("total {} != n {}", bs.total(), n));
+            }
+            for (i, &w) in bs.tw.iter().enumerate() {
+                if w > t.pus[i].memory + 1e-9 {
+                    return Err(format!("tw[{i}]={w} > mcap={}", t.pus[i].memory));
+                }
+                if w < -1e-12 {
+                    return Err(format!("negative tw[{i}]={w}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lemma1_saturated_prefix() {
+        // Lemma 1: in the sorted-by-c_s/m_cap order, all saturated PUs
+        // precede all non-saturated ones.
+        check("lemma 1: saturated prefix", 300, 0x1E44A, InstanceGen, |v| {
+            let (n, t) = make(v);
+            let bs = match block_sizes(n, &t) {
+                Ok(b) => b,
+                Err(_) => return Ok(()),
+            };
+            let mut order: Vec<usize> = (0..t.k()).collect();
+            order.sort_by(|&a, &b| {
+                let ra = t.pus[a].speed / t.pus[a].memory;
+                let rb = t.pus[b].speed / t.pus[b].memory;
+                rb.partial_cmp(&ra).unwrap()
+            });
+            let mut seen_nonsat = false;
+            for &i in &order {
+                if bs.saturated[i] && seen_nonsat {
+                    return Err(format!("saturated PU {i} after non-saturated"));
+                }
+                if !bs.saturated[i] {
+                    seen_nonsat = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Water-filling oracle: binary-search the optimal objective value
+    /// r* = max tw_i/c_s_i; for a given r the max assignable load is
+    /// Σ min(r·c_s_i, m_cap_i). The optimal r* is the smallest r with
+    /// assignable(r) ≥ n. Independent of Algorithm 1's greedy order.
+    fn oracle_max_ratio(n: f64, pus: &[(f64, f64)]) -> f64 {
+        let assignable =
+            |r: f64| -> f64 { pus.iter().map(|&(s, m)| (r * s).min(m)).sum() };
+        let mut lo = 0.0;
+        // Grow hi until assignable(hi) >= n (feasible instances converge
+        // since assignable(r) -> M_cap >= n as r -> inf).
+        let mut hi = 1.0;
+        while assignable(hi) < n && hi < 1e18 {
+            hi *= 2.0;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if assignable(mid) >= n {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+
+    #[test]
+    fn prop_theorem1_optimality() {
+        // Theorem 1: Algorithm 1's max ratio equals the water-filling
+        // optimum.
+        check("theorem 1: optimal objective", 300, 0x7E03, InstanceGen, |v| {
+            let (n, t) = make(v);
+            let bs = match block_sizes(n, &t) {
+                Ok(b) => b,
+                Err(_) => return Ok(()),
+            };
+            let opt = oracle_max_ratio(n, &v.1);
+            if (bs.max_ratio - opt).abs() > 1e-6 * opt.max(1e-9) {
+                return Err(format!("greedy {} vs oracle {}", bs.max_ratio, opt));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_non_saturated_equal_ratio() {
+        // All non-saturated PUs finish with equal tw/c_s (the proof's
+        // proportionality invariant).
+        check("non-saturated PUs share one ratio", 300, 0x50A7, InstanceGen, |v| {
+            let (n, t) = make(v);
+            let bs = match block_sizes(n, &t) {
+                Ok(b) => b,
+                Err(_) => return Ok(()),
+            };
+            let ratios: Vec<f64> = (0..t.k())
+                .filter(|&i| !bs.saturated[i])
+                .map(|i| bs.tw[i] / t.pus[i].speed)
+                .collect();
+            if let (Some(&first), true) = (ratios.first(), ratios.len() > 1) {
+                for &r in &ratios {
+                    if (r - first).abs() > 1e-6 * first.max(1e-9) {
+                        return Err(format!("ratios differ: {ratios:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subsets_aggregate() {
+        let t = topo_from(vec![
+            Pu { speed: 2.0, memory: 100.0 },
+            Pu { speed: 2.0, memory: 100.0 },
+            Pu { speed: 4.0, memory: 100.0 },
+        ]);
+        let tws =
+            block_sizes_for_subsets(80.0, &t, &[vec![0, 1], vec![2]]).unwrap();
+        assert!((tws[0] - 40.0).abs() < 1e-9);
+        assert!((tws[1] - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alg1_is_fast_for_large_k() {
+        // O(k log k): 100k PUs in well under a second.
+        let mut rng = Rng::new(1);
+        let pus: Vec<Pu> = (0..100_000)
+            .map(|_| Pu { speed: 0.5 + rng.f64(), memory: 1.0 + rng.f64() })
+            .collect();
+        let t = topo_from(pus);
+        let (_bs, secs) = crate::util::timer::timed(|| block_sizes(50_000.0, &t).unwrap());
+        assert!(secs < 1.0, "took {secs}s");
+    }
+
+    #[test]
+    fn prop_usage_in_docs_compiles() {
+        // Exercise the doc-style gens API so it keeps compiling.
+        check("vec gen sanity", 50, 1, gens::vec_usize(1..5, 0..10), |v| {
+            if v.is_empty() {
+                Err("empty".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Optimal target block sizes for the LDHT problem — **Algorithm 1** of
+//! the paper (§IV).
+//!
+//! Given the application load `n = |V|` and a heterogeneous topology,
+//! compute target weights `tw(b_i)` that minimize
+//! `max_i tw(b_i)/c_s(p_i)` subject to `tw(b_i) ≤ m_cap(p_i)` —
+//! provably optimal (paper Theorem 1) in `O(k log k)`:
+//! sort PUs by decreasing `c_s/m_cap`, then greedily assign each PU
+//! either its proportional share of the *remaining* load or its full
+//! memory, whichever is smaller.
+
+mod alg1;
+
+/// Calibration for Table III: the paper's tw(fast)/tw(slow) ratios are
+/// consistent with the application load filling ≈84% of total system
+/// memory (back-solved from the step-5 row; all ten table values then
+/// agree within a few percent).
+pub const TABLE3_FILL: f64 = 0.84;
+
+pub use alg1::{block_sizes, block_sizes_for_subsets, check_feasible, BlockSizes};

@@ -1,0 +1,347 @@
+//! `hetpart` CLI dispatch.
+//!
+//! ```text
+//! hetpart blocksizes --k 96 --topo topo1 --num-fast 8 --fast-speed 16 --fast-mem 13.8
+//! hetpart partition  --family rdg2d --n 16384 --algo geoKM --k 24 [--topo topo1 ...]
+//! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
+//! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
+//! hetpart version | help
+//! ```
+
+use crate::blocksizes::block_sizes;
+use crate::coordinator::{run_one, RunResult};
+use crate::gen::Family;
+use crate::partitioners::ALL_NAMES;
+use crate::topology::{topo1, topo2, topo3, Pu, Topo1Spec, Topo2Spec, Topo3Spec, Topology};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::util::fmt_f64;
+
+pub fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "blocksizes" => cmd_blocksizes(&args),
+        "partition" => cmd_partition(&args),
+        "compare" => cmd_compare(&args),
+        "solve" => cmd_solve(&args),
+        "experiment" => cmd_experiment(&args),
+        "version" => {
+            println!("hetpart {}", super::version());
+            0
+        }
+        _ => {
+            print_help();
+            if cmd == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "hetpart {} — heterogeneous load distribution for sparse matrix/graph apps
+
+USAGE: hetpart <subcommand> [--options]
+
+SUBCOMMANDS
+  blocksizes   run Algorithm 1 and print target block weights
+  partition    generate a graph, partition with one algorithm, print metrics
+  compare      run all {} partitioners on one instance (Table IV row)
+  solve        partition + distributed CG under the cluster simulator
+  experiment   run a paper experiment grid by name
+               (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
+  version      print version
+
+COMMON OPTIONS
+  --family  rgg2d|rgg3d|rdg2d|tri2d|tet3d|refined2d   (default rdg2d)
+  --n       approximate vertex count                  (default 10000)
+  --k       number of PUs/blocks                      (default 24)
+  --topo    homog|topo1|topo2|topo3                   (default topo1)
+  --num-fast N  --fast-speed S  --fast-mem M          (topo1/topo2 specs)
+  --slowdown X  --nodes N  --fast-nodes F             (topo3 specs)
+  --algo    {}
+  --epsilon ε   --seed S",
+        super::version(),
+        ALL_NAMES.len(),
+        ALL_NAMES.join("|"),
+    );
+}
+
+/// Build the topology from CLI options.
+pub fn topo_from_args(args: &Args, k: usize) -> Topology {
+    let kind: String = args.get("topo", "topo1".to_string());
+    let fast = Pu {
+        speed: args.get("fast-speed", 4.0),
+        memory: args.get("fast-mem", 5.2),
+    };
+    let num_fast = args.get("num-fast", (k / 12).max(1));
+    match kind.as_str() {
+        "homog" => Topology::homogeneous(k, 1.0, 2.0),
+        "topo1" => topo1(Topo1Spec { k, num_fast, fast }),
+        "topo2" => topo2(Topo2Spec { k, num_fast, fast }),
+        "topo3" => {
+            let nodes = args.get("nodes", 4usize);
+            let fast_nodes = args.get("fast-nodes", 1usize);
+            let slowdown = args.get("slowdown", 4.0);
+            topo3(Topo3Spec {
+                nodes,
+                pus_per_node: k / nodes.max(1),
+                fast_nodes,
+                slowdown,
+            })
+        }
+        other => {
+            eprintln!("unknown --topo {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_graph(args: &Args) -> (String, crate::graph::Csr) {
+    if let Some(path) = args.opt::<String>("graph-file") {
+        let p = std::path::PathBuf::from(&path);
+        let g = crate::graph::io::read_metis(&p).unwrap_or_else(|e| {
+            eprintln!("failed to read {path}: {e}");
+            std::process::exit(2);
+        });
+        (path, g)
+    } else {
+        let fam: String = args.get("family", "rdg2d".to_string());
+        let family = Family::parse(&fam).unwrap_or_else(|| {
+            eprintln!("unknown --family {fam}");
+            std::process::exit(2);
+        });
+        let n = args.get("n", 10_000usize);
+        let seed = args.get("seed", 1u64);
+        crate::coordinator::instance(family, n, seed)
+    }
+}
+
+fn cmd_blocksizes(args: &Args) -> i32 {
+    let k = args.get("k", 96usize);
+    let topo = topo_from_args(args, k);
+    let fill = args.get("fill", crate::blocksizes::TABLE3_FILL);
+    let n = args.opt::<f64>("load").unwrap_or(fill * topo.total_memory());
+    match block_sizes(n, &topo) {
+        Ok(bs) => {
+            println!(
+                "topology {} | k={k} load={} C_s={} M_cap={}",
+                topo.label,
+                fmt_f64(n),
+                fmt_f64(topo.total_speed()),
+                fmt_f64(topo.total_memory())
+            );
+            let mut t = Table::new(vec!["pu", "speed", "memory", "tw", "saturated", "tw/speed"]);
+            for i in 0..k.min(12) {
+                t.row(vec![
+                    i.to_string(),
+                    fmt_f64(topo.pus[i].speed),
+                    fmt_f64(topo.pus[i].memory),
+                    fmt_f64(bs.tw[i]),
+                    bs.saturated[i].to_string(),
+                    fmt_f64(bs.tw[i] / topo.pus[i].speed),
+                ]);
+            }
+            if k > 12 {
+                println!("(first 12 of {k} PUs)");
+            }
+            print!("{}", t.to_text());
+            println!(
+                "max ratio (Eq.2 objective) = {} | tw(fast)/tw(slow) = {}",
+                fmt_f64(bs.max_ratio),
+                fmt_f64(bs.tw[0] / bs.tw[k - 1])
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    use crate::bench_harness::{emit, experiments, BenchScale};
+    let name = match args.positional.get(1) {
+        Some(n) => n.clone(),
+        None => {
+            eprintln!("usage: hetpart experiment <table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4>");
+            return 2;
+        }
+    };
+    let scale = BenchScale::from_env();
+    let t = match name.as_str() {
+        "table3" => experiments::table3(),
+        "fig1" => experiments::fig1(scale),
+        "fig2a" => experiments::fig2(scale, 'a'),
+        "fig2b" => experiments::fig2(scale, 'b'),
+        "fig3" => experiments::fig3(scale),
+        "fig4" => experiments::fig4(scale),
+        "fig5" => experiments::fig5(scale),
+        "table4" => experiments::table4(scale),
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            return 2;
+        }
+    };
+    emit(&name, &format!("paper experiment {name}"), &t);
+    0
+}
+
+fn result_row(t: &mut Table, r: &RunResult) {
+    t.row(vec![
+        r.algo.clone(),
+        fmt_f64(r.cut),
+        fmt_f64(r.max_comm_volume),
+        fmt_f64(r.imbalance),
+        fmt_f64(r.ldht_objective),
+        format!("{:.3}", r.time_partition),
+    ]);
+}
+
+fn cmd_partition(args: &Args) -> i32 {
+    let (name, g) = load_graph(args);
+    let k = args.get("k", 24usize);
+    let topo = topo_from_args(args, k);
+    let algo: String = args.get("algo", "geoKM".to_string());
+    let epsilon = args.get("epsilon", 0.03);
+    let seed = args.get("seed", 1u64);
+    println!("graph {name}: n={} m={} | topo {}", g.n(), g.m(), topo.label);
+    match run_one(&name, &g, &topo, &algo, epsilon, seed) {
+        Ok((r, _p)) => {
+            let mut t = Table::new(vec!["algo", "cut", "maxCommVol", "imbalance", "ldhtObj", "time(s)"]);
+            result_row(&mut t, &r);
+            print!("{}", t.to_text());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let (name, g) = load_graph(args);
+    let k = args.get("k", 24usize);
+    let topo = topo_from_args(args, k);
+    let epsilon = args.get("epsilon", 0.03);
+    let seed = args.get("seed", 1u64);
+    println!("graph {name}: n={} m={} | topo {}", g.n(), g.m(), topo.label);
+    let mut t = Table::new(vec!["algo", "cut", "maxCommVol", "imbalance", "ldhtObj", "time(s)"]);
+    for algo in ALL_NAMES {
+        match run_one(&name, &g, &topo, algo, epsilon, seed) {
+            Ok((r, _)) => result_row(&mut t, &r),
+            Err(e) => eprintln!("WARN {algo}: {e}"),
+        }
+    }
+    print!("{}", t.to_text());
+    0
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    use crate::solver::cg::NativeBackend;
+    use crate::solver::{ClusterSim, EllMatrix};
+    let (name, g) = load_graph(args);
+    let k = args.get("k", 24usize);
+    let topo = topo_from_args(args, k);
+    let algo: String = args.get("algo", "geoKM".to_string());
+    let epsilon = args.get("epsilon", 0.03);
+    let seed = args.get("seed", 1u64);
+    let iters = args.get("iters", 100usize);
+    let shift = args.get("shift", 0.05);
+    println!("graph {name}: n={} m={} | topo {}", g.n(), g.m(), topo.label);
+    let (r, part) = match run_one(&name, &g, &topo, &algo, epsilon, seed) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let ell = EllMatrix::from_graph(&g, shift);
+    let mut sim = ClusterSim::default();
+    sim.calibrate(&ell);
+    let b: Vec<f32> = (0..g.n()).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect();
+    let use_pjrt = args.flag("pjrt");
+    let (cg, rep) = if use_pjrt {
+        match pjrt_cg(&g, &part, &topo, &ell, &sim, &b, iters) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("pjrt path failed ({e}); falling back to native");
+                let mut backend = NativeBackend { a: &ell };
+                sim.run_cg(&g, &part, &topo, ell.w, &mut backend, &b, iters, 1e-6)
+                    .unwrap()
+            }
+        }
+    } else {
+        let mut backend = NativeBackend { a: &ell };
+        sim.run_cg(&g, &part, &topo, ell.w, &mut backend, &b, iters, 1e-6)
+            .unwrap()
+    };
+    let mut t = Table::new(vec!["algo", "cut", "maxCommVol", "time_part(s)", "iters", "residual", "sim_t/iter(s)"]);
+    t.row(vec![
+        r.algo.clone(),
+        fmt_f64(r.cut),
+        fmt_f64(r.max_comm_volume),
+        format!("{:.3}", r.time_partition),
+        cg.iterations.to_string(),
+        format!("{:.2e}", cg.residual_norms.last().copied().unwrap_or(0.0)),
+        format!("{:.2e}", rep.time_per_iter),
+    ]);
+    print!("{}", t.to_text());
+    println!(
+        "bottleneck PU {}: compute {:.2e}s comm {:.2e}s",
+        rep.bottleneck_pu, rep.bottleneck_compute, rep.bottleneck_comm
+    );
+    0
+}
+
+/// PJRT-backed CG for `solve --pjrt`: pad to the best-fit artifact.
+fn pjrt_cg(
+    g: &crate::graph::Csr,
+    part: &crate::partition::Partition,
+    topo: &Topology,
+    ell: &crate::solver::EllMatrix,
+    sim: &crate::solver::ClusterSim,
+    b: &[f32],
+    iters: usize,
+) -> anyhow::Result<(crate::solver::CgResult, crate::solver::SimReport)> {
+    use crate::runtime::{ArtifactSet, Runtime};
+    use crate::solver::cg::PjrtBackend;
+    let manifest = ArtifactSet::discover()?;
+    let entry = manifest
+        .best_spmv(ell.n, ell.w)
+        .ok_or_else(|| anyhow::anyhow!("no spmv artifact fits n={} w={}", ell.n, ell.w))?;
+    let rt = Runtime::cpu()?;
+    let exec = rt.load_spmv(&manifest, entry)?;
+    let padded = ell.pad_to(exec.n, exec.w)?;
+    let mut bp = b.to_vec();
+    bp.resize(exec.n, 0.0);
+    let mut backend = PjrtBackend::new(&exec, &padded)?;
+    let (mut cg, rep) = sim.run_cg(g, part, topo, ell.w, &mut backend, &bp, iters, 1e-6)?;
+    cg.x.truncate(g.n());
+    Ok((cg, rep))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn topo_from_args_variants() {
+        let t = topo_from_args(&parse(&["--topo", "homog"]), 8);
+        assert_eq!(t.k(), 8);
+        let t = topo_from_args(&parse(&["--topo", "topo1", "--num-fast", "2", "--fast-speed", "8"]), 12);
+        assert_eq!(t.pus.iter().filter(|p| p.speed == 8.0).count(), 2);
+        let t = topo_from_args(&parse(&["--topo", "topo2", "--num-fast", "2"]), 12);
+        assert_eq!(t.k(), 12);
+        let t = topo_from_args(&parse(&["--topo", "topo3", "--nodes", "2", "--fast-nodes", "1"]), 8);
+        assert_eq!(t.k(), 8);
+        assert_eq!(t.root_children().len(), 2);
+    }
+}

@@ -1,0 +1,194 @@
+//! Experiment grids: the unit of work the paper's figures/tables are made
+//! of — run a set of partitioners on (graph, topology) pairs, collect
+//! quality metrics and timings.
+
+use crate::blocksizes::block_sizes;
+use crate::gen::Family;
+use crate::graph::Csr;
+use crate::partition::{metrics, Metrics, Partition};
+use crate::partitioners::{by_name, Ctx};
+use crate::topology::Topology;
+use crate::util::timer::timed;
+use anyhow::{anyhow, Context, Result};
+
+/// One measured (graph, topology, algorithm) cell.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub graph_name: String,
+    pub topo_label: String,
+    pub algo: String,
+    pub cut: f64,
+    pub max_comm_volume: f64,
+    pub total_comm_volume: f64,
+    pub imbalance: f64,
+    pub time_partition: f64,
+    pub k: usize,
+    /// LDHT objective max_i w(b_i)/c_s(p_i) under the topology's speeds.
+    pub ldht_objective: f64,
+}
+
+/// Run one partitioner on one instance; targets come from Algorithm 1.
+pub fn run_one(
+    graph_name: &str,
+    g: &Csr,
+    topo: &Topology,
+    algo: &str,
+    epsilon: f64,
+    seed: u64,
+) -> Result<(RunResult, Partition)> {
+    // The topology's memory units are the paper's normalized specs
+    // ("slow = 2, fast = 13.8"); attach them to this graph by rescaling
+    // so the load fills TABLE3_FILL of total memory (the calibration
+    // that reproduces Table III — saturation patterns are preserved).
+    let load = g.total_vertex_weight();
+    let scaled = topo.scaled_for_load(load, crate::blocksizes::TABLE3_FILL);
+    let bs = block_sizes(load, &scaled)
+        .with_context(|| format!("block sizes for {}", topo.label))?;
+    let partitioner = by_name(algo).ok_or_else(|| anyhow!("unknown partitioner {algo}"))?;
+    // Hand partitioners the *scaled* topology so hierarchical algorithms
+    // can re-run Algorithm 1 on subtrees feasibly.
+    let ctx = Ctx { graph: g, targets: &bs.tw, topo: &scaled, epsilon, seed };
+    let (part, secs) = timed(|| partitioner.partition(&ctx));
+    let part = part?;
+    part.validate(g).map_err(|e| anyhow!("{algo}: {e}"))?;
+    let m: Metrics = metrics(g, &part, &bs.tw);
+    let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+    Ok((
+        RunResult {
+            graph_name: graph_name.to_string(),
+            topo_label: topo.label.clone(),
+            algo: algo.to_string(),
+            cut: m.cut,
+            max_comm_volume: m.max_comm_volume,
+            total_comm_volume: m.total_comm_volume,
+            imbalance: m.imbalance,
+            time_partition: secs,
+            k: topo.k(),
+            ldht_objective: m.ldht_objective(&speeds),
+        },
+        part,
+    ))
+}
+
+/// A grid: instances × topologies × algorithms.
+pub struct Grid {
+    pub graphs: Vec<(String, Csr)>,
+    pub topologies: Vec<Topology>,
+    pub algos: Vec<String>,
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl Grid {
+    /// Run the full grid (sequentially — partitioners are themselves the
+    /// unit of measurement, so no concurrent timing noise).
+    pub fn run(&self) -> Vec<RunResult> {
+        let mut out = Vec::new();
+        for (name, g) in &self.graphs {
+            for topo in &self.topologies {
+                for algo in &self.algos {
+                    match run_one(name, g, topo, algo, self.epsilon, self.seed) {
+                        Ok((r, _)) => out.push(r),
+                        Err(e) => eprintln!("WARN {algo} on {name}/{}: {e}", topo.label),
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Generate a named instance: `family_logn`, e.g. `rdg_2d` at n=2^14.
+pub fn instance(family: Family, n: usize, seed: u64) -> (String, Csr) {
+    let g = family.generate(n, seed);
+    (format!("{}_{}", family.name(), g.n()), g)
+}
+
+/// Results → normalized values relative to a baseline algorithm, as the
+/// paper plots (Figs. 2–4: "values are relative to balanced k-means").
+pub fn relative_to(
+    results: &[RunResult],
+    baseline: &str,
+    get: impl Fn(&RunResult) -> f64,
+) -> Vec<(String, String, String, f64)> {
+    let mut out = Vec::new();
+    for r in results {
+        let base = results.iter().find(|b| {
+            b.graph_name == r.graph_name && b.topo_label == r.topo_label && b.algo == baseline
+        });
+        if let Some(base) = base {
+            let denom = get(base);
+            if denom > 0.0 {
+                out.push((
+                    r.graph_name.clone(),
+                    r.topo_label.clone(),
+                    r.algo.clone(),
+                    get(r) / denom,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{topo1, Pu, Topo1Spec};
+
+    #[test]
+    fn run_one_produces_metrics() {
+        let (name, g) = instance(Family::Tri2d, 900, 1);
+        let topo = topo1(Topo1Spec {
+            k: 6,
+            num_fast: 1,
+            fast: Pu { speed: 4.0, memory: 8.5 },
+        });
+        let (r, p) = run_one(&name, &g, &topo, "zSFC", 0.05, 1).unwrap();
+        assert!(r.cut > 0.0);
+        assert!(r.time_partition >= 0.0);
+        assert_eq!(p.k, 6);
+        // The fast PU's block really is bigger.
+        let sizes = p.block_sizes();
+        assert!(sizes[0] > sizes[5], "{sizes:?}");
+    }
+
+    #[test]
+    fn unknown_algo_is_error() {
+        let (name, g) = instance(Family::Tri2d, 100, 1);
+        let topo = Topology::homogeneous(2, 1.0, 1e9);
+        assert!(run_one(&name, &g, &topo, "bogus", 0.05, 1).is_err());
+    }
+
+    #[test]
+    fn grid_runs_all_cells() {
+        let grid = Grid {
+            graphs: vec![instance(Family::Tri2d, 400, 1)],
+            topologies: vec![
+                Topology::homogeneous(4, 1.0, 1e9),
+                topo1(Topo1Spec { k: 4, num_fast: 1, fast: Pu { speed: 8.0, memory: 1e9 } }),
+            ],
+            algos: vec!["zSFC".into(), "zRCB".into()],
+            epsilon: 0.05,
+            seed: 1,
+        };
+        let rs = grid.run();
+        assert_eq!(rs.len(), 4);
+    }
+
+    #[test]
+    fn relative_normalization() {
+        let grid = Grid {
+            graphs: vec![instance(Family::Tri2d, 400, 2)],
+            topologies: vec![Topology::homogeneous(4, 1.0, 1e9)],
+            algos: vec!["geoKM".into(), "zSFC".into()],
+            epsilon: 0.05,
+            seed: 1,
+        };
+        let rs = grid.run();
+        let rel = relative_to(&rs, "geoKM", |r| r.cut);
+        let km = rel.iter().find(|(_, _, a, _)| a == "geoKM").unwrap();
+        assert!((km.3 - 1.0).abs() < 1e-12);
+        assert_eq!(rel.len(), 2);
+    }
+}

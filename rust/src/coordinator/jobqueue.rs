@@ -1,0 +1,95 @@
+//! Leader/worker job execution over std::thread (the offline image has no
+//! tokio; experiment grids are CPU-bound anyway, so a scoped thread pool
+//! with a shared work queue is the right tool).
+//!
+//! The leader owns the job list; workers pull indices from a shared
+//! atomic cursor and write results into their slot — no locks on the
+//! result path, results come back in job order regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` through `f` on `workers` threads; results in job order.
+/// Panics in `f` are propagated to the caller (fail fast, like the tests
+/// that drive experiment grids want).
+pub fn run_jobs<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return jobs.iter().map(|j| f(j)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&jobs[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job missing result"))
+        .collect()
+}
+
+/// Number of worker threads to use by default (leave one core for the
+/// leader when possible).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = run_jobs(jobs, 4, |&j| j * j);
+        assert_eq!(out, (0..100).map(|j| j * j).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = run_jobs(vec![1, 2, 3], 1, |&j| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<usize> = run_jobs(Vec::<usize>::new(), 4, |&j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_jobs(vec![7], 16, |&j| j);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn all_jobs_execute_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let count = AtomicUsize::new(0);
+        let _ = run_jobs((0..500).collect::<Vec<_>>(), 8, |_| {
+            count.fetch_add(1, Ordering::Relaxed)
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the leader process — CLI, experiment grids, and the
+//! worker pool that runs them.
+
+pub mod cli;
+pub mod experiment;
+pub mod jobqueue;
+
+pub use experiment::{instance, relative_to, run_one, Grid, RunResult};
+pub use jobqueue::{default_workers, run_jobs};
+
+/// Crate version (used by the CLI banner).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

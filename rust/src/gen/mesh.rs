@@ -1,0 +1,156 @@
+//! Structured simulation meshes.
+//!
+//! - [`mesh_2d_tri`]: a jittered triangular 2-D mesh — the stand-in for
+//!   the DIMACS'10 mesh instances (333SP, NLR, hugetric/hugetrace/
+//!   hugebubbles): planar, bounded degree, mildly irregular.
+//! - [`mesh_3d_tet`]: a 3-D tetrahedral grid mesh — the stand-in for the
+//!   PRACE alya respiratory-system meshes (3-D, higher average degree
+//!   ~8, see Table II: alyaTestCaseB has m/n ≈ 4).
+
+use crate::geometry::Point;
+use crate::graph::{Csr, GraphBuilder};
+use crate::util::rng::Rng;
+
+/// Jittered triangular mesh on an nx × ny grid: grid edges plus one
+/// diagonal per cell (direction pseudo-random), coordinates jittered so
+/// geometric partitioners face realistic, non-axis-aligned input.
+pub fn mesh_2d_tri(nx: usize, ny: usize, seed: u64) -> Csr {
+    assert!(nx >= 2 && ny >= 2);
+    let n = nx * ny;
+    let mut rng = Rng::new(seed);
+    let id = |i: usize, j: usize| -> usize { j * nx + i };
+    let mut b = GraphBuilder::new(n);
+    let jitter = 0.25;
+    let mut coords = Vec::with_capacity(n);
+    for j in 0..ny {
+        for i in 0..nx {
+            coords.push(Point::new2(
+                i as f64 + jitter * (rng.f64() - 0.5),
+                j as f64 + jitter * (rng.f64() - 0.5),
+            ));
+        }
+    }
+    for j in 0..ny {
+        for i in 0..nx {
+            if i + 1 < nx {
+                b.add_edge(id(i, j), id(i + 1, j));
+            }
+            if j + 1 < ny {
+                b.add_edge(id(i, j), id(i, j + 1));
+            }
+            if i + 1 < nx && j + 1 < ny {
+                // One diagonal per cell, pseudo-random direction.
+                if rng.bool(0.5) {
+                    b.add_edge(id(i, j), id(i + 1, j + 1));
+                } else {
+                    b.add_edge(id(i + 1, j), id(i, j + 1));
+                }
+            }
+        }
+    }
+    b.set_coords(coords);
+    b.build()
+}
+
+/// Tetrahedral-style 3-D grid mesh: grid edges plus body/face diagonals,
+/// average degree ≈ 8 like the alya meshes.
+pub fn mesh_3d_tet(nx: usize, ny: usize, nz: usize, seed: u64) -> Csr {
+    assert!(nx >= 2 && ny >= 2 && nz >= 2);
+    let n = nx * ny * nz;
+    let mut rng = Rng::new(seed);
+    let id = |i: usize, j: usize, k: usize| -> usize { (k * ny + j) * nx + i };
+    let mut b = GraphBuilder::new(n);
+    let jitter = 0.2;
+    let mut coords = Vec::with_capacity(n);
+    for k in 0..nz {
+        for j in 0..ny {
+            for i in 0..nx {
+                coords.push(Point::new3(
+                    i as f64 + jitter * (rng.f64() - 0.5),
+                    j as f64 + jitter * (rng.f64() - 0.5),
+                    k as f64 + jitter * (rng.f64() - 0.5),
+                ));
+            }
+        }
+    }
+    for k in 0..nz {
+        for j in 0..ny {
+            for i in 0..nx {
+                let u = id(i, j, k);
+                if i + 1 < nx {
+                    b.add_edge(u, id(i + 1, j, k));
+                }
+                if j + 1 < ny {
+                    b.add_edge(u, id(i, j + 1, k));
+                }
+                if k + 1 < nz {
+                    b.add_edge(u, id(i, j, k + 1));
+                }
+                // One face diagonal per xy face (tet-splitting style).
+                if i + 1 < nx && j + 1 < ny {
+                    if rng.bool(0.5) {
+                        b.add_edge(u, id(i + 1, j + 1, k));
+                    } else {
+                        b.add_edge(id(i + 1, j, k), id(i, j + 1, k));
+                    }
+                }
+                // Body diagonal in each cell for degree ≈ 8.
+                if i + 1 < nx && j + 1 < ny && k + 1 < nz {
+                    b.add_edge(u, id(i + 1, j + 1, k + 1));
+                }
+            }
+        }
+    }
+    b.set_coords(coords);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tri_mesh_structure() {
+        let g = mesh_2d_tri(20, 30, 1);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 600);
+        assert_eq!(g.num_components(), 1);
+        // Grid edges: 19*30 + 20*29 = 1150; diagonals: 19*29 = 551.
+        assert_eq!(g.m(), 1150 + 551);
+        assert!(g.has_coords());
+    }
+
+    #[test]
+    fn tri_mesh_degree_bounded() {
+        let g = mesh_2d_tri(30, 30, 2);
+        assert!(g.max_degree() <= 8, "max degree {}", g.max_degree());
+    }
+
+    #[test]
+    fn tet_mesh_structure() {
+        let g = mesh_3d_tet(8, 8, 8, 3);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 512);
+        assert_eq!(g.num_components(), 1);
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!((5.0..10.0).contains(&avg), "avg degree {avg}");
+        assert_eq!(g.coords[0].dim, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = mesh_2d_tri(10, 10, 7);
+        let b = mesh_2d_tri(10, 10, 7);
+        assert_eq!(a.adjncy, b.adjncy);
+    }
+
+    #[test]
+    fn minimal_sizes() {
+        let g = mesh_2d_tri(2, 2, 0);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 5);
+        let g3 = mesh_3d_tet(2, 2, 2, 0);
+        assert_eq!(g3.n(), 8);
+        g3.validate().unwrap();
+    }
+}

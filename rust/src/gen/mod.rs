@@ -1,0 +1,91 @@
+//! Graph/mesh generators standing in for the paper's benchmark instances
+//! (Table II): KaGen-style random geometric graphs (`rgg_2d`, `rgg_3d`),
+//! random Delaunay triangulations (`rdg_2d`), structured triangle/tetra
+//! meshes ("hugeX-like" 2-D, "alya-like" 3-D), and adaptively refined
+//! meshes ("refinetrace-like", Marquardt–Schamberger style).
+//!
+//! All generators are deterministic for a given seed and attach vertex
+//! coordinates so both geometric and combinatorial partitioners apply.
+
+pub mod delaunay;
+pub mod mesh;
+pub mod refine;
+pub mod rgg;
+
+pub use delaunay::rdg_2d;
+pub use mesh::{mesh_2d_tri, mesh_3d_tet};
+pub use refine::refined_mesh_2d;
+pub use rgg::{rgg_2d, rgg_3d};
+
+use crate::graph::Csr;
+
+/// Named instance families used by the experiment grids; `scale` is the
+/// approximate vertex count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Random geometric graph in the unit square (KaGen rgg_2d).
+    Rgg2d,
+    /// Random geometric graph in the unit cube (KaGen rgg_3d).
+    Rgg3d,
+    /// Random Delaunay triangulation in the unit square (KaGen rdg_2d).
+    Rdg2d,
+    /// Structured 2-D triangle mesh (stands in for the DIMACS hugeX meshes).
+    Tri2d,
+    /// Structured 3-D tetrahedral mesh (stands in for the alya PRACE meshes).
+    Tet3d,
+    /// Adaptively refined 2-D mesh (stands in for refinetrace).
+    Refined2d,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Option<Family> {
+        Some(match s {
+            "rgg2d" | "rgg_2d" => Family::Rgg2d,
+            "rgg3d" | "rgg_3d" => Family::Rgg3d,
+            "rdg2d" | "rdg_2d" => Family::Rdg2d,
+            "tri2d" | "huge" | "hugeX" => Family::Tri2d,
+            "tet3d" | "alya" => Family::Tet3d,
+            "refined2d" | "refinetrace" => Family::Refined2d,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Rgg2d => "rgg_2d",
+            Family::Rgg3d => "rgg_3d",
+            Family::Rdg2d => "rdg_2d",
+            Family::Tri2d => "tri_2d",
+            Family::Tet3d => "tet_3d",
+            Family::Refined2d => "refined_2d",
+        }
+    }
+
+    /// Generate an instance with ~`n` vertices.
+    pub fn generate(&self, n: usize, seed: u64) -> Csr {
+        match self {
+            Family::Rgg2d => rgg_2d(n, seed),
+            Family::Rgg3d => rgg_3d(n, seed),
+            Family::Rdg2d => rdg_2d(n, seed),
+            Family::Tri2d => {
+                let side = (n as f64).sqrt().round() as usize;
+                mesh_2d_tri(side.max(2), side.max(2), seed)
+            }
+            Family::Tet3d => {
+                let side = (n as f64).cbrt().round() as usize;
+                mesh_3d_tet(side.max(2), side.max(2), side.max(2), seed)
+            }
+            Family::Refined2d => refined_mesh_2d(n, seed),
+        }
+    }
+}
+
+/// All families (for sweep-style tests).
+pub const ALL_FAMILIES: [Family; 6] = [
+    Family::Rgg2d,
+    Family::Rgg3d,
+    Family::Rdg2d,
+    Family::Tri2d,
+    Family::Tet3d,
+    Family::Refined2d,
+];

@@ -1,0 +1,198 @@
+//! Random geometric graphs (KaGen-style `rgg_2d` / `rgg_3d`).
+//!
+//! n points uniform in the unit square/cube; vertices are adjacent iff
+//! within Euclidean distance r. The radius is chosen so the expected
+//! average degree ≈ 6 in 2-D and ≈ 6 in 3-D, matching Table II's
+//! "edges ≈ 3n". Neighbor search uses a uniform grid with cell size r, so
+//! generation is O(n) expected.
+
+use crate::geometry::Point;
+use crate::graph::{Csr, GraphBuilder};
+use crate::util::rng::Rng;
+
+/// Radius giving expected average degree `deg` for n uniform points in
+/// the unit square: E[deg] = n·π·r².
+pub fn rgg2d_radius(n: usize, deg: f64) -> f64 {
+    (deg / (n as f64 * std::f64::consts::PI)).sqrt()
+}
+
+/// Radius giving expected average degree `deg` in the unit cube:
+/// E[deg] = n·(4/3)·π·r³.
+pub fn rgg3d_radius(n: usize, deg: f64) -> f64 {
+    (deg / (n as f64 * 4.0 / 3.0 * std::f64::consts::PI)).cbrt()
+}
+
+/// Random geometric graph in the unit square with average degree ≈ 6.
+pub fn rgg_2d(n: usize, seed: u64) -> Csr {
+    rgg_2d_deg(n, 6.0, seed)
+}
+
+/// Random geometric graph with a chosen expected average degree.
+pub fn rgg_2d_deg(n: usize, deg: f64, seed: u64) -> Csr {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let pts: Vec<Point> = (0..n)
+        .map(|_| Point::new2(rng.f64(), rng.f64()))
+        .collect();
+    let r = rgg2d_radius(n, deg);
+    let cells = ((1.0 / r).floor() as usize).clamp(1, 4096);
+    let cell_of = |p: &Point| -> (usize, usize) {
+        (
+            ((p.x * cells as f64) as usize).min(cells - 1),
+            ((p.y * cells as f64) as usize).min(cells - 1),
+        )
+    };
+    // Bucket points.
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        buckets[cy * cells + cx].push(i as u32);
+    }
+    let r2 = r * r;
+    let mut b = GraphBuilder::new(n);
+    for (i, p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                let nx = cx as i64 + dx;
+                let ny = cy as i64 + dy;
+                if nx < 0 || ny < 0 || nx >= cells as i64 || ny >= cells as i64 {
+                    continue;
+                }
+                for &j in &buckets[ny as usize * cells + nx as usize] {
+                    if (j as usize) > i && p.dist2(&pts[j as usize]) <= r2 {
+                        b.add_edge(i, j as usize);
+                    }
+                }
+            }
+        }
+    }
+    b.set_coords(pts);
+    b.build()
+}
+
+/// Random geometric graph in the unit cube with average degree ≈ 6.
+pub fn rgg_3d(n: usize, seed: u64) -> Csr {
+    rgg_3d_deg(n, 6.0, seed)
+}
+
+/// 3-D random geometric graph with a chosen expected average degree.
+pub fn rgg_3d_deg(n: usize, deg: f64, seed: u64) -> Csr {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let pts: Vec<Point> = (0..n)
+        .map(|_| Point::new3(rng.f64(), rng.f64(), rng.f64()))
+        .collect();
+    let r = rgg3d_radius(n, deg);
+    let cells = ((1.0 / r).floor() as usize).clamp(1, 256);
+    let cell_of = |p: &Point| -> (usize, usize, usize) {
+        (
+            ((p.x * cells as f64) as usize).min(cells - 1),
+            ((p.y * cells as f64) as usize).min(cells - 1),
+            ((p.z * cells as f64) as usize).min(cells - 1),
+        )
+    };
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); cells * cells * cells];
+    for (i, p) in pts.iter().enumerate() {
+        let (cx, cy, cz) = cell_of(p);
+        buckets[(cz * cells + cy) * cells + cx].push(i as u32);
+    }
+    let r2 = r * r;
+    let mut b = GraphBuilder::new(n);
+    for (i, p) in pts.iter().enumerate() {
+        let (cx, cy, cz) = cell_of(p);
+        for dz in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let nx = cx as i64 + dx;
+                    let ny = cy as i64 + dy;
+                    let nz = cz as i64 + dz;
+                    if nx < 0
+                        || ny < 0
+                        || nz < 0
+                        || nx >= cells as i64
+                        || ny >= cells as i64
+                        || nz >= cells as i64
+                    {
+                        continue;
+                    }
+                    for &j in &buckets[(nz as usize * cells + ny as usize) * cells + nx as usize] {
+                        if (j as usize) > i && p.dist2(&pts[j as usize]) <= r2 {
+                            b.add_edge(i, j as usize);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    b.set_coords(pts);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rgg2d_structure() {
+        let g = rgg_2d(2000, 42);
+        g.validate().unwrap();
+        assert_eq!(g.n(), 2000);
+        assert!(g.has_coords());
+        // Average degree should be near 6 (edges near 3n).
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!((4.0..8.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn rgg3d_structure() {
+        let g = rgg_3d(2000, 42);
+        g.validate().unwrap();
+        let avg = 2.0 * g.m() as f64 / g.n() as f64;
+        assert!((4.0..8.0).contains(&avg), "avg degree {avg}");
+        assert_eq!(g.coords[0].dim, 3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = rgg_2d(500, 7);
+        let b = rgg_2d(500, 7);
+        assert_eq!(a.adjncy, b.adjncy);
+        let c = rgg_2d(500, 8);
+        assert_ne!(a.adjncy, c.adjncy);
+    }
+
+    #[test]
+    fn edges_respect_radius() {
+        let g = rgg_2d_deg(800, 6.0, 3);
+        let r = rgg2d_radius(800, 6.0);
+        for u in 0..g.n() {
+            for &v in g.neighbors(u) {
+                let d = g.coords[u].dist(&g.coords[v as usize]);
+                assert!(d <= r * (1.0 + 1e-12), "edge ({u},{v}) distance {d} > r {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_missed_pairs_small() {
+        // Brute-force cross-check on a small instance.
+        let g = rgg_2d_deg(200, 8.0, 11);
+        let r2 = rgg2d_radius(200, 8.0).powi(2);
+        for u in 0..g.n() {
+            for v in (u + 1)..g.n() {
+                let within = g.coords[u].dist2(&g.coords[v]) <= r2;
+                let edge = g.neighbors(u).binary_search(&(v as u32)).is_ok();
+                assert_eq!(within, edge, "pair ({u},{v}) within={within} edge={edge}");
+            }
+        }
+    }
+
+    #[test]
+    fn mostly_connected_at_degree6() {
+        // At avg degree 6 a 2-D RGG has a giant component; allow stragglers.
+        let g = rgg_2d(3000, 1);
+        let comps = g.num_components();
+        assert!(comps < 100, "components {comps}");
+    }
+}

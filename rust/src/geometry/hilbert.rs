@@ -1,0 +1,287 @@
+//! Hilbert space-filling curves in 2-D and 3-D.
+//!
+//! The Hilbert curve maps the unit square/cube onto a 1-D index while
+//! preserving locality: points close on the curve are close in space.
+//! Used by the `zSFC` partitioner (paper §III-a, Zoltan's SFC method),
+//! by `pmGeom`'s initial partition, by balanced-k-means seeding, and to
+//! order Delaunay insertions for fast walking point location.
+//!
+//! 2-D: the classic rotate/reflect iteration (Wikipedia `xy2d`).
+//! 3-D: Skilling's transpose algorithm (AIP Conf. Proc. 707, 2004), which
+//! converts between a Gray-code-like "transposed" Hilbert index and axis
+//! coordinates for any dimension; we instantiate it for d = 3.
+
+/// Bits of resolution per axis used when hashing f64 coordinates.
+pub const HILBERT_ORDER: u32 = 16;
+
+/// 2-D Hilbert index of integer cell (x, y) on a 2^order × 2^order grid.
+pub fn hilbert2d(order: u32, mut x: u32, mut y: u32) -> u64 {
+    let n = 1u32 << order;
+    debug_assert!(x < n && y < n);
+    let mut rx: u32;
+    let mut ry: u32;
+    let mut d: u64 = 0;
+    let mut s = n / 2;
+    while s > 0 {
+        rx = u32::from((x & s) > 0);
+        ry = u32::from((y & s) > 0);
+        d += (s as u64) * (s as u64) * ((3 * rx) ^ ry) as u64;
+        // Rotate quadrant.
+        if ry == 0 {
+            if rx == 1 {
+                x = s.wrapping_sub(1).wrapping_sub(x) & (n - 1);
+                y = s.wrapping_sub(1).wrapping_sub(y) & (n - 1);
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        s /= 2;
+    }
+    d
+}
+
+/// Inverse of [`hilbert2d`]: cell (x, y) for index `d`.
+pub fn hilbert2d_inv(order: u32, mut d: u64) -> (u32, u32) {
+    let n = 1u64 << order;
+    let (mut x, mut y) = (0u64, 0u64);
+    let mut s = 1u64;
+    while s < n {
+        let rx = 1 & (d / 2);
+        let ry = 1 & (d ^ rx);
+        // Rotate.
+        if ry == 0 {
+            if rx == 1 {
+                x = s - 1 - x;
+                y = s - 1 - y;
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        x += s * rx;
+        y += s * ry;
+        d /= 4;
+        s *= 2;
+    }
+    (x as u32, y as u32)
+}
+
+/// 3-D Hilbert index via Skilling's transpose algorithm.
+///
+/// Coordinates are `order`-bit integers; the result packs the transposed
+/// Hilbert code into a single u64 with x's bits most significant per level.
+pub fn hilbert3d(order: u32, x: u32, y: u32, z: u32) -> u64 {
+    debug_assert!(order <= 21, "3*order must fit in u64");
+    let mut c = [x, y, z];
+    axes_to_transpose(&mut c, order);
+    // Interleave: bit (order-1-b) of each axis, x first.
+    let mut h: u64 = 0;
+    for b in (0..order).rev() {
+        for v in &c {
+            h = (h << 1) | ((*v >> b) & 1) as u64;
+        }
+    }
+    h
+}
+
+/// Inverse of [`hilbert3d`].
+pub fn hilbert3d_inv(order: u32, h: u64) -> (u32, u32, u32) {
+    let mut c = [0u32; 3];
+    // De-interleave.
+    let mut shift = (3 * order) as i64;
+    for b in (0..order).rev() {
+        for v in c.iter_mut() {
+            shift -= 1;
+            *v |= (((h >> shift) & 1) as u32) << b;
+        }
+    }
+    transpose_to_axes(&mut c, order);
+    (c[0], c[1], c[2])
+}
+
+/// Skilling: axis coordinates -> transposed Hilbert code (in place).
+fn axes_to_transpose(x: &mut [u32; 3], bits: u32) {
+    let n = 3;
+    let mut m = 1u32 << (bits - 1);
+    // Inverse undo.
+    while m > 1 {
+        let p = m - 1;
+        for i in 0..n {
+            if x[i] & m != 0 {
+                x[0] ^= p; // invert
+            } else {
+                let t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        m >>= 1;
+    }
+    // Gray encode.
+    for i in 1..n {
+        x[i] ^= x[i - 1];
+    }
+    let mut t = 0u32;
+    let mut q = 1u32 << (bits - 1);
+    while q > 1 {
+        if x[n - 1] & q != 0 {
+            t ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for xi in x.iter_mut() {
+        *xi ^= t;
+    }
+}
+
+/// Skilling: transposed Hilbert code -> axis coordinates (in place).
+fn transpose_to_axes(x: &mut [u32; 3], bits: u32) {
+    let n = 3;
+    // Gray decode by H ^ (H/2).
+    let mut t = x[n - 1] >> 1;
+    for i in (1..n).rev() {
+        x[i] ^= x[i - 1];
+    }
+    x[0] ^= t;
+    // Undo excess work.
+    let mut q = 2u32;
+    while q != (1u32 << bits) {
+        let p = q - 1;
+        for i in (0..n).rev() {
+            if x[i] & q != 0 {
+                x[0] ^= p;
+            } else {
+                t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q <<= 1;
+    }
+}
+
+use super::point::{Aabb, Point};
+
+/// Hilbert index of a point normalized into the bounding box, dispatching
+/// on dimension. This is the single entry point partitioners use.
+pub fn hilbert_index(p: &Point, bb: &Aabb) -> u64 {
+    let q = bb.normalize(p);
+    let n = (1u64 << HILBERT_ORDER) as f64;
+    let to_cell = |v: f64| -> u32 { ((v * n) as u64).min((1u64 << HILBERT_ORDER) - 1) as u32 };
+    if p.dim == 2 {
+        hilbert2d(HILBERT_ORDER, to_cell(q.x), to_cell(q.y))
+    } else {
+        hilbert3d(HILBERT_ORDER, to_cell(q.x), to_cell(q.y), to_cell(q.z))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h2d_order1_is_u_shape() {
+        // Order-1 curve visits (0,0),(0,1),(1,1),(1,0).
+        assert_eq!(hilbert2d(1, 0, 0), 0);
+        assert_eq!(hilbert2d(1, 0, 1), 1);
+        assert_eq!(hilbert2d(1, 1, 1), 2);
+        assert_eq!(hilbert2d(1, 1, 0), 3);
+    }
+
+    #[test]
+    fn h2d_bijective_order4() {
+        let order = 4;
+        let n = 1u32 << order;
+        let mut seen = vec![false; (n * n) as usize];
+        for x in 0..n {
+            for y in 0..n {
+                let d = hilbert2d(order, x, y) as usize;
+                assert!(d < seen.len());
+                assert!(!seen[d], "duplicate index {d}");
+                seen[d] = true;
+                let (xi, yi) = hilbert2d_inv(order, d as u64);
+                assert_eq!((xi, yi), (x, y));
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn h2d_adjacent_indices_are_adjacent_cells() {
+        // Consecutive Hilbert indices differ by exactly one unit step.
+        let order = 5;
+        let n = 1u64 << (2 * order);
+        let mut prev = hilbert2d_inv(order, 0);
+        for d in 1..n {
+            let cur = hilbert2d_inv(order, d);
+            let dist = (cur.0 as i64 - prev.0 as i64).abs() + (cur.1 as i64 - prev.1 as i64).abs();
+            assert_eq!(dist, 1, "index {d}: {prev:?} -> {cur:?}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn h3d_bijective_order3() {
+        let order = 3;
+        let n = 1u32 << order;
+        let mut seen = vec![false; (n * n * n) as usize];
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    let d = hilbert3d(order, x, y, z) as usize;
+                    assert!(d < seen.len(), "index {d} out of range");
+                    assert!(!seen[d], "duplicate index {d}");
+                    seen[d] = true;
+                    let (xi, yi, zi) = hilbert3d_inv(order, d as u64);
+                    assert_eq!((xi, yi, zi), (x, y, z));
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn h3d_adjacent_indices_are_adjacent_cells() {
+        let order = 3;
+        let n = 1u64 << (3 * order);
+        let mut prev = hilbert3d_inv(order, 0);
+        for d in 1..n {
+            let cur = hilbert3d_inv(order, d);
+            let dist = (cur.0 as i64 - prev.0 as i64).abs()
+                + (cur.1 as i64 - prev.1 as i64).abs()
+                + (cur.2 as i64 - prev.2 as i64).abs();
+            assert_eq!(dist, 1, "index {d}: {prev:?} -> {cur:?}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn hilbert_index_locality() {
+        // Nearby points should have closer Hilbert indices than far points,
+        // statistically.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let pts: Vec<Point> = (0..200)
+            .map(|_| Point::new2(rng.f64(), rng.f64()))
+            .collect();
+        let bb = Aabb::of(&pts);
+        let mut near = Vec::new();
+        let mut far = Vec::new();
+        for i in 0..pts.len() {
+            for j in (i + 1)..pts.len() {
+                let sd = pts[i].dist(&pts[j]);
+                let hd = (hilbert_index(&pts[i], &bb) as i128
+                    - hilbert_index(&pts[j], &bb) as i128)
+                    .unsigned_abs() as f64;
+                if sd < 0.05 {
+                    near.push(hd);
+                } else if sd > 0.5 {
+                    far.push(hd);
+                }
+            }
+        }
+        let m_near = crate::util::stats::mean(&near);
+        let m_far = crate::util::stats::mean(&far);
+        assert!(
+            m_near < m_far * 0.5,
+            "near mean {m_near} should be well below far mean {m_far}"
+        );
+    }
+}

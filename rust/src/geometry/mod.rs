@@ -1,0 +1,9 @@
+//! Geometric primitives: points (2-D/3-D), bounding boxes, and Hilbert
+//! space-filling curves (the backbone of the `zSFC` partitioner, k-means
+//! seeding, and Delaunay insertion ordering).
+
+pub mod hilbert;
+pub mod point;
+
+pub use hilbert::{hilbert2d, hilbert3d, hilbert_index};
+pub use point::{Aabb, Point};

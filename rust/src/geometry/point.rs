@@ -1,0 +1,194 @@
+//! Points in 2 or 3 dimensions and axis-aligned bounding boxes.
+//!
+//! A single `Point` type with a `dim` field (and a zeroed third coordinate
+//! in 2-D) keeps the partitioners generic over dimension without trait
+//! gymnastics; all mesh/geometric code paths check `dim` where it matters.
+
+/// A point in R^2 or R^3. For 2-D points, `z == 0.0` and `dim == 2`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+    pub dim: u8,
+}
+
+impl Point {
+    pub fn new2(x: f64, y: f64) -> Point {
+        Point { x, y, z: 0.0, dim: 2 }
+    }
+
+    pub fn new3(x: f64, y: f64, z: f64) -> Point {
+        Point { x, y, z, dim: 3 }
+    }
+
+    /// Coordinate by axis index (0=x, 1=y, 2=z).
+    #[inline]
+    pub fn coord(&self, axis: usize) -> f64 {
+        match axis {
+            0 => self.x,
+            1 => self.y,
+            _ => self.z,
+        }
+    }
+
+    #[inline]
+    pub fn set_coord(&mut self, axis: usize, v: f64) {
+        match axis {
+            0 => self.x = v,
+            1 => self.y = v,
+            _ => self.z = v,
+        }
+    }
+
+    /// Squared Euclidean distance.
+    #[inline]
+    pub fn dist2(&self, o: &Point) -> f64 {
+        let dx = self.x - o.x;
+        let dy = self.y - o.y;
+        let dz = self.z - o.z;
+        dx * dx + dy * dy + dz * dz
+    }
+
+    #[inline]
+    pub fn dist(&self, o: &Point) -> f64 {
+        self.dist2(o).sqrt()
+    }
+
+    #[inline]
+    pub fn add(&self, o: &Point) -> Point {
+        Point {
+            x: self.x + o.x,
+            y: self.y + o.y,
+            z: self.z + o.z,
+            dim: self.dim,
+        }
+    }
+
+    #[inline]
+    pub fn scale(&self, s: f64) -> Point {
+        Point {
+            x: self.x * s,
+            y: self.y * s,
+            z: self.z * s,
+            dim: self.dim,
+        }
+    }
+
+    pub fn zero(dim: u8) -> Point {
+        Point { x: 0.0, y: 0.0, z: 0.0, dim }
+    }
+}
+
+/// Axis-aligned bounding box.
+#[derive(Debug, Clone, Copy)]
+pub struct Aabb {
+    pub min: Point,
+    pub max: Point,
+}
+
+impl Aabb {
+    /// Bounding box of a non-empty point set.
+    pub fn of(points: &[Point]) -> Aabb {
+        assert!(!points.is_empty());
+        let dim = points[0].dim;
+        let mut min = Point::new3(f64::INFINITY, f64::INFINITY, f64::INFINITY);
+        let mut max = Point::new3(f64::NEG_INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for p in points {
+            min.x = min.x.min(p.x);
+            min.y = min.y.min(p.y);
+            min.z = min.z.min(p.z);
+            max.x = max.x.max(p.x);
+            max.y = max.y.max(p.y);
+            max.z = max.z.max(p.z);
+        }
+        min.dim = dim;
+        max.dim = dim;
+        Aabb { min, max }
+    }
+
+    /// Extent along an axis.
+    pub fn extent(&self, axis: usize) -> f64 {
+        self.max.coord(axis) - self.min.coord(axis)
+    }
+
+    /// Axis with the largest extent, restricted to the point dimension.
+    pub fn longest_axis(&self) -> usize {
+        let d = self.min.dim as usize;
+        (0..d)
+            .max_by(|&a, &b| self.extent(a).partial_cmp(&self.extent(b)).unwrap())
+            .unwrap_or(0)
+    }
+
+    /// Normalize `p` into [0,1]^d relative to this box (degenerate axes → 0.5).
+    pub fn normalize(&self, p: &Point) -> Point {
+        let mut q = *p;
+        for a in 0..(p.dim as usize) {
+            let e = self.extent(a);
+            let v = if e > 0.0 {
+                (p.coord(a) - self.min.coord(a)) / e
+            } else {
+                0.5
+            };
+            q.set_coord(a, v.clamp(0.0, 1.0));
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_and_coords() {
+        let a = Point::new2(0.0, 0.0);
+        let b = Point::new2(3.0, 4.0);
+        assert_eq!(a.dist(&b), 5.0);
+        assert_eq!(b.coord(0), 3.0);
+        assert_eq!(b.coord(1), 4.0);
+    }
+
+    #[test]
+    fn point3_dist() {
+        let a = Point::new3(1.0, 2.0, 3.0);
+        let b = Point::new3(1.0, 2.0, 5.0);
+        assert_eq!(a.dist(&b), 2.0);
+    }
+
+    #[test]
+    fn aabb_of_points() {
+        let pts = vec![
+            Point::new2(0.0, 5.0),
+            Point::new2(2.0, 1.0),
+            Point::new2(-1.0, 3.0),
+        ];
+        let bb = Aabb::of(&pts);
+        assert_eq!(bb.min.x, -1.0);
+        assert_eq!(bb.max.y, 5.0);
+        assert_eq!(bb.longest_axis(), 1); // y extent 4 > x extent 3
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let pts = vec![Point::new2(0.0, 0.0), Point::new2(10.0, 20.0)];
+        let bb = Aabb::of(&pts);
+        let q = bb.normalize(&Point::new2(5.0, 10.0));
+        assert!((q.x - 0.5).abs() < 1e-12);
+        assert!((q.y - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_degenerate_axis() {
+        let pts = vec![Point::new2(1.0, 0.0), Point::new2(1.0, 2.0)];
+        let bb = Aabb::of(&pts);
+        let q = bb.normalize(&Point::new2(1.0, 1.0));
+        assert_eq!(q.x, 0.5); // degenerate x → 0.5
+    }
+
+    #[test]
+    fn add_scale() {
+        let p = Point::new2(1.0, 2.0).add(&Point::new2(3.0, 4.0)).scale(0.5);
+        assert_eq!((p.x, p.y), (2.0, 3.0));
+    }
+}

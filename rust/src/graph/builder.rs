@@ -1,0 +1,213 @@
+//! Incremental graph builder: collect edges in any order, then `build()`
+//! a deduplicated, symmetrized CSR.
+
+use super::Csr;
+use crate::geometry::Point;
+
+/// Collects edges and produces a valid [`Csr`]. Duplicate edges are
+/// merged (weights summed for weighted edges, kept at 1 for unweighted);
+/// self-loops are dropped.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32, f64)>,
+    weighted_edges: bool,
+    coords: Vec<Point>,
+    vwgt: Vec<f64>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> GraphBuilder {
+        GraphBuilder {
+            n,
+            edges: Vec::new(),
+            weighted_edges: false,
+            coords: Vec::new(),
+            vwgt: Vec::new(),
+        }
+    }
+
+    /// Add an undirected unit-weight edge {u, v}.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        self.add_weighted_edge(u, v, 1.0);
+        // Keep the graph unweighted unless an explicit weight was given.
+    }
+
+    /// Add an undirected weighted edge {u, v}.
+    pub fn add_weighted_edge(&mut self, u: usize, v: usize, w: f64) {
+        debug_assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range n={}", self.n);
+        if u == v {
+            return; // drop self-loops
+        }
+        if w != 1.0 {
+            self.weighted_edges = true;
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.push((a as u32, b as u32, w));
+    }
+
+    /// Attach coordinates (must be length n at build time if non-empty).
+    pub fn set_coords(&mut self, coords: Vec<Point>) {
+        self.coords = coords;
+    }
+
+    /// Attach vertex weights.
+    pub fn set_vertex_weights(&mut self, vwgt: Vec<f64>) {
+        self.vwgt = vwgt;
+    }
+
+    /// Number of (possibly duplicate) edges added so far.
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Produce the CSR graph.
+    pub fn build(mut self) -> Csr {
+        assert!(
+            self.coords.is_empty() || self.coords.len() == self.n,
+            "coords length mismatch"
+        );
+        assert!(
+            self.vwgt.is_empty() || self.vwgt.len() == self.n,
+            "vwgt length mismatch"
+        );
+        // Dedup: sort canonical (min,max) pairs, merge weights.
+        self.edges.sort_unstable_by_key(|&(a, b, _)| (a, b));
+        let mut dedup: Vec<(u32, u32, f64)> = Vec::with_capacity(self.edges.len());
+        for (a, b, w) in self.edges {
+            match dedup.last_mut() {
+                Some(last) if last.0 == a && last.1 == b => {
+                    if self.weighted_edges {
+                        last.2 += w;
+                    }
+                }
+                _ => dedup.push((a, b, w)),
+            }
+        }
+        // Count degrees.
+        let mut xadj = vec![0usize; self.n + 1];
+        for &(a, b, _) in &dedup {
+            xadj[a as usize + 1] += 1;
+            xadj[b as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            xadj[i + 1] += xadj[i];
+        }
+        // Fill arcs.
+        let total = *xadj.last().unwrap();
+        let mut adjncy = vec![0u32; total];
+        let mut adjwgt = if self.weighted_edges {
+            vec![0.0f64; total]
+        } else {
+            Vec::new()
+        };
+        let mut cursor = xadj.clone();
+        for &(a, b, w) in &dedup {
+            let (a, b) = (a as usize, b as usize);
+            adjncy[cursor[a]] = b as u32;
+            adjncy[cursor[b]] = a as u32;
+            if self.weighted_edges {
+                adjwgt[cursor[a]] = w;
+                adjwgt[cursor[b]] = w;
+            }
+            cursor[a] += 1;
+            cursor[b] += 1;
+        }
+        // Neighbor lists are already sorted by construction for the first
+        // endpoint but not the second; sort each row for deterministic
+        // iteration and binary-searchable adjacency.
+        for u in 0..self.n {
+            let r = xadj[u]..xadj[u + 1];
+            if self.weighted_edges {
+                let mut pairs: Vec<(u32, f64)> = adjncy[r.clone()]
+                    .iter()
+                    .copied()
+                    .zip(adjwgt[r.clone()].iter().copied())
+                    .collect();
+                pairs.sort_unstable_by_key(|&(v, _)| v);
+                for (i, (v, w)) in pairs.into_iter().enumerate() {
+                    adjncy[r.start + i] = v;
+                    adjwgt[r.start + i] = w;
+                }
+            } else {
+                adjncy[r].sort_unstable();
+            }
+        }
+        Csr {
+            xadj,
+            adjncy,
+            adjwgt,
+            vwgt: self.vwgt,
+            coords: self.coords,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_symmetry() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0); // duplicate (reversed)
+        b.add_edge(1, 2);
+        let g = b.build();
+        assert_eq!(g.m(), 2);
+        g.validate().unwrap();
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0);
+        b.add_edge(0, 1);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weighted_edges_merge() {
+        let mut b = GraphBuilder::new(2);
+        b.add_weighted_edge(0, 1, 2.0);
+        b.add_weighted_edge(1, 0, 3.0);
+        let g = b.build();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.arc_weight(0), 5.0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn neighbor_lists_sorted() {
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(2, 4);
+        b.add_edge(2, 0);
+        b.add_edge(2, 3);
+        b.add_edge(2, 1);
+        let g = b.build();
+        assert_eq!(g.neighbors(2), &[0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(3).build();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn coords_and_vwgt_carried() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1);
+        b.set_coords(vec![Point::new2(0.0, 0.0), Point::new2(1.0, 0.0)]);
+        b.set_vertex_weights(vec![2.0, 3.0]);
+        let g = b.build();
+        assert!(g.has_coords());
+        assert_eq!(g.total_vertex_weight(), 5.0);
+        assert_eq!(g.vertex_weight(1), 3.0);
+    }
+}

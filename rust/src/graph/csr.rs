@@ -1,0 +1,260 @@
+//! Compressed sparse row graph.
+//!
+//! Undirected graphs store both arc directions; `xadj`/`adjncy` follow the
+//! METIS naming. Optional per-vertex coordinates (for geometric
+//! partitioners) and integer vertex/edge weights are carried alongside.
+
+use crate::geometry::Point;
+
+/// CSR graph. Invariants (checked by [`Csr::validate`]):
+/// - `xadj.len() == n + 1`, `xadj[0] == 0`, non-decreasing;
+/// - `adjncy[e] < n` for all arcs, no self-loops;
+/// - symmetric: arc (u,v) exists iff (v,u) exists, with equal weight;
+/// - if present, `coords.len() == n`, `vwgt.len() == n`,
+///   `adjwgt.len() == adjncy.len()`.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// Row pointers, length n+1.
+    pub xadj: Vec<usize>,
+    /// Column indices (neighbors), length 2m for undirected graphs.
+    pub adjncy: Vec<u32>,
+    /// Edge weights parallel to `adjncy`; empty ⇒ unit weights.
+    pub adjwgt: Vec<f64>,
+    /// Vertex weights; empty ⇒ unit weights.
+    pub vwgt: Vec<f64>,
+    /// Vertex coordinates; empty ⇒ no geometry available.
+    pub coords: Vec<Point>,
+}
+
+impl Csr {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    /// Number of undirected edges (arcs / 2).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    /// Neighbors of `u`.
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.adjncy[self.xadj[u]..self.xadj[u + 1]]
+    }
+
+    /// Arc index range of `u` (for parallel access to `adjwgt`).
+    #[inline]
+    pub fn arc_range(&self, u: usize) -> std::ops::Range<usize> {
+        self.xadj[u]..self.xadj[u + 1]
+    }
+
+    /// Degree of `u`.
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.xadj[u + 1] - self.xadj[u]
+    }
+
+    /// Weight of vertex `u` (1 if unweighted).
+    #[inline]
+    pub fn vertex_weight(&self, u: usize) -> f64 {
+        if self.vwgt.is_empty() {
+            1.0
+        } else {
+            self.vwgt[u]
+        }
+    }
+
+    /// Weight of arc `e` (1 if unweighted).
+    #[inline]
+    pub fn arc_weight(&self, e: usize) -> f64 {
+        if self.adjwgt.is_empty() {
+            1.0
+        } else {
+            self.adjwgt[e]
+        }
+    }
+
+    /// Total vertex weight.
+    pub fn total_vertex_weight(&self) -> f64 {
+        if self.vwgt.is_empty() {
+            self.n() as f64
+        } else {
+            self.vwgt.iter().sum()
+        }
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+
+    /// Does the graph carry coordinates?
+    pub fn has_coords(&self) -> bool {
+        !self.coords.is_empty()
+    }
+
+    /// Check all structural invariants; returns a description of the first
+    /// violation found.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.xadj[0] != 0 {
+            return Err("xadj[0] != 0".into());
+        }
+        for i in 0..n {
+            if self.xadj[i] > self.xadj[i + 1] {
+                return Err(format!("xadj not monotone at {i}"));
+            }
+        }
+        if *self.xadj.last().unwrap() != self.adjncy.len() {
+            return Err("xadj[n] != adjncy.len()".into());
+        }
+        if !self.adjwgt.is_empty() && self.adjwgt.len() != self.adjncy.len() {
+            return Err("adjwgt length mismatch".into());
+        }
+        if !self.vwgt.is_empty() && self.vwgt.len() != n {
+            return Err("vwgt length mismatch".into());
+        }
+        if !self.coords.is_empty() && self.coords.len() != n {
+            return Err("coords length mismatch".into());
+        }
+        // Symmetry + no self-loops. Build a sorted arc list and check each
+        // (u,v) has a matching (v,u) with equal weight.
+        let mut arcs: Vec<(u32, u32, u64)> = Vec::with_capacity(self.adjncy.len());
+        for u in 0..n {
+            for e in self.arc_range(u) {
+                let v = self.adjncy[e];
+                if v as usize >= n {
+                    return Err(format!("neighbor {v} of {u} out of range"));
+                }
+                if v as usize == u {
+                    return Err(format!("self-loop at {u}"));
+                }
+                arcs.push((u as u32, v, self.arc_weight(e).to_bits()));
+            }
+        }
+        let mut fwd: Vec<(u32, u32, u64)> = arcs.clone();
+        fwd.sort_unstable();
+        let mut rev: Vec<(u32, u32, u64)> =
+            arcs.iter().map(|&(u, v, w)| (v, u, w)).collect();
+        rev.sort_unstable();
+        if fwd != rev {
+            return Err("graph is not symmetric".into());
+        }
+        Ok(())
+    }
+
+    /// BFS distances from `src` (usize::MAX = unreachable).
+    pub fn bfs(&self, src: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src] = 0;
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            for &v in self.neighbors(u) {
+                let v = v as usize;
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Number of connected components.
+    pub fn num_components(&self) -> usize {
+        let n = self.n();
+        let mut seen = vec![false; n];
+        let mut comps = 0;
+        let mut stack = Vec::new();
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            comps += 1;
+            seen[s] = true;
+            stack.push(s);
+            while let Some(u) = stack.pop() {
+                for &v in self.neighbors(u) {
+                    let v = v as usize;
+                    if !seen[v] {
+                        seen[v] = true;
+                        stack.push(v);
+                    }
+                }
+            }
+        }
+        comps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// Path graph 0-1-2-3.
+    fn path4() -> Csr {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        b.build()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = path4();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.total_vertex_weight(), 4.0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn bfs_distances() {
+        let g = path4();
+        assert_eq!(g.bfs(0), vec![0, 1, 2, 3]);
+        assert_eq!(g.bfs(2), vec![2, 1, 0, 1]);
+    }
+
+    #[test]
+    fn components() {
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(0, 1);
+        b.add_edge(2, 3);
+        let g = b.build();
+        assert_eq!(g.num_components(), 3); // {0,1}, {2,3}, {4}
+    }
+
+    #[test]
+    fn validate_catches_asymmetry() {
+        let g = Csr {
+            xadj: vec![0, 1, 1],
+            adjncy: vec![1],
+            adjwgt: vec![],
+            vwgt: vec![],
+            coords: vec![],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_self_loop() {
+        let g = Csr {
+            xadj: vec![0, 1],
+            adjncy: vec![0],
+            adjwgt: vec![],
+            vwgt: vec![],
+            coords: vec![],
+        };
+        assert!(g.validate().unwrap_err().contains("self-loop"));
+    }
+}

@@ -1,0 +1,296 @@
+//! Graph IO: METIS text format (the lingua franca of the partitioning
+//! tools the paper evaluates) and a compact binary cache format for large
+//! generated instances.
+
+use super::Csr;
+use crate::geometry::Point;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a graph in METIS format (1-indexed). Includes edge weights if
+/// present (fmt code 001).
+pub fn write_metis(g: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let weighted = !g.adjwgt.is_empty();
+    if weighted {
+        writeln!(w, "{} {} 001", g.n(), g.m())?;
+    } else {
+        writeln!(w, "{} {}", g.n(), g.m())?;
+    }
+    for u in 0..g.n() {
+        let mut line = String::new();
+        for e in g.arc_range(u) {
+            if !line.is_empty() {
+                line.push(' ');
+            }
+            line.push_str(&(g.adjncy[e] + 1).to_string());
+            if weighted {
+                line.push(' ');
+                line.push_str(&format!("{}", g.adjwgt[e]));
+            }
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Read a METIS-format graph (supports fmt 000/001; vertex weights not
+/// supported — our instances are unit-weight as in the paper's LDHT
+/// scenario).
+pub fn read_metis(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if !t.is_empty() && !t.starts_with('%') {
+                    break t.to_string();
+                }
+            }
+            None => bail!("empty METIS file"),
+        }
+    };
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    if parts.len() < 2 {
+        bail!("bad METIS header: {header}");
+    }
+    let n: usize = parts[0].parse()?;
+    let m: usize = parts[1].parse()?;
+    let fmt = parts.get(2).copied().unwrap_or("000");
+    let has_ewgt = fmt.ends_with('1');
+    if fmt.len() == 3 && &fmt[1..2] == "1" {
+        bail!("vertex-weighted METIS files not supported");
+    }
+    let mut b = super::GraphBuilder::new(n);
+    let mut u = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.starts_with('%') {
+            continue;
+        }
+        if u >= n {
+            if !t.is_empty() {
+                bail!("more vertex lines than n={n}");
+            }
+            continue;
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        if has_ewgt {
+            if toks.len() % 2 != 0 {
+                bail!("odd token count on weighted line {u}");
+            }
+            for c in toks.chunks(2) {
+                let v: usize = c[0].parse::<usize>()? - 1;
+                let w: f64 = c[1].parse()?;
+                if u < v {
+                    b.add_weighted_edge(u, v, w);
+                }
+            }
+        } else {
+            for tok in toks {
+                let v: usize = tok.parse::<usize>()? - 1;
+                if u < v {
+                    b.add_edge(u, v);
+                }
+            }
+        }
+        u += 1;
+    }
+    if u != n {
+        bail!("expected {n} vertex lines, got {u}");
+    }
+    let g = b.build();
+    if g.m() != m {
+        bail!("header says {m} edges, parsed {}", g.m());
+    }
+    Ok(g)
+}
+
+const BIN_MAGIC: u32 = 0x4854_5052; // "HTPR"
+
+/// Write the compact binary format (u64 header + raw little-endian arrays,
+/// coordinates included when present).
+pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let dim: u32 = if g.coords.is_empty() {
+        0
+    } else {
+        g.coords[0].dim as u32
+    };
+    w.write_all(&BIN_MAGIC.to_le_bytes())?;
+    w.write_all(&(g.n() as u64).to_le_bytes())?;
+    w.write_all(&(g.adjncy.len() as u64).to_le_bytes())?;
+    w.write_all(&dim.to_le_bytes())?;
+    w.write_all(&(u32::from(!g.adjwgt.is_empty())).to_le_bytes())?;
+    for &x in &g.xadj {
+        w.write_all(&(x as u64).to_le_bytes())?;
+    }
+    for &v in &g.adjncy {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &v in &g.adjwgt {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for p in &g.coords {
+        w.write_all(&p.x.to_le_bytes())?;
+        w.write_all(&p.y.to_le_bytes())?;
+        if dim == 3 {
+            w.write_all(&p.z.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary format written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<Csr> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    let mut off = 0usize;
+    let take = |off: &mut usize, len: usize| -> Result<&[u8]> {
+        if *off + len > buf.len() {
+            bail!("truncated binary graph file");
+        }
+        let s = &buf[*off..*off + len];
+        *off += len;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    if magic != BIN_MAGIC {
+        bail!("bad magic {magic:#x}");
+    }
+    let n = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+    let nadj = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+    let dim = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    let has_ewgt = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) != 0;
+    let mut xadj = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        xadj.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+    }
+    let mut adjncy = Vec::with_capacity(nadj);
+    for _ in 0..nadj {
+        adjncy.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()));
+    }
+    let mut adjwgt = Vec::new();
+    if has_ewgt {
+        adjwgt.reserve(nadj);
+        for _ in 0..nadj {
+            adjwgt.push(f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()));
+        }
+    }
+    let mut coords = Vec::new();
+    if dim > 0 {
+        coords.reserve(n);
+        for _ in 0..n {
+            let x = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+            let y = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+            let p = if dim == 3 {
+                let z = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+                Point::new3(x, y, z)
+            } else {
+                Point::new2(x, y)
+            };
+            coords.push(p);
+        }
+    }
+    Ok(Csr {
+        xadj,
+        adjncy,
+        adjwgt,
+        vwgt: Vec::new(),
+        coords,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn sample() -> Csr {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        b.add_edge(3, 0);
+        b.set_coords(vec![
+            Point::new2(0.0, 0.0),
+            Point::new2(1.0, 0.0),
+            Point::new2(1.0, 1.0),
+            Point::new2(0.0, 1.0),
+        ]);
+        b.build()
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hetpart-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn metis_roundtrip() {
+        let g = sample();
+        let p = tmpfile("cycle.graph");
+        write_metis(&g, &p).unwrap();
+        let h = read_metis(&p).unwrap();
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m());
+        assert_eq!(h.xadj, g.xadj);
+        assert_eq!(h.adjncy, g.adjncy);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn metis_weighted_roundtrip() {
+        let mut b = GraphBuilder::new(3);
+        b.add_weighted_edge(0, 1, 2.0);
+        b.add_weighted_edge(1, 2, 3.0);
+        let g = b.build();
+        let p = tmpfile("weighted.graph");
+        write_metis(&g, &p).unwrap();
+        let h = read_metis(&p).unwrap();
+        assert_eq!(h.adjwgt, g.adjwgt);
+    }
+
+    #[test]
+    fn binary_roundtrip_with_coords() {
+        let g = sample();
+        let p = tmpfile("cycle.bin");
+        write_binary(&g, &p).unwrap();
+        let h = read_binary(&p).unwrap();
+        assert_eq!(h.xadj, g.xadj);
+        assert_eq!(h.adjncy, g.adjncy);
+        assert_eq!(h.coords.len(), 4);
+        assert_eq!(h.coords[2].x, 1.0);
+        assert_eq!(h.coords[2].dim, 2);
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let p = tmpfile("garbage.bin");
+        std::fs::write(&p, b"not a graph").unwrap();
+        assert!(read_binary(&p).is_err());
+        let p2 = tmpfile("garbage.graph");
+        std::fs::write(&p2, "").unwrap();
+        assert!(read_metis(&p2).is_err());
+    }
+
+    #[test]
+    fn metis_comment_lines_skipped() {
+        let p = tmpfile("comments.graph");
+        std::fs::write(&p, "% header comment\n2 1\n2\n1\n").unwrap();
+        let g = read_metis(&p).unwrap();
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.m(), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Sparse graph substrate: CSR storage, builders, Laplacian assembly,
+//! quotient (communication) graphs, block-induced subgraphs, and IO.
+//!
+//! The paper exploits the symmetric-matrix ↔ undirected-graph
+//! correspondence (§II); [`Csr`] is the shared representation for both
+//! views: partitioners see an undirected graph, the solver sees the rows
+//! of its (shifted) Laplacian.
+
+pub mod builder;
+pub mod csr;
+pub mod io;
+pub mod laplacian;
+pub mod quotient;
+pub mod subgraph;
+
+pub use builder::GraphBuilder;
+pub use csr::Csr;
+pub use laplacian::Laplacian;
+pub use quotient::QuotientGraph;
+pub use subgraph::Subgraph;

@@ -1,0 +1,157 @@
+//! Quotient (communication) graph of a partition.
+//!
+//! Each vertex of the quotient graph corresponds to a block of the
+//! application graph; a weighted edge {i, j} carries the communication
+//! volume exchanged between blocks i and j (paper §V). Used by
+//! Geographer-R to schedule pairwise refinement rounds via edge coloring,
+//! and by the cluster simulator's communication model.
+
+use super::Csr;
+
+/// Quotient graph over `k` blocks.
+#[derive(Debug, Clone)]
+pub struct QuotientGraph {
+    pub k: usize,
+    /// Adjacency: for each block, sorted (neighbor block, comm volume).
+    pub adj: Vec<Vec<(u32, f64)>>,
+    /// Edge cut contributed by each block pair, parallel structure to adj.
+    pub cut: Vec<Vec<(u32, f64)>>,
+}
+
+impl QuotientGraph {
+    /// Build from a graph and a block assignment (`part[u] < k`).
+    ///
+    /// Communication volume of the pair {i, j}: the number of vertices of
+    /// block i with ≥1 neighbor in block j, plus vice versa (each boundary
+    /// vertex's value must be sent once to each neighboring block).
+    pub fn build(g: &Csr, part: &[u32], k: usize) -> QuotientGraph {
+        assert_eq!(part.len(), g.n());
+        use std::collections::HashMap;
+        let mut vol: HashMap<(u32, u32), f64> = HashMap::new();
+        let mut cutw: HashMap<(u32, u32), f64> = HashMap::new();
+        let mut seen: Vec<u32> = Vec::new();
+        for u in 0..g.n() {
+            let bu = part[u];
+            debug_assert!((bu as usize) < k);
+            seen.clear();
+            for e in g.arc_range(u) {
+                let v = g.adjncy[e] as usize;
+                let bv = part[v];
+                if bv == bu {
+                    continue;
+                }
+                let key = if bu < bv { (bu, bv) } else { (bv, bu) };
+                // Cut counts each undirected edge once (u < v guard).
+                if u < v {
+                    *cutw.entry(key).or_insert(0.0) += g.arc_weight(e);
+                }
+                // Volume: u's value crosses to block bv once.
+                if !seen.contains(&bv) {
+                    seen.push(bv);
+                    *vol.entry(key).or_insert(0.0) += g.vertex_weight(u);
+                }
+            }
+        }
+        let mut adj = vec![Vec::new(); k];
+        for (&(i, j), &w) in &vol {
+            adj[i as usize].push((j, w));
+            adj[j as usize].push((i, w));
+        }
+        let mut cut = vec![Vec::new(); k];
+        for (&(i, j), &w) in &cutw {
+            cut[i as usize].push((j, w));
+            cut[j as usize].push((i, w));
+        }
+        for l in adj.iter_mut().chain(cut.iter_mut()) {
+            l.sort_unstable_by_key(|&(b, _)| b);
+        }
+        QuotientGraph { k, adj, cut }
+    }
+
+    /// Number of quotient edges (communicating block pairs).
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).sum::<usize>() / 2
+    }
+
+    /// All quotient edges as (i, j, volume) with i < j.
+    pub fn edges(&self) -> Vec<(u32, u32, f64)> {
+        let mut out = Vec::new();
+        for (i, l) in self.adj.iter().enumerate() {
+            for &(j, w) in l {
+                if (i as u32) < j {
+                    out.push((i as u32, j, w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Maximum quotient degree (how many blocks one block talks to).
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// 2x2 grid: 0-1 / 2-3 with vertical edges 0-2, 1-3.
+    fn grid2x2() -> Csr {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(2, 3);
+        b.add_edge(0, 2);
+        b.add_edge(1, 3);
+        b.build()
+    }
+
+    #[test]
+    fn two_blocks_horizontal_split() {
+        let g = grid2x2();
+        // blocks: {0,1} and {2,3} — cut = 2 (edges 0-2, 1-3).
+        let q = QuotientGraph::build(&g, &[0, 0, 1, 1], 2);
+        assert_eq!(q.num_edges(), 1);
+        let e = q.edges();
+        assert_eq!(e.len(), 1);
+        let (i, j, vol) = e[0];
+        assert_eq!((i, j), (0, 1));
+        // All 4 vertices are boundary: each sends once → volume 4.
+        assert_eq!(vol, 4.0);
+        assert_eq!(q.cut[0], vec![(1, 2.0)]);
+    }
+
+    #[test]
+    fn four_singleton_blocks() {
+        let g = grid2x2();
+        let q = QuotientGraph::build(&g, &[0, 1, 2, 3], 4);
+        assert_eq!(q.num_edges(), 4); // one per graph edge
+        assert_eq!(q.max_degree(), 2);
+    }
+
+    #[test]
+    fn no_cut_single_block() {
+        let g = grid2x2();
+        let q = QuotientGraph::build(&g, &[0, 0, 0, 0], 1);
+        assert_eq!(q.num_edges(), 0);
+    }
+
+    #[test]
+    fn volume_counts_distinct_targets_once() {
+        // Star: center 0 connected to 1,2,3; blocks {0}, {1,2}, {3}.
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(0, 3);
+        let g = b.build();
+        let q = QuotientGraph::build(&g, &[0, 1, 1, 2], 3);
+        // Pair (0,1): center sends once (vol 1), vertices 1 and 2 each send
+        // once back (vol 2) → total 3.
+        let e01 = q.adj[0].iter().find(|&&(b, _)| b == 1).unwrap();
+        assert_eq!(e01.1, 3.0);
+        // Pair (0,2): center + vertex 3 → 2.
+        let e02 = q.adj[0].iter().find(|&&(b, _)| b == 2).unwrap();
+        assert_eq!(e02.1, 2.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Block-induced subgraphs with mappings back to the parent graph.
+//!
+//! Geographer-R coarsens each block's local subgraph independently
+//! (paper §V); [`Subgraph`] extracts the induced subgraph of one block
+//! together with local↔global vertex maps and the list of cut arcs.
+
+use super::{Csr, GraphBuilder};
+
+/// Induced subgraph of a vertex subset.
+#[derive(Debug, Clone)]
+pub struct Subgraph {
+    /// The induced graph over local ids 0..nv.
+    pub graph: Csr,
+    /// local id -> global id.
+    pub to_global: Vec<u32>,
+    /// Cut arcs: (local u, global v) for every edge leaving the subset.
+    pub cut_arcs: Vec<(u32, u32)>,
+}
+
+impl Subgraph {
+    /// Extract the subgraph induced by the vertices where `mask[u]` holds.
+    pub fn induced(g: &Csr, mask: impl Fn(usize) -> bool) -> Subgraph {
+        let n = g.n();
+        let mut to_global = Vec::new();
+        let mut to_local = vec![u32::MAX; n];
+        for u in 0..n {
+            if mask(u) {
+                to_local[u] = to_global.len() as u32;
+                to_global.push(u as u32);
+            }
+        }
+        let nv = to_global.len();
+        let mut b = GraphBuilder::new(nv);
+        let mut cut_arcs = Vec::new();
+        let weighted = !g.adjwgt.is_empty();
+        for (lu, &gu) in to_global.iter().enumerate() {
+            for e in g.arc_range(gu as usize) {
+                let gv = g.adjncy[e];
+                let lv = to_local[gv as usize];
+                if lv == u32::MAX {
+                    cut_arcs.push((lu as u32, gv));
+                } else if (lu as u32) < lv {
+                    if weighted {
+                        b.add_weighted_edge(lu, lv as usize, g.arc_weight(e));
+                    } else {
+                        b.add_edge(lu, lv as usize);
+                    }
+                }
+            }
+        }
+        if !g.coords.is_empty() {
+            b.set_coords(to_global.iter().map(|&gu| g.coords[gu as usize]).collect());
+        }
+        if !g.vwgt.is_empty() {
+            b.set_vertex_weights(to_global.iter().map(|&gu| g.vwgt[gu as usize]).collect());
+        }
+        Subgraph {
+            graph: b.build(),
+            to_global,
+            cut_arcs,
+        }
+    }
+
+    /// Extract the subgraph of one block of a partition.
+    pub fn of_block(g: &Csr, part: &[u32], block: u32) -> Subgraph {
+        Subgraph::induced(g, |u| part[u] == block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path 0-1-2-3-4.
+    fn path5() -> Csr {
+        let mut b = GraphBuilder::new(5);
+        for i in 0..4 {
+            b.add_edge(i, i + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn induced_block() {
+        let g = path5();
+        let part = vec![0, 0, 0, 1, 1];
+        let sg = Subgraph::of_block(&g, &part, 0);
+        assert_eq!(sg.graph.n(), 3);
+        assert_eq!(sg.graph.m(), 2); // 0-1, 1-2
+        assert_eq!(sg.to_global, vec![0, 1, 2]);
+        // One cut arc: local 2 (global 2) -> global 3.
+        assert_eq!(sg.cut_arcs, vec![(2, 3)]);
+        sg.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_selection() {
+        let g = path5();
+        let sg = Subgraph::induced(&g, |_| false);
+        assert_eq!(sg.graph.n(), 0);
+        assert!(sg.cut_arcs.is_empty());
+    }
+
+    #[test]
+    fn full_selection_no_cut() {
+        let g = path5();
+        let sg = Subgraph::induced(&g, |_| true);
+        assert_eq!(sg.graph.n(), 5);
+        assert_eq!(sg.graph.m(), 4);
+        assert!(sg.cut_arcs.is_empty());
+    }
+
+    #[test]
+    fn carries_weights_and_coords() {
+        use crate::geometry::Point;
+        let mut b = GraphBuilder::new(3);
+        b.add_weighted_edge(0, 1, 2.5);
+        b.add_weighted_edge(1, 2, 1.5);
+        b.set_coords(vec![
+            Point::new2(0.0, 0.0),
+            Point::new2(1.0, 0.0),
+            Point::new2(2.0, 0.0),
+        ]);
+        b.set_vertex_weights(vec![1.0, 2.0, 3.0]);
+        let g = b.build();
+        let sg = Subgraph::induced(&g, |u| u <= 1);
+        assert_eq!(sg.graph.arc_weight(0), 2.5);
+        assert_eq!(sg.graph.vertex_weight(1), 2.0);
+        assert_eq!(sg.graph.coords[1].x, 1.0);
+    }
+}

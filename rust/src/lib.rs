@@ -1,0 +1,41 @@
+//! # hetpart — heterogeneous load distribution for sparse matrix/graph apps
+//!
+//! Reproduction of Tzovas, Predari & Meyerhenke, *"Distributing Sparse
+//! Matrix/Graph Applications in Heterogeneous Clusters — an Experimental
+//! Study"* (2020), as a three-layer rust + JAX + Pallas system.
+//!
+//! The library provides:
+//! - the **LDHT problem** machinery: heterogeneous topology trees
+//!   ([`topology`]), optimal block-size computation (Algorithm 1,
+//!   [`blocksizes`]), and partition quality metrics ([`partition`]);
+//! - **eight partitioning algorithms** ([`partitioners`]): balanced
+//!   k-means (`geoKM`), its hierarchical variant, Geographer-R refinement
+//!   (`geoRef`, `geoPMRef`), ParMetis-like multilevel (`pmGraph`,
+//!   `pmGeom`), and the Zoltan geometric trio (`zSFC`, `zRCB`, `zRIB`);
+//! - **mesh/graph substrates**: CSR graphs ([`graph`]), generators for
+//!   random geometric graphs, Delaunay triangulations and adaptive meshes
+//!   ([`gen`]);
+//! - the **application layer**: SpMV/CG solvers and a heterogeneous
+//!   cluster execution simulator ([`solver`]), with the numeric hot path
+//!   AOT-compiled from JAX/Pallas and executed via PJRT ([`runtime`]);
+//! - an experiment **coordinator** ([`coordinator`]) and benchmark
+//!   harness ([`bench_harness`]) regenerating every table and figure of
+//!   the paper.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod blocksizes;
+pub mod coordinator;
+pub mod gen;
+pub mod geometry;
+pub mod graph;
+pub mod mapping;
+pub mod partition;
+pub mod partitioners;
+pub mod prop;
+pub mod runtime;
+pub mod solver;
+pub mod topology;
+pub mod util;

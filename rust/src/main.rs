@@ -1,0 +1,11 @@
+//! `hetpart` CLI — leader entrypoint.
+//!
+//! Subcommands (see `hetpart help`):
+//!   blocksizes  — run Algorithm 1 on a topology spec and print tw() values
+//!   partition   — generate/load a graph, partition it, print metrics
+//!   solve       — partition + distributed CG under the cluster simulator
+//!   experiment  — run a named paper experiment grid (fig1..fig5, table3, table4)
+
+fn main() {
+    hetpart::coordinator::cli::main();
+}

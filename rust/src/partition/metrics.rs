@@ -1,0 +1,206 @@
+//! Partition quality metrics.
+//!
+//! - **edge cut** (Eq. (1)): weight of edges with endpoints in different
+//!   blocks — the paper's primary quality metric;
+//! - **communication volume**: per block i, the number of (boundary
+//!   vertex, foreign block) pairs — the data block i must send during an
+//!   SpMV halo exchange; the paper reports the *maximum* over blocks;
+//! - **boundary vertices**: vertices with ≥1 neighbor in another block;
+//! - **imbalance**: max_i (w(b_i) − tw(b_i))/tw(b_i) against the
+//!   heterogeneous targets, and the LDHT objective max_i w(b_i)/c_s(p_i).
+
+use super::Partition;
+use crate::graph::Csr;
+
+/// Computed quality metrics for one partition.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    /// Total edge cut (edge-weight sum across blocks).
+    pub cut: f64,
+    /// Max over blocks of the outgoing communication volume.
+    pub max_comm_volume: f64,
+    /// Total communication volume (sum over blocks).
+    pub total_comm_volume: f64,
+    /// Number of boundary vertices.
+    pub boundary_vertices: usize,
+    /// Block weights.
+    pub block_weights: Vec<f64>,
+    /// Max relative overweight vs targets: max_i (w_i − tw_i)/tw_i (can be
+    /// negative if all blocks are under target).
+    pub imbalance: f64,
+}
+
+/// Compute all metrics in one CSR sweep. `targets` may be empty (then
+/// imbalance is measured against uniform targets n/k).
+pub fn metrics(g: &Csr, p: &Partition, targets: &[f64]) -> Metrics {
+    debug_assert_eq!(p.assignment.len(), g.n());
+    let k = p.k;
+    let mut cut = 0.0;
+    let mut send_vol = vec![0.0; k];
+    let mut boundary = 0usize;
+    // Scratch: last block seen per (vertex, foreign block) — use a small
+    // per-vertex set since mesh degrees are tiny.
+    let mut seen: Vec<u32> = Vec::with_capacity(16);
+    for u in 0..g.n() {
+        let bu = p.assignment[u];
+        let mut is_boundary = false;
+        seen.clear();
+        for e in g.arc_range(u) {
+            let v = g.adjncy[e] as usize;
+            let bv = p.assignment[v];
+            if bv != bu {
+                is_boundary = true;
+                if u < v {
+                    cut += g.arc_weight(e);
+                }
+                if !seen.contains(&bv) {
+                    seen.push(bv);
+                    // u's value must reach block bv once.
+                    send_vol[bu as usize] += g.vertex_weight(u);
+                }
+            }
+        }
+        if is_boundary {
+            boundary += 1;
+        }
+    }
+    let block_weights = p.block_weights(g);
+    let uniform = g.total_vertex_weight() / k as f64;
+    let imbalance = (0..k)
+        .map(|i| {
+            let tw = if targets.is_empty() { uniform } else { targets[i] };
+            if tw > 0.0 {
+                (block_weights[i] - tw) / tw
+            } else if block_weights[i] > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        })
+        .fold(f64::NEG_INFINITY, f64::max);
+    let max_comm_volume = send_vol.iter().copied().fold(0.0, f64::max);
+    let total_comm_volume = send_vol.iter().sum();
+    Metrics {
+        cut,
+        max_comm_volume,
+        total_comm_volume,
+        boundary_vertices: boundary,
+        block_weights,
+        imbalance,
+    }
+}
+
+impl Metrics {
+    /// The LDHT objective (Eq. (2)): max_i w(b_i)/c_s(p_i).
+    pub fn ldht_objective(&self, speeds: &[f64]) -> f64 {
+        self.block_weights
+            .iter()
+            .zip(speeds)
+            .map(|(&w, &s)| w / s)
+            .fold(0.0, f64::max)
+    }
+
+    /// Memory-constraint violation (Eq. (3)): max_i w(b_i) − m_cap(p_i),
+    /// clamped at 0 when satisfied.
+    pub fn memory_violation(&self, mems: &[f64]) -> f64 {
+        self.block_weights
+            .iter()
+            .zip(mems)
+            .map(|(&w, &m)| (w - m).max(0.0))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// 3x2 grid graph:
+    /// 0-1-2
+    /// | | |
+    /// 3-4-5
+    fn grid3x2() -> Csr {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(3, 4);
+        b.add_edge(4, 5);
+        b.add_edge(0, 3);
+        b.add_edge(1, 4);
+        b.add_edge(2, 5);
+        b.build()
+    }
+
+    #[test]
+    fn cut_and_volume_vertical_split() {
+        let g = grid3x2();
+        // blocks {0,3} | {1,2,4,5}: cut edges 0-1, 3-4 → cut 2.
+        let p = Partition::new(vec![0, 1, 1, 0, 1, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 2.0);
+        // Boundary vertices: 0,1,3,4.
+        assert_eq!(m.boundary_vertices, 4);
+        // Volume: block0 sends {0→b1, 3→b1} = 2; block1 sends {1→b0, 4→b0} = 2.
+        assert_eq!(m.max_comm_volume, 2.0);
+        assert_eq!(m.total_comm_volume, 4.0);
+    }
+
+    #[test]
+    fn zero_cut_single_block() {
+        let g = grid3x2();
+        let p = Partition::trivial(6);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 0.0);
+        assert_eq!(m.max_comm_volume, 0.0);
+        assert_eq!(m.boundary_vertices, 0);
+    }
+
+    #[test]
+    fn volume_counts_multi_block_targets() {
+        let g = grid3x2();
+        // Vertex 4 neighbors blocks 0,1,2 when split {0,3},{1,4? no...
+        // blocks: 0:{0,1,2}, 1:{3,4}, 2:{5}.
+        let p = Partition::new(vec![0, 0, 0, 1, 1, 2], 3);
+        let m = metrics(&g, &p, &[]);
+        // cut edges: 0-3, 1-4, 2-5, 4-5 → 4.
+        assert_eq!(m.cut, 4.0);
+        // send volumes: b0: 0→1, 1→1, 2→2 = 3. b1: 3→0, 4→0, 4→2 = 3.
+        // b2: 5→0, 5→1 = 2.
+        assert_eq!(m.total_comm_volume, 8.0);
+        assert_eq!(m.max_comm_volume, 3.0);
+    }
+
+    #[test]
+    fn imbalance_vs_targets() {
+        let g = grid3x2();
+        let p = Partition::new(vec![0, 0, 0, 0, 1, 1], 2);
+        // weights 4 and 2; targets 3 and 3 → imbalance (4-3)/3 = 1/3.
+        let m = metrics(&g, &p, &[3.0, 3.0]);
+        assert!((m.imbalance - 1.0 / 3.0).abs() < 1e-12);
+        // Heterogeneous targets 4 and 2 → perfectly balanced (max rel = 0).
+        let m2 = metrics(&g, &p, &[4.0, 2.0]);
+        assert!(m2.imbalance.abs() < 1e-12);
+    }
+
+    #[test]
+    fn ldht_objective_and_memory() {
+        let g = grid3x2();
+        let p = Partition::new(vec![0, 0, 0, 0, 1, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        // weights 4, 2; speeds 2, 1 → max(2, 2) = 2.
+        assert_eq!(m.ldht_objective(&[2.0, 1.0]), 2.0);
+        assert_eq!(m.memory_violation(&[4.0, 2.0]), 0.0);
+        assert_eq!(m.memory_violation(&[3.0, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn weighted_edges_in_cut() {
+        let mut b = GraphBuilder::new(2);
+        b.add_weighted_edge(0, 1, 2.5);
+        let g = b.build();
+        let p = Partition::new(vec![0, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 2.5);
+    }
+}

@@ -1,0 +1,130 @@
+//! Partitions and their quality metrics (paper §II, §VI-a).
+//!
+//! A [`Partition`] assigns each vertex to one of `k` blocks. Quality is
+//! measured by edge cut, maximum/total communication volume, boundary
+//! vertices, and imbalance against the heterogeneous target weights from
+//! Algorithm 1.
+
+mod metrics;
+
+pub use metrics::{Metrics, metrics};
+
+use crate::graph::Csr;
+
+/// A k-way partition of a graph's vertex set.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Block id per vertex.
+    pub assignment: Vec<u32>,
+    /// Number of blocks.
+    pub k: usize,
+}
+
+impl Partition {
+    pub fn new(assignment: Vec<u32>, k: usize) -> Partition {
+        debug_assert!(assignment.iter().all(|&b| (b as usize) < k));
+        Partition { assignment, k }
+    }
+
+    /// All vertices in block 0 (trivial partition).
+    pub fn trivial(n: usize) -> Partition {
+        Partition { assignment: vec![0; n], k: 1 }
+    }
+
+    #[inline]
+    pub fn block_of(&self, u: usize) -> u32 {
+        self.assignment[u]
+    }
+
+    pub fn n(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Weight of each block under the graph's vertex weights.
+    pub fn block_weights(&self, g: &Csr) -> Vec<f64> {
+        let mut w = vec![0.0; self.k];
+        for u in 0..self.n() {
+            w[self.assignment[u] as usize] += g.vertex_weight(u);
+        }
+        w
+    }
+
+    /// Number of vertices per block.
+    pub fn block_sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k];
+        for &b in &self.assignment {
+            s[b as usize] += 1;
+        }
+        s
+    }
+
+    /// Validity: every vertex assigned to a block < k, matching graph size.
+    pub fn validate(&self, g: &Csr) -> Result<(), String> {
+        if self.assignment.len() != g.n() {
+            return Err(format!(
+                "assignment length {} != n {}",
+                self.assignment.len(),
+                g.n()
+            ));
+        }
+        for (u, &b) in self.assignment.iter().enumerate() {
+            if b as usize >= self.k {
+                return Err(format!("vertex {u} in block {b} >= k {}", self.k));
+            }
+        }
+        Ok(())
+    }
+
+    /// Renumber blocks so that used block ids are contiguous 0..k'
+    /// (some partitioners can leave a block empty on tiny inputs).
+    pub fn compact(&mut self) {
+        let mut map = vec![u32::MAX; self.k];
+        let mut next = 0u32;
+        for b in self.assignment.iter_mut() {
+            if map[*b as usize] == u32::MAX {
+                map[*b as usize] = next;
+                next += 1;
+            }
+            *b = map[*b as usize];
+        }
+        self.k = next as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path4() -> Csr {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        b.build()
+    }
+
+    #[test]
+    fn block_weights_and_sizes() {
+        let g = path4();
+        let p = Partition::new(vec![0, 0, 1, 1], 2);
+        p.validate(&g).unwrap();
+        assert_eq!(p.block_weights(&g), vec![2.0, 2.0]);
+        assert_eq!(p.block_sizes(), vec![2, 2]);
+    }
+
+    #[test]
+    fn validate_catches_bad_block() {
+        let g = path4();
+        let p = Partition { assignment: vec![0, 0, 5, 1], k: 2 };
+        assert!(p.validate(&g).is_err());
+    }
+
+    #[test]
+    fn compact_renumbers() {
+        let mut p = Partition { assignment: vec![3, 3, 1, 1], k: 5 };
+        p.compact();
+        assert_eq!(p.k, 2);
+        assert_eq!(p.assignment, vec![0, 0, 1, 1]);
+    }
+}

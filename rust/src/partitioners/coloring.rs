@@ -1,0 +1,109 @@
+//! Edge coloring of the quotient graph → communication rounds.
+//!
+//! Geographer-R (paper §V, inspired by [20]) refines block pairs in
+//! parallel rounds: a proper edge coloring of the quotient graph assigns
+//! each communicating block pair a round such that no block participates
+//! in two refinements of the same round. Greedy coloring uses at most
+//! 2Δ−1 colors (Vizing guarantees Δ+1 exists; greedy is close enough and
+//! linear-time).
+
+use crate::graph::QuotientGraph;
+
+/// Color the quotient edges; returns rounds: for each color, the list of
+/// disjoint block pairs (i, j) refined in that round, ordered by
+/// decreasing communication volume (heavier pairs first — they matter
+/// most for the cut).
+pub fn communication_rounds(q: &QuotientGraph) -> Vec<Vec<(u32, u32)>> {
+    let mut edges = q.edges();
+    // Heavy pairs first so they land in early rounds.
+    edges.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+    let mut colors_used: Vec<Vec<usize>> = vec![Vec::new(); q.k]; // per block
+    let mut rounds: Vec<Vec<(u32, u32)>> = Vec::new();
+    for (i, j, _) in edges {
+        // Smallest color free at both endpoints.
+        let mut c = 0usize;
+        loop {
+            if !colors_used[i as usize].contains(&c) && !colors_used[j as usize].contains(&c) {
+                break;
+            }
+            c += 1;
+        }
+        colors_used[i as usize].push(c);
+        colors_used[j as usize].push(c);
+        if rounds.len() <= c {
+            rounds.resize(c + 1, Vec::new());
+        }
+        rounds[c].push((i, j));
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::graph::QuotientGraph;
+    use crate::partition::Partition;
+    use crate::partitioners::{Ctx, Partitioner};
+    use crate::topology::Topology;
+
+    fn coloring_is_proper(rounds: &[Vec<(u32, u32)>]) {
+        for (c, round) in rounds.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &(i, j) in round {
+                assert!(seen.insert(i), "block {i} twice in round {c}");
+                assert!(seen.insert(j), "block {j} twice in round {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_needs_three_rounds() {
+        // 3 mutually adjacent blocks: edge chromatic number 3.
+        let g = {
+            let mut b = crate::graph::GraphBuilder::new(3);
+            b.add_edge(0, 1);
+            b.add_edge(1, 2);
+            b.add_edge(0, 2);
+            b.build()
+        };
+        let q = QuotientGraph::build(&g, &[0, 1, 2], 3);
+        let rounds = communication_rounds(&q);
+        coloring_is_proper(&rounds);
+        assert_eq!(rounds.len(), 3);
+        assert_eq!(rounds.iter().map(|r| r.len()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn star_gets_degree_rounds() {
+        // Star quotient: center block adjacent to 4 leaves → 4 rounds.
+        let mut b = crate::graph::GraphBuilder::new(5);
+        for i in 1..5 {
+            b.add_edge(0, i);
+        }
+        let g = b.build();
+        let q = QuotientGraph::build(&g, &[0, 1, 2, 3, 4], 5);
+        let rounds = communication_rounds(&q);
+        coloring_is_proper(&rounds);
+        assert_eq!(rounds.len(), 4);
+    }
+
+    #[test]
+    fn real_partition_coloring_proper_and_bounded() {
+        let g = mesh_2d_tri(30, 30, 1);
+        let topo = Topology::homogeneous(9, 1.0, 1e9);
+        let targets = vec![100.0; 9];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 1 };
+        let p: Partition = crate::partitioners::geokm::GeoKMeans::default()
+            .partition(&ctx)
+            .unwrap();
+        let q = QuotientGraph::build(&g, &p.assignment, 9);
+        let rounds = communication_rounds(&q);
+        coloring_is_proper(&rounds);
+        // Greedy bound: < 2Δ.
+        assert!(rounds.len() < 2 * q.max_degree().max(1));
+        // Every quotient edge appears exactly once.
+        let total: usize = rounds.iter().map(|r| r.len()).sum();
+        assert_eq!(total, q.num_edges());
+    }
+}

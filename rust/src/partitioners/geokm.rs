@@ -1,0 +1,312 @@
+//! `geoKM` — balanced k-means geometric partitioning (Geographer,
+//! von Looz, Tzovas & Meyerhenke ICPP'18).
+//!
+//! k-means with per-cluster *influence* factors that steer cluster sizes
+//! toward the heterogeneous target weights:
+//!
+//! 1. **Seeding**: vertices are sorted along the Hilbert curve and cut at
+//!    the target-weight boundaries; each piece's centroid seeds one
+//!    cluster — spatially spread *and* target-aware.
+//! 2. **Lloyd iterations with influence**: each vertex joins the cluster
+//!    minimizing `dist²(p, c_i) · f_i`; after each round the influence
+//!    `f_i` is scaled by `(w_i / tw_i)^γ`, inflating the effective
+//!    distance of overweight clusters (the mechanism of [32]).
+//! 3. **Strict rebalance**: any residual overweight beyond ε is removed
+//!    by greedily migrating the cheapest vertices (smallest distance
+//!    regret) from overweight to underweight clusters.
+//!
+//! The result is compact, convex-ish blocks — the paper's baseline that
+//! all Figs. 2–4 normalize to.
+
+use super::{fill_by_order, Ctx, Partitioner};
+use crate::geometry::{hilbert_index, Aabb, Point};
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+
+pub struct GeoKMeans {
+    /// Maximum Lloyd rounds.
+    pub max_iters: usize,
+    /// Influence exponent γ.
+    pub gamma: f64,
+}
+
+impl Default for GeoKMeans {
+    fn default() -> Self {
+        GeoKMeans { max_iters: 40, gamma: 0.6 }
+    }
+}
+
+impl Partitioner for GeoKMeans {
+    fn name(&self) -> &'static str {
+        "geoKM"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        let g = ctx.graph;
+        ensure!(g.has_coords(), "geoKM requires vertex coordinates");
+        let k = ctx.k();
+        let n = g.n();
+        ensure!(k >= 1 && n >= k, "need n >= k >= 1");
+        if k == 1 {
+            return Ok(Partition::trivial(n));
+        }
+        let mut centers = seed_centers(g, ctx.targets);
+        let mut influence = vec![1.0f64; k];
+        let mut assignment = vec![0u32; n];
+        let mut weights = vec![0.0f64; k];
+        for _iter in 0..self.max_iters {
+            // Assignment step (the hot loop — see solver/bench notes).
+            weights.iter_mut().for_each(|w| *w = 0.0);
+            for u in 0..n {
+                let p = g.coords[u];
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for (i, c) in centers.iter().enumerate() {
+                    let d = p.dist2(c) * influence[i];
+                    if d < best_d {
+                        best_d = d;
+                        best = i;
+                    }
+                }
+                assignment[u] = best as u32;
+                weights[best] += g.vertex_weight(u);
+            }
+            // Center update.
+            let mut sums = vec![Point::zero(g.coords[0].dim); k];
+            let mut wsum = vec![0.0f64; k];
+            for u in 0..n {
+                let b = assignment[u] as usize;
+                let w = g.vertex_weight(u);
+                sums[b] = sums[b].add(&g.coords[u].scale(w));
+                wsum[b] += w;
+            }
+            for i in 0..k {
+                if wsum[i] > 0.0 {
+                    centers[i] = sums[i].scale(1.0 / wsum[i]);
+                }
+            }
+            // Influence update toward targets.
+            let mut max_over = 0.0f64;
+            for i in 0..k {
+                let ratio = (weights[i] / ctx.targets[i]).max(1e-12);
+                influence[i] = (influence[i] * ratio.powf(self.gamma)).clamp(1e-3, 1e3);
+                max_over = max_over.max(weights[i] / ctx.targets[i] - 1.0);
+            }
+            if max_over <= ctx.epsilon * 0.5 {
+                break;
+            }
+        }
+        // Strict rebalance to meet the ε bound exactly.
+        rebalance(g, &centers, ctx.targets, ctx.epsilon, &mut assignment);
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+/// Hilbert-prefix seeding: cut the curve at the target weights and take
+/// each piece's weighted centroid.
+pub fn seed_centers(g: &crate::graph::Csr, targets: &[f64]) -> Vec<Point> {
+    let bb = Aabb::of(&g.coords);
+    let mut order: Vec<u32> = (0..g.n() as u32).collect();
+    let keys: Vec<u64> = g.coords.iter().map(|p| hilbert_index(p, &bb)).collect();
+    order.sort_unstable_by_key(|&u| keys[u as usize]);
+    let assign = fill_by_order(&order, |u| g.vertex_weight(u), targets);
+    let k = targets.len();
+    let mut sums = vec![Point::zero(g.coords[0].dim); k];
+    let mut wsum = vec![0.0f64; k];
+    for u in 0..g.n() {
+        let b = assign[u] as usize;
+        let w = g.vertex_weight(u);
+        sums[b] = sums[b].add(&g.coords[u].scale(w));
+        wsum[b] += w;
+    }
+    (0..k)
+        .map(|i| {
+            if wsum[i] > 0.0 {
+                sums[i].scale(1.0 / wsum[i])
+            } else {
+                g.coords[i % g.n()]
+            }
+        })
+        .collect()
+}
+
+/// Greedy migration until every block's weight ≤ (1+ε)·target.
+/// Moves the vertices with the smallest "regret" (extra distance to the
+/// receiving center) from overweight blocks to underweight ones.
+pub fn rebalance(
+    g: &crate::graph::Csr,
+    centers: &[Point],
+    targets: &[f64],
+    epsilon: f64,
+    assignment: &mut [u32],
+) {
+    let k = targets.len();
+    let n = g.n();
+    let mut weights = vec![0.0f64; k];
+    for u in 0..n {
+        weights[assignment[u] as usize] += g.vertex_weight(u);
+    }
+    let cap: Vec<f64> = targets.iter().map(|t| t * (1.0 + epsilon)).collect();
+    // Vertices of overweight blocks, with their cheapest admissible move.
+    loop {
+        let over: Vec<usize> = (0..k).filter(|&i| weights[i] > cap[i]).collect();
+        if over.is_empty() {
+            break;
+        }
+        let mut moved_any = false;
+        for &b in &over {
+            // Collect candidate moves for block b.
+            let mut cands: Vec<(f64, u32, u32)> = Vec::new(); // (regret, u, to)
+            for u in 0..n {
+                if assignment[u] != b as u32 {
+                    continue;
+                }
+                let p = g.coords[u];
+                let d_own = p.dist2(&centers[b]);
+                let mut best: Option<(f64, u32)> = None;
+                for (j, c) in centers.iter().enumerate() {
+                    if j == b || weights[j] + g.vertex_weight(u) > cap[j] {
+                        continue;
+                    }
+                    let regret = p.dist2(c) - d_own;
+                    if best.map(|(r, _)| regret < r).unwrap_or(true) {
+                        best = Some((regret, j as u32));
+                    }
+                }
+                if let Some((r, j)) = best {
+                    cands.push((r, u as u32, j));
+                }
+            }
+            cands.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut need = weights[b] - cap[b];
+            for (_, u, j) in cands {
+                if need <= 0.0 {
+                    break;
+                }
+                let w = g.vertex_weight(u as usize);
+                if weights[j as usize] + w > cap[j as usize] {
+                    continue;
+                }
+                assignment[u as usize] = j;
+                weights[b] -= w;
+                weights[j as usize] += w;
+                need -= w;
+                moved_any = true;
+            }
+        }
+        if !moved_any {
+            break; // no admissible move (pathological caps) — give up
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{mesh_2d_tri, rgg_2d, rgg_3d};
+    use crate::partition::metrics;
+    use crate::partitioners::sfc::Sfc;
+    use crate::topology::Topology;
+
+    fn ctx<'a>(
+        g: &'a crate::graph::Csr,
+        targets: &'a [f64],
+        topo: &'a Topology,
+    ) -> Ctx<'a> {
+        Ctx { graph: g, targets, topo, epsilon: 0.03, seed: 1 }
+    }
+
+    #[test]
+    fn uniform_targets_balanced() {
+        let g = rgg_2d(2000, 1);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![250.0; 8];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.031, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn heterogeneous_targets_met() {
+        let g = mesh_2d_tri(60, 60, 2);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![1800.0, 600.0, 600.0, 600.0];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.031, "imbalance {}", m.imbalance);
+        assert!((m.block_weights[0] - 1800.0).abs() <= 0.04 * 1800.0);
+    }
+
+    #[test]
+    fn beats_sfc_on_cut() {
+        // The paper's headline geometric result: balanced k-means beats
+        // the other geometric methods by >15% on mesh cut quality.
+        let g = mesh_2d_tri(70, 70, 3);
+        let topo = Topology::homogeneous(12, 1.0, 1e9);
+        let targets = vec![4900.0 / 12.0; 12];
+        let c = ctx(&g, &targets, &topo);
+        let km = GeoKMeans::default().partition(&c).unwrap();
+        let sf = Sfc.partition(&c).unwrap();
+        let cut_km = metrics(&g, &km, &targets).cut;
+        let cut_sfc = metrics(&g, &sf, &targets).cut;
+        assert!(
+            cut_km < cut_sfc,
+            "geoKM {cut_km} should beat zSFC {cut_sfc}"
+        );
+    }
+
+    #[test]
+    fn blocks_are_spatially_compact() {
+        let g = rgg_2d(3000, 5);
+        let topo = Topology::homogeneous(6, 1.0, 1e9);
+        let targets = vec![500.0; 6];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        // Mean within-block distance to block centroid must be well below
+        // the domain scale.
+        let mut sums = vec![Point::zero(2); 6];
+        let mut cnt = vec![0.0; 6];
+        for u in 0..g.n() {
+            let b = p.assignment[u] as usize;
+            sums[b] = sums[b].add(&g.coords[u]);
+            cnt[b] += 1.0;
+        }
+        let centers: Vec<Point> =
+            (0..6).map(|i| sums[i].scale(1.0 / cnt[i])).collect();
+        let mean_d: f64 = (0..g.n())
+            .map(|u| g.coords[u].dist(&centers[p.assignment[u] as usize]))
+            .sum::<f64>()
+            / g.n() as f64;
+        assert!(mean_d < 0.25, "mean within-block distance {mean_d}");
+    }
+
+    #[test]
+    fn works_in_3d() {
+        let g = rgg_3d(2000, 7);
+        let topo = Topology::homogeneous(5, 1.0, 1e9);
+        let targets = vec![400.0; 5];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.031, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let g = rgg_2d(100, 1);
+        let topo = Topology::homogeneous(1, 1.0, 1e9);
+        let targets = vec![100.0];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        assert_eq!(p.k, 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = rgg_2d(800, 3);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![200.0; 4];
+        let a = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        let b = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

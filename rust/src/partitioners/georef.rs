@@ -1,0 +1,308 @@
+//! `geoRef` (**Geographer-R**, paper §V) and `geoPMRef`.
+//!
+//! Geographer-R combines geometric and combinatorial techniques:
+//!
+//! 1. **Initial distribution first**: balanced k-means (`geoKM`) assigns
+//!    each PU one block *before* any coarsening — this is the paper's
+//!    inversion of the classic multilevel order, chosen so each PU can
+//!    coarsen its local subgraph independently.
+//! 2. **Block-local coarsening**: heavy-edge matching restricted to
+//!    same-block pairs (our `build_hierarchy(.., same_block)`), which is
+//!    exactly "each PU coarsens its local subgraph".
+//! 3. **Pairwise FM rounds**: the quotient graph's maximum edge coloring
+//!    determines communication rounds; in each round the corresponding
+//!    block pairs run 2-way FM (with rollback) on candidates drawn from a
+//!    BFS-extended neighborhood of the pair boundary.
+//! 4. **Uncoarsen & repeat** until the original graph is refined.
+//!
+//! `geoPMRef` pairs the same geoKM seed partition with the ParMetis-style
+//! k-way refinement from [`super::multilevel`] instead.
+
+use super::coloring::communication_rounds;
+use super::geokm::GeoKMeans;
+use super::multilevel::{balance_enforce, build_hierarchy, kway_refine, pairwise_fm};
+use super::{Ctx, Partitioner};
+use crate::graph::{Csr, QuotientGraph};
+use crate::partition::Partition;
+use anyhow::Result;
+
+/// BFS depth for boundary candidate extension (paper: "a number of BFS
+/// rounds starting from the boundary nodes").
+const BFS_DEPTH: usize = 2;
+/// Outer refinement sweeps per hierarchy level.
+const SWEEPS_PER_LEVEL: usize = 2;
+/// Stop coarsening at this many vertices per block.
+const COARSE_VERTS_PER_BLOCK: usize = 20;
+
+#[derive(Default)]
+pub struct GeoRef {
+    pub inner: GeoKMeans,
+}
+
+impl Partitioner for GeoRef {
+    fn name(&self) -> &'static str {
+        "geoRef"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        // Phase 1: geometric seed partition.
+        let seed_part = self.inner.partition(ctx)?;
+        let k = ctx.k();
+        let g = ctx.graph;
+        // Phase 2: block-local coarsening.
+        let target_n = (COARSE_VERTS_PER_BLOCK * k).max(64);
+        let hierarchy = build_hierarchy(g, target_n, ctx.seed, Some(&seed_part.assignment));
+        // Project the seed partition onto the coarsest graph.
+        let mut coarse_assignment = seed_part.assignment.clone();
+        for level in &hierarchy.levels {
+            let mut next = vec![0u32; level.graph.n()];
+            for (fine, &coarse) in level.map.iter().enumerate() {
+                next[coarse as usize] = coarse_assignment[fine];
+            }
+            coarse_assignment = next;
+        }
+        // Phases 3–4: pairwise FM at every level, coarsest to finest.
+        let assignment =
+            hierarchy.project_and_refine(g, coarse_assignment, |graph, assignment| {
+                pairwise_refine_sweeps(graph, assignment, ctx.targets, ctx.epsilon);
+            });
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+/// Run `SWEEPS_PER_LEVEL` rounds of color-scheduled pairwise FM.
+fn pairwise_refine_sweeps(g: &Csr, assignment: &mut [u32], targets: &[f64], epsilon: f64) {
+    let k = targets.len();
+    let mut weights = vec![0.0f64; k];
+    for u in 0..g.n() {
+        weights[assignment[u] as usize] += g.vertex_weight(u);
+    }
+    for _sweep in 0..SWEEPS_PER_LEVEL {
+        let q = QuotientGraph::build(g, assignment, k);
+        let rounds = communication_rounds(&q);
+        // One O(m) pass collects the boundary seeds of every block pair
+        // (the old per-pair O(n) scan dominated geoRef's runtime — see
+        // EXPERIMENTS.md §Perf).
+        let mut pair_seeds: std::collections::HashMap<(u32, u32), Vec<u32>> =
+            std::collections::HashMap::new();
+        let mut seen: Vec<u32> = Vec::with_capacity(8);
+        for u in 0..g.n() {
+            let bu = assignment[u];
+            seen.clear();
+            for e in g.arc_range(u) {
+                let bv = assignment[g.adjncy[e] as usize];
+                if bv != bu && !seen.contains(&bv) {
+                    seen.push(bv);
+                    let key = if bu < bv { (bu, bv) } else { (bv, bu) };
+                    pair_seeds.entry(key).or_default().push(u as u32);
+                }
+            }
+        }
+        let mut total_gain = 0.0;
+        for round in &rounds {
+            // The paper refines the pairs of one round in parallel on the
+            // owning PU pairs; pairs within a round touch disjoint blocks,
+            // so sequential execution is semantically identical.
+            for &(a, b) in round {
+                let Some(seeds) = pair_seeds.get(&(a, b)) else { continue };
+                let cands = extend_candidates(g, assignment, a, b, seeds, BFS_DEPTH);
+                if cands.is_empty() {
+                    continue;
+                }
+                total_gain +=
+                    pairwise_fm(g, assignment, a, b, &cands, targets, epsilon, &mut weights);
+            }
+        }
+        if total_gain <= 0.0 {
+            break;
+        }
+    }
+}
+
+/// Candidates for the (a, b) pair: vertices of either block within
+/// `depth` BFS hops of the a↔b boundary.
+pub fn boundary_candidates(
+    g: &Csr,
+    assignment: &[u32],
+    a: u32,
+    b: u32,
+    depth: usize,
+) -> Vec<u32> {
+    // Seed scan (kept for callers that only need one pair; the sweep
+    // driver batches this across all pairs instead).
+    let mut seeds = Vec::new();
+    for u in 0..g.n() {
+        let bu = assignment[u];
+        if bu != a && bu != b {
+            continue;
+        }
+        let other = if bu == a { b } else { a };
+        if g
+            .neighbors(u)
+            .iter()
+            .any(|&v| assignment[v as usize] == other)
+        {
+            seeds.push(u as u32);
+        }
+    }
+    extend_candidates(g, assignment, a, b, &seeds, depth)
+}
+
+/// BFS-extend boundary `seeds` by `depth` hops within blocks {a, b}.
+fn extend_candidates(
+    g: &Csr,
+    assignment: &[u32],
+    a: u32,
+    b: u32,
+    seeds: &[u32],
+    depth: usize,
+) -> Vec<u32> {
+    let mut dist: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    let mut queue = std::collections::VecDeque::new();
+    for &u in seeds {
+        dist.insert(u, 0);
+        queue.push_back(u);
+    }
+    while let Some(u) = queue.pop_front() {
+        let d = dist[&u];
+        if d >= depth {
+            continue;
+        }
+        for &v in g.neighbors(u as usize) {
+            let bv = assignment[v as usize];
+            if (bv == a || bv == b) && !dist.contains_key(&v) {
+                dist.insert(v, d + 1);
+                queue.push_back(v);
+            }
+        }
+    }
+    let mut out: Vec<u32> = dist.into_keys().collect();
+    out.sort_unstable();
+    out
+}
+
+/// `geoPMRef` — balanced k-means + the ParMetis-style multilevel k-way
+/// refinement (paper §VI-b: "the local refinement routine from ParMetis").
+#[derive(Default)]
+pub struct GeoPmRef {
+    pub inner: GeoKMeans,
+}
+
+impl Partitioner for GeoPmRef {
+    fn name(&self) -> &'static str {
+        "geoPMRef"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        let seed_part = self.inner.partition(ctx)?;
+        let k = ctx.k();
+        let g = ctx.graph;
+        let target_n = (COARSE_VERTS_PER_BLOCK * k).max(64);
+        let hierarchy = build_hierarchy(g, target_n, ctx.seed, Some(&seed_part.assignment));
+        let mut coarse_assignment = seed_part.assignment.clone();
+        for level in &hierarchy.levels {
+            let mut next = vec![0u32; level.graph.n()];
+            for (fine, &coarse) in level.map.iter().enumerate() {
+                next[coarse as usize] = coarse_assignment[fine];
+            }
+            coarse_assignment = next;
+        }
+        let assignment =
+            hierarchy.project_and_refine(g, coarse_assignment, |graph, assignment| {
+                balance_enforce(graph, assignment, ctx.targets, ctx.epsilon);
+                kway_refine(graph, assignment, ctx.targets, ctx.epsilon, 6);
+            });
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{mesh_2d_tri, rgg_2d};
+    use crate::partition::metrics;
+    use crate::topology::Topology;
+
+    fn ctx<'a>(
+        g: &'a Csr,
+        targets: &'a [f64],
+        topo: &'a Topology,
+    ) -> Ctx<'a> {
+        Ctx { graph: g, targets, topo, epsilon: 0.05, seed: 1 }
+    }
+
+    #[test]
+    fn georef_improves_on_geokm() {
+        // The paper's central quality claim: refinement beats plain
+        // balanced k-means on mesh cut.
+        let g = mesh_2d_tri(50, 50, 1);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![2500.0 / 8.0; 8];
+        let c = ctx(&g, &targets, &topo);
+        let km = GeoKMeans::default().partition(&c).unwrap();
+        let re = GeoRef::default().partition(&c).unwrap();
+        let cut_km = metrics(&g, &km, &targets).cut;
+        let cut_re = metrics(&g, &re, &targets).cut;
+        assert!(
+            cut_re < cut_km,
+            "geoRef {cut_re} must beat geoKM {cut_km}"
+        );
+    }
+
+    #[test]
+    fn geopmref_improves_on_geokm() {
+        let g = mesh_2d_tri(50, 50, 2);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![2500.0 / 8.0; 8];
+        let c = ctx(&g, &targets, &topo);
+        let km = GeoKMeans::default().partition(&c).unwrap();
+        let re = GeoPmRef::default().partition(&c).unwrap();
+        let cut_km = metrics(&g, &km, &targets).cut;
+        let cut_re = metrics(&g, &re, &targets).cut;
+        assert!(
+            cut_re < cut_km,
+            "geoPMRef {cut_re} must beat geoKM {cut_km}"
+        );
+    }
+
+    #[test]
+    fn georef_keeps_balance() {
+        let g = rgg_2d(3000, 3);
+        let topo = Topology::homogeneous(6, 1.0, 1e9);
+        let n = g.n() as f64;
+        let targets = vec![n * 0.3, n * 0.3, n * 0.1, n * 0.1, n * 0.1, n * 0.1];
+        let p = GeoRef::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.08, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn boundary_candidates_near_boundary_only() {
+        let g = mesh_2d_tri(20, 20, 4);
+        // Vertical halves.
+        let assignment: Vec<u32> =
+            (0..g.n()).map(|u| (g.coords[u].x > 9.5) as u32).collect();
+        let cands = boundary_candidates(&g, &assignment, 0, 1, 2);
+        assert!(!cands.is_empty());
+        for &u in &cands {
+            let x = g.coords[u as usize].x;
+            assert!((6.0..14.0).contains(&x), "candidate {u} at x={x} too far");
+        }
+        // Depth 0 = only the facing columns.
+        let cands0 = boundary_candidates(&g, &assignment, 0, 1, 0);
+        assert!(cands0.len() < cands.len());
+    }
+
+    #[test]
+    fn heterogeneous_targets_survive_refinement() {
+        let g = mesh_2d_tri(40, 40, 5);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let n = g.n() as f64;
+        let targets = vec![n * 0.5, n * 0.25, n * 0.125, n * 0.125];
+        let p = GeoRef::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.08, "imbalance {}", m.imbalance);
+        assert!(m.block_weights[0] > 3.0 * m.block_weights[3]);
+    }
+}

@@ -1,0 +1,209 @@
+//! `hierKM` — hierarchical balanced k-means (paper §V).
+//!
+//! The compute hierarchy is given as fan-outs `k_1, …, k_h` (an implicit
+//! tree); on level i each block is partitioned into `k_{i+1}` sub-blocks
+//! whose targets aggregate the PU subsets below. Direct k-way usually has
+//! slightly better cut, but the hierarchical version maps communicating
+//! blocks onto nearby PUs (Fig. 1 compares the two: cut within ±1%).
+
+use super::geokm::GeoKMeans;
+use super::{Ctx, Partitioner};
+use crate::blocksizes::block_sizes_for_subsets;
+use crate::graph::Subgraph;
+use crate::partition::Partition;
+use crate::topology::{Topology, TreeNode};
+use anyhow::{ensure, Result};
+
+pub struct HierKMeans {
+    pub inner: GeoKMeans,
+    /// Apply the paper's fast global smoothing pass after the hierarchy
+    /// ("as a fast post-processing step, we do a global repartitioning
+    /// step that smooths the border and improves the cut", §V).
+    pub smooth: bool,
+}
+
+impl Default for HierKMeans {
+    fn default() -> Self {
+        HierKMeans { inner: GeoKMeans::default(), smooth: true }
+    }
+}
+
+impl Partitioner for HierKMeans {
+    fn name(&self) -> &'static str {
+        "hierKM"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        let g = ctx.graph;
+        ensure!(g.has_coords(), "hierKM requires vertex coordinates");
+        let k = ctx.k();
+        let mut assignment = vec![0u32; g.n()];
+        // Map: current vertex set (global ids) to partition under a node.
+        self.recurse(ctx, ctx.topo.root, &(0..g.n() as u32).collect::<Vec<_>>(), &mut assignment)?;
+        if self.smooth {
+            // Global border smoothing (one cheap boundary-refinement pass).
+            crate::partitioners::multilevel::kway_refine(
+                g, &mut assignment, ctx.targets, ctx.epsilon, 2,
+            );
+        }
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+impl HierKMeans {
+    /// Partition `verts` (global ids) across the PUs below `node`,
+    /// recursing along the topology tree. Leaf nodes assign their PU id.
+    fn recurse(
+        &self,
+        ctx: &Ctx,
+        node: usize,
+        verts: &[u32],
+        assignment: &mut [u32],
+    ) -> Result<()> {
+        let topo = ctx.topo;
+        match &topo.nodes[node] {
+            TreeNode::Leaf { pu } => {
+                for &u in verts {
+                    assignment[u as usize] = *pu as u32;
+                }
+                Ok(())
+            }
+            TreeNode::Inner { children } => {
+                if children.len() == 1 {
+                    return self.recurse(ctx, children[0], verts, assignment);
+                }
+                // Aggregate targets for each child subtree via Algorithm 1
+                // on the induced sub-topology.
+                let subsets: Vec<Vec<usize>> = children
+                    .iter()
+                    .map(|&c| topo.leaves_under(c))
+                    .collect();
+                let load: f64 = verts
+                    .iter()
+                    .map(|&u| ctx.graph.vertex_weight(u as usize))
+                    .sum();
+                let child_targets = block_sizes_for_subsets(load, topo, &subsets)?;
+                // Partition the induced subgraph into |children| parts.
+                let mask: std::collections::HashSet<u32> = verts.iter().copied().collect();
+                let sg = Subgraph::induced(ctx.graph, |u| mask.contains(&(u as u32)));
+                let sub_topo = Topology::homogeneous(children.len(), 1.0, f64::INFINITY);
+                let sub_ctx = Ctx {
+                    graph: &sg.graph,
+                    targets: &child_targets,
+                    topo: &sub_topo,
+                    epsilon: ctx.epsilon,
+                    seed: ctx.seed,
+                };
+                let sub_part = self.inner.partition(&sub_ctx)?;
+                // Recurse per child with its vertex share.
+                for (ci, &child) in children.iter().enumerate() {
+                    let child_verts: Vec<u32> = (0..sg.graph.n())
+                        .filter(|&lu| sub_part.assignment[lu] == ci as u32)
+                        .map(|lu| sg.to_global[lu])
+                        .collect();
+                    if !child_verts.is_empty() {
+                        self.recurse(ctx, child, &child_verts, assignment)?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocksizes::block_sizes;
+    use crate::gen::mesh_2d_tri;
+    use crate::partition::metrics;
+    use crate::topology::Pu;
+
+    #[test]
+    fn hierarchy_respects_targets() {
+        let g = mesh_2d_tri(40, 40, 1);
+        let topo = Topology::hierarchical(
+            &[2, 3],
+            |_| Pu { speed: 1.0, memory: 1e9 },
+            "h23",
+        );
+        let bs = block_sizes(g.n() as f64, &topo).unwrap();
+        let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.05, seed: 1 };
+        let p = HierKMeans::default().partition(&ctx).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &bs.tw);
+        assert!(m.imbalance <= 0.12, "imbalance {}", m.imbalance);
+        assert_eq!(p.block_sizes().iter().filter(|&&s| s > 0).count(), 6);
+    }
+
+    #[test]
+    fn heterogeneous_hierarchy() {
+        // Node 0 fast (speed 4), node 1 slow — per-node aggregate split 4:1.
+        let g = mesh_2d_tri(40, 40, 2);
+        let topo = Topology::hierarchical(
+            &[2, 2],
+            |i| {
+                if i < 2 {
+                    Pu { speed: 4.0, memory: 1e9 }
+                } else {
+                    Pu { speed: 1.0, memory: 1e9 }
+                }
+            },
+            "h22",
+        );
+        let bs = block_sizes(g.n() as f64, &topo).unwrap();
+        let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.05, seed: 1 };
+        let p = HierKMeans::default().partition(&ctx).unwrap();
+        let m = metrics(&g, &p, &bs.tw);
+        // Fast blocks ≈ 4x slow blocks.
+        let w = &m.block_weights;
+        assert!(w[0] > 3.0 * w[2], "weights {w:?}");
+        assert!(m.imbalance <= 0.15, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn smoothing_improves_cut() {
+        use crate::partition::metrics;
+        let g = mesh_2d_tri(40, 40, 6);
+        let topo = Topology::hierarchical(
+            &[2, 4],
+            |_| Pu { speed: 1.0, memory: 1e9 },
+            "h24",
+        );
+        let bs = block_sizes(g.n() as f64, &topo).unwrap();
+        let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.05, seed: 1 };
+        let rough = HierKMeans { smooth: false, ..Default::default() }
+            .partition(&ctx)
+            .unwrap();
+        let smooth = HierKMeans::default().partition(&ctx).unwrap();
+        let cut_rough = metrics(&g, &rough, &bs.tw).cut;
+        let cut_smooth = metrics(&g, &smooth, &bs.tw).cut;
+        assert!(
+            cut_smooth <= cut_rough,
+            "smoothing must not worsen: {cut_smooth} vs {cut_rough}"
+        );
+    }
+
+    #[test]
+    fn cut_close_to_flat_kmeans() {
+        // Fig. 1: hierarchical vs flat cut within a few percent (we allow
+        // a wider margin on small instances).
+        use crate::partitioners::geokm::GeoKMeans;
+        let g = mesh_2d_tri(50, 50, 3);
+        let topo = Topology::hierarchical(
+            &[2, 4],
+            |_| Pu { speed: 1.0, memory: 1e9 },
+            "h24",
+        );
+        let bs = block_sizes(g.n() as f64, &topo).unwrap();
+        let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.05, seed: 1 };
+        let hier = HierKMeans::default().partition(&ctx).unwrap();
+        let flat = GeoKMeans::default().partition(&ctx).unwrap();
+        let cut_h = metrics(&g, &hier, &bs.tw).cut;
+        let cut_f = metrics(&g, &flat, &bs.tw).cut;
+        assert!(
+            cut_h < cut_f * 1.6,
+            "hier cut {cut_h} too far above flat {cut_f}"
+        );
+    }
+}

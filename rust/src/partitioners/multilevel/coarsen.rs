@@ -1,0 +1,154 @@
+//! Graph contraction along a matching.
+
+use crate::geometry::Point;
+use crate::graph::Csr;
+
+/// One coarsening level: the coarse graph plus the fine→coarse vertex map.
+pub struct CoarseLevel {
+    pub graph: Csr,
+    /// `map[fine] = coarse` vertex id.
+    pub map: Vec<u32>,
+}
+
+/// Contract matched pairs into coarse vertices. Vertex weights are
+/// summed, parallel edges merged with summed weights, coordinates
+/// averaged by weight (so geometric initial partitioners work on the
+/// coarse graph too).
+pub fn coarsen(g: &Csr, mate: &[u32]) -> CoarseLevel {
+    let n = g.n();
+    // Assign coarse ids: the smaller endpoint of each pair owns the id.
+    let mut map = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for u in 0..n {
+        let v = mate[u] as usize;
+        if map[u] != u32::MAX {
+            continue;
+        }
+        map[u] = nc;
+        if v != u {
+            map[v] = nc;
+        }
+        nc += 1;
+    }
+    let ncs = nc as usize;
+    // Aggregate vertex weights and coordinates.
+    let mut vwgt = vec![0.0f64; ncs];
+    for u in 0..n {
+        vwgt[map[u] as usize] += g.vertex_weight(u);
+    }
+    let coords = if g.has_coords() {
+        let dim = g.coords[0].dim;
+        let mut sums = vec![Point::zero(dim); ncs];
+        for u in 0..n {
+            let c = map[u] as usize;
+            sums[c] = sums[c].add(&g.coords[u].scale(g.vertex_weight(u)));
+        }
+        sums.iter()
+            .zip(&vwgt)
+            .map(|(s, &w)| s.scale(1.0 / w.max(1e-30)))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // Aggregate edges via a hash map keyed by coarse pair.
+    let mut edges: std::collections::HashMap<(u32, u32), f64> =
+        std::collections::HashMap::with_capacity(g.adjncy.len() / 2);
+    for u in 0..n {
+        let cu = map[u];
+        for e in g.arc_range(u) {
+            let v = g.adjncy[e] as usize;
+            if v <= u {
+                continue; // each undirected edge once
+            }
+            let cv = map[v];
+            if cu == cv {
+                continue; // internal to a coarse vertex
+            }
+            let key = if cu < cv { (cu, cv) } else { (cv, cu) };
+            *edges.entry(key).or_insert(0.0) += g.arc_weight(e);
+        }
+    }
+    let mut b = crate::graph::GraphBuilder::new(ncs);
+    for (&(a, c), &w) in &edges {
+        b.add_weighted_edge(a as usize, c as usize, w);
+    }
+    b.set_vertex_weights(vwgt);
+    if !coords.is_empty() {
+        b.set_coords(coords);
+    }
+    CoarseLevel { graph: b.build(), map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::graph::GraphBuilder;
+    use crate::partitioners::multilevel::heavy_edge_matching;
+
+    #[test]
+    fn path_contraction() {
+        // Path 0-1-2-3, match (0,1) and (2,3) → coarse path of 2 vertices.
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        let g = b.build();
+        let mate = vec![1, 0, 3, 2];
+        let l = coarsen(&g, &mate);
+        assert_eq!(l.graph.n(), 2);
+        assert_eq!(l.graph.m(), 1);
+        assert_eq!(l.graph.vertex_weight(0), 2.0);
+        // Edge 1-2 survives with weight 1.
+        assert_eq!(l.graph.arc_weight(0), 1.0);
+    }
+
+    #[test]
+    fn parallel_edges_merge() {
+        // Square 0-1-2-3-0, match (0,1) and (2,3): two coarse vertices
+        // joined by TWO fine edges (1-2 and 3-0) → one coarse edge w=2.
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        b.add_edge(3, 0);
+        let g = b.build();
+        let l = coarsen(&g, &[1, 0, 3, 2]);
+        assert_eq!(l.graph.n(), 2);
+        assert_eq!(l.graph.m(), 1);
+        assert_eq!(l.graph.arc_weight(0), 2.0);
+    }
+
+    #[test]
+    fn weight_conservation_on_mesh() {
+        let g = mesh_2d_tri(25, 25, 5);
+        let mate = heavy_edge_matching(&g, 2, None);
+        let l = coarsen(&g, &mate);
+        assert!((l.graph.total_vertex_weight() - g.total_vertex_weight()).abs() < 1e-9);
+        // Total edge weight = original minus contracted edges' weight.
+        assert!(l.graph.n() < g.n());
+        l.graph.validate().unwrap();
+        // Coarse coords present and within the fine bounding box.
+        assert!(l.graph.has_coords());
+        for p in &l.graph.coords {
+            assert!(p.x >= -1.0 && p.x <= 25.0);
+        }
+    }
+
+    #[test]
+    fn cut_preserved_under_projection() {
+        // Any coarse partition, projected to fine, has the same cut as on
+        // the coarse graph (edge weights aggregate exactly).
+        use crate::partition::{metrics, Partition};
+        let g = mesh_2d_tri(20, 20, 9);
+        let mate = heavy_edge_matching(&g, 4, None);
+        let l = coarsen(&g, &mate);
+        let coarse_assign: Vec<u32> =
+            (0..l.graph.n()).map(|u| (u % 3) as u32).collect();
+        let fine_assign: Vec<u32> =
+            (0..g.n()).map(|u| coarse_assign[l.map[u] as usize]).collect();
+        let mc = metrics(&l.graph, &Partition::new(coarse_assign, 3), &[]);
+        let mf = metrics(&g, &Partition::new(fine_assign, 3), &[]);
+        assert!((mc.cut - mf.cut).abs() < 1e-9, "{} vs {}", mc.cut, mf.cut);
+    }
+}

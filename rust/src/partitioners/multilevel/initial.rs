@@ -1,0 +1,191 @@
+//! Initial partitioning of the coarsest graph.
+//!
+//! - [`initial_ggg`]: greedy graph growing — grow each block from a BFS
+//!   frontier, preferring vertices with the most links into the growing
+//!   block (ParMetisGraph's combinatorial style).
+//! - [`initial_sfc`]: Hilbert-curve fill on the coarse coordinates
+//!   (ParMetisGeom's style).
+
+use crate::geometry::{hilbert_index, Aabb};
+use crate::graph::Csr;
+use crate::partitioners::fill_by_order;
+use crate::util::rng::Rng;
+
+/// Greedy graph growing: blocks are grown one at a time from a peripheral
+/// seed among the unassigned vertices; each step absorbs the frontier
+/// vertex with the largest connection weight into the block (ties →
+/// smaller vertex weight first). Deterministic given `seed`.
+pub fn initial_ggg(g: &Csr, targets: &[f64], seed: u64) -> Vec<u32> {
+    let n = g.n();
+    let k = targets.len();
+    let mut assignment = vec![u32::MAX; n];
+    let mut rng = Rng::new(seed);
+    let mut unassigned = n;
+    for b in 0..k {
+        if unassigned == 0 {
+            break;
+        }
+        let last_block = b + 1 == k;
+        // Seed: a pseudo-peripheral unassigned vertex — BFS from a random
+        // unassigned start, take the farthest unassigned vertex.
+        let start = {
+            let mut s = rng.usize(n);
+            while assignment[s] != u32::MAX {
+                s = (s + 1) % n;
+            }
+            s
+        };
+        let seed_v = farthest_unassigned(g, start, &assignment);
+        // Grow by best-connection frontier.
+        let mut weight = 0.0;
+        let mut conn: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        let mut heap: std::collections::BinaryHeap<(u64, u32)> =
+            std::collections::BinaryHeap::new();
+        let push = |heap: &mut std::collections::BinaryHeap<(u64, u32)>,
+                    conn: &std::collections::HashMap<u32, f64>,
+                    v: u32| {
+            heap.push((ordered_of(*conn.get(&v).unwrap_or(&0.0)), v));
+        };
+        conn.insert(seed_v as u32, 0.0);
+        push(&mut heap, &conn, seed_v as u32);
+        while weight < targets[b] || last_block {
+            // Pop the best valid frontier vertex.
+            let u = loop {
+                match heap.pop() {
+                    None => break u32::MAX,
+                    Some((c, u)) => {
+                        if assignment[u as usize] != u32::MAX {
+                            continue; // already taken
+                        }
+                        if c != ordered_of(*conn.get(&u).unwrap_or(&0.0)) {
+                            push(&mut heap, &conn, u); // stale priority
+                            continue;
+                        }
+                        break u;
+                    }
+                }
+            };
+            if u == u32::MAX {
+                break; // block's component exhausted
+            }
+            let u = u as usize;
+            assignment[u] = b as u32;
+            weight += g.vertex_weight(u);
+            unassigned -= 1;
+            if unassigned == 0 {
+                break;
+            }
+            for e in g.arc_range(u) {
+                let v = g.adjncy[e];
+                if assignment[v as usize] == u32::MAX {
+                    *conn.entry(v).or_insert(0.0) += g.arc_weight(e);
+                    push(&mut heap, &conn, v);
+                }
+            }
+        }
+    }
+    // Any leftovers (disconnected pieces): give to the lightest block.
+    let mut weights = vec![0.0; k];
+    for u in 0..n {
+        if assignment[u] != u32::MAX {
+            weights[assignment[u] as usize] += g.vertex_weight(u);
+        }
+    }
+    for u in 0..n {
+        if assignment[u] == u32::MAX {
+            let b = (0..k)
+                .min_by(|&a, &c| {
+                    (weights[a] / targets[a].max(1e-12))
+                        .partial_cmp(&(weights[c] / targets[c].max(1e-12)))
+                        .unwrap()
+                })
+                .unwrap();
+            assignment[u] = b as u32;
+            weights[b] += g.vertex_weight(u);
+        }
+    }
+    assignment
+}
+
+/// f64 as a totally ordered max-heap key.
+fn ordered_of(x: f64) -> u64 {
+    // Monotone map from non-negative f64 to u64.
+    x.max(0.0).to_bits()
+}
+
+fn farthest_unassigned(g: &Csr, start: usize, assignment: &[u32]) -> usize {
+    let mut dist = vec![usize::MAX; g.n()];
+    let mut q = std::collections::VecDeque::new();
+    dist[start] = 0;
+    q.push_back(start);
+    let mut far = start;
+    while let Some(u) = q.pop_front() {
+        if assignment[u] == u32::MAX && dist[u] > dist[far] {
+            far = u;
+        }
+        for &v in g.neighbors(u) {
+            let v = v as usize;
+            if dist[v] == usize::MAX && assignment[v] == u32::MAX {
+                dist[v] = dist[u] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    far
+}
+
+/// Hilbert-order fill on the coarse coordinates.
+pub fn initial_sfc(g: &Csr, targets: &[f64]) -> Vec<u32> {
+    assert!(g.has_coords(), "initial_sfc needs coordinates");
+    let bb = Aabb::of(&g.coords);
+    let mut order: Vec<u32> = (0..g.n() as u32).collect();
+    let keys: Vec<u64> = g.coords.iter().map(|p| hilbert_index(p, &bb)).collect();
+    order.sort_unstable_by_key(|&u| keys[u as usize]);
+    fill_by_order(&order, |u| g.vertex_weight(u), targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::partition::{metrics, Partition};
+
+    #[test]
+    fn ggg_covers_and_balances() {
+        let g = mesh_2d_tri(20, 20, 1);
+        let targets = vec![100.0; 4];
+        let a = initial_ggg(&g, &targets, 7);
+        assert!(a.iter().all(|&b| b < 4));
+        let m = metrics(&g, &Partition::new(a, 4), &targets);
+        assert!(m.imbalance < 0.25, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn ggg_blocks_mostly_connected() {
+        let g = mesh_2d_tri(20, 20, 2);
+        let targets = vec![100.0; 4];
+        let a = initial_ggg(&g, &targets, 3);
+        // Grown blocks should produce far less cut than random assignment.
+        let m = metrics(&g, &Partition::new(a, 4), &targets);
+        assert!(m.cut < 0.25 * g.m() as f64, "cut {}", m.cut);
+    }
+
+    #[test]
+    fn ggg_heterogeneous_targets() {
+        let g = mesh_2d_tri(24, 24, 3);
+        let n = g.n() as f64;
+        let targets = vec![n / 2.0, n / 4.0, n / 8.0, n / 8.0];
+        let a = initial_ggg(&g, &targets, 5);
+        let m = metrics(&g, &Partition::new(a, 4), &targets);
+        assert!(m.imbalance < 0.3, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn sfc_initial_on_coarse_coords() {
+        let g = mesh_2d_tri(20, 20, 4);
+        let targets = vec![100.0; 4];
+        let a = initial_sfc(&g, &targets);
+        let m = metrics(&g, &Partition::new(a, 4), &targets);
+        assert!(m.imbalance < 0.05, "imbalance {}", m.imbalance);
+    }
+}

@@ -1,0 +1,143 @@
+//! Multilevel graph partitioning machinery (paper §III-a): heavy-edge
+//! matching, contraction, initial partitioning, and k-way boundary
+//! refinement. `pmGraph`/`pmGeom` (ParMetis-like) and the refinement
+//! halves of `geoRef`/`geoPMRef` are assembled from these pieces.
+
+pub mod coarsen;
+pub mod fm;
+pub mod initial;
+pub mod matching;
+
+pub use coarsen::{coarsen, CoarseLevel};
+pub use fm::{balance_enforce, kway_refine, pairwise_fm};
+pub use initial::{initial_ggg, initial_sfc};
+pub use matching::heavy_edge_matching;
+
+use crate::graph::Csr;
+
+/// A full coarsening hierarchy: `levels[0]` is built from the input
+/// graph; `levels.last()` is the coarsest.
+pub struct Hierarchy {
+    pub levels: Vec<CoarseLevel>,
+}
+
+/// Build a coarsening hierarchy until the coarse graph has at most
+/// `target_n` vertices or contraction stalls (< 5% reduction).
+/// `same_block` optionally restricts matching to vertices in the same
+/// block of an existing partition (multilevel *refinement* mode).
+pub fn build_hierarchy(
+    g: &Csr,
+    target_n: usize,
+    seed: u64,
+    same_block: Option<&[u32]>,
+) -> Hierarchy {
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    let mut part_cur: Option<Vec<u32>> = same_block.map(|p| p.to_vec());
+    let mut round = 0u64;
+    loop {
+        let cur: &Csr = levels.last().map(|l| &l.graph).unwrap_or(g);
+        if cur.n() <= target_n {
+            break;
+        }
+        let matching = heavy_edge_matching(cur, seed.wrapping_add(round), part_cur.as_deref());
+        let level = coarsen(cur, &matching);
+        let reduction = 1.0 - level.graph.n() as f64 / cur.n() as f64;
+        // Project the restriction partition to the coarse graph.
+        if let Some(p) = &part_cur {
+            let mut cp = vec![0u32; level.graph.n()];
+            for (fine, &coarse) in level.map.iter().enumerate() {
+                cp[coarse as usize] = p[fine];
+            }
+            part_cur = Some(cp);
+        }
+        let done = level.graph.n() <= target_n || reduction < 0.05;
+        levels.push(level);
+        if done {
+            break;
+        }
+        round += 1;
+    }
+    Hierarchy { levels }
+}
+
+impl Hierarchy {
+    /// The coarsest graph (or None if no coarsening happened).
+    pub fn coarsest(&self) -> Option<&Csr> {
+        self.levels.last().map(|l| &l.graph)
+    }
+
+    /// Project a partition of the coarsest graph back to the input graph,
+    /// refining with `refine` at every level (called as
+    /// `refine(graph, assignment)` from coarsest to finest).
+    pub fn project_and_refine(
+        &self,
+        g: &Csr,
+        coarsest_assignment: Vec<u32>,
+        mut refine: impl FnMut(&Csr, &mut Vec<u32>),
+    ) -> Vec<u32> {
+        let mut assignment = coarsest_assignment;
+        // Refine at the coarsest level first.
+        if let Some(l) = self.levels.last() {
+            refine(&l.graph, &mut assignment);
+        }
+        // Walk back down the hierarchy.
+        for i in (0..self.levels.len()).rev() {
+            let fine_graph: &Csr = if i == 0 { g } else { &self.levels[i - 1].graph };
+            let map = &self.levels[i].map;
+            let mut fine_assignment = vec![0u32; fine_graph.n()];
+            for (fine, &coarse) in map.iter().enumerate() {
+                fine_assignment[fine] = assignment[coarse as usize];
+            }
+            refine(fine_graph, &mut fine_assignment);
+            assignment = fine_assignment;
+        }
+        assignment
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+
+    #[test]
+    fn hierarchy_shrinks_and_projects() {
+        let g = mesh_2d_tri(40, 40, 1);
+        let h = build_hierarchy(&g, 100, 1, None);
+        assert!(!h.levels.is_empty());
+        let coarse = h.coarsest().unwrap();
+        assert!(coarse.n() <= 400, "coarse n {}", coarse.n());
+        // Vertex weight is conserved through coarsening.
+        assert!(
+            (coarse.total_vertex_weight() - g.total_vertex_weight()).abs() < 1e-9
+        );
+        // Identity projection keeps a valid partition.
+        let coarse_assign: Vec<u32> =
+            (0..coarse.n()).map(|u| (u % 4) as u32).collect();
+        let fine = h.project_and_refine(&g, coarse_assign, |_, _| {});
+        assert_eq!(fine.len(), g.n());
+    }
+
+    #[test]
+    fn restricted_hierarchy_preserves_blocks() {
+        let g = mesh_2d_tri(30, 30, 2);
+        // Vertical split into two blocks.
+        let part: Vec<u32> = (0..g.n()).map(|u| (g.coords[u].x > 15.0) as u32).collect();
+        let h = build_hierarchy(&g, 50, 1, Some(&part));
+        // Project the partition up through every level: each coarse vertex
+        // must aggregate fine vertices from one block only.
+        let mut cur = part;
+        for l in &h.levels {
+            let mut coarse_part = vec![u32::MAX; l.graph.n()];
+            for (fine, &c) in l.map.iter().enumerate() {
+                let b = cur[fine];
+                assert!(
+                    coarse_part[c as usize] == u32::MAX || coarse_part[c as usize] == b,
+                    "coarse vertex {c} mixes blocks"
+                );
+                coarse_part[c as usize] = b;
+            }
+            cur = coarse_part.iter().map(|&b| b).collect();
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! `pmGraph` / `pmGeom` — ParMetis-like multilevel k-way partitioning.
+//!
+//! Both variants share the pipeline: heavy-edge-matching coarsening →
+//! initial partition of the coarsest graph → uncoarsening with k-way
+//! boundary refinement at every level. They differ exactly as the paper's
+//! two ParMetis configurations do (§VI-b): `pmGraph` computes the initial
+//! partition combinatorially (greedy graph growing), `pmGeom` uses an SFC
+//! on the coarse coordinates.
+
+use super::multilevel::{balance_enforce, build_hierarchy, initial_ggg, initial_sfc, kway_refine};
+use super::{Ctx, Partitioner};
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+
+/// How far to coarsen: stop at `COARSE_VERTS_PER_BLOCK · k` vertices.
+const COARSE_VERTS_PER_BLOCK: usize = 30;
+/// Refinement passes per level.
+const REFINE_PASSES: usize = 6;
+
+fn multilevel_partition(ctx: &Ctx, geometric_initial: bool) -> Result<Partition> {
+    let g = ctx.graph;
+    let k = ctx.k();
+    ensure!(g.n() >= k, "need n >= k");
+    ensure!(
+        !geometric_initial || g.has_coords(),
+        "pmGeom requires vertex coordinates"
+    );
+    let target_n = (COARSE_VERTS_PER_BLOCK * k).max(64);
+    let hierarchy = build_hierarchy(g, target_n, ctx.seed, None);
+    let coarsest = hierarchy.coarsest().unwrap_or(g);
+    let initial = if geometric_initial {
+        initial_sfc(coarsest, ctx.targets)
+    } else {
+        initial_ggg(coarsest, ctx.targets, ctx.seed)
+    };
+    let assignment = hierarchy.project_and_refine(g, initial, |graph, assignment| {
+        balance_enforce(graph, assignment, ctx.targets, ctx.epsilon);
+        kway_refine(graph, assignment, ctx.targets, ctx.epsilon, REFINE_PASSES);
+    });
+    Ok(Partition::new(assignment, k))
+}
+
+/// ParMetis-like multilevel k-way with combinatorial initial partition.
+#[derive(Default)]
+pub struct PmGraph;
+
+impl Partitioner for PmGraph {
+    fn name(&self) -> &'static str {
+        "pmGraph"
+    }
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        multilevel_partition(ctx, false)
+    }
+}
+
+/// ParMetis-like multilevel k-way with SFC initial partition.
+#[derive(Default)]
+pub struct PmGeom;
+
+impl Partitioner for PmGeom {
+    fn name(&self) -> &'static str {
+        "pmGeom"
+    }
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        multilevel_partition(ctx, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{mesh_2d_tri, rgg_2d};
+    use crate::partition::metrics;
+    use crate::partitioners::sfc::Sfc;
+    use crate::topology::Topology;
+
+    fn ctx<'a>(
+        g: &'a crate::graph::Csr,
+        targets: &'a [f64],
+        topo: &'a Topology,
+    ) -> Ctx<'a> {
+        Ctx { graph: g, targets, topo, epsilon: 0.05, seed: 1 }
+    }
+
+    #[test]
+    fn pmgraph_balanced_and_valid() {
+        let g = mesh_2d_tri(40, 40, 1);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![200.0; 8];
+        let p = PmGraph.partition(&ctx(&g, &targets, &topo)).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.051, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn pmgraph_beats_sfc_on_cut() {
+        let g = mesh_2d_tri(50, 50, 2);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![2500.0 / 8.0; 8];
+        let c = ctx(&g, &targets, &topo);
+        let pm = PmGraph.partition(&c).unwrap();
+        let sf = Sfc.partition(&c).unwrap();
+        let cut_pm = metrics(&g, &pm, &targets).cut;
+        let cut_sfc = metrics(&g, &sf, &targets).cut;
+        assert!(
+            cut_pm < cut_sfc,
+            "pmGraph {cut_pm} should beat zSFC {cut_sfc}"
+        );
+    }
+
+    #[test]
+    fn pmgeom_works_and_balances() {
+        let g = rgg_2d(3000, 3);
+        let topo = Topology::homogeneous(6, 1.0, 1e9);
+        let targets = vec![500.0; 6];
+        let p = PmGeom.partition(&ctx(&g, &targets, &topo)).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance <= 0.051, "imbalance {}", m.imbalance);
+    }
+
+    #[test]
+    fn heterogeneous_targets() {
+        let g = mesh_2d_tri(40, 40, 4);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let n = g.n() as f64;
+        let targets = vec![n * 0.4, n * 0.3, n * 0.2, n * 0.1];
+        for p in [
+            PmGraph.partition(&ctx(&g, &targets, &topo)).unwrap(),
+            PmGeom.partition(&ctx(&g, &targets, &topo)).unwrap(),
+        ] {
+            let m = metrics(&g, &p, &targets);
+            assert!(m.imbalance <= 0.07, "imbalance {}", m.imbalance);
+            // The big block really is ~4x the small one.
+            assert!(m.block_weights[0] > 3.0 * m.block_weights[3]);
+        }
+    }
+
+    #[test]
+    fn graph_without_coords_pmgraph_only() {
+        // pmGraph must work on pure topology (no coords); pmGeom must err.
+        let g0 = mesh_2d_tri(20, 20, 5);
+        let g = crate::graph::Csr { coords: Vec::new(), ..g0 };
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![100.0; 4];
+        let c = ctx(&g, &targets, &topo);
+        assert!(PmGraph.partition(&c).is_ok());
+        assert!(PmGeom.partition(&c).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! `zRIB` — recursive inertial bisection (Zoltan).
+//!
+//! Like RCB but the split direction is the principal inertial axis of the
+//! current point set (dominant eigenvector of the covariance matrix,
+//! computed by power iteration), so the bisection is not restricted to a
+//! coordinate direction.
+
+use super::rcb::split_weighted;
+use super::{Ctx, Partitioner};
+use crate::geometry::Point;
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+
+pub struct Rib;
+
+impl Partitioner for Rib {
+    fn name(&self) -> &'static str {
+        "zRIB"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        let g = ctx.graph;
+        ensure!(g.has_coords(), "zRIB requires vertex coordinates");
+        let mut assignment = vec![0u32; g.n()];
+        let mut verts: Vec<u32> = (0..g.n() as u32).collect();
+        bisect_inertial(ctx, &mut verts, 0, ctx.k(), &mut assignment);
+        Ok(Partition::new(assignment, ctx.k()))
+    }
+}
+
+fn bisect_inertial(
+    ctx: &Ctx,
+    verts: &mut [u32],
+    lo: usize,
+    hi: usize,
+    assignment: &mut [u32],
+) {
+    if verts.is_empty() {
+        return;
+    }
+    if hi - lo == 1 {
+        for &u in verts.iter() {
+            assignment[u as usize] = lo as u32;
+        }
+        return;
+    }
+    let g = ctx.graph;
+    let dir = principal_axis(verts.iter().map(|&u| g.coords[u as usize]));
+    let proj: Vec<f64> = verts
+        .iter()
+        .map(|&u| {
+            let p = g.coords[u as usize];
+            p.x * dir.x + p.y * dir.y + p.z * dir.z
+        })
+        .collect();
+    let split = split_weighted(ctx, verts, &proj, lo, hi);
+    let (left, right) = verts.split_at_mut(split);
+    let mid = lo + (hi - lo) / 2;
+    bisect_inertial(ctx, left, lo, mid, assignment);
+    bisect_inertial(ctx, right, mid, hi, assignment);
+}
+
+/// Dominant eigenvector of the covariance matrix of a point cloud, by
+/// power iteration (30 rounds are plenty for a split direction).
+pub fn principal_axis(points: impl Iterator<Item = Point> + Clone) -> Point {
+    let mut n = 0usize;
+    let mut mean = [0.0f64; 3];
+    let mut dim = 2u8;
+    for p in points.clone() {
+        mean[0] += p.x;
+        mean[1] += p.y;
+        mean[2] += p.z;
+        dim = p.dim;
+        n += 1;
+    }
+    if n == 0 {
+        return Point::new2(1.0, 0.0);
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // Covariance (symmetric 3x3; z entries vanish for 2-D input).
+    let mut c = [[0.0f64; 3]; 3];
+    for p in points {
+        let d = [p.x - mean[0], p.y - mean[1], p.z - mean[2]];
+        for i in 0..3 {
+            for j in 0..3 {
+                c[i][j] += d[i] * d[j];
+            }
+        }
+    }
+    // Power iteration from a fixed non-axis-aligned start.
+    let mut v = [1.0, 0.7, if dim == 3 { 0.4 } else { 0.0 }];
+    for _ in 0..30 {
+        let mut w = [0.0f64; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                w[i] += c[i][j] * v[j];
+            }
+        }
+        let norm = (w[0] * w[0] + w[1] * w[1] + w[2] * w[2]).sqrt();
+        if norm < 1e-30 {
+            break; // degenerate cloud: keep previous direction
+        }
+        v = [w[0] / norm, w[1] / norm, w[2] / norm];
+    }
+    let mut p = Point::new3(v[0], v[1], v[2]);
+    p.dim = dim;
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{mesh_2d_tri, rgg_2d};
+    use crate::partition::metrics;
+    use crate::topology::Topology;
+    use crate::util::rng::Rng;
+
+    fn run(g: &crate::graph::Csr, targets: &[f64]) -> Partition {
+        let topo = Topology::homogeneous(targets.len(), 1.0, 1e9);
+        let ctx = Ctx { graph: g, targets, topo: &topo, epsilon: 0.03, seed: 1 };
+        Rib.partition(&ctx).unwrap()
+    }
+
+    #[test]
+    fn principal_axis_of_diagonal_cloud() {
+        // Points along the diagonal y = x → axis ≈ (1,1)/√2.
+        let mut rng = Rng::new(1);
+        let pts: Vec<Point> = (0..500)
+            .map(|_| {
+                let t = rng.f64();
+                Point::new2(t + 0.01 * rng.normal(), t + 0.01 * rng.normal())
+            })
+            .collect();
+        let a = principal_axis(pts.iter().copied());
+        let dot = (a.x * std::f64::consts::FRAC_1_SQRT_2
+            + a.y * std::f64::consts::FRAC_1_SQRT_2)
+            .abs();
+        assert!(dot > 0.99, "axis ({}, {}) not diagonal", a.x, a.y);
+    }
+
+    #[test]
+    fn uniform_balance() {
+        let g = rgg_2d(2000, 1);
+        let targets = vec![250.0; 8];
+        let p = run(&g, &targets);
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance.abs() < 0.05, "imbalance {}", m.imbalance);
+        assert!(m.cut < g.m() as f64 * 0.4);
+    }
+
+    #[test]
+    fn diagonal_mesh_beats_axis_cut() {
+        // Rotate an elongated mesh 45°: RIB should still find the short
+        // boundary while a pure x/y cut would be long.
+        let g0 = mesh_2d_tri(100, 5, 3);
+        let mut g = g0.clone();
+        let c = std::f64::consts::FRAC_1_SQRT_2;
+        for p in g.coords.iter_mut() {
+            let (x, y) = (p.x, p.y);
+            p.x = c * x - c * y;
+            p.y = c * x + c * y;
+        }
+        let targets = vec![250.0, 250.0];
+        let p = run(&g, &targets);
+        let m = metrics(&g, &p, &targets);
+        assert!(m.cut < 30.0, "cut {}", m.cut);
+    }
+
+    #[test]
+    fn heterogeneous_targets() {
+        let g = rgg_2d(2400, 9);
+        let targets = vec![1200.0, 600.0, 300.0, 300.0];
+        let p = run(&g, &targets);
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance < 0.08, "imbalance {}", m.imbalance);
+    }
+}

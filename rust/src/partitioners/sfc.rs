@@ -1,0 +1,90 @@
+//! `zSFC` — space-filling-curve partitioning (Zoltan's SFC method).
+//!
+//! Sort vertices by Hilbert index and cut the curve into consecutive
+//! pieces matching the target weights. The fastest method in the study
+//! (paper Table IV: fractions of a second) with the weakest quality.
+
+use super::{fill_by_order, Ctx, Partitioner};
+use crate::geometry::{hilbert_index, Aabb};
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+
+pub struct Sfc;
+
+impl Partitioner for Sfc {
+    fn name(&self) -> &'static str {
+        "zSFC"
+    }
+
+    fn partition(&self, ctx: &Ctx) -> Result<Partition> {
+        let g = ctx.graph;
+        ensure!(g.has_coords(), "zSFC requires vertex coordinates");
+        let bb = Aabb::of(&g.coords);
+        let mut order: Vec<u32> = (0..g.n() as u32).collect();
+        let keys: Vec<u64> = g.coords.iter().map(|p| hilbert_index(p, &bb)).collect();
+        order.sort_unstable_by_key(|&u| keys[u as usize]);
+        let assignment = fill_by_order(&order, |u| g.vertex_weight(u), ctx.targets);
+        Ok(Partition::new(assignment, ctx.k()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rgg_2d;
+    use crate::partition::metrics;
+    use crate::topology::Topology;
+
+    #[test]
+    fn balanced_uniform_targets() {
+        let g = rgg_2d(2000, 1);
+        let topo = Topology::homogeneous(8, 1.0, 1e9);
+        let targets = vec![250.0; 8];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.03, seed: 1 };
+        let p = Sfc.partition(&ctx).unwrap();
+        p.validate(&g).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance.abs() < 0.02, "imbalance {}", m.imbalance);
+        // SFC on an RGG must produce a decent cut (far below random).
+        assert!(m.cut < g.m() as f64 * 0.5, "cut {}", m.cut);
+    }
+
+    #[test]
+    fn heterogeneous_targets_respected() {
+        let g = rgg_2d(3000, 2);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![1500.0, 500.0, 500.0, 500.0];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.03, seed: 1 };
+        let p = Sfc.partition(&ctx).unwrap();
+        let m = metrics(&g, &p, &targets);
+        assert!(m.imbalance < 0.02, "imbalance {}", m.imbalance);
+        let w = m.block_weights;
+        assert!((w[0] - 1500.0).abs() < 50.0, "w0 {}", w[0]);
+    }
+
+    #[test]
+    fn locality_beats_random_assignment() {
+        let g = rgg_2d(2000, 3);
+        let topo = Topology::homogeneous(16, 1.0, 1e9);
+        let targets = vec![125.0; 16];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.03, seed: 1 };
+        let p = Sfc.partition(&ctx).unwrap();
+        let cut_sfc = metrics(&g, &p, &targets).cut;
+        // Random assignment cuts ~ (1 - 1/k) of edges.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let rand_assign: Vec<u32> = (0..g.n()).map(|_| rng.usize(16) as u32).collect();
+        let cut_rand = metrics(&g, &Partition::new(rand_assign, 16), &targets).cut;
+        assert!(cut_sfc < 0.25 * cut_rand, "sfc {cut_sfc} rand {cut_rand}");
+    }
+
+    #[test]
+    fn requires_coords() {
+        let mut b = crate::graph::GraphBuilder::new(2);
+        b.add_edge(0, 1);
+        let g = b.build();
+        let topo = Topology::homogeneous(2, 1.0, 1e9);
+        let targets = vec![1.0, 1.0];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.03, seed: 1 };
+        assert!(Sfc.partition(&ctx).is_err());
+    }
+}

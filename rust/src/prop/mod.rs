@@ -1,0 +1,269 @@
+//! Miniature property-based testing framework (offline replacement for
+//! `proptest`).
+//!
+//! A property is a closure over a value drawn from a [`Gen`]erator; the
+//! runner draws `cases` random values, and on failure greedily *shrinks*
+//! the counterexample before reporting it. Used throughout the test suite
+//! for invariants: Algorithm-1 optimality, partition validity, refinement
+//! monotonicity, Hilbert-curve bijectivity, …
+//!
+//! ```no_run
+//! // (no_run: doctest executables lack the xla rpath in this image)
+//! use hetpart::prop::{check, gens};
+//! check("reverse twice is identity", 200, 0xC0FFEE, gens::vec_usize(0..50, 0..100), |v| {
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     if w == *v { Ok(()) } else { Err("mismatch".into()) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A random-value generator plus a shrinking strategy.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    /// Draw a random value.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Propose strictly "smaller" candidate values (may be empty).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over `cases` random inputs. Panics with the (shrunk)
+/// counterexample on failure. `seed` makes runs reproducible.
+pub fn check<G: Gen>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: G,
+    prop: impl Fn(&G::Value) -> PropResult,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Greedy shrink: repeatedly take the first shrink candidate
+            // that still fails, up to a bounded number of rounds.
+            let mut cur = v;
+            let mut cur_msg = msg;
+            'outer: for _ in 0..1000 {
+                for cand in gen.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  \
+                 counterexample: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// Ready-made generators.
+pub mod gens {
+    use super::Gen;
+    use crate::util::rng::Rng;
+    use std::ops::Range;
+
+    /// Uniform usize in a range.
+    pub struct UsizeGen(pub Range<usize>);
+    impl Gen for UsizeGen {
+        type Value = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            self.0.start + rng.usize(self.0.end - self.0.start)
+        }
+        fn shrink(&self, v: &usize) -> Vec<usize> {
+            let mut out = Vec::new();
+            if *v > self.0.start {
+                out.push(self.0.start);
+                out.push(self.0.start + (*v - self.0.start) / 2);
+                out.push(*v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+
+    pub fn usize_in(r: Range<usize>) -> UsizeGen {
+        UsizeGen(r)
+    }
+
+    /// Uniform f64 in a range.
+    pub struct F64Gen(pub Range<f64>);
+    impl Gen for F64Gen {
+        type Value = f64;
+        fn generate(&self, rng: &mut Rng) -> f64 {
+            rng.f64_range(self.0.start, self.0.end)
+        }
+        fn shrink(&self, v: &f64) -> Vec<f64> {
+            let mid = 0.5 * (self.0.start + *v);
+            if (mid - *v).abs() > 1e-9 {
+                vec![self.0.start, mid]
+            } else {
+                vec![]
+            }
+        }
+    }
+
+    pub fn f64_in(r: Range<f64>) -> F64Gen {
+        F64Gen(r)
+    }
+
+    /// Vec of usize with random length.
+    pub struct VecUsizeGen {
+        pub len: Range<usize>,
+        pub elem: Range<usize>,
+    }
+    impl Gen for VecUsizeGen {
+        type Value = Vec<usize>;
+        fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+            let n = self.len.start + rng.usize((self.len.end - self.len.start).max(1));
+            (0..n)
+                .map(|_| self.elem.start + rng.usize((self.elem.end - self.elem.start).max(1)))
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+            let mut out = Vec::new();
+            if v.len() > self.len.start {
+                // Halve, drop-first, drop-last.
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[1..].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            // Element-wise shrink toward range start.
+            for i in 0..v.len() {
+                if v[i] > self.elem.start {
+                    let mut w = v.clone();
+                    w[i] = self.elem.start;
+                    out.push(w);
+                }
+            }
+            out.retain(|w| w.len() >= self.len.start);
+            out
+        }
+    }
+
+    pub fn vec_usize(len: Range<usize>, elem: Range<usize>) -> VecUsizeGen {
+        VecUsizeGen { len, elem }
+    }
+
+    /// Vec of f64 with random length.
+    pub struct VecF64Gen {
+        pub len: Range<usize>,
+        pub elem: Range<f64>,
+    }
+    impl Gen for VecF64Gen {
+        type Value = Vec<f64>;
+        fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+            let n = self.len.start + rng.usize((self.len.end - self.len.start).max(1));
+            (0..n)
+                .map(|_| rng.f64_range(self.elem.start, self.elem.end))
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+            if v.len() > self.len.start {
+                vec![v[..v.len() / 2].to_vec(), v[1..].to_vec()]
+            } else {
+                vec![]
+            }
+        }
+    }
+
+    pub fn vec_f64(len: Range<usize>, elem: Range<f64>) -> VecF64Gen {
+        VecF64Gen { len, elem }
+    }
+
+    /// Pair of independent generators.
+    pub struct PairGen<A, B>(pub A, pub B);
+    impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> = self
+                .0
+                .shrink(&v.0)
+                .into_iter()
+                .map(|a| (a, v.1.clone()))
+                .collect();
+            out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+            out
+        }
+    }
+
+    pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> PairGen<A, B> {
+        PairGen(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("usize < bound", 200, 1, gens::usize_in(0..100), |&v| {
+            if v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let caught = std::panic::catch_unwind(|| {
+            check("find >= 10", 500, 2, gens::usize_in(0..100), |&v| {
+                if v < 10 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = match caught {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        // Shrinker should land on the minimal counterexample 10.
+        assert!(msg.contains("counterexample: 10"), "{msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        check(
+            "vec bounds",
+            100,
+            3,
+            gens::vec_usize(2..10, 5..9),
+            |v| {
+                if v.len() >= 2 && v.len() < 10 && v.iter().all(|&x| (5..9).contains(&x)) {
+                    Ok(())
+                } else {
+                    Err(format!("{v:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = gens::pair(gens::usize_in(0..10), gens::usize_in(0..10));
+        let shr = g.shrink(&(5, 7));
+        assert!(shr.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shr.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+}

@@ -1,0 +1,154 @@
+//! Artifact discovery: parse `artifacts/manifest.txt` written by
+//! `python/compile/aot.py`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One line of the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n: usize,
+    pub w: usize,
+    /// CG iterations (None for plain spmv artifacts).
+    pub iters: Option<usize>,
+}
+
+impl ManifestEntry {
+    pub fn is_spmv(&self) -> bool {
+        self.iters.is_none()
+    }
+}
+
+/// Parsed manifest plus the directory it came from.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            if toks.len() < 3 {
+                bail!("manifest line {} malformed: {t}", ln + 1);
+            }
+            entries.push(ManifestEntry {
+                name: toks[0].to_string(),
+                n: toks[1].parse()?,
+                w: toks[2].parse()?,
+                iters: toks.get(3).map(|s| s.parse()).transpose()?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest at {} is empty", path.display());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Path of an artifact's HLO text.
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(format!("{}.hlo.txt", e.name))
+    }
+
+    /// Smallest spmv artifact with n ≥ rows and w ≥ width.
+    pub fn best_spmv(&self, rows: usize, width: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.is_spmv() && e.n >= rows && e.w >= width)
+            .min_by_key(|e| (e.n, e.w))
+    }
+
+    /// Any CG artifact with n ≥ rows and w ≥ width (smallest fit).
+    pub fn best_cg(&self, rows: usize, width: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| !e.is_spmv() && e.n >= rows && e.w >= width)
+            .min_by_key(|e| (e.n, e.w))
+    }
+}
+
+/// Default artifact directory: `$HETPART_ARTIFACTS` or `artifacts/`
+/// relative to the working directory (walking up two levels so examples
+/// and benches work from subdirectories).
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HETPART_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for up in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(up);
+        if p.join("manifest.txt").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Convenience: manifest from the default directory.
+pub struct ArtifactSet;
+
+impl ArtifactSet {
+    pub fn discover() -> Result<Manifest> {
+        Manifest::load(&default_dir())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_and_select() {
+        let dir = std::env::temp_dir().join("hetpart-manifest-test");
+        write_manifest(
+            &dir,
+            "spmv_4096x8 4096 8\nspmv_16384x8 16384 8\nspmv_16384x16 16384 16\ncg_16384x8_i64 16384 8 64\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        // Exact fit.
+        assert_eq!(m.best_spmv(4096, 8).unwrap().name, "spmv_4096x8");
+        // Next size up.
+        assert_eq!(m.best_spmv(5000, 8).unwrap().name, "spmv_16384x8");
+        // Wider requirement.
+        assert_eq!(m.best_spmv(1000, 12).unwrap().name, "spmv_16384x16");
+        // Nothing big enough.
+        assert!(m.best_spmv(100_000, 8).is_none());
+        // CG selection.
+        let cg = m.best_cg(10_000, 8).unwrap();
+        assert_eq!(cg.iters, Some(64));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join("hetpart-manifest-bad");
+        write_manifest(&dir, "only_name\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn hlo_path_shape() {
+        let dir = std::env::temp_dir().join("hetpart-manifest-path");
+        write_manifest(&dir, "spmv_4096x8 4096 8\n");
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.hlo_path(&m.entries[0]);
+        assert!(p.ends_with("spmv_4096x8.hlo.txt"));
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT execution wrappers.
+//!
+//! `Runtime` owns the PJRT CPU client; `SpmvExec`/`CgExec` wrap one
+//! compiled executable each with typed call signatures matching the
+//! shapes recorded in the manifest. Adapted from
+//! /opt/xla-example/load_hlo (HLO text → `HloModuleProto::from_text_file`
+//! → compile → execute; outputs are 1-/2-tuples because aot.py lowers
+//! with `return_tuple=True`).
+
+use super::artifacts::{Manifest, ManifestEntry};
+use anyhow::{ensure, Context, Result};
+
+/// Owns the PJRT client. Create once, load many executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, manifest: &Manifest, entry: &ManifestEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let path = manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", entry.name))
+    }
+
+    /// Load the spmv artifact named by `entry`.
+    pub fn load_spmv(&self, manifest: &Manifest, entry: &ManifestEntry) -> Result<SpmvExec> {
+        ensure!(entry.is_spmv(), "{} is not an spmv artifact", entry.name);
+        Ok(SpmvExec {
+            exe: self.compile(manifest, entry)?,
+            n: entry.n,
+            w: entry.w,
+            name: entry.name.clone(),
+        })
+    }
+
+    /// Load the CG artifact named by `entry`.
+    pub fn load_cg(&self, manifest: &Manifest, entry: &ManifestEntry) -> Result<CgExec> {
+        ensure!(!entry.is_spmv(), "{} is not a cg artifact", entry.name);
+        Ok(CgExec {
+            exe: self.compile(manifest, entry)?,
+            n: entry.n,
+            w: entry.w,
+            iters: entry.iters.unwrap(),
+            name: entry.name.clone(),
+        })
+    }
+}
+
+/// One compiled SpMV executable: y = diag·x + ELL(values, cols)·x over
+/// fixed shapes (n, w).
+pub struct SpmvExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub w: usize,
+    pub name: String,
+}
+
+/// A [`SpmvExec`] with the matrix operands resident on the device.
+///
+/// §Perf: `SpmvExec::run` re-uploads values/cols/diag (≈2·n·w·4 B) on
+/// every call, which dominated the artifact SpMV latency (see
+/// EXPERIMENTS.md §Perf). Binding uploads the matrix once; per-iteration
+/// traffic drops to the x vector only — the same buffer-residency the
+/// real TPU path would use.
+pub struct BoundSpmv<'a> {
+    exec: &'a SpmvExec,
+    values: xla::PjRtBuffer,
+    cols: xla::PjRtBuffer,
+    diag: xla::PjRtBuffer,
+}
+
+impl<'a> BoundSpmv<'a> {
+    /// y = A·x with only x crossing the host/device boundary.
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        ensure!(x.len() == self.exec.n, "x length");
+        let client = self.exec.exe.client();
+        let xb = client.buffer_from_host_buffer::<f32>(x, &[self.exec.n], None)?;
+        let result = self
+            .exec
+            .exe
+            .execute_b(&[&self.values, &self.cols, &self.diag, &xb])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+impl SpmvExec {
+    /// Upload the matrix operands once for repeated application.
+    pub fn bind(&self, values: &[f32], cols: &[i32], diag: &[f32]) -> Result<BoundSpmv<'_>> {
+        ensure!(values.len() == self.n * self.w, "values shape");
+        ensure!(cols.len() == self.n * self.w, "cols shape");
+        ensure!(diag.len() == self.n, "diag shape");
+        let client = self.exe.client();
+        Ok(BoundSpmv {
+            exec: self,
+            values: client.buffer_from_host_buffer::<f32>(values, &[self.n, self.w], None)?,
+            cols: client.buffer_from_host_buffer::<i32>(cols, &[self.n, self.w], None)?,
+            diag: client.buffer_from_host_buffer::<f32>(diag, &[self.n], None)?,
+        })
+    }
+
+    /// Execute. All slices must match the artifact shape exactly
+    /// (callers pad — see `solver::ell`).
+    pub fn run(&self, values: &[f32], cols: &[i32], diag: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        ensure!(values.len() == self.n * self.w, "values shape");
+        ensure!(cols.len() == self.n * self.w, "cols shape");
+        ensure!(diag.len() == self.n && x.len() == self.n, "vector shape");
+        let lv = xla::Literal::vec1(values).reshape(&[self.n as i64, self.w as i64])?;
+        let lc = xla::Literal::vec1(cols).reshape(&[self.n as i64, self.w as i64])?;
+        let ld = xla::Literal::vec1(diag);
+        let lx = xla::Literal::vec1(x);
+        let result = self.exe.execute::<xla::Literal>(&[lv, lc, ld, lx])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// One compiled CG executable: full solve, returns (x, residual norms).
+pub struct CgExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub n: usize,
+    pub w: usize,
+    pub iters: usize,
+    pub name: String,
+}
+
+impl CgExec {
+    pub fn run(
+        &self,
+        values: &[f32],
+        cols: &[i32],
+        diag: &[f32],
+        b: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(values.len() == self.n * self.w, "values shape");
+        ensure!(cols.len() == self.n * self.w, "cols shape");
+        ensure!(diag.len() == self.n && b.len() == self.n, "vector shape");
+        let lv = xla::Literal::vec1(values).reshape(&[self.n as i64, self.w as i64])?;
+        let lc = xla::Literal::vec1(cols).reshape(&[self.n as i64, self.w as i64])?;
+        let ld = xla::Literal::vec1(diag);
+        let lb = xla::Literal::vec1(b);
+        let result = self.exe.execute::<xla::Literal>(&[lv, lc, ld, lb])?[0][0]
+            .to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        ensure!(parts.len() == 2, "cg artifact must return (x, norms)");
+        let norms = parts.pop().unwrap().to_vec::<f32>()?;
+        let x = parts.pop().unwrap().to_vec::<f32>()?;
+        Ok((x, norms))
+    }
+}
+
+// PJRT integration tests live in rust/tests/runtime_pjrt.rs (they need
+// built artifacts and a working PJRT plugin, so they are integration-
+// level rather than unit-level).

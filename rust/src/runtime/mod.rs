@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the rust hot path.
+//!
+//! Python (L2/L1) runs only at `make artifacts` time; this module makes
+//! the rust binary self-contained afterwards: it discovers
+//! `artifacts/manifest.txt`, compiles each HLO text module on the PJRT
+//! CPU client once, and exposes typed entry points (`spmv`, `cg`).
+
+mod artifacts;
+mod exec;
+
+pub use artifacts::{ArtifactSet, Manifest, ManifestEntry};
+pub use exec::{BoundSpmv, CgExec, Runtime, SpmvExec};

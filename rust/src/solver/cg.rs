@@ -1,0 +1,173 @@
+//! Conjugate gradients in rust (f32), over any SpMV backend.
+//!
+//! The backend abstraction lets the same driver run on:
+//! - the native ELL SpMV (always available), and
+//! - a PJRT executable compiled from the L2/L1 artifact (the production
+//!   path of the three-layer architecture).
+
+use super::ell::EllMatrix;
+use super::spmv::spmv_ell_into;
+use anyhow::Result;
+
+/// SpMV provider for the CG driver.
+pub trait SpmvBackend {
+    fn n(&self) -> usize;
+    /// y = A·x.
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()>;
+}
+
+/// Native backend over an [`EllMatrix`].
+pub struct NativeBackend<'a> {
+    pub a: &'a EllMatrix,
+}
+
+impl<'a> SpmvBackend for NativeBackend<'a> {
+    fn n(&self) -> usize {
+        self.a.n
+    }
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()> {
+        spmv_ell_into(self.a, x, y);
+        Ok(())
+    }
+}
+
+/// PJRT backend over a compiled spmv artifact (matrix captured padded).
+/// The matrix is device-resident (bound once); only x moves per call —
+/// see EXPERIMENTS.md §Perf for the before/after.
+pub struct PjrtBackend<'a> {
+    bound: crate::runtime::BoundSpmv<'a>,
+    n: usize,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(exec: &'a crate::runtime::SpmvExec, a: &EllMatrix) -> Result<PjrtBackend<'a>> {
+        anyhow::ensure!(a.n == exec.n && a.w == exec.w, "matrix/artifact shape mismatch");
+        Ok(PjrtBackend { bound: exec.bind(&a.values, &a.cols, &a.diag)?, n: a.n })
+    }
+}
+
+impl<'a> SpmvBackend for PjrtBackend<'a> {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()> {
+        let out = self.bound.run(x)?;
+        y.copy_from_slice(&out);
+        Ok(())
+    }
+}
+
+/// CG outcome.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f32>,
+    /// ‖r‖ after every iteration.
+    pub residual_norms: Vec<f32>,
+    pub iterations: usize,
+}
+
+/// Run CG from x₀ = 0 for at most `max_iters`, stopping early at
+/// ‖r‖ ≤ `tol`·‖b‖. Guarded divisions as in the L2 model.
+pub fn cg_solve<B: SpmvBackend>(
+    backend: &mut B,
+    b: &[f32],
+    max_iters: usize,
+    tol: f32,
+) -> Result<CgResult> {
+    let n = backend.n();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut ap = vec![0.0f32; n];
+    let dot = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+    let mut rs = dot(&r, &r);
+    let b_norm = rs.sqrt().max(1e-30);
+    let mut norms = Vec::with_capacity(max_iters);
+    let tiny = 1e-30f32;
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        backend.spmv(&p, &mut ap)?;
+        let p_ap = dot(&p, &ap).max(tiny);
+        let alpha = rs / p_ap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs.max(tiny);
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+        iters += 1;
+        norms.push(rs.sqrt());
+        if rs.sqrt() <= tol * b_norm {
+            break;
+        }
+    }
+    Ok(CgResult { x, residual_norms: norms, iterations: iters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{mesh_2d_tri, rgg_2d};
+    use crate::solver::ell::EllMatrix;
+    use crate::solver::spmv::spmv_ell_native;
+
+    #[test]
+    fn converges_on_mesh_laplacian() {
+        let g = mesh_2d_tri(16, 16, 1);
+        let a = EllMatrix::from_graph(&g, 0.05);
+        let b: Vec<f32> = (0..g.n()).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let mut backend = NativeBackend { a: &a };
+        let res = cg_solve(&mut backend, &b, 500, 1e-5).unwrap();
+        // Residual dropped 5 orders of magnitude.
+        let r0 = res.residual_norms[0];
+        let rl = *res.residual_norms.last().unwrap();
+        assert!(rl <= 1e-4 * r0.max(1.0), "residual {rl} (start {r0})");
+        // Verify Ax ≈ b independently.
+        let ax = spmv_ell_native(&a, &res.x);
+        let err: f32 = ax.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f32::max);
+        assert!(err < 1e-2, "max |Ax-b| = {err}");
+    }
+
+    #[test]
+    fn early_stopping_respects_tol() {
+        let g = mesh_2d_tri(12, 12, 2);
+        let a = EllMatrix::from_graph(&g, 0.1);
+        let b = vec![1.0f32; g.n()];
+        let mut backend = NativeBackend { a: &a };
+        let loose = cg_solve(&mut backend, &b, 500, 1e-2).unwrap();
+        let tight = cg_solve(&mut backend, &b, 500, 1e-6).unwrap();
+        assert!(loose.iterations <= tight.iterations);
+        assert!(loose.iterations < 500);
+    }
+
+    #[test]
+    fn handles_converged_start_gracefully() {
+        // b = 0 → rs = 0 immediately; guarded divisions must not NaN.
+        let g = mesh_2d_tri(8, 8, 3);
+        let a = EllMatrix::from_graph(&g, 0.1);
+        let b = vec![0.0f32; g.n()];
+        let mut backend = NativeBackend { a: &a };
+        let res = cg_solve(&mut backend, &b, 10, 1e-6).unwrap();
+        assert!(res.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn residuals_mostly_decrease() {
+        let g = rgg_2d(800, 4);
+        let a = EllMatrix::from_graph(&g, 0.2);
+        let b: Vec<f32> = (0..g.n()).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut backend = NativeBackend { a: &a };
+        let res = cg_solve(&mut backend, &b, 100, 0.0).unwrap();
+        let ns = &res.residual_norms;
+        let drops = ns.windows(2).filter(|w| w[1] <= w[0] * 1.2).count();
+        assert!(
+            drops as f64 > 0.8 * (ns.len() - 1) as f64,
+            "residuals too noisy"
+        );
+    }
+}

@@ -1,0 +1,164 @@
+//! Padded ELL storage for the shifted Laplacian — the exact layout the
+//! L1 Pallas kernel consumes (`values[n, w]`, `cols[n, w]`, `diag[n]`,
+//! padding slots value 0 / column 0).
+
+use crate::graph::{Csr, Laplacian};
+use anyhow::{ensure, Result};
+
+/// ELL matrix (f32, matching the AOT artifacts).
+#[derive(Debug, Clone)]
+pub struct EllMatrix {
+    pub n: usize,
+    pub w: usize,
+    /// Row-major (n, w).
+    pub values: Vec<f32>,
+    /// Row-major (n, w).
+    pub cols: Vec<i32>,
+    pub diag: Vec<f32>,
+}
+
+impl EllMatrix {
+    /// Build from a graph's shifted Laplacian. Width = max row degree.
+    pub fn from_graph(g: &Csr, shift: f64) -> EllMatrix {
+        let lap = Laplacian::from_graph(g, shift);
+        EllMatrix::from_laplacian(&lap)
+    }
+
+    pub fn from_laplacian(lap: &Laplacian) -> EllMatrix {
+        let n = lap.n();
+        let w = lap.max_row_nnz().max(1);
+        let mut values = vec![0.0f32; n * w];
+        let mut cols = vec![0i32; n * w];
+        for u in 0..n {
+            for (slot, e) in (lap.xadj[u]..lap.xadj[u + 1]).enumerate() {
+                values[u * w + slot] = lap.vals[e] as f32;
+                cols[u * w + slot] = lap.cols[e] as i32;
+            }
+        }
+        EllMatrix {
+            n,
+            w,
+            values,
+            cols,
+            diag: lap.diag.iter().map(|&d| d as f32).collect(),
+        }
+    }
+
+    /// Non-padding entries.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Pad to the artifact shape (n2 ≥ n, w2 ≥ w). Padding rows have
+    /// diag = 1 so the padded system stays positive definite (the padded
+    /// subspace solves x = b = 0 and never couples back).
+    pub fn pad_to(&self, n2: usize, w2: usize) -> Result<EllMatrix> {
+        ensure!(n2 >= self.n && w2 >= self.w, "pad_to must not shrink");
+        let mut values = vec![0.0f32; n2 * w2];
+        let mut cols = vec![0i32; n2 * w2];
+        for u in 0..self.n {
+            for s in 0..self.w {
+                values[u * w2 + s] = self.values[u * self.w + s];
+                cols[u * w2 + s] = self.cols[u * self.w + s];
+            }
+        }
+        let mut diag = vec![1.0f32; n2];
+        diag[..self.n].copy_from_slice(&self.diag);
+        Ok(EllMatrix { n: n2, w: w2, values, cols, diag })
+    }
+
+    /// Extract the rows of one partition block, with columns still in
+    /// *global* indexing (the distributed driver gathers the global x).
+    /// Returns (row-subset ELL over n_global columns, owned global rows).
+    pub fn block_rows(&self, assignment: &[u32], block: u32) -> (EllMatrix, Vec<u32>) {
+        let rows: Vec<u32> = (0..self.n as u32)
+            .filter(|&u| assignment[u as usize] == block)
+            .collect();
+        let mut values = vec![0.0f32; rows.len() * self.w];
+        let mut cols = vec![0i32; rows.len() * self.w];
+        let mut diag = vec![0.0f32; rows.len()];
+        for (i, &u) in rows.iter().enumerate() {
+            let u = u as usize;
+            values[i * self.w..(i + 1) * self.w]
+                .copy_from_slice(&self.values[u * self.w..(u + 1) * self.w]);
+            cols[i * self.w..(i + 1) * self.w]
+                .copy_from_slice(&self.cols[u * self.w..(u + 1) * self.w]);
+            diag[i] = self.diag[u];
+        }
+        (
+            EllMatrix { n: rows.len(), w: self.w, values, cols, diag },
+            rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::graph::GraphBuilder;
+
+    fn path3_ell() -> EllMatrix {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        EllMatrix::from_graph(&b.build(), 0.5)
+    }
+
+    #[test]
+    fn from_graph_layout() {
+        let e = path3_ell();
+        assert_eq!(e.n, 3);
+        assert_eq!(e.w, 2); // middle vertex has 2 neighbors
+        assert_eq!(e.diag, vec![1.5, 2.5, 1.5]);
+        // Row 0: one entry (-1 at col 1), one padding slot.
+        assert_eq!(e.values[0..2], [-1.0, 0.0]);
+        assert_eq!(e.cols[0..2], [1, 0]);
+        assert_eq!(e.nnz(), 4);
+    }
+
+    #[test]
+    fn pad_preserves_and_extends() {
+        let e = path3_ell();
+        let p = e.pad_to(8, 4).unwrap();
+        assert_eq!(p.n, 8);
+        assert_eq!(p.w, 4);
+        assert_eq!(p.diag[0..3], [1.5, 2.5, 1.5]);
+        assert_eq!(p.diag[3..], [1.0, 1.0, 1.0, 1.0, 1.0]);
+        // Row 1 entries preserved at the right offsets.
+        assert_eq!(p.values[4..6], [-1.0, -1.0]);
+        assert_eq!(p.cols[4..6], [0, 2]);
+        // Shrinking is rejected.
+        assert!(e.pad_to(2, 2).is_err());
+    }
+
+    #[test]
+    fn padded_spmv_agrees_on_prefix() {
+        use crate::solver::spmv::spmv_ell_native;
+        let g = mesh_2d_tri(12, 12, 1);
+        let e = EllMatrix::from_graph(&g, 0.1);
+        let p = e.pad_to(256, e.w + 2).unwrap();
+        let x: Vec<f32> = (0..e.n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut xp = x.clone();
+        xp.resize(256, 0.0);
+        let y = spmv_ell_native(&e, &x);
+        let yp = spmv_ell_native(&p, &xp);
+        for i in 0..e.n {
+            assert!((y[i] - yp[i]).abs() < 1e-5, "row {i}: {} vs {}", y[i], yp[i]);
+        }
+        for i in e.n..256 {
+            assert_eq!(yp[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn block_rows_extraction() {
+        let e = path3_ell();
+        let (b0, rows) = e.block_rows(&[0, 0, 1], 0);
+        assert_eq!(rows, vec![0, 1]);
+        assert_eq!(b0.n, 2);
+        assert_eq!(b0.diag, vec![1.5, 2.5]);
+        // Columns stay global: row 1 references columns 0 and 2.
+        assert_eq!(b0.cols[2..4], [0, 2]);
+    }
+}

@@ -1,0 +1,260 @@
+//! Halo (ghost-cell) exchange structures for distributed SpMV.
+//!
+//! `DistributedMatrix` gathers the full global vector per SpMV — simple,
+//! but its data movement is not what an MPI code does. [`HaloMatrix`]
+//! builds the real structure: each PU stores its rows with columns
+//! *renumbered into a local space* `[own rows | ghost entries]`, plus the
+//! exchange lists (which owned values go to which neighbor PU). Per
+//! iteration each PU receives exactly its ghost values — the paper's
+//! communication-volume metric *is* the size of these lists, which is
+//! asserted by a test and exercised by the `micro` bench.
+
+use super::ell::EllMatrix;
+use crate::partition::Partition;
+
+/// One PU's share of the matrix plus its halo metadata.
+#[derive(Debug, Clone)]
+pub struct HaloBlock {
+    /// Rows in local indexing: columns < own.len() are owned, columns ≥
+    /// own.len() index into the ghost segment.
+    pub ell: EllMatrix,
+    /// Global ids of owned rows (local 0..own.len() ↔ global).
+    pub own: Vec<u32>,
+    /// Global ids of ghost entries (local own.len()+i ↔ global ghosts[i]).
+    pub ghosts: Vec<u32>,
+    /// For each neighbor PU: (neighbor, owned-local-indices to send).
+    pub send_lists: Vec<(u32, Vec<u32>)>,
+}
+
+/// Halo-exchange distributed matrix.
+pub struct HaloMatrix {
+    pub blocks: Vec<HaloBlock>,
+    pub n: usize,
+}
+
+impl HaloMatrix {
+    pub fn new(ell: &EllMatrix, part: &Partition) -> HaloMatrix {
+        let k = part.k;
+        let n = ell.n;
+        // Local index of every global vertex within its own block.
+        let mut local_of = vec![0u32; n];
+        let mut owners: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for u in 0..n {
+            let b = part.assignment[u] as usize;
+            local_of[u] = owners[b].len() as u32;
+            owners[b].push(u as u32);
+        }
+        let mut blocks = Vec::with_capacity(k);
+        for b in 0..k {
+            let own = owners[b].clone();
+            let nb = own.len();
+            // Discover ghosts: foreign columns referenced by my rows.
+            let mut ghost_local: std::collections::HashMap<u32, u32> =
+                std::collections::HashMap::new();
+            let mut ghosts: Vec<u32> = Vec::new();
+            let w = ell.w;
+            let mut values = vec![0.0f32; nb * w];
+            let mut cols = vec![0i32; nb * w];
+            let mut diag = vec![0.0f32; nb];
+            for (li, &gu) in own.iter().enumerate() {
+                let gu = gu as usize;
+                diag[li] = ell.diag[gu];
+                for s in 0..w {
+                    let v = ell.values[gu * w + s];
+                    let c = ell.cols[gu * w + s] as usize;
+                    values[li * w + s] = v;
+                    if v == 0.0 {
+                        cols[li * w + s] = 0; // padding stays padding
+                        continue;
+                    }
+                    let cb = part.assignment[c] as usize;
+                    cols[li * w + s] = if cb == b {
+                        local_of[c] as i32
+                    } else {
+                        let next = nb as u32 + ghosts.len() as u32;
+                        let gl = *ghost_local.entry(c as u32).or_insert_with(|| {
+                            ghosts.push(c as u32);
+                            next
+                        });
+                        gl as i32
+                    };
+                }
+            }
+            let ell_local = EllMatrix {
+                n: nb,
+                w,
+                values,
+                cols,
+                diag,
+            };
+            blocks.push(HaloBlock {
+                ell: ell_local,
+                own,
+                ghosts,
+                send_lists: Vec::new(), // filled below
+            });
+        }
+        // Send lists: for each block's ghosts, tell the owner to send.
+        let mut sends: Vec<std::collections::HashMap<u32, Vec<u32>>> =
+            vec![std::collections::HashMap::new(); k];
+        for (b, blk) in blocks.iter().enumerate() {
+            for &g in &blk.ghosts {
+                let owner = part.assignment[g as usize] as usize;
+                sends[owner]
+                    .entry(b as u32)
+                    .or_default()
+                    .push(local_of[g as usize]);
+            }
+        }
+        for (b, blk) in blocks.iter_mut().enumerate() {
+            let mut lists: Vec<(u32, Vec<u32>)> = sends[b]
+                .iter()
+                .map(|(nb, l)| (*nb, l.clone()))
+                .collect();
+            lists.sort_unstable_by_key(|(nb, _)| *nb);
+            blk.send_lists = lists;
+        }
+        HaloMatrix { blocks, n }
+    }
+
+    /// Words sent by block `b` per SpMV (= Σ send list lengths). Matches
+    /// `partition::metrics` communication volume by construction.
+    pub fn send_volume(&self, b: usize) -> usize {
+        self.blocks[b].send_lists.iter().map(|(_, l)| l.len()).sum()
+    }
+
+    /// One full distributed SpMV: exchange halos, then compute locally.
+    /// `x` and `y` are global vectors (the "MPI" is in-process).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        for blk in &self.blocks {
+            let nb = blk.own.len();
+            // Local x = [owned | ghosts] (the receive side of the halo
+            // exchange; senders' lists are the mirror image).
+            let mut xl = Vec::with_capacity(nb + blk.ghosts.len());
+            for &g in &blk.own {
+                xl.push(x[g as usize]);
+            }
+            for &g in &blk.ghosts {
+                xl.push(x[g as usize]);
+            }
+            let w = blk.ell.w;
+            for li in 0..nb {
+                let mut acc = blk.ell.diag[li] * xl[li];
+                for s in 0..w {
+                    acc += blk.ell.values[li * w + s]
+                        * xl[blk.ell.cols[li * w + s] as usize];
+                }
+                y[blk.own[li] as usize] = acc;
+            }
+        }
+    }
+}
+
+impl super::cg::SpmvBackend for HaloMatrix {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> anyhow::Result<()> {
+        HaloMatrix::spmv(self, x, y);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::partition::{metrics, Partition};
+    use crate::solver::spmv::spmv_ell_native;
+
+    fn setup() -> (crate::graph::Csr, EllMatrix, Partition) {
+        let g = mesh_2d_tri(16, 16, 3);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let part = Partition::new(
+            (0..g.n())
+                .map(|u| u32::from(g.coords[u].x > 7.5) + 2 * u32::from(g.coords[u].y > 7.5))
+                .collect(),
+            4,
+        );
+        (g, ell, part)
+    }
+
+    #[test]
+    fn halo_spmv_equals_whole() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.17).cos()).collect();
+        let whole = spmv_ell_native(&ell, &x);
+        let mut y = vec![0.0f32; ell.n];
+        h.spmv(&x, &mut y);
+        for i in 0..ell.n {
+            assert!((y[i] - whole[i]).abs() < 1e-5, "row {i}");
+        }
+    }
+
+    #[test]
+    fn ghost_lists_match_comm_volume_metric() {
+        let (g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let m = metrics(&g, &part, &[]);
+        let total_send: usize = (0..part.k).map(|b| h.send_volume(b)).sum();
+        assert_eq!(
+            total_send as f64, m.total_comm_volume,
+            "halo send lists must equal the metric's comm volume"
+        );
+        let max_send = (0..part.k).map(|b| h.send_volume(b)).max().unwrap();
+        assert_eq!(max_send as f64, m.max_comm_volume);
+    }
+
+    #[test]
+    fn ghosts_are_owned_elsewhere_and_unique() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        for (b, blk) in h.blocks.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &g in &blk.ghosts {
+                assert_ne!(part.assignment[g as usize] as usize, b);
+                assert!(seen.insert(g), "duplicate ghost {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn halo_cg_converges() {
+        use crate::solver::cg::cg_solve;
+        let (_g, ell, part) = setup();
+        let mut h = HaloMatrix::new(&ell, &part);
+        let b: Vec<f32> = (0..ell.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let res = cg_solve(&mut h, &b, 200, 1e-5).unwrap();
+        let whole = spmv_ell_native(&ell, &res.x);
+        let err = whole
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-2, "max |Ax-b| {err}");
+    }
+
+    #[test]
+    fn send_lists_are_mirror_of_ghosts() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        // Sum over blocks of (ghosts from owner o) == o's send list to b.
+        for (b, blk) in h.blocks.iter().enumerate() {
+            let mut from_owner: std::collections::HashMap<u32, usize> =
+                std::collections::HashMap::new();
+            for &g in &blk.ghosts {
+                *from_owner.entry(part.assignment[g as usize]).or_default() += 1;
+            }
+            for (o, count) in from_owner {
+                let send = h.blocks[o as usize]
+                    .send_lists
+                    .iter()
+                    .find(|(nb, _)| *nb == b as u32)
+                    .map(|(_, l)| l.len())
+                    .unwrap_or(0);
+                assert_eq!(send, count, "owner {o} -> block {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Application layer: the SpMV/CG kernels the paper benchmarks (§VI-a)
+//! and the heterogeneous-cluster execution simulator (§VI-C).
+//!
+//! The matrix is the graph's shifted Laplacian (`L + σI`, positive
+//! definite). Storage is padded ELL (`solver::ell`) matching the L1
+//! Pallas kernel's layout, so the same data feeds the native rust path
+//! and the PJRT artifacts. `distsim` models a heterogeneous cluster:
+//! per-PU compute scaled by `1/c_s`, α-β communication priced by the
+//! partition's measured communication volumes.
+
+pub mod cg;
+pub mod distcg;
+pub mod distsim;
+pub mod ell;
+pub mod halo;
+pub mod precond;
+pub mod spmv;
+
+pub use cg::{cg_solve, CgResult};
+pub use distcg::DistributedMatrix;
+pub use halo::HaloMatrix;
+pub use precond::pcg_solve;
+pub use distsim::{ClusterSim, SimReport};
+pub use ell::EllMatrix;

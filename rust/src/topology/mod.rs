@@ -1,0 +1,13 @@
+//! Heterogeneous compute-system topologies (paper §II-B, §VI).
+//!
+//! A system is a tree `T` whose leaves are processing units (PUs), each
+//! with a speed `c_s` and a memory capacity `m_cap`; inner nodes aggregate
+//! their children. Builders for the paper's three experiment categories
+//! (TOPO1/TOPO2/TOPO3) live here, plus the hierarchy-list form
+//! `k_1, …, k_h` used by hierarchical balanced k-means (§V).
+
+mod pu;
+mod topo;
+
+pub use pu::{Pu, Topology, TreeNode};
+pub use topo::{topo1, topo2, topo3, Topo1Spec, Topo2Spec, Topo3Spec, TABLE3_STEPS};

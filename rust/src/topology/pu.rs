@@ -1,0 +1,216 @@
+//! Processing units and topology trees.
+
+/// One processing unit (leaf of the topology tree).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pu {
+    /// Normalized speed `c_s(p)` — operations per time unit.
+    pub speed: f64,
+    /// Memory capacity `m_cap(p)` — in vertex-weight units.
+    pub memory: f64,
+}
+
+/// An inner node of the topology tree. Children are indices into
+/// [`Topology::nodes`]; leaves reference a PU index.
+#[derive(Debug, Clone)]
+pub enum TreeNode {
+    Inner { children: Vec<usize> },
+    Leaf { pu: usize },
+}
+
+/// A compute-system topology: `k` PUs at the leaves of a tree.
+///
+/// The tree matters for *hierarchical* partitioning (mapping blocks that
+/// communicate onto nearby PUs); flat problems can use
+/// [`Topology::flat`].
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub pus: Vec<Pu>,
+    /// Tree nodes; `nodes[root]` is the root.
+    pub nodes: Vec<TreeNode>,
+    pub root: usize,
+    /// Human-readable label used in experiment tables.
+    pub label: String,
+}
+
+impl Topology {
+    /// Flat topology: a single inner node over all PUs.
+    pub fn flat(pus: Vec<Pu>, label: impl Into<String>) -> Topology {
+        let mut nodes: Vec<TreeNode> = (0..pus.len()).map(|pu| TreeNode::Leaf { pu }).collect();
+        let children = (0..pus.len()).collect();
+        nodes.push(TreeNode::Inner { children });
+        let root = nodes.len() - 1;
+        Topology {
+            pus,
+            nodes,
+            root,
+            label: label.into(),
+        }
+    }
+
+    /// Homogeneous flat topology of k identical PUs.
+    pub fn homogeneous(k: usize, speed: f64, memory: f64) -> Topology {
+        Topology::flat(
+            vec![Pu { speed, memory }; k],
+            format!("homog_k{k}"),
+        )
+    }
+
+    /// Hierarchical topology from fan-out list `k_1, …, k_h` (paper §V):
+    /// level i splits each node into `k_i` children; total k = Πk_i.
+    /// PU specs are assigned by `pu_fn(leaf_index)`.
+    pub fn hierarchical(fanouts: &[usize], pu_fn: impl Fn(usize) -> Pu, label: impl Into<String>) -> Topology {
+        assert!(!fanouts.is_empty());
+        let k: usize = fanouts.iter().product();
+        let pus: Vec<Pu> = (0..k).map(&pu_fn).collect();
+        let mut nodes: Vec<TreeNode> = (0..k).map(|pu| TreeNode::Leaf { pu }).collect();
+        // Build bottom-up: group leaves by the innermost fanout first.
+        let mut level: Vec<usize> = (0..k).collect(); // node ids at current level
+        for &f in fanouts.iter().rev() {
+            if level.len() == 1 {
+                break;
+            }
+            let mut next = Vec::with_capacity(level.len() / f);
+            for chunk in level.chunks(f) {
+                let id = nodes.len();
+                nodes.push(TreeNode::Inner {
+                    children: chunk.to_vec(),
+                });
+                next.push(id);
+            }
+            level = next;
+        }
+        let root = if level.len() == 1 {
+            level[0]
+        } else {
+            let id = nodes.len();
+            nodes.push(TreeNode::Inner { children: level });
+            id
+        };
+        Topology {
+            pus,
+            nodes,
+            root,
+            label: label.into(),
+        }
+    }
+
+    /// Number of PUs.
+    pub fn k(&self) -> usize {
+        self.pus.len()
+    }
+
+    /// Total computational speed `C_s`.
+    pub fn total_speed(&self) -> f64 {
+        self.pus.iter().map(|p| p.speed).sum()
+    }
+
+    /// Total memory `M_cap`.
+    pub fn total_memory(&self) -> f64 {
+        self.pus.iter().map(|p| p.memory).sum()
+    }
+
+    /// PU indices under a tree node (left-to-right leaf order).
+    pub fn leaves_under(&self, node: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = vec![node];
+        while let Some(n) = stack.pop() {
+            match &self.nodes[n] {
+                TreeNode::Leaf { pu } => out.push(*pu),
+                TreeNode::Inner { children } => {
+                    for &c in children.iter().rev() {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Aggregated (speed, memory) of a subtree — the paper's recursive
+    /// accumulation for inner nodes.
+    pub fn subtree_specs(&self, node: usize) -> (f64, f64) {
+        self.leaves_under(node)
+            .iter()
+            .fold((0.0, 0.0), |(s, m), &pu| {
+                (s + self.pus[pu].speed, m + self.pus[pu].memory)
+            })
+    }
+
+    /// Rescale all PU memories so the load `n` fills `fill` of the total
+    /// memory (the paper's Table III ratios correspond to fill ≈ 0.84 —
+    /// see `blocksizes::TABLE3_FILL`). Relative PU specs and hence the
+    /// saturation pattern of Algorithm 1 are preserved; this is how the
+    /// normalized "memory 2 / memory 13.8" units of §VI attach to a
+    /// concrete graph size.
+    pub fn scaled_for_load(&self, n: f64, fill: f64) -> Topology {
+        let factor = n / (fill * self.total_memory());
+        let mut t = self.clone();
+        for pu in t.pus.iter_mut() {
+            pu.memory *= factor;
+        }
+        t
+    }
+
+    /// Children of the root (used by hierarchical partitioning).
+    pub fn root_children(&self) -> Vec<usize> {
+        match &self.nodes[self.root] {
+            TreeNode::Inner { children } => children.clone(),
+            TreeNode::Leaf { .. } => vec![self.root],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_topology() {
+        let t = Topology::homogeneous(4, 1.0, 2.0);
+        assert_eq!(t.k(), 4);
+        assert_eq!(t.total_speed(), 4.0);
+        assert_eq!(t.total_memory(), 8.0);
+        assert_eq!(t.leaves_under(t.root), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn hierarchical_fanouts() {
+        // 2 nodes × 3 PUs each = 6 PUs.
+        let t = Topology::hierarchical(&[2, 3], |_| Pu { speed: 1.0, memory: 1.0 }, "h23");
+        assert_eq!(t.k(), 6);
+        let rc = t.root_children();
+        assert_eq!(rc.len(), 2);
+        assert_eq!(t.leaves_under(rc[0]), vec![0, 1, 2]);
+        assert_eq!(t.leaves_under(rc[1]), vec![3, 4, 5]);
+        assert_eq!(t.subtree_specs(rc[0]), (3.0, 3.0));
+    }
+
+    #[test]
+    fn three_level_hierarchy() {
+        let t = Topology::hierarchical(&[2, 2, 2], |i| Pu { speed: (i + 1) as f64, memory: 1.0 }, "h222");
+        assert_eq!(t.k(), 8);
+        let rc = t.root_children();
+        assert_eq!(rc.len(), 2);
+        // First half speeds 1..4 sum to 10.
+        assert_eq!(t.subtree_specs(rc[0]).0, 10.0);
+        assert_eq!(t.subtree_specs(t.root).0, 36.0);
+    }
+
+    #[test]
+    fn scaled_for_load_preserves_ratios() {
+        let t = Topology::flat(
+            vec![Pu { speed: 16.0, memory: 13.8 }, Pu { speed: 1.0, memory: 2.0 }],
+            "t",
+        );
+        let s = t.scaled_for_load(1000.0, 0.84);
+        assert!((1000.0 / s.total_memory() - 0.84).abs() < 1e-12);
+        assert!((s.pus[0].memory / s.pus[1].memory - 6.9).abs() < 1e-12);
+        assert_eq!(s.pus[0].speed, 16.0);
+    }
+
+    #[test]
+    fn leaves_in_order() {
+        let t = Topology::hierarchical(&[3, 2], |_| Pu { speed: 1.0, memory: 1.0 }, "h32");
+        assert_eq!(t.leaves_under(t.root), vec![0, 1, 2, 3, 4, 5]);
+    }
+}

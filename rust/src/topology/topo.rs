@@ -1,0 +1,182 @@
+//! Builders for the paper's experiment topologies (§VI).
+//!
+//! - **TOPO1** (§VI-A): two PU sets, fast F and slow S, |F| ∈ {k/12, k/6};
+//!   slow PUs fixed at (speed 1, memory 2); fast PU specs follow the five
+//!   steps of Table III.
+//! - **TOPO2** (§VI-B): three sets F, S1, S2 modelling two CPU kinds plus
+//!   a GPU kind; |S1| = |S2|; S1's speed satisfies Eq. (5):
+//!   c_s(s1)/m_cap(s1) = ½ · c_s(f)/m_cap(f).
+//! - **TOPO3** (§VI-C): a cluster of compute nodes (24 PUs each) where
+//!   some nodes are "tuned down" — 1 or 2 nodes stay fast, the rest get
+//!   lower speed and memory.
+
+use super::{Pu, Topology};
+
+/// The five (speed, memory) steps of Table III for the fast PUs. The slow
+/// PUs have speed 1 and memory 2 in all experiments.
+pub const TABLE3_STEPS: [(f64, f64); 5] = [
+    (1.0, 2.0),
+    (2.0, 3.2),
+    (4.0, 5.2),
+    (8.0, 8.5),
+    (16.0, 13.8),
+];
+
+/// Slow PU spec shared by TOPO1/TOPO2.
+pub const SLOW_PU: Pu = Pu { speed: 1.0, memory: 2.0 };
+
+/// TOPO1 parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Topo1Spec {
+    /// Total number of PUs (blocks), e.g. 96.
+    pub k: usize,
+    /// Number of fast PUs (k/12 or k/6 in the paper).
+    pub num_fast: usize,
+    /// Fast PU speed/memory (one of [`TABLE3_STEPS`]).
+    pub fast: Pu,
+}
+
+/// Build a TOPO1 topology: `num_fast` fast PUs followed by slow PUs.
+pub fn topo1(spec: Topo1Spec) -> Topology {
+    assert!(spec.num_fast <= spec.k);
+    let mut pus = vec![spec.fast; spec.num_fast];
+    pus.resize(spec.k, SLOW_PU);
+    Topology::flat(
+        pus,
+        format!("topo1_f{}_fs{}", spec.num_fast, spec.fast.speed),
+    )
+}
+
+/// TOPO2 parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Topo2Spec {
+    pub k: usize,
+    pub num_fast: usize,
+    pub fast: Pu,
+}
+
+/// Build a TOPO2 topology: F fast PUs, then S1 (Eq. (5)), then S2 (slow).
+/// |S1| = |S2| = (k − |F|)/2 (odd remainders give S2 the extra PU).
+pub fn topo2(spec: Topo2Spec) -> Topology {
+    assert!(spec.num_fast <= spec.k);
+    let rest = spec.k - spec.num_fast;
+    let s1_count = rest / 2;
+    // Eq. (5): c_s(s1)/m_cap(s1) = 0.5 * c_s(f)/m_cap(f); m_cap(s1) = 2.
+    let s1 = Pu {
+        speed: 0.5 * (spec.fast.speed / spec.fast.memory) * 2.0,
+        memory: 2.0,
+    };
+    let mut pus = vec![spec.fast; spec.num_fast];
+    pus.extend(std::iter::repeat_n(s1, s1_count));
+    pus.resize(spec.k, SLOW_PU);
+    Topology::flat(
+        pus,
+        format!("topo2_f{}_fs{}", spec.num_fast, spec.fast.speed),
+    )
+}
+
+/// TOPO3 parameters: a local cluster with some nodes tuned down.
+#[derive(Debug, Clone, Copy)]
+pub struct Topo3Spec {
+    /// Number of compute nodes (4 or 8 in the paper).
+    pub nodes: usize,
+    /// PUs per node (24 in the paper's local cluster).
+    pub pus_per_node: usize,
+    /// Nodes left at full speed (1 or 2).
+    pub fast_nodes: usize,
+    /// Factor by which slow nodes are tuned down (speed and memory).
+    pub slowdown: f64,
+}
+
+/// Build a TOPO3 topology as a two-level hierarchy (nodes → cores).
+/// Fast PUs: speed `slowdown`, memory `2·slowdown` (relative to slow PUs
+/// at speed 1, memory 2) — equivalent to tuning the slow nodes *down* by
+/// `slowdown` as the paper does on real hardware.
+pub fn topo3(spec: Topo3Spec) -> Topology {
+    assert!(spec.fast_nodes <= spec.nodes);
+    let fast_pus = spec.fast_nodes * spec.pus_per_node;
+    let fast = Pu {
+        speed: spec.slowdown,
+        memory: 2.0 * spec.slowdown,
+    };
+    let pu_fn = |i: usize| if i < fast_pus { fast } else { SLOW_PU };
+    Topology::hierarchical(
+        &[spec.nodes, spec.pus_per_node],
+        pu_fn,
+        format!(
+            "topo3_n{}_f{}_x{}",
+            spec.nodes, spec.fast_nodes, spec.slowdown
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topo1_counts_and_specs() {
+        let t = topo1(Topo1Spec {
+            k: 96,
+            num_fast: 8,
+            fast: Pu { speed: 16.0, memory: 13.8 },
+        });
+        assert_eq!(t.k(), 96);
+        assert_eq!(t.pus.iter().filter(|p| p.speed == 16.0).count(), 8);
+        assert_eq!(t.pus.iter().filter(|p| *p == &SLOW_PU).count(), 88);
+        assert_eq!(t.total_speed(), 16.0 * 8.0 + 88.0);
+    }
+
+    #[test]
+    fn topo2_eq5_holds() {
+        let fast = Pu { speed: 8.0, memory: 8.5 };
+        let t = topo2(Topo2Spec { k: 96, num_fast: 16, fast });
+        // F=16, S1=40, S2=40.
+        let s1 = t.pus[16];
+        let ratio_f = fast.speed / fast.memory;
+        let ratio_s1 = s1.speed / s1.memory;
+        assert!((ratio_s1 - 0.5 * ratio_f).abs() < 1e-12);
+        let s2 = t.pus[95];
+        assert_eq!(*&s2, SLOW_PU);
+        assert_eq!(t.k(), 96);
+    }
+
+    #[test]
+    fn topo2_ordering_for_alg1() {
+        // The sorted order of c_s/m_cap must be F, then S1, then S2 when
+        // fast PUs are genuinely faster (Table III steps 3..5).
+        let fast = Pu { speed: 16.0, memory: 13.8 };
+        let t = topo2(Topo2Spec { k: 24, num_fast: 4, fast });
+        let r = |p: &Pu| p.speed / p.memory;
+        assert!(r(&t.pus[0]) > r(&t.pus[4]));
+        assert!(r(&t.pus[4]) > r(&t.pus[23]));
+    }
+
+    #[test]
+    fn topo3_hierarchy() {
+        let t = topo3(Topo3Spec {
+            nodes: 4,
+            pus_per_node: 24,
+            fast_nodes: 1,
+            slowdown: 4.0,
+        });
+        assert_eq!(t.k(), 96);
+        assert_eq!(t.root_children().len(), 4);
+        assert_eq!(t.pus.iter().filter(|p| p.speed == 4.0).count(), 24);
+        // First node is the fast one.
+        let rc = t.root_children();
+        let (s, _m) = t.subtree_specs(rc[0]);
+        assert_eq!(s, 96.0);
+    }
+
+    #[test]
+    fn table3_step1_is_homogeneous() {
+        let (s, m) = TABLE3_STEPS[0];
+        let t = topo1(Topo1Spec {
+            k: 12,
+            num_fast: 1,
+            fast: Pu { speed: s, memory: m },
+        });
+        assert!(t.pus.iter().all(|p| *p == SLOW_PU));
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal command-line argument parser (offline replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order of appearance.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is the bare flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Get a typed option value, or `default` if absent. Panics with a
+    /// readable message on parse failure (CLI surface, not library code).
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("--{name} {s}: {e}"),
+            },
+        }
+    }
+
+    /// Get an optional typed option value.
+    pub fn opt<T: FromStr>(&self, name: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.options.get(name).map(|s| match s.parse() {
+            Ok(v) => v,
+            Err(e) => panic!("--{name} {s}: {e}"),
+        })
+    }
+
+    /// Get a comma-separated list option, e.g. `--ks 24,48,96`.
+    pub fn list<T: FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| match p.trim().parse() {
+                    Ok(v) => v,
+                    Err(e) => panic!("--{name} element {p}: {e}"),
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["partition", "--k", "96", "--algo=geokm", "--verbose"]);
+        assert_eq!(a.positional, vec!["partition"]);
+        assert_eq!(a.get::<usize>("k", 4), 96);
+        assert_eq!(a.options.get("algo").unwrap(), "geokm");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get::<usize>("k", 4), 4);
+        assert_eq!(a.get::<f64>("eps", 0.03), 0.03);
+        assert!(a.opt::<usize>("k").is_none());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--k", "8"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get::<usize>("k", 0), 8);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--ks", "24,48, 96"]);
+        assert_eq!(a.list::<usize>("ks", &[1]), vec![24, 48, 96]);
+        assert_eq!(a.list::<usize>("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse(&["--k", "1", "--k", "2"]);
+        assert_eq!(a.get::<usize>("k", 0), 2);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value starting with '-' but not '--' is consumed as a value.
+        let a = parse(&["--shift", "-0.5"]);
+        assert_eq!(a.get::<f64>("shift", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,47 @@
+//! Small self-contained utilities.
+//!
+//! This offline build has no access to `rand`, `clap`, `criterion`, or
+//! `serde`, so the equivalents live here: a counter-based PRNG
+//! ([`rng::Rng`]), a CLI argument parser ([`cli::Args`]), timing helpers
+//! ([`timer`]), descriptive statistics ([`stats`]), and a plain-text table
+//! writer ([`table`]).
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+/// Format a float compactly: integers without decimals, small values with
+/// enough precision to be useful in report tables.
+pub fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return format!("{v}");
+    }
+    let a = v.abs();
+    if a >= 1000.0 || (v.fract() == 0.0 && a < 1e15) {
+        format!("{:.0}", v)
+    } else if a >= 10.0 {
+        format!("{:.2}", v)
+    } else if a >= 0.01 || a == 0.0 {
+        format!("{:.3}", v)
+    } else {
+        format!("{:.2e}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_f64_ranges() {
+        assert_eq!(fmt_f64(12345.6), "12346");
+        assert_eq!(fmt_f64(42.0), "42");
+        assert_eq!(fmt_f64(12.345), "12.35");
+        assert_eq!(fmt_f64(0.5), "0.500");
+        assert_eq!(fmt_f64(0.0001), "1.00e-4");
+        assert_eq!(fmt_f64(0.0), "0"); // integral branch wins
+
+    }
+}

@@ -1,0 +1,123 @@
+//! Timing helpers for benchmarks and coarse profiling.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Restart and return the previous elapsed seconds.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Accumulating named phase timer for coarse profiling of multi-phase
+/// algorithms (e.g. coarsen / initial / refine in the multilevel code).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    /// Add `secs` to the named phase (creating it if new).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(p) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            p.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    /// Run and time a closure under the named phase.
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (r, s) = timed(f);
+        self.add(name, s);
+        r
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    /// One-line summary, e.g. `coarsen=1.23s refine=0.45s (total 1.68s)`.
+    pub fn summary(&self) -> String {
+        let body: Vec<String> = self
+            .phases
+            .iter()
+            .map(|(n, s)| format!("{n}={s:.3}s"))
+            .collect();
+        format!("{} (total {:.3}s)", body.join(" "), self.total())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", 1.0);
+        pt.add("b", 2.0);
+        pt.add("a", 0.5);
+        assert_eq!(pt.phases().len(), 2);
+        assert!((pt.total() - 3.5).abs() < 1e-12);
+        assert!(pt.summary().contains("a=1.500s"));
+    }
+
+    #[test]
+    fn phase_timer_run() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.run("work", || 7);
+        assert_eq!(v, 7);
+        assert_eq!(pt.phases().len(), 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! Distributed-solver integration: the row-distributed CG must agree
+//! with the sequential solver for every partitioner's output, and the
+//! cluster simulator's accounting must respond to partition quality.
+
+use hetpart::blocksizes::block_sizes;
+use hetpart::coordinator::instance;
+use hetpart::gen::Family;
+use hetpart::partitioners::{by_name, Ctx, ALL_NAMES};
+use hetpart::solver::cg::{cg_solve, NativeBackend, SpmvBackend};
+use hetpart::solver::{ClusterSim, DistributedMatrix, EllMatrix};
+use hetpart::topology::{topo3, Topo3Spec};
+
+fn setup(n: usize) -> (hetpart::graph::Csr, EllMatrix, hetpart::topology::Topology, Vec<f64>) {
+    let (_, g) = instance(Family::Rdg2d, n, 21);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let topo = topo3(Topo3Spec {
+        nodes: 4,
+        pus_per_node: 3,
+        fast_nodes: 1,
+        slowdown: 4.0,
+    })
+    .scaled_for_load(g.n() as f64, 0.84);
+    let tw = block_sizes(g.n() as f64, &topo).unwrap().tw;
+    (g, ell, topo, tw)
+}
+
+#[test]
+fn distributed_cg_matches_sequential_for_every_partitioner() {
+    let (g, ell, topo, tw) = setup(3000);
+    let b: Vec<f32> = (0..g.n()).map(|i| ((i % 17) as f32 - 8.0) / 5.0).collect();
+    let mut seq_backend = NativeBackend { a: &ell };
+    let seq = cg_solve(&mut seq_backend, &b, 60, 0.0).unwrap();
+    for algo in ALL_NAMES {
+        let ctx = Ctx { graph: &g, targets: &tw, topo: &topo, epsilon: 0.05, seed: 2 };
+        let part = by_name(algo).unwrap().partition(&ctx).unwrap();
+        let mut dist = DistributedMatrix::new(&ell, &part);
+        let par = cg_solve(&mut dist, &b, 60, 0.0).unwrap();
+        let max_diff = seq
+            .x
+            .iter()
+            .zip(&par.x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "{algo}: distributed CG diverged by {max_diff}");
+    }
+}
+
+#[test]
+fn simulator_prefers_better_partitions() {
+    let (g, ell, topo, tw) = setup(6000);
+    let mut sim = ClusterSim::default();
+    sim.calibrate(&ell);
+    let run = |algo: &str| {
+        let ctx = Ctx { graph: &g, targets: &tw, topo: &topo, epsilon: 0.03, seed: 2 };
+        let part = by_name(algo).unwrap().partition(&ctx).unwrap();
+        sim.iteration(&g, &part, &topo, ell.w)
+    };
+    let km = run("geoKM");
+    // A random partition (balanced but max-cut) must simulate slower.
+    let mut rng = hetpart::util::rng::Rng::new(5);
+    let rand_assign: Vec<u32> = (0..g.n()).map(|_| rng.usize(topo.k()) as u32).collect();
+    let rand_part = hetpart::partition::Partition::new(rand_assign, topo.k());
+    let rnd = sim.iteration(&g, &rand_part, &topo, ell.w);
+    assert!(
+        km.time_per_iter < rnd.time_per_iter,
+        "geoKM {} should beat random {}",
+        km.time_per_iter,
+        rnd.time_per_iter
+    );
+    // Comm must dominate the random partition's bottleneck more than geoKM's.
+    let km_comm_share = km.bottleneck_comm / km.time_per_iter;
+    let rnd_comm_share = rnd.bottleneck_comm / rnd.time_per_iter;
+    assert!(rnd_comm_share > km_comm_share);
+}
+
+#[test]
+fn per_block_times_reflect_block_sizes() {
+    let (g, ell, topo, tw) = setup(6000);
+    let ctx = Ctx { graph: &g, targets: &tw, topo: &topo, epsilon: 0.03, seed: 2 };
+    let part = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+    let mut dist = DistributedMatrix::new(&ell, &part);
+    let x = vec![1.0f32; ell.n];
+    let mut y = vec![0.0f32; ell.n];
+    for _ in 0..20 {
+        dist.spmv(&x, &mut y).unwrap();
+    }
+    let times = dist.take_times();
+    let sizes = part.block_sizes();
+    // The biggest block (fast PU) should take measurably longer than the
+    // smallest one.
+    let (imax, _) = sizes.iter().enumerate().max_by_key(|(_, &s)| s).unwrap();
+    let (imin, _) = sizes.iter().enumerate().min_by_key(|(_, &s)| s).unwrap();
+    assert!(
+        times[imax] > times[imin],
+        "times {:?} vs sizes {:?}",
+        times,
+        sizes
+    );
+}

@@ -1,0 +1,194 @@
+//! Full-pipeline integration tests: generator → topology → Algorithm 1 →
+//! every partitioner → metrics, across instance families, plus the
+//! paper's qualitative findings as assertions.
+
+use hetpart::blocksizes::block_sizes;
+use hetpart::coordinator::{instance, run_one};
+use hetpart::gen::{Family, ALL_FAMILIES};
+use hetpart::partition::metrics;
+use hetpart::partitioners::{by_name, Ctx, ALL_NAMES};
+use hetpart::prop::{check, Gen};
+use hetpart::topology::{topo1, topo2, Pu, Topo1Spec, Topo2Spec, Topology};
+use hetpart::util::rng::Rng;
+
+/// Every partitioner must produce a valid, ε-balanced partition on every
+/// instance family under a heterogeneous TOPO1 topology.
+#[test]
+fn all_algos_all_families_heterogeneous() {
+    for family in ALL_FAMILIES {
+        let (name, g) = instance(family, 1500, 3);
+        let topo = topo1(Topo1Spec {
+            k: 8,
+            num_fast: 2,
+            fast: Pu { speed: 8.0, memory: 8.5 },
+        });
+        for algo in ALL_NAMES {
+            let (r, p) = run_one(&name, &g, &topo, algo, 0.05, 3)
+                .unwrap_or_else(|e| panic!("{algo} on {name}: {e}"));
+            p.validate(&g).unwrap();
+            assert!(r.cut > 0.0, "{algo} on {name}: zero cut for k=8");
+            // Geometric single-pass tools may drift a bit above ε on
+            // saturated heterogeneous targets; combinatorial/refined ones
+            // must respect it.
+            let bound = match algo {
+                "zSFC" | "zRCB" | "zRIB" => 0.35,
+                _ => 0.08,
+            };
+            assert!(
+                r.imbalance <= bound,
+                "{algo} on {name}: imbalance {} > {bound}",
+                r.imbalance
+            );
+        }
+    }
+}
+
+/// Paper's central quality ordering on 2-D meshes: refinement beats plain
+/// geoKM, and geoKM beats the Zoltan geometric methods.
+#[test]
+fn quality_ordering_matches_paper_on_meshes() {
+    let (name, g) = instance(Family::Tri2d, 4900, 11);
+    let topo = topo2(Topo2Spec {
+        k: 12,
+        num_fast: 2,
+        fast: Pu { speed: 16.0, memory: 13.8 },
+    });
+    let cut_of = |algo: &str| run_one(&name, &g, &topo, algo, 0.03, 11).unwrap().0.cut;
+    let km = cut_of("geoKM");
+    let re = cut_of("geoRef");
+    let pmre = cut_of("geoPMRef");
+    let sfc = cut_of("zSFC");
+    let rcb = cut_of("zRCB");
+    assert!(re < km, "geoRef {re} must beat geoKM {km}");
+    assert!(pmre < km, "geoPMRef {pmre} must beat geoKM {km}");
+    assert!(km < sfc, "geoKM {km} must beat zSFC {sfc}");
+    assert!(km < rcb, "geoKM {km} must beat zRCB {rcb}");
+}
+
+/// zSFC must stay the fastest tool by a wide margin (paper Table IV).
+#[test]
+fn sfc_is_fastest() {
+    let (name, g) = instance(Family::Rdg2d, 6000, 5);
+    let topo = Topology::homogeneous(16, 1.0, 2.0);
+    let t_sfc = run_one(&name, &g, &topo, "zSFC", 0.03, 5).unwrap().0.time_partition;
+    for algo in ["geoRef", "pmGraph"] {
+        let t = run_one(&name, &g, &topo, algo, 0.03, 5).unwrap().0.time_partition;
+        assert!(
+            t_sfc < t,
+            "zSFC ({t_sfc}s) should be faster than {algo} ({t}s)"
+        );
+    }
+}
+
+/// Property: on random feasible topologies, every partitioner's block
+/// weights respect the memory constraint (Eq. 3) after Algorithm 1 +
+/// partitioning with ε slack.
+#[test]
+fn prop_memory_constraint_respected() {
+    struct TopoGen;
+    impl Gen for TopoGen {
+        type Value = (usize, Vec<(f64, f64)>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let k = 2 + rng.usize(6);
+            let pus = (0..k)
+                .map(|_| (0.5 + 4.0 * rng.f64(), 1.0 + 4.0 * rng.f64()))
+                .collect();
+            (k, pus)
+        }
+    }
+    let (_gname, g) = instance(Family::Tri2d, 900, 1);
+    check("memory constraint", 15, 0xBEEF, TopoGen, |(k, pus)| {
+        let topo = Topology::flat(
+            pus.iter().map(|&(s, m)| Pu { speed: s, memory: m }).collect(),
+            "prop",
+        )
+        .scaled_for_load(g.n() as f64, 0.84);
+        let bs = match block_sizes(g.n() as f64, &topo) {
+            Ok(b) => b,
+            Err(_) => return Ok(()),
+        };
+        for algo in ["zSFC", "geoKM", "pmGraph"] {
+            let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo, epsilon: 0.05, seed: 1 };
+            let p = by_name(algo)
+                .unwrap()
+                .partition(&ctx)
+                .map_err(|e| format!("{algo}: {e}"))?;
+            let m = metrics(&g, &p, &bs.tw);
+            let mems: Vec<f64> = topo.pus.iter().map(|p| p.memory).collect();
+            // ε slack on top of tw, which is ≤ m_cap; allow small overhang
+            // for the coarse geometric tools on lumpy tiny instances.
+            let viol = m.memory_violation(&mems);
+            let tol = 0.35 * g.n() as f64 / *k as f64;
+            if viol > tol {
+                return Err(format!("{algo}: memory violation {viol} (k={k})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Failure injection: partitioners must reject impossible inputs rather
+/// than return garbage.
+#[test]
+fn failure_modes_are_errors() {
+    let (_, g) = instance(Family::Tri2d, 100, 1);
+    let topo = Topology::homogeneous(4, 1.0, 2.0);
+    // k > n.
+    let big_targets = vec![1.0; 200];
+    let big_topo = Topology::homogeneous(200, 1.0, 2.0);
+    let ctx = Ctx { graph: &g, targets: &big_targets, topo: &big_topo, epsilon: 0.05, seed: 1 };
+    assert!(by_name("geoKM").unwrap().partition(&ctx).is_err());
+    // Coordinate-free graph into geometric partitioners.
+    let bare = hetpart::graph::Csr { coords: Vec::new(), ..g.clone() };
+    let targets = vec![25.0; 4];
+    let ctx = Ctx { graph: &bare, targets: &targets, topo: &topo, epsilon: 0.05, seed: 1 };
+    for algo in ["zSFC", "zRCB", "zRIB", "geoKM", "hierKM", "pmGeom"] {
+        assert!(
+            by_name(algo).unwrap().partition(&ctx).is_err(),
+            "{algo} must require coordinates"
+        );
+    }
+    // pmGraph is the one that must still work.
+    assert!(by_name("pmGraph").unwrap().partition(&ctx).is_ok());
+    // Infeasible load for Algorithm 1.
+    let tiny_mem = Topology::homogeneous(4, 1.0, 1.0);
+    assert!(block_sizes(100.0, &tiny_mem).is_err());
+}
+
+/// Determinism across the whole pipeline: same seed → same cut.
+#[test]
+fn pipeline_deterministic() {
+    let (name, g) = instance(Family::Refined2d, 2000, 9);
+    let topo = topo1(Topo1Spec {
+        k: 6,
+        num_fast: 1,
+        fast: Pu { speed: 4.0, memory: 5.2 },
+    });
+    for algo in ALL_NAMES {
+        let a = run_one(&name, &g, &topo, algo, 0.03, 77).unwrap().0;
+        let b = run_one(&name, &g, &topo, algo, 0.03, 77).unwrap().0;
+        assert_eq!(a.cut, b.cut, "{algo} not deterministic");
+    }
+}
+
+/// Increasing heterogeneity must not favor the plain geometric tools
+/// over geoKM (the paper's Fig. 2 observation).
+#[test]
+fn heterogeneity_hurts_plain_geometric_more() {
+    let (name, g) = instance(Family::Tri2d, 3600, 13);
+    let homog = topo1(Topo1Spec { k: 12, num_fast: 2, fast: Pu { speed: 1.0, memory: 2.0 } });
+    let heter = topo1(Topo1Spec { k: 12, num_fast: 2, fast: Pu { speed: 16.0, memory: 13.8 } });
+    let ratio = |algo: &str| {
+        let a = run_one(&name, &g, &homog, algo, 0.03, 13).unwrap().0.cut;
+        let b = run_one(&name, &g, &heter, algo, 0.03, 13).unwrap().0.cut;
+        b / a
+    };
+    let km = ratio("geoKM");
+    let rcb = ratio("zRCB");
+    // RCB's quality degrades at least as much as geoKM's under
+    // heterogeneity (allowing 10% noise at this scale).
+    assert!(
+        rcb > km * 0.9,
+        "expected RCB to degrade at least as much: rcb {rcb:.3} vs km {km:.3}"
+    );
+}

@@ -1,0 +1,101 @@
+//! Integration tests for the PJRT runtime: load real artifacts, execute,
+//! and compare against the native rust oracle.
+//!
+//! These need `make artifacts` to have run; they are skipped (not failed)
+//! when artifacts are absent so `cargo test` works on a fresh checkout.
+
+use hetpart::gen::mesh_2d_tri;
+use hetpart::runtime::{ArtifactSet, Runtime};
+use hetpart::solver::spmv::spmv_ell_native;
+use hetpart::solver::EllMatrix;
+
+fn manifest_or_skip() -> Option<hetpart::runtime::Manifest> {
+    match ArtifactSet::discover() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn spmv_artifact_matches_native() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let entry = manifest.best_spmv(4096, 8).expect("spmv_4096x8 artifact");
+    let exec = rt.load_spmv(&manifest, entry).expect("compile artifact");
+
+    // Real mesh Laplacian, padded to the artifact shape.
+    let g = mesh_2d_tri(60, 60, 42); // 3600 vertices, degree ≤ 8
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    assert!(ell.w <= exec.w, "mesh width {} exceeds artifact {}", ell.w, exec.w);
+    let padded = ell.pad_to(exec.n, exec.w).unwrap();
+    let mut x = vec![0.0f32; exec.n];
+    for (i, v) in x.iter_mut().enumerate().take(g.n()) {
+        *v = ((i * 31 % 17) as f32 - 8.0) / 3.0;
+    }
+
+    let y_pjrt = exec
+        .run(&padded.values, &padded.cols, &padded.diag, &x)
+        .expect("execute");
+    let y_native = spmv_ell_native(&padded, &x);
+    assert_eq!(y_pjrt.len(), exec.n);
+    for i in 0..g.n() {
+        assert!(
+            (y_pjrt[i] - y_native[i]).abs() < 1e-3,
+            "row {i}: pjrt {} vs native {}",
+            y_pjrt[i],
+            y_native[i]
+        );
+    }
+}
+
+#[test]
+fn cg_artifact_converges_like_native() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(entry) = manifest.best_cg(16384, 8) else {
+        eprintln!("SKIP: no cg artifact");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let exec = rt.load_cg(&manifest, entry).expect("compile cg artifact");
+
+    let g = mesh_2d_tri(100, 100, 7); // 10_000 vertices
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let padded = ell.pad_to(exec.n, exec.w).unwrap();
+    let mut b = vec![0.0f32; exec.n];
+    for (i, v) in b.iter_mut().enumerate().take(g.n()) {
+        *v = ((i % 13) as f32 - 6.0) / 5.0;
+    }
+    let (x, norms) = exec
+        .run(&padded.values, &padded.cols, &padded.diag, &b)
+        .expect("execute cg");
+    assert_eq!(x.len(), exec.n);
+    assert_eq!(norms.len(), exec.iters);
+    // The residual must fall substantially over 64 iterations.
+    assert!(
+        norms[exec.iters - 1] < 0.2 * norms[0],
+        "no convergence: {} -> {}",
+        norms[0],
+        norms[exec.iters - 1]
+    );
+    // Cross-check the solution against the native CG on the same system.
+    use hetpart::solver::cg::{cg_solve, NativeBackend};
+    let mut backend = NativeBackend { a: &padded };
+    let native = cg_solve(&mut backend, &b, exec.iters, 0.0).unwrap();
+    let max_diff = x
+        .iter()
+        .zip(&native.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 0.05, "pjrt vs native CG diverged: {max_diff}");
+}
+
+#[test]
+fn runtime_reports_cpu_platform() {
+    let Some(_) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("client");
+    let platform = rt.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+}
