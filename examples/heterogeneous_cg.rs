@@ -15,11 +15,17 @@
 //! 5. Print the Fig.-5-style table: cut, max comm volume, residual,
 //!    simulated time/iteration, and measured SpMV latency.
 //!
+//! 6. Re-run the solve through the **virtual-cluster execution engine**
+//!    (`--backend threads`: one OS thread per PU with speed throttling
+//!    behind the shared-memory `Comm` transport; `--backend sim`: the
+//!    sequential α-β-priced superstep executor) and report its makespan.
+//!
 //! Run: `make artifacts && cargo run --release --example heterogeneous_cg`
-//! (options: --n 16000 --k 48 --iters 60 --native)
+//! (options: --n 16000 --k 48 --iters 60 --native --backend sim|threads)
 
 use hetpart::blocksizes::{block_sizes, TABLE3_FILL};
 use hetpart::coordinator::instance;
+use hetpart::exec::ExecBackend;
 use hetpart::gen::Family;
 use hetpart::partition::metrics;
 use hetpart::partitioners::{by_name, Ctx};
@@ -37,6 +43,13 @@ fn main() -> anyhow::Result<()> {
     let k = args.get("k", 48usize);
     let iters = args.get("iters", 60usize);
     let force_native = args.flag("native");
+    let backend = {
+        let s: String = args.get("backend", "threads".to_string());
+        ExecBackend::parse(&s).unwrap_or_else(|| {
+            eprintln!("unknown --backend {s} (expected sim|threads)");
+            std::process::exit(2);
+        })
+    };
 
     // --- workload ---------------------------------------------------------
     let (name, g) = instance(Family::Rdg2d, n, 42);
@@ -88,7 +101,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut sim = ClusterSim::default();
     sim.calibrate(&ell);
-    let b: Vec<f32> = (0..g.n()).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect();
+    let b = hetpart::coordinator::experiment::default_rhs(g.n());
 
     let mut t = Table::new(vec![
         "algo",
@@ -97,6 +110,7 @@ fn main() -> anyhow::Result<()> {
         "imbal",
         "residual",
         "sim_t/iter(ms)",
+        "vc_t/iter(ms)",
         "spmv(ms)",
         "backend",
     ]);
@@ -152,6 +166,15 @@ fn main() -> anyhow::Result<()> {
             "{algo}: distributed CG disagrees with {backend_name}"
         );
 
+        // Virtual-cluster engine: the same distributed CG through the
+        // Comm seam — thread-per-PU (throttled) or sequential-sim.
+        let (vres, vrep) = sim.run_cg_virtual(&ell, &part, &topo, backend, &b, iters, 1e-6)?;
+        let vresid = vres.residual_norms.last().copied().unwrap_or(0.0);
+        assert!(
+            (vresid - residual).abs() <= 0.05 * residual.max(1e-3),
+            "{algo}: virtual-cluster CG disagrees with {backend_name}"
+        );
+
         t.row(vec![
             algo.to_string(),
             format!("{:.0}", m.cut),
@@ -159,8 +182,9 @@ fn main() -> anyhow::Result<()> {
             format!("{:+.3}", m.imbalance),
             format!("{:.2e}", residual),
             format!("{:.4}", rep.time_per_iter * 1e3),
+            format!("{:.4}", vrep.time_per_iter() * 1e3),
             format!("{spmv_ms:.3}"),
-            backend_name.to_string(),
+            format!("{backend_name}+{}", vrep.backend),
         ]);
     }
     print!("{}", t.to_text());

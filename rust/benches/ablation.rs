@@ -59,7 +59,8 @@ fn main() {
     let mut t = Table::new(vec!["gamma", "max_iters", "cut", "imbalance", "time(s)"]);
     for gamma in [0.2, 0.6, 1.0] {
         for iters in [10usize, 40] {
-            let km = GeoKMeans { gamma, max_iters: iters };
+            // Single-core so the timed column stays comparable across rows.
+            let km = GeoKMeans { gamma, max_iters: iters, workers: Some(1) };
             let ctx = Ctx { graph: &g, targets: &bs.tw, topo: &topo_h, epsilon: 0.03, seed: 4 };
             let (p, secs) = timed(|| km.partition(&ctx).unwrap());
             let m = metrics(&g, &p, &bs.tw);

@@ -1,0 +1,21 @@
+//! Exec-engine benchmarks: sequential-sim vs thread-per-PU distributed
+//! execution, and the SpMV hot path (whole-matrix sequential loop vs the
+//! chunked job-queue path vs per-block threaded execution).
+//!
+//! On ≥4 cores the chunked/threaded paths should beat the sequential
+//! loop; the `speedup_vs_seq` column makes the comparison explicit.
+use hetpart::bench_harness::{emit, experiments, BenchScale};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    emit(
+        "exec_engine",
+        "virtual cluster: sim vs threads backends",
+        &experiments::exec_compare(scale),
+    );
+    emit(
+        "exec_spmv",
+        "SpMV hot path: sequential vs chunked vs threaded",
+        &experiments::exec_spmv(scale),
+    );
+}

@@ -5,7 +5,8 @@
 //! these and [`super::emit`] the results.
 
 use super::BenchScale;
-use crate::coordinator::{instance, run_one, Grid, RunResult};
+use crate::coordinator::{instance, run_one, run_solve, Grid, RunResult};
+use crate::exec::ExecBackend;
 use crate::gen::Family;
 use crate::partition::metrics;
 use crate::partitioners::{by_name, Ctx, ALL_NAMES};
@@ -347,6 +348,115 @@ pub fn table4(scale: BenchScale) -> Table {
     t
 }
 
+/// **Exec engine**: the virtual cluster's two backends on a TOPO3-style
+/// heterogeneous cluster — residual-trajectory agreement between the
+/// sequential α-β `sim` backend and the thread-per-PU `threads` backend,
+/// plus each backend's bottleneck time per iteration.
+pub fn exec_compare(scale: BenchScale) -> Table {
+    let (name, g) = instance(Family::Rdg2d, scale.n2d, SEED);
+    let pus_per_node = (scale.k / 4).max(2);
+    let topo = topo3(Topo3Spec {
+        nodes: 4,
+        pus_per_node,
+        fast_nodes: 1,
+        slowdown: 4.0,
+    });
+    let mut t = Table::new(vec![
+        "algo", "sim_t/iter(ms)", "thr_t/iter(ms)", "thr_wall(s)", "resid", "resid_agree",
+    ]);
+    for algo in ["geoKM", "zSFC", "pmGraph"] {
+        let p = match run_one(&name, &g, &topo, algo, EPS, SEED) {
+            Ok((_, p)) => p,
+            Err(e) => {
+                eprintln!("WARN exec_compare {algo}: {e}");
+                continue;
+            }
+        };
+        let sim = run_solve(&g, &p, &topo, ExecBackend::Sim, 0.05, 40, 0.0);
+        let thr = run_solve(&g, &p, &topo, ExecBackend::Threads, 0.05, 40, 0.0);
+        match (sim, thr) {
+            (Ok((ss, cs)), Ok((st, ct))) => {
+                let agree = cs
+                    .residual_norms
+                    .iter()
+                    .zip(&ct.residual_norms)
+                    .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1.0));
+                t.row(vec![
+                    algo.to_string(),
+                    format!("{:.4}", ss.time_per_iter * 1e3),
+                    format!("{:.4}", st.time_per_iter * 1e3),
+                    format!("{:.3}", st.wall_secs),
+                    format!("{:.2e}", ss.final_residual),
+                    agree.to_string(),
+                ]);
+            }
+            (Err(e), _) | (_, Err(e)) => eprintln!("WARN exec_compare {algo}: {e}"),
+        }
+    }
+    t
+}
+
+/// Warmup + 5 samples of one SpMV path; returns the median seconds.
+fn sample_spmv(y: &mut [f32], mut f: impl FnMut(&mut [f32])) -> f64 {
+    f(y);
+    let times: Vec<f64> = (0..5)
+        .map(|_| {
+            let t = crate::util::timer::Timer::start();
+            f(y);
+            t.secs()
+        })
+        .collect();
+    crate::util::stats::median(&times)
+}
+
+/// **SpMV hot path**: the sequential whole-matrix loop vs the chunked
+/// job-queue path vs per-block execution (sequential block loop, halo
+/// blocks over the job queue, and the thread-per-PU engine).
+pub fn exec_spmv(scale: BenchScale) -> Table {
+    use crate::coordinator::jobqueue::default_workers;
+    use crate::exec::VirtualCluster;
+    use crate::solver::cg::SpmvBackend;
+    use crate::solver::spmv::{par_spmv_ell_into, spmv_ell_into};
+    use crate::solver::{DistributedMatrix, HaloMatrix};
+
+    let (name, g) = instance(Family::Rdg2d, scale.n2d * 4, SEED);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let topo = Topology::homogeneous(scale.k, 1.0, 2.0);
+    let targets = vec![g.n() as f64 / scale.k as f64; scale.k];
+    let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: EPS, seed: SEED };
+    let part = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+    let workers = default_workers();
+
+    let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.13).sin()).collect();
+    let mut y = vec![0.0f32; ell.n];
+
+    let t_seq = sample_spmv(&mut y, |y| spmv_ell_into(&ell, &x, y));
+    let t_par = sample_spmv(&mut y, |y| par_spmv_ell_into(&ell, &x, y, workers));
+    let mut dist = DistributedMatrix::new(&ell, &part);
+    let t_dist = sample_spmv(&mut y, |y| dist.spmv(&x, y).unwrap());
+    let halo = HaloMatrix::new(&ell, &part);
+    let t_halo = sample_spmv(&mut y, |y| halo.par_spmv(&x, y, workers));
+    let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+    let t_vc = sample_spmv(&mut y, |y| vc.spmv(ExecBackend::Threads, &x, y).unwrap());
+
+    let mut t = Table::new(vec!["path", "median(ms)", "speedup_vs_seq"]);
+    for (path, secs) in [
+        ("seq_whole", t_seq),
+        ("par_jobqueue", t_par),
+        ("seq_block_loop", t_dist),
+        ("halo_par_blocks", t_halo),
+        ("vc_threads", t_vc),
+    ] {
+        t.row(vec![
+            path.to_string(),
+            format!("{:.4}", secs * 1e3),
+            format!("{:.2}", t_seq / secs.max(1e-12)),
+        ]);
+    }
+    println!("[exec_spmv on {name}: n={} w={} k={} workers={workers}]", ell.n, ell.w, scale.k);
+    t
+}
+
 /// Micro-bench helper: time one partitioner on one instance (used by the
 /// `micro` bench target for §Perf tracking).
 pub fn time_algo(family: Family, n: usize, k: usize, algo: &str) -> (f64, f64) {
@@ -455,6 +565,17 @@ mod tests {
         for row in &t.rows {
             let ms: f64 = row[4].parse().unwrap();
             assert!(ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn exec_compare_backends_agree() {
+        let t = exec_compare(tiny());
+        assert!(!t.rows.is_empty());
+        for row in &t.rows {
+            assert_eq!(row[5], "true", "backends disagree: {row:?}");
+            let sim_ms: f64 = row[1].parse().unwrap();
+            assert!(sim_ms > 0.0);
         }
     }
 

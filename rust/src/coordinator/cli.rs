@@ -5,6 +5,7 @@
 //! hetpart partition  --family rdg2d --n 16384 --algo geoKM --k 24 [--topo topo1 ...]
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
+//!                    [--backend sim|threads]   (virtual-cluster engine)
 //! hetpart version | help
 //! ```
 
@@ -49,6 +50,8 @@ SUBCOMMANDS
   partition    generate a graph, partition with one algorithm, print metrics
   compare      run all {} partitioners on one instance (Table IV row)
   solve        partition + distributed CG under the cluster simulator
+               (--backend sim|threads runs the virtual-cluster engine:
+                sequential α-β-priced supersteps or thread-per-PU)
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   version      print version
@@ -259,10 +262,42 @@ fn cmd_solve(args: &Args) -> i32 {
             return 1;
         }
     };
+    // Virtual-cluster engine path: thread-per-PU or sequential-sim
+    // distributed CG behind the Comm seam.
+    if let Some(bs) = args.opt::<String>("backend") {
+        let Some(backend) = crate::exec::ExecBackend::parse(&bs) else {
+            eprintln!("unknown --backend {bs} (expected sim|threads)");
+            return 2;
+        };
+        let (s, cg) =
+            match crate::coordinator::run_solve(&g, &part, &topo, backend, shift, iters, 1e-6) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+        let mut t = Table::new(vec![
+            "algo", "backend", "cut", "maxCommVol", "iters", "residual", "t/iter(s)", "wall(s)",
+        ]);
+        t.row(vec![
+            r.algo.clone(),
+            s.backend.to_string(),
+            fmt_f64(r.cut),
+            fmt_f64(r.max_comm_volume),
+            cg.iterations.to_string(),
+            format!("{:.2e}", s.final_residual),
+            format!("{:.2e}", s.time_per_iter),
+            format!("{:.3}", s.wall_secs),
+        ]);
+        print!("{}", t.to_text());
+        println!("bottleneck PU {}", s.bottleneck_rank);
+        return 0;
+    }
     let ell = EllMatrix::from_graph(&g, shift);
     let mut sim = ClusterSim::default();
     sim.calibrate(&ell);
-    let b: Vec<f32> = (0..g.n()).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect();
+    let b = crate::coordinator::experiment::default_rhs(g.n());
     let use_pjrt = args.flag("pjrt");
     let (cg, rep) = if use_pjrt {
         match pjrt_cg(&g, &part, &topo, &ell, &sim, &b, iters) {

@@ -3,10 +3,12 @@
 //! quality metrics and timings.
 
 use crate::blocksizes::block_sizes;
+use crate::exec::ExecBackend;
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partition::{metrics, Metrics, Partition};
 use crate::partitioners::{by_name, Ctx};
+use crate::solver::{CgResult, ClusterSim, EllMatrix};
 use crate::topology::Topology;
 use crate::util::timer::timed;
 use anyhow::{anyhow, Context, Result};
@@ -70,6 +72,57 @@ pub fn run_one(
     ))
 }
 
+/// One distributed-solve cell through the virtual-cluster engine.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// Which engine backend ran (`sim` or `threads`).
+    pub backend: &'static str,
+    pub iterations: usize,
+    pub final_residual: f32,
+    /// Bottleneck (compute + comm) seconds per iteration.
+    pub time_per_iter: f64,
+    pub bottleneck_rank: usize,
+    pub wall_secs: f64,
+}
+
+/// The right-hand side every solve driver uses, so `hetpart solve` with
+/// and without `--backend`, the example, and `run_solve` all solve the
+/// same system and their residuals stay comparable.
+pub fn default_rhs(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect()
+}
+
+/// Run distributed CG for a partition through the virtual-cluster
+/// engine. The simulator is calibrated on the assembled matrix, so the
+/// `sim` backend prices iterations with measured kernel speed while the
+/// `threads` backend measures thread-per-PU execution for real.
+pub fn run_solve(
+    g: &Csr,
+    part: &Partition,
+    topo: &Topology,
+    backend: ExecBackend,
+    shift: f64,
+    max_iters: usize,
+    tol: f32,
+) -> Result<(SolveResult, CgResult)> {
+    let ell = EllMatrix::from_graph(g, shift);
+    let mut sim = ClusterSim::default();
+    sim.calibrate(&ell);
+    let b = default_rhs(g.n());
+    let (cg, rep) = sim.run_cg_virtual(&ell, part, topo, backend, &b, max_iters, tol)?;
+    Ok((
+        SolveResult {
+            backend: rep.backend,
+            iterations: cg.iterations,
+            final_residual: cg.residual_norms.last().copied().unwrap_or(0.0),
+            time_per_iter: rep.time_per_iter(),
+            bottleneck_rank: rep.bottleneck_rank(),
+            wall_secs: rep.wall_secs,
+        },
+        cg,
+    ))
+}
+
 /// A grid: instances × topologies × algorithms.
 pub struct Grid {
     pub graphs: Vec<(String, Csr)>,
@@ -81,7 +134,10 @@ pub struct Grid {
 
 impl Grid {
     /// Run the full grid (sequentially — partitioners are themselves the
-    /// unit of measurement, so no concurrent timing noise).
+    /// unit of measurement, so no concurrent timing noise). Note geoKM's
+    /// assignment step is itself multi-threaded by default; construct
+    /// `GeoKMeans { workers: Some(1), .. }` where strict single-core
+    /// timing comparability against the other algorithms is required.
     pub fn run(&self) -> Vec<RunResult> {
         let mut out = Vec::new();
         for (name, g) in &self.graphs {
@@ -151,6 +207,28 @@ mod tests {
         // The fast PU's block really is bigger.
         let sizes = p.block_sizes();
         assert!(sizes[0] > sizes[5], "{sizes:?}");
+    }
+
+    #[test]
+    fn run_solve_both_backends_agree() {
+        let (name, g) = instance(Family::Tri2d, 900, 1);
+        let topo = topo1(Topo1Spec {
+            k: 4,
+            num_fast: 1,
+            fast: Pu { speed: 4.0, memory: 8.5 },
+        });
+        let (_, p) = run_one(&name, &g, &topo, "geoKM", 0.05, 1).unwrap();
+        let (s_sim, cg_sim) =
+            run_solve(&g, &p, &topo, ExecBackend::Sim, 0.05, 60, 1e-5).unwrap();
+        let (s_thr, cg_thr) =
+            run_solve(&g, &p, &topo, ExecBackend::Threads, 0.05, 60, 1e-5).unwrap();
+        assert_eq!(s_sim.backend, "sim");
+        assert_eq!(s_thr.backend, "threads");
+        assert_eq!(cg_sim.residual_norms, cg_thr.residual_norms);
+        assert!(s_sim.final_residual < 1e-2);
+        assert!(s_sim.time_per_iter > 0.0);
+        assert!(s_thr.time_per_iter > 0.0);
+        assert!(s_sim.bottleneck_rank < 4);
     }
 
     #[test]

@@ -84,6 +84,55 @@ mod tests {
     }
 
     #[test]
+    fn results_in_job_order_under_contention() {
+        // Uneven job durations so completion order differs from job
+        // order; results must still come back in job order.
+        let jobs: Vec<usize> = (0..64).collect();
+        let out = run_jobs(jobs, 8, |&j| {
+            if j % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            j * 10
+        });
+        assert_eq!(out, (0..64).map(|j| j * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workers_zero_clamps_to_one() {
+        let out = run_jobs(vec![1, 2, 3], 0, |&j| j * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn empty_jobs_with_zero_workers() {
+        let out: Vec<usize> = run_jobs(Vec::<usize>::new(), 0, |&j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        // A panicking job must fail the whole run_jobs call (fail fast),
+        // not silently produce a partial result.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_jobs((0..32).collect::<Vec<usize>>(), 4, |&j| {
+                if j == 17 {
+                    panic!("job 17 exploded");
+                }
+                j
+            })
+        }));
+        assert!(result.is_err(), "panic in a worker must propagate");
+    }
+
+    #[test]
+    fn panics_propagate_on_single_worker_path() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_jobs(vec![1], 1, |_| -> usize { panic!("boom") })
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
     fn all_jobs_execute_exactly_once() {
         use std::sync::atomic::AtomicUsize;
         let count = AtomicUsize::new(0);

@@ -5,7 +5,9 @@ pub mod cli;
 pub mod experiment;
 pub mod jobqueue;
 
-pub use experiment::{instance, relative_to, run_one, Grid, RunResult};
+pub use experiment::{
+    default_rhs, instance, relative_to, run_one, run_solve, Grid, RunResult, SolveResult,
+};
 pub use jobqueue::{default_workers, run_jobs};
 
 /// Crate version (used by the CLI banner).

@@ -1,0 +1,620 @@
+//! Thread-per-PU virtual-cluster executor.
+//!
+//! [`VirtualCluster`] owns the per-PU row blocks of a partitioned ELL
+//! matrix (the halo decomposition) and runs *distributed* CG through a
+//! [`Comm`] transport: every dot product is a deposit + rank-order
+//! allreduce, every SpMV is preceded by a halo exchange. Two backends:
+//!
+//! - [`ExecBackend::Sim`] — the sequential superstep executor: one
+//!   thread plays all ranks phase by phase, communication cost is priced
+//!   by the α-β [`CostModel`] and compute by `t_flop / speed` (this is
+//!   the old `distsim` accounting, now produced by actually executing
+//!   the distributed algorithm through the `Comm` seam);
+//! - [`ExecBackend::Threads`] — one OS thread per PU: real barriers,
+//!   real shared-memory exchange, and per-PU *speed throttling* (slower
+//!   PUs sleep proportionally to `max_speed / speed`), so the measured
+//!   makespan shows the same bottleneck structure the paper measures on
+//!   tuned-down nodes.
+//!
+//! Both backends run the identical per-rank step functions and the same
+//! rank-ordered reductions, so their residual trajectories agree to the
+//! last bit — which is exactly the property the integration tests pin.
+
+use super::comm::{Comm, CostModel, ExchangePlan, SimComm, ThreadComm};
+use crate::partition::Partition;
+use crate::solver::cg::{CgResult, SpmvBackend};
+use crate::solver::halo::HaloMatrix;
+use crate::solver::EllMatrix;
+use crate::topology::Topology;
+use crate::util::timer::Timer;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+const TINY: f64 = 1e-30;
+
+/// Which engine drives the virtual cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Sequential superstep execution, α-β-priced communication.
+    Sim,
+    /// One OS thread per PU, measured wall-clock, speed throttling.
+    Threads,
+}
+
+impl ExecBackend {
+    pub fn parse(s: &str) -> Option<ExecBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Some(ExecBackend::Sim),
+            "threads" | "thread" => Some(ExecBackend::Threads),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Sim => "sim",
+            ExecBackend::Threads => "threads",
+        }
+    }
+}
+
+/// Per-rank cost breakdown of one engine run.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub backend: &'static str,
+    pub iterations: usize,
+    /// Per-rank compute seconds: modeled (`sim`) or measured+throttled
+    /// (`threads`).
+    pub compute_secs: Vec<f64>,
+    /// Per-rank communication seconds: α-β priced (`sim`) or measured
+    /// scatter/copy/barrier-wait (`threads`).
+    pub comm_secs: Vec<f64>,
+    /// Leader wall-clock for the whole solve.
+    pub wall_secs: f64,
+}
+
+impl ExecReport {
+    /// Rank whose compute + comm bounds the run (the makespan PU).
+    pub fn bottleneck_rank(&self) -> usize {
+        (0..self.compute_secs.len())
+            .max_by(|&a, &b| {
+                let ta = self.compute_secs[a] + self.comm_secs[a];
+                let tb = self.compute_secs[b] + self.comm_secs[b];
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Bottleneck (compute + comm) seconds per iteration.
+    pub fn time_per_iter(&self) -> f64 {
+        let b = self.bottleneck_rank();
+        (self.compute_secs[b] + self.comm_secs[b]) / self.iterations.max(1) as f64
+    }
+}
+
+/// Mutable per-rank CG state; `p` is in local layout `[own | ghosts]`.
+struct RankState {
+    x: Vec<f32>,
+    r: Vec<f32>,
+    ap: Vec<f32>,
+    p: Vec<f32>,
+}
+
+/// The virtual cluster: per-PU row blocks plus speeds and a cost model.
+pub struct VirtualCluster {
+    pub halo: HaloMatrix,
+    pub plan: Arc<ExchangePlan>,
+    /// Per-PU normalized speeds (topology order).
+    pub speeds: Vec<f64>,
+    pub n: usize,
+    w: usize,
+    cost: CostModel,
+    /// Throttle threaded compute to emulate per-PU speeds (numerics are
+    /// unaffected; only wall-clock changes).
+    pub throttle: bool,
+}
+
+impl VirtualCluster {
+    /// Decompose `ell` by `part` onto the PUs of `topo`.
+    pub fn new(
+        ell: &EllMatrix,
+        part: &Partition,
+        topo: &Topology,
+        cost: CostModel,
+    ) -> Result<VirtualCluster> {
+        ensure!(part.k == topo.k(), "partition k={} vs topology k={}", part.k, topo.k());
+        let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+        Self::with_speeds(ell, part, speeds, cost)
+    }
+
+    /// Decompose with explicit per-PU speeds (benches, tests).
+    pub fn with_speeds(
+        ell: &EllMatrix,
+        part: &Partition,
+        speeds: Vec<f64>,
+        cost: CostModel,
+    ) -> Result<VirtualCluster> {
+        ensure!(part.k == speeds.len(), "partition k={} vs speeds {}", part.k, speeds.len());
+        // Finite and positive: an infinite/NaN speed would make the
+        // throttle factor panic inside a rank thread, and a panicking
+        // rank deadlocks the others at the barrier (see ThreadComm).
+        ensure!(
+            speeds.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "PU speeds must be positive and finite"
+        );
+        let halo = HaloMatrix::new(ell, part);
+        let plan = Arc::new(ExchangePlan::new(&halo, part));
+        Ok(VirtualCluster {
+            plan,
+            speeds,
+            n: ell.n,
+            w: ell.w,
+            cost,
+            throttle: true,
+            halo,
+        })
+    }
+
+    /// Homogeneous speed-1 cluster (the bench baseline).
+    pub fn homogeneous(ell: &EllMatrix, part: &Partition) -> Result<VirtualCluster> {
+        let mut vc =
+            Self::with_speeds(ell, part, vec![1.0; part.k], CostModel::default())?;
+        vc.throttle = false;
+        Ok(vc)
+    }
+
+    pub fn k(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Run distributed CG from x₀ = 0 through the chosen backend.
+    pub fn solve_cg(
+        &self,
+        backend: ExecBackend,
+        b: &[f32],
+        max_iters: usize,
+        tol: f32,
+    ) -> Result<(CgResult, ExecReport)> {
+        ensure!(b.len() == self.n, "rhs length {} != n {}", b.len(), self.n);
+        match backend {
+            ExecBackend::Sim => self.solve_sim(b, max_iters, tol),
+            ExecBackend::Threads => self.solve_threads(b, max_iters, tol),
+        }
+    }
+
+    /// One distributed SpMV `y = A·x` through the chosen backend
+    /// (exchange ghosts, compute per-PU blocks, gather).
+    ///
+    /// The `threads` backend spawns k OS threads *per call* — fine for a
+    /// one-shot product, wasteful inside an iteration loop. Iterative
+    /// solves should use [`VirtualCluster::solve_cg`], which keeps the
+    /// rank threads alive across all iterations.
+    pub fn spmv(&self, backend: ExecBackend, x: &[f32], y: &mut [f32]) -> Result<()> {
+        ensure!(x.len() == self.n && y.len() == self.n, "vector length");
+        match backend {
+            ExecBackend::Sim => {
+                let comm = SimComm::new(self.plan.clone(), self.cost);
+                let locals: Vec<Vec<f32>> =
+                    (0..self.k()).map(|rank| self.gather_local(rank, x)).collect();
+                for (rank, xl) in locals.iter().enumerate() {
+                    comm.post_halo(rank, &xl[..self.plan.own_len[rank]]);
+                }
+                for (rank, mut xl) in locals.into_iter().enumerate() {
+                    let nb = self.plan.own_len[rank];
+                    comm.recv_halo(rank, &mut xl[nb..]);
+                    let mut y_local = vec![0.0f32; nb];
+                    self.local_spmv(rank, &xl, &mut y_local);
+                    self.scatter_owned(rank, &y_local, y);
+                }
+            }
+            ExecBackend::Threads => {
+                let comm = ThreadComm::new(self.plan.clone());
+                let parts: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..self.k())
+                        .map(|rank| {
+                            let comm = &comm;
+                            scope.spawn(move || {
+                                let mut xl = self.gather_local(rank, x);
+                                let nb = self.plan.own_len[rank];
+                                comm.post_halo(rank, &xl[..nb]);
+                                comm.sync(rank);
+                                comm.recv_halo(rank, &mut xl[nb..]);
+                                let mut y_local = vec![0.0f32; nb];
+                                self.local_spmv(rank, &xl, &mut y_local);
+                                (rank, y_local)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                for (rank, y_local) in parts {
+                    self.scatter_owned(rank, &y_local, y);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- rank-level helpers (shared verbatim by both backends, so the
+    // ---- arithmetic is identical) --------------------------------------
+
+    /// Local vector `[x at own ids | zeros for ghosts]`.
+    fn gather_local(&self, rank: usize, x: &[f32]) -> Vec<f32> {
+        let blk = &self.halo.blocks[rank];
+        let mut xl = Vec::with_capacity(blk.own.len() + blk.ghosts.len());
+        for &g in &blk.own {
+            xl.push(x[g as usize]);
+        }
+        xl.resize(blk.own.len() + blk.ghosts.len(), 0.0);
+        xl
+    }
+
+    fn scatter_owned(&self, rank: usize, local: &[f32], global: &mut [f32]) {
+        for (li, &g) in self.halo.blocks[rank].own.iter().enumerate() {
+            global[g as usize] = local[li];
+        }
+    }
+
+    /// Local ELL SpMV including the diagonal — the shared `HaloBlock`
+    /// kernel, so the executor cannot drop the diagonal and every
+    /// distributed path runs the same loop.
+    fn local_spmv(&self, rank: usize, xl: &[f32], y_local: &mut [f32]) {
+        self.halo.blocks[rank].spmv_local(xl, y_local);
+    }
+
+    fn init_state(&self, rank: usize, b: &[f32]) -> RankState {
+        let blk = &self.halo.blocks[rank];
+        let nb = blk.own.len();
+        let b_local: Vec<f32> = blk.own.iter().map(|&g| b[g as usize]).collect();
+        let mut p = b_local.clone();
+        p.resize(nb + blk.ghosts.len(), 0.0);
+        RankState { x: vec![0.0; nb], r: b_local, ap: vec![0.0; nb], p }
+    }
+
+    fn step_post(&self, comm: &dyn Comm, rank: usize, st: &RankState) {
+        comm.post_halo(rank, &st.p[..self.plan.own_len[rank]]);
+    }
+
+    /// Receive this rank's ghost values into `p`'s ghost segment (time is
+    /// charged to the transport, not to compute).
+    fn step_recv(&self, comm: &dyn Comm, rank: usize, st: &mut RankState) {
+        let nb = self.plan.own_len[rank];
+        comm.recv_halo(rank, &mut st.p[nb..]);
+    }
+
+    /// Apply the local block, deposit the p·Ap partial.
+    fn step_spmv(&self, comm: &dyn Comm, rank: usize, st: &mut RankState) {
+        let nb = self.plan.own_len[rank];
+        self.local_spmv(rank, &st.p, &mut st.ap);
+        let partial: f64 = (0..nb).map(|i| (st.p[i] * st.ap[i]) as f64).sum();
+        comm.reduce_post(0, rank, partial);
+    }
+
+    /// Read p·Ap, update x and r, deposit the r·r partial.
+    fn step_update(&self, comm: &dyn Comm, rank: usize, st: &mut RankState, rs: f64) {
+        let p_ap = comm.reduce_sum(0).max(TINY);
+        let alpha = (rs / p_ap) as f32;
+        let nb = self.plan.own_len[rank];
+        for i in 0..nb {
+            st.x[i] += alpha * st.p[i];
+            st.r[i] -= alpha * st.ap[i];
+        }
+        let partial: f64 = st.r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        comm.reduce_post(1, rank, partial);
+    }
+
+    /// Read r·r, update the search direction, return the new rs.
+    fn step_direction(&self, comm: &dyn Comm, rank: usize, st: &mut RankState, rs: f64) -> f64 {
+        let rs_new = comm.reduce_sum(1);
+        let beta = (rs_new / rs.max(TINY)) as f32;
+        let nb = self.plan.own_len[rank];
+        for i in 0..nb {
+            st.p[i] = st.r[i] + beta * st.p[i];
+        }
+        rs_new
+    }
+
+    fn assemble(&self, states: &[RankState], iterations: usize, norms: Vec<f32>) -> CgResult {
+        let mut x = vec![0.0f32; self.n];
+        for (rank, st) in states.iter().enumerate() {
+            self.scatter_owned(rank, &st.x, &mut x);
+        }
+        CgResult { x, residual_norms: norms, iterations }
+    }
+
+    // ---- sequential superstep executor ---------------------------------
+
+    fn solve_sim(&self, b: &[f32], max_iters: usize, tol: f32) -> Result<(CgResult, ExecReport)> {
+        let wall = Timer::start();
+        let k = self.k();
+        let comm = SimComm::new(self.plan.clone(), self.cost);
+        let mut states: Vec<RankState> = (0..k).map(|r| self.init_state(r, b)).collect();
+        let mut compute = vec![0.0f64; k];
+        for (rank, st) in states.iter().enumerate() {
+            let partial: f64 = st.r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            comm.reduce_post(0, rank, partial);
+        }
+        let mut rs = comm.reduce_sum(0);
+        let b_norm = rs.sqrt().max(TINY);
+        let mut norms = Vec::with_capacity(max_iters);
+        let mut iters = 0;
+        for _ in 0..max_iters {
+            for (rank, st) in states.iter().enumerate() {
+                self.step_post(&comm, rank, st);
+            }
+            for (rank, st) in states.iter_mut().enumerate() {
+                self.step_recv(&comm, rank, st);
+                self.step_spmv(&comm, rank, st);
+                // Modeled compute: one fused op per ELL slot + diagonal,
+                // scaled by the PU's speed — the distsim formula.
+                let flops = self.plan.own_len[rank] as f64 * (self.w + 1) as f64;
+                compute[rank] += flops * self.cost.t_flop / self.speeds[rank];
+            }
+            for (rank, st) in states.iter_mut().enumerate() {
+                self.step_update(&comm, rank, st, rs);
+            }
+            let mut rs_new = rs;
+            for (rank, st) in states.iter_mut().enumerate() {
+                rs_new = self.step_direction(&comm, rank, st, rs);
+            }
+            rs = rs_new;
+            iters += 1;
+            norms.push(rs.sqrt() as f32);
+            if rs.sqrt() <= tol as f64 * b_norm {
+                break;
+            }
+        }
+        let report = ExecReport {
+            backend: comm.label(),
+            iterations: iters,
+            compute_secs: compute,
+            comm_secs: comm.comm_secs(),
+            wall_secs: wall.secs(),
+        };
+        Ok((self.assemble(&states, iters, norms), report))
+    }
+
+    // ---- thread-per-PU executor -----------------------------------------
+
+    fn solve_threads(
+        &self,
+        b: &[f32],
+        max_iters: usize,
+        tol: f32,
+    ) -> Result<(CgResult, ExecReport)> {
+        let wall = Timer::start();
+        let k = self.k();
+        let comm = ThreadComm::new(self.plan.clone());
+        let max_speed = self.speeds.iter().cloned().fold(f64::MIN, f64::max);
+        let mut states: Vec<RankState> = (0..k).map(|r| self.init_state(r, b)).collect();
+        let mut compute = vec![0.0f64; k];
+        let mut norms: Vec<f32> = Vec::new();
+        let mut iters = 0usize;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = states
+                .iter_mut()
+                .enumerate()
+                .map(|(rank, st)| {
+                    let comm = &comm;
+                    scope.spawn(move || {
+                        let throttle_factor = if self.throttle {
+                            max_speed / self.speeds[rank]
+                        } else {
+                            1.0
+                        };
+                        let mut compute_secs = 0.0f64;
+                        let mut my_norms = Vec::with_capacity(max_iters);
+                        let partial: f64 =
+                            st.r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                        comm.reduce_post(0, rank, partial);
+                        comm.sync(rank);
+                        let mut rs = comm.reduce_sum(0);
+                        let b_norm = rs.sqrt().max(TINY);
+                        let mut my_iters = 0usize;
+                        for _ in 0..max_iters {
+                            self.step_post(comm, rank, st);
+                            comm.sync(rank);
+                            self.step_recv(comm, rank, st);
+                            let t = Timer::start();
+                            self.step_spmv(comm, rank, st);
+                            let secs = t.secs();
+                            if throttle_factor > 1.0 {
+                                // Cap the per-segment sleep so a timer
+                                // hiccup cannot stall the whole cluster
+                                // (every rank waits at the barrier).
+                                let extra = (secs * (throttle_factor - 1.0)).min(1.0);
+                                std::thread::sleep(std::time::Duration::from_secs_f64(extra));
+                            }
+                            compute_secs += secs * throttle_factor;
+                            comm.sync(rank);
+                            self.step_update(comm, rank, st, rs);
+                            comm.sync(rank);
+                            rs = self.step_direction(comm, rank, st, rs);
+                            my_iters += 1;
+                            my_norms.push(rs.sqrt() as f32);
+                            if rs.sqrt() <= tol as f64 * b_norm {
+                                break;
+                            }
+                        }
+                        (rank, compute_secs, my_iters, my_norms)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (rank, secs, my_iters, my_norms) = h.join().unwrap();
+                compute[rank] = secs;
+                // Every rank runs the same trajectory; keep rank 0's.
+                if rank == 0 {
+                    iters = my_iters;
+                    norms = my_norms;
+                }
+            }
+        });
+        let report = ExecReport {
+            backend: comm.label(),
+            iterations: iters,
+            compute_secs: compute,
+            comm_secs: comm.comm_secs(),
+            wall_secs: wall.secs(),
+        };
+        Ok((self.assemble(&states, iters, norms), report))
+    }
+}
+
+/// Adapter: drive the generic `cg_solve` loop with its SpMV routed
+/// through the virtual cluster — the seam `solver::cg` uses to run on
+/// the engine.
+///
+/// With `ExecBackend::Threads` every iteration pays a k-thread spawn
+/// (see [`VirtualCluster::spmv`]); prefer [`VirtualCluster::solve_cg`]
+/// for thread-per-PU iterative solves and this adapter when the generic
+/// driver (preconditioning, external loops) is what matters.
+pub struct ClusterBackend<'a> {
+    pub vc: &'a VirtualCluster,
+    pub backend: ExecBackend,
+}
+
+impl SpmvBackend for ClusterBackend<'_> {
+    fn n(&self) -> usize {
+        self.vc.n
+    }
+
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()> {
+        self.vc.spmv(self.backend, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::solver::cg::{cg_solve, NativeBackend};
+    use crate::solver::spmv::spmv_ell_native;
+
+    fn setup() -> (EllMatrix, Partition) {
+        let g = mesh_2d_tri(20, 20, 1);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let part = Partition::new(
+            (0..g.n())
+                .map(|u| u32::from(g.coords[u].x > 9.5) + 2 * u32::from(g.coords[u].y > 9.5))
+                .collect(),
+            4,
+        );
+        (ell, part)
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(ExecBackend::parse("sim"), Some(ExecBackend::Sim));
+        assert_eq!(ExecBackend::parse("Threads"), Some(ExecBackend::Threads));
+        assert_eq!(ExecBackend::parse("mpi"), None);
+        assert_eq!(ExecBackend::Sim.name(), "sim");
+    }
+
+    #[test]
+    fn engine_spmv_matches_native_both_backends() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.31).sin()).collect();
+        let whole = spmv_ell_native(&ell, &x);
+        for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+            let mut y = vec![0.0f32; ell.n];
+            vc.spmv(backend, &x, &mut y).unwrap();
+            for i in 0..ell.n {
+                assert!(
+                    (y[i] - whole[i]).abs() < 1e-5,
+                    "{} row {i}: {} vs {}",
+                    backend.name(),
+                    y[i],
+                    whole[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sim_solve_matches_sequential_cg() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let b: Vec<f32> = (0..ell.n).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
+        let (res, rep) = vc.solve_cg(ExecBackend::Sim, &b, 80, 0.0).unwrap();
+        let mut whole = NativeBackend { a: &ell };
+        let seq = cg_solve(&mut whole, &b, 80, 0.0).unwrap();
+        let max_diff = seq
+            .x
+            .iter()
+            .zip(&res.x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "engine CG diverged from sequential: {max_diff}");
+        assert_eq!(rep.iterations, 80);
+        assert_eq!(rep.compute_secs.len(), 4);
+        assert!(rep.compute_secs.iter().all(|&t| t > 0.0));
+        assert!(rep.comm_secs.iter().all(|&t| t > 0.0));
+        assert!(rep.time_per_iter() > 0.0);
+    }
+
+    #[test]
+    fn threads_reproduce_sim_trajectory_exactly() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let b: Vec<f32> = (0..ell.n).map(|i| ((i % 11) as f32 - 5.0) / 3.0).collect();
+        let (sim, _) = vc.solve_cg(ExecBackend::Sim, &b, 60, 1e-6).unwrap();
+        let (thr, rep) = vc.solve_cg(ExecBackend::Threads, &b, 60, 1e-6).unwrap();
+        assert_eq!(rep.backend, "threads");
+        assert_eq!(sim.iterations, thr.iterations);
+        assert_eq!(sim.residual_norms, thr.residual_norms);
+        assert_eq!(sim.x, thr.x);
+    }
+
+    #[test]
+    fn throttled_heterogeneous_speeds_keep_numerics() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::with_speeds(
+            &ell,
+            &part,
+            vec![4.0, 1.0, 1.0, 2.0],
+            CostModel::default(),
+        )
+        .unwrap();
+        let b: Vec<f32> = (0..ell.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let (thr, rep) = vc.solve_cg(ExecBackend::Threads, &b, 40, 0.0).unwrap();
+        let (sim, _) = vc.solve_cg(ExecBackend::Sim, &b, 40, 0.0).unwrap();
+        assert_eq!(sim.residual_norms, thr.residual_norms);
+        // Throttled ranks must report more compute time per row than the
+        // fast rank (speeds 1 vs 4 → factor 4 sleep).
+        assert!(rep.compute_secs[1] > rep.compute_secs[0] * 0.5);
+    }
+
+    #[test]
+    fn empty_block_is_harmless() {
+        let (ell, _) = setup();
+        // Block 2 of 3 stays empty.
+        let part = Partition::new((0..ell.n).map(|u| (u % 2) as u32).collect(), 3);
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let b = vec![1.0f32; ell.n];
+        for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+            let (res, _) = vc.solve_cg(backend, &b, 50, 1e-5).unwrap();
+            assert!(res.x.iter().all(|v| v.is_finite()));
+            assert!(res.residual_norms.last().unwrap() < &1e-2);
+        }
+    }
+
+    #[test]
+    fn cluster_backend_routes_cg_solve() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let b: Vec<f32> = (0..ell.n).map(|i| ((i % 13) as f32 - 6.0) / 4.0).collect();
+        let mut via_engine = ClusterBackend { vc: &vc, backend: ExecBackend::Sim };
+        let res = cg_solve(&mut via_engine, &b, 80, 1e-5).unwrap();
+        let mut native = NativeBackend { a: &ell };
+        let seq = cg_solve(&mut native, &b, 80, 1e-5).unwrap();
+        let max_diff = seq
+            .x
+            .iter()
+            .zip(&res.x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "ClusterBackend diverged: {max_diff}");
+    }
+}

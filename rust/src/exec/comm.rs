@@ -1,0 +1,417 @@
+//! The `Comm` seam of the virtual-cluster engine: halo exchange and
+//! allreduce behind one trait, independent of the transport — the same
+//! separation bale/convey draws between conveyor semantics and the
+//! underlying communication layer.
+//!
+//! Two transports:
+//! - [`SimComm`]: in-process copies whose cost is *priced* by the α-β
+//!   model (the transport the old sequential simulator embodied). Used
+//!   by the sequential superstep executor, so `sync` is a no-op — the
+//!   executor orders phases globally.
+//! - [`ThreadComm`]: a real shared-memory transport for thread-per-PU
+//!   execution — per-rank inboxes behind mutexes plus a [`Barrier`];
+//!   communication cost is *measured* wall-clock (scatter + copy + wait).
+//!
+//! Both transports implement the reductions identically — each rank's
+//! partial is deposited into a slot and the sum is taken in rank order —
+//! so dot products are bit-identical regardless of thread scheduling.
+//! That determinism is what lets the `threads` backend reproduce the
+//! `sim` backend's residual trajectory exactly.
+
+use crate::partition::Partition;
+use crate::solver::halo::HaloMatrix;
+use crate::util::timer::Timer;
+use std::sync::{Barrier, Mutex};
+
+/// One rank's outgoing traffic to one neighbor.
+#[derive(Debug, Clone)]
+pub struct SendSegment {
+    /// Receiving rank.
+    pub to: u32,
+    /// Owned-local indices to read on the sender.
+    pub src: Vec<u32>,
+    /// Ghost slots to fill on the receiver (parallel to `src`).
+    pub dst: Vec<u32>,
+}
+
+/// The static exchange pattern of a partitioned matrix: who sends which
+/// owned values into whose ghost slots. Derived once from the halo
+/// structure; every [`Comm`] transport executes the same plan.
+#[derive(Debug, Clone)]
+pub struct ExchangePlan {
+    /// Per rank: outgoing segments.
+    pub sends: Vec<Vec<SendSegment>>,
+    /// Per rank: number of ghost entries (inbox size).
+    pub ghost_len: Vec<usize>,
+    /// Per rank: number of owned rows.
+    pub own_len: Vec<usize>,
+}
+
+impl ExchangePlan {
+    /// Build the plan from a halo decomposition. The receiver slots are
+    /// the mirror image of the sender lists by construction (asserted by
+    /// `halo`'s `send_lists_are_mirror_of_ghosts` test).
+    pub fn new(h: &HaloMatrix, part: &Partition) -> ExchangePlan {
+        let k = h.blocks.len();
+        let mut sends: Vec<Vec<SendSegment>> = Vec::with_capacity(k);
+        for o in 0..k {
+            let mut segs = Vec::new();
+            for (to, src) in &h.blocks[o].send_lists {
+                // Ghost slots on the receiver owned by `o`, in ghost
+                // order — exactly the order `src` was built in.
+                let dst: Vec<u32> = h.blocks[*to as usize]
+                    .ghosts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &g)| part.assignment[g as usize] as usize == o)
+                    .map(|(j, _)| j as u32)
+                    .collect();
+                debug_assert_eq!(dst.len(), src.len());
+                segs.push(SendSegment { to: *to, src: src.clone(), dst });
+            }
+            sends.push(segs);
+        }
+        ExchangePlan {
+            ghost_len: h.blocks.iter().map(|b| b.ghosts.len()).collect(),
+            own_len: h.blocks.iter().map(|b| b.own.len()).collect(),
+            sends,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.own_len.len()
+    }
+
+    /// Words sent by `rank` per exchange.
+    pub fn send_volume(&self, rank: usize) -> usize {
+        self.sends[rank].iter().map(|s| s.src.len()).sum()
+    }
+
+    /// Number of neighbors `rank` sends to.
+    pub fn neighbors(&self, rank: usize) -> usize {
+        self.sends[rank].len()
+    }
+}
+
+/// α-β communication constants for the simulated transport (mirrors
+/// `solver::ClusterSim`, which converts into this).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message latency (s).
+    pub alpha: f64,
+    /// Per-word transfer time (s).
+    pub beta: f64,
+    /// Per-nonzero SpMV time on a speed-1 PU (s).
+    pub t_flop: f64,
+    /// Allreduce latency factor per synchronization.
+    pub allreduce_base: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { alpha: 2e-6, beta: 1e-9, t_flop: 2e-9, allreduce_base: 1e-6 }
+    }
+}
+
+/// Transport-independent communication primitives, rank-facing.
+///
+/// The calling convention is split-phase (post, [`Comm::sync`], read) so
+/// that the same rank-level step functions can be driven either by k OS
+/// threads (each blocking in `sync`) or by a sequential superstep
+/// executor (where `sync` is a no-op because the executor runs each
+/// phase for every rank before starting the next).
+pub trait Comm: Sync {
+    fn k(&self) -> usize;
+    /// Scatter `rank`'s owned boundary values into neighbor inboxes.
+    fn post_halo(&self, rank: usize, owned: &[f32]);
+    /// Copy `rank`'s inbox into its ghost segment. Valid after `sync`.
+    fn recv_halo(&self, rank: usize, ghosts: &mut [f32]);
+    /// Deposit a scalar partial on reduction channel `chan` (0 or 1).
+    fn reduce_post(&self, chan: usize, rank: usize, v: f64);
+    /// Rank-order sum of channel `chan`. Valid after `sync`.
+    fn reduce_sum(&self, chan: usize) -> f64;
+    /// Synchronization point between post and read phases.
+    fn sync(&self, rank: usize);
+    /// Per-rank communication seconds accumulated so far.
+    fn comm_secs(&self) -> Vec<f64>;
+    fn label(&self) -> &'static str;
+}
+
+/// Shared mailbox state: per-rank ghost inboxes, two reduction channels,
+/// and per-rank communication-cost accumulators.
+struct Mailboxes {
+    inboxes: Vec<Mutex<Vec<f32>>>,
+    red: [Mutex<Vec<f64>>; 2],
+    secs: Vec<Mutex<f64>>,
+}
+
+impl Mailboxes {
+    fn new(plan: &ExchangePlan) -> Mailboxes {
+        let k = plan.k();
+        Mailboxes {
+            inboxes: plan.ghost_len.iter().map(|&g| Mutex::new(vec![0.0; g])).collect(),
+            red: [Mutex::new(vec![0.0; k]), Mutex::new(vec![0.0; k])],
+            secs: (0..k).map(|_| Mutex::new(0.0)).collect(),
+        }
+    }
+
+    fn scatter(&self, plan: &ExchangePlan, rank: usize, owned: &[f32]) {
+        for seg in &plan.sends[rank] {
+            let mut inbox = self.inboxes[seg.to as usize].lock().unwrap();
+            for (&s, &d) in seg.src.iter().zip(&seg.dst) {
+                inbox[d as usize] = owned[s as usize];
+            }
+        }
+    }
+
+    fn collect(&self, rank: usize, ghosts: &mut [f32]) {
+        let inbox = self.inboxes[rank].lock().unwrap();
+        ghosts.copy_from_slice(&inbox);
+    }
+
+    fn deposit(&self, chan: usize, rank: usize, v: f64) {
+        self.red[chan].lock().unwrap()[rank] = v;
+    }
+
+    /// Deterministic rank-order sum.
+    fn sum(&self, chan: usize) -> f64 {
+        self.red[chan].lock().unwrap().iter().sum()
+    }
+
+    fn charge(&self, rank: usize, secs: f64) {
+        *self.secs[rank].lock().unwrap() += secs;
+    }
+
+    fn secs(&self) -> Vec<f64> {
+        self.secs.iter().map(|m| *m.lock().unwrap()).collect()
+    }
+}
+
+/// The α-β *simulated* transport: data moves through in-process copies,
+/// cost is charged by the model instead of measured.
+pub struct SimComm {
+    plan: std::sync::Arc<ExchangePlan>,
+    mb: Mailboxes,
+    cost: CostModel,
+}
+
+impl SimComm {
+    pub fn new(plan: std::sync::Arc<ExchangePlan>, cost: CostModel) -> SimComm {
+        let mb = Mailboxes::new(&plan);
+        SimComm { plan, mb, cost }
+    }
+}
+
+impl Comm for SimComm {
+    fn k(&self) -> usize {
+        self.plan.k()
+    }
+
+    fn post_halo(&self, rank: usize, owned: &[f32]) {
+        self.mb.scatter(&self.plan, rank, owned);
+        // α per neighbor message + β per word (f32 = 4 bytes), the exact
+        // formula `ClusterSim::iteration` prices.
+        let cost = self.cost.alpha * self.plan.neighbors(rank) as f64
+            + self.cost.beta * self.plan.send_volume(rank) as f64 * 4.0;
+        self.mb.charge(rank, cost);
+    }
+
+    fn recv_halo(&self, rank: usize, ghosts: &mut [f32]) {
+        self.mb.collect(rank, ghosts);
+    }
+
+    fn reduce_post(&self, chan: usize, rank: usize, v: f64) {
+        self.mb.deposit(chan, rank, v);
+        let k = self.k() as f64;
+        self.mb.charge(rank, self.cost.allreduce_base * k.log2().max(1.0));
+    }
+
+    fn reduce_sum(&self, chan: usize) -> f64 {
+        self.mb.sum(chan)
+    }
+
+    fn sync(&self, _rank: usize) {
+        // The sequential superstep executor orders phases globally.
+    }
+
+    fn comm_secs(&self) -> Vec<f64> {
+        self.mb.secs()
+    }
+
+    fn label(&self) -> &'static str {
+        "sim"
+    }
+}
+
+/// The real shared-memory transport for thread-per-PU execution:
+/// mutex-guarded inboxes plus a barrier; cost is measured wall-clock,
+/// including time spent waiting at the barrier (the price of imbalance).
+pub struct ThreadComm {
+    plan: std::sync::Arc<ExchangePlan>,
+    mb: Mailboxes,
+    barrier: Barrier,
+}
+
+impl ThreadComm {
+    pub fn new(plan: std::sync::Arc<ExchangePlan>) -> ThreadComm {
+        let mb = Mailboxes::new(&plan);
+        let barrier = Barrier::new(plan.k());
+        ThreadComm { plan, mb, barrier }
+    }
+}
+
+impl Comm for ThreadComm {
+    fn k(&self) -> usize {
+        self.plan.k()
+    }
+
+    fn post_halo(&self, rank: usize, owned: &[f32]) {
+        let t = Timer::start();
+        self.mb.scatter(&self.plan, rank, owned);
+        self.mb.charge(rank, t.secs());
+    }
+
+    fn recv_halo(&self, rank: usize, ghosts: &mut [f32]) {
+        let t = Timer::start();
+        self.mb.collect(rank, ghosts);
+        self.mb.charge(rank, t.secs());
+    }
+
+    fn reduce_post(&self, chan: usize, rank: usize, v: f64) {
+        self.mb.deposit(chan, rank, v);
+    }
+
+    fn reduce_sum(&self, chan: usize) -> f64 {
+        self.mb.sum(chan)
+    }
+
+    // Note: `Barrier` does not poison — if a rank thread panics between
+    // barriers, the remaining ranks would wait forever. The executor
+    // therefore validates everything that feeds rank arithmetic (speeds
+    // finite, shapes checked) before any thread is spawned.
+    fn sync(&self, rank: usize) {
+        let t = Timer::start();
+        self.barrier.wait();
+        self.mb.charge(rank, t.secs());
+    }
+
+    fn comm_secs(&self) -> Vec<f64> {
+        self.mb.secs()
+    }
+
+    fn label(&self) -> &'static str {
+        "threads"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::partition::Partition;
+    use crate::solver::EllMatrix;
+    use std::sync::Arc;
+
+    fn setup() -> (HaloMatrix, Partition) {
+        let g = mesh_2d_tri(16, 16, 3);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let part = Partition::new(
+            (0..g.n())
+                .map(|u| u32::from(g.coords[u].x > 7.5) + 2 * u32::from(g.coords[u].y > 7.5))
+                .collect(),
+            4,
+        );
+        (HaloMatrix::new(&ell, &part), part)
+    }
+
+    #[test]
+    fn plan_mirrors_halo_send_lists() {
+        let (h, part) = setup();
+        let plan = ExchangePlan::new(&h, &part);
+        assert_eq!(plan.k(), 4);
+        for b in 0..4 {
+            assert_eq!(plan.send_volume(b), h.send_volume(b));
+            assert_eq!(plan.own_len[b], h.blocks[b].own.len());
+            assert_eq!(plan.ghost_len[b], h.blocks[b].ghosts.len());
+            for seg in &plan.sends[b] {
+                assert_eq!(seg.src.len(), seg.dst.len());
+                // Every destination slot is a valid ghost index of the
+                // receiver and is owned by the sender.
+                for &d in &seg.dst {
+                    let g = h.blocks[seg.to as usize].ghosts[d as usize];
+                    assert_eq!(part.assignment[g as usize] as usize, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sim_exchange_delivers_ghost_values() {
+        let (h, part) = setup();
+        let plan = Arc::new(ExchangePlan::new(&h, &part));
+        let comm = SimComm::new(plan.clone(), CostModel::default());
+        // Owned value = global id, so ghosts must receive their global id.
+        for b in 0..4 {
+            let owned: Vec<f32> = h.blocks[b].own.iter().map(|&g| g as f32).collect();
+            comm.post_halo(b, &owned);
+        }
+        for b in 0..4 {
+            let mut ghosts = vec![-1.0f32; plan.ghost_len[b]];
+            comm.recv_halo(b, &mut ghosts);
+            for (j, &g) in h.blocks[b].ghosts.iter().enumerate() {
+                assert_eq!(ghosts[j], g as f32, "rank {b} ghost {j}");
+            }
+        }
+        // Cost accounting matches the α-β formula.
+        let secs = comm.comm_secs();
+        for b in 0..4 {
+            let want = 2e-6 * plan.neighbors(b) as f64 + 1e-9 * plan.send_volume(b) as f64 * 4.0;
+            assert!((secs[b] - want).abs() < 1e-15, "rank {b}: {} vs {want}", secs[b]);
+        }
+    }
+
+    #[test]
+    fn reductions_sum_in_rank_order() {
+        let (h, part) = setup();
+        let plan = Arc::new(ExchangePlan::new(&h, &part));
+        let comm = SimComm::new(plan, CostModel::default());
+        for b in 0..4 {
+            comm.reduce_post(0, b, (b + 1) as f64);
+            comm.reduce_post(1, b, 0.5);
+        }
+        assert_eq!(comm.reduce_sum(0), 10.0);
+        assert_eq!(comm.reduce_sum(1), 2.0);
+    }
+
+    #[test]
+    fn thread_comm_exchange_under_threads() {
+        let (h, part) = setup();
+        let plan = Arc::new(ExchangePlan::new(&h, &part));
+        let comm = ThreadComm::new(plan.clone());
+        let h = &h;
+        let results: Vec<Vec<f32>> = {
+            let mut out: Vec<Mutex<Vec<f32>>> = (0..4).map(|_| Mutex::new(Vec::new())).collect();
+            std::thread::scope(|scope| {
+                for (b, slot) in out.iter_mut().enumerate() {
+                    let comm = &comm;
+                    let plan = &plan;
+                    scope.spawn(move || {
+                        let owned: Vec<f32> =
+                            h.blocks[b].own.iter().map(|&g| g as f32).collect();
+                        comm.post_halo(b, &owned);
+                        comm.sync(b);
+                        let mut ghosts = vec![-1.0f32; plan.ghost_len[b]];
+                        comm.recv_halo(b, &mut ghosts);
+                        *slot.lock().unwrap() = ghosts;
+                    });
+                }
+            });
+            out.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        };
+        for b in 0..4 {
+            for (j, &g) in h.blocks[b].ghosts.iter().enumerate() {
+                assert_eq!(results[b][j], g as f32, "rank {b} ghost {j}");
+            }
+        }
+    }
+}

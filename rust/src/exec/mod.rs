@@ -1,0 +1,25 @@
+//! Virtual-cluster execution engine.
+//!
+//! The paper's objective — minimize `max_i w(b_i)/c_s(p_i)` plus
+//! halo-exchange cost — is a statement about *concurrent* execution, but
+//! the original application layer replayed it with a sequential loop
+//! over blocks. This module makes the cluster real (in-process): the
+//! [`Comm`] trait abstracts halo exchange and allreduce away from the
+//! transport, and the [`VirtualCluster`] executor runs distributed CG
+//! over per-PU row blocks through either transport:
+//!
+//! - `sim` — the α-β-priced transport driven by a sequential superstep
+//!   executor (the old simulator's accounting, now produced by actually
+//!   executing the distributed algorithm);
+//! - `threads` — a shared-memory transport with one OS thread per PU,
+//!   real barriers, and per-PU speed throttling.
+//!
+//! The `Comm` seam is deliberately transport-shaped (post / sync / read,
+//! like bale's conveyors): an MPI or GPU transport slots in without
+//! touching the executor or the solvers.
+
+mod cluster;
+mod comm;
+
+pub use cluster::{ClusterBackend, ExecBackend, ExecReport, VirtualCluster};
+pub use comm::{Comm, CostModel, ExchangePlan, SendSegment, SimComm, ThreadComm};

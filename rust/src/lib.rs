@@ -18,16 +18,22 @@
 //! - the **application layer**: SpMV/CG solvers and a heterogeneous
 //!   cluster execution simulator ([`solver`]), with the numeric hot path
 //!   AOT-compiled from JAX/Pallas and executed via PJRT ([`runtime`]);
+//! - the **virtual-cluster execution engine** ([`exec`]): distributed CG
+//!   over per-PU row blocks behind a `Comm` transport abstraction, with
+//!   a sequential α-β-priced backend and a thread-per-PU shared-memory
+//!   backend;
 //! - an experiment **coordinator** ([`coordinator`]) and benchmark
 //!   harness ([`bench_harness`]) regenerating every table and figure of
 //!   the paper.
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! See [`DESIGN.md`](../../DESIGN.md) for the architecture and
+//! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for how to regenerate the
 //! paper-vs-measured results.
 
 pub mod bench_harness;
 pub mod blocksizes;
 pub mod coordinator;
+pub mod exec;
 pub mod gen;
 pub mod geometry;
 pub mod graph;

@@ -28,11 +28,15 @@ pub struct GeoKMeans {
     pub max_iters: usize,
     /// Influence exponent γ.
     pub gamma: f64,
+    /// Worker threads for the assignment step; `None` uses all cores.
+    /// Pin to `Some(1)` when single-core timing comparability against
+    /// the other partitioners matters (the paper's timePart columns).
+    pub workers: Option<usize>,
 }
 
 impl Default for GeoKMeans {
     fn default() -> Self {
-        GeoKMeans { max_iters: 40, gamma: 0.6 }
+        GeoKMeans { max_iters: 40, gamma: 0.6, workers: None }
     }
 }
 
@@ -55,21 +59,18 @@ impl Partitioner for GeoKMeans {
         let mut assignment = vec![0u32; n];
         let mut weights = vec![0.0f64; k];
         for _iter in 0..self.max_iters {
-            // Assignment step (the hot loop — see solver/bench notes).
+            // Assignment step (the hot loop) — chunked across the job
+            // queue. Each vertex's nearest center is independent, and
+            // the weights are re-accumulated sequentially in vertex
+            // order, so the result is bit-identical to the sequential
+            // loop regardless of worker count.
+            let workers = self
+                .workers
+                .unwrap_or_else(crate::coordinator::jobqueue::default_workers);
+            assign_step(g, &centers, &influence, &mut assignment, workers);
             weights.iter_mut().for_each(|w| *w = 0.0);
             for u in 0..n {
-                let p = g.coords[u];
-                let mut best = 0usize;
-                let mut best_d = f64::INFINITY;
-                for (i, c) in centers.iter().enumerate() {
-                    let d = p.dist2(c) * influence[i];
-                    if d < best_d {
-                        best_d = d;
-                        best = i;
-                    }
-                }
-                assignment[u] = best as u32;
-                weights[best] += g.vertex_weight(u);
+                weights[assignment[u] as usize] += g.vertex_weight(u);
             }
             // Center update.
             let mut sums = vec![Point::zero(g.coords[0].dim); k];
@@ -99,6 +100,56 @@ impl Partitioner for GeoKMeans {
         // Strict rebalance to meet the ε bound exactly.
         rebalance(g, &centers, ctx.targets, ctx.epsilon, &mut assignment);
         Ok(Partition::new(assignment, k))
+    }
+}
+
+/// Index of the center minimizing `dist²(p, c_i) · f_i` (ties go to the
+/// lower index, as in the original sequential loop).
+#[inline]
+fn nearest_center(p: &Point, centers: &[Point], influence: &[f64]) -> u32 {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, c) in centers.iter().enumerate() {
+        let d = p.dist2(c) * influence[i];
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Vertices below which the chunked assignment is not worth the spawns.
+const PAR_MIN_VERTICES: usize = 8192;
+
+/// One Lloyd assignment step: nearest influential center per vertex,
+/// chunked over `coordinator::jobqueue::run_jobs` on large instances.
+fn assign_step(
+    g: &crate::graph::Csr,
+    centers: &[Point],
+    influence: &[f64],
+    assignment: &mut [u32],
+    workers: usize,
+) {
+    let n = g.n();
+    if workers <= 1 || n < PAR_MIN_VERTICES {
+        for (u, a) in assignment.iter_mut().enumerate() {
+            *a = nearest_center(&g.coords[u], centers, influence);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let jobs: Vec<(usize, usize)> = (0..n)
+        .step_by(chunk)
+        .map(|lo| (lo, (lo + chunk).min(n)))
+        .collect();
+    let parts = crate::coordinator::jobqueue::run_jobs(jobs.clone(), workers, |&(lo, hi)| {
+        (lo..hi)
+            .map(|u| nearest_center(&g.coords[u], centers, influence))
+            .collect::<Vec<u32>>()
+    });
+    for ((lo, hi), part) in jobs.into_iter().zip(parts) {
+        assignment[lo..hi].copy_from_slice(&part);
     }
 }
 
@@ -298,6 +349,21 @@ mod tests {
         let targets = vec![100.0];
         let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
         assert_eq!(p.k, 1);
+    }
+
+    #[test]
+    fn assignment_step_parallel_matches_sequential() {
+        // Above the chunking threshold so the job-queue path runs.
+        let g = rgg_2d(10_000, 9);
+        let targets = vec![g.n() as f64 / 6.0; 6];
+        let centers = seed_centers(&g, &targets);
+        let influence: Vec<f64> = (0..6).map(|i| 1.0 + 0.1 * i as f64).collect();
+        let mut par = vec![0u32; g.n()];
+        assign_step(&g, &centers, &influence, &mut par, 4);
+        let seq: Vec<u32> = (0..g.n())
+            .map(|u| nearest_center(&g.coords[u], &centers, &influence))
+            .collect();
+        assert_eq!(par, seq);
     }
 
     #[test]

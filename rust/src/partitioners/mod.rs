@@ -56,22 +56,23 @@ pub trait Partitioner {
     fn partition(&self, ctx: &Ctx) -> Result<Partition>;
 }
 
-/// Look up a partitioner by its paper name.
+/// Look up a partitioner by its paper name (case-insensitive, so CLI
+/// users can type `geokm`, `GEOKM`, or the paper's `geoKM`).
 pub fn by_name(name: &str) -> Option<Box<dyn Partitioner>> {
-    Some(match name {
-        "geoKM" | "geokm" => Box::new(geokm::GeoKMeans::default()),
-        "hierKM" | "hierkm" => Box::new(hierkm::HierKMeans::default()),
-        "geoRef" | "georef" => Box::new(georef::GeoRef::default()),
-        "geoPMRef" | "geopmref" => Box::new(georef::GeoPmRef::default()),
-        "pmGraph" | "pmgraph" => Box::new(pmetis::PmGraph::default()),
-        "pmGeom" | "pmgeom" => Box::new(pmetis::PmGeom::default()),
-        "zSFC" | "zsfc" => Box::new(sfc::Sfc),
-        "zRCB" | "zrcb" => Box::new(rcb::Rcb),
-        "zRIB" | "zrib" => Box::new(rib::Rib),
+    Some(match name.to_ascii_lowercase().as_str() {
+        "geokm" => Box::new(geokm::GeoKMeans::default()),
+        "hierkm" => Box::new(hierkm::HierKMeans::default()),
+        "georef" => Box::new(georef::GeoRef::default()),
+        "geopmref" => Box::new(georef::GeoPmRef::default()),
+        "pmgraph" => Box::new(pmetis::PmGraph::default()),
+        "pmgeom" => Box::new(pmetis::PmGeom::default()),
+        "zsfc" => Box::new(sfc::Sfc),
+        "zrcb" => Box::new(rcb::Rcb),
+        "zrib" => Box::new(rib::Rib),
         // Extensions: the tools the paper excluded (§VI-b), reimplemented
         // so the exclusion is reproducible (see the `ablation` bench).
-        "lpPulp" | "lppulp" => Box::new(labelprop::LabelProp::default()),
-        "zMJ" | "zmj" => Box::new(multijagged::MultiJagged::default()),
+        "lppulp" => Box::new(labelprop::LabelProp::default()),
+        "zmj" => Box::new(multijagged::MultiJagged::default()),
         _ => return None,
     })
 }
@@ -125,6 +126,19 @@ mod tests {
         }
         assert!(by_name("hierKM").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_name_round_trips_case_insensitively() {
+        for name in ALL_NAMES.iter().chain(EXT_NAMES.iter()) {
+            let p = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(p.name(), *name, "registry returned a different algorithm");
+            for variant in [name.to_lowercase(), name.to_uppercase()] {
+                let q = by_name(&variant)
+                    .unwrap_or_else(|| panic!("{variant} (from {name}) missing"));
+                assert_eq!(q.name(), *name, "casing {variant} resolved differently");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Stub PJRT runtime for builds without the `pjrt` feature.
+//!
+//! The offline image does not ship the `xla` crate, so the real
+//! `exec.rs` cannot compile there. This stub keeps the whole `runtime`
+//! API surface (same types, same signatures) while making the runtime
+//! unconstructable: [`Runtime::cpu`] returns an error, and every call
+//! site already falls back to the native path on that error. Methods on
+//! the other types are statically unreachable (the types hold an
+//! uninhabited `Never`), so no fake results can ever be produced.
+
+use super::artifacts::{Manifest, ManifestEntry};
+use anyhow::{bail, Result};
+
+/// Uninhabited: makes the stub types impossible to construct.
+enum Never {}
+
+/// Owns the PJRT client — stubbed, cannot be created.
+pub struct Runtime {
+    void: Never,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        bail!("built without the `pjrt` feature: PJRT runtime unavailable (requires an image that ships the xla crate — add it to [dependencies] and build with --features pjrt)")
+    }
+
+    pub fn platform(&self) -> String {
+        match self.void {}
+    }
+
+    pub fn load_spmv(&self, _manifest: &Manifest, _entry: &ManifestEntry) -> Result<SpmvExec> {
+        match self.void {}
+    }
+
+    pub fn load_cg(&self, _manifest: &Manifest, _entry: &ManifestEntry) -> Result<CgExec> {
+        match self.void {}
+    }
+}
+
+/// One compiled SpMV executable — stubbed.
+pub struct SpmvExec {
+    void: Never,
+    pub n: usize,
+    pub w: usize,
+    pub name: String,
+}
+
+/// A [`SpmvExec`] with device-resident matrix operands — stubbed.
+pub struct BoundSpmv<'a> {
+    exec: &'a SpmvExec,
+}
+
+impl<'a> BoundSpmv<'a> {
+    pub fn run(&self, _x: &[f32]) -> Result<Vec<f32>> {
+        match self.exec.void {}
+    }
+}
+
+impl SpmvExec {
+    pub fn bind(&self, _values: &[f32], _cols: &[i32], _diag: &[f32]) -> Result<BoundSpmv<'_>> {
+        match self.void {}
+    }
+
+    pub fn run(&self, _values: &[f32], _cols: &[i32], _diag: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+        match self.void {}
+    }
+}
+
+/// One compiled CG executable — stubbed.
+pub struct CgExec {
+    void: Never,
+    pub n: usize,
+    pub w: usize,
+    pub iters: usize,
+    pub name: String,
+}
+
+impl CgExec {
+    pub fn run(
+        &self,
+        _values: &[f32],
+        _cols: &[i32],
+        _diag: &[f32],
+        _b: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        match self.void {}
+    }
+}

@@ -7,6 +7,10 @@
 //! CPU client once, and exposes typed entry points (`spmv`, `cg`).
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
+mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 mod exec;
 
 pub use artifacts::{ArtifactSet, Manifest, ManifestEntry};

@@ -1,12 +1,15 @@
 //! Conjugate gradients in rust (f32), over any SpMV backend.
 //!
 //! The backend abstraction lets the same driver run on:
-//! - the native ELL SpMV (always available), and
+//! - the native ELL SpMV (always available), sequential or chunked
+//!   across the job queue ([`NativeParBackend`]),
+//! - the virtual-cluster execution engine (`exec::ClusterBackend`
+//!   routes each SpMV through a halo exchange over a `Comm` transport),
 //! - a PJRT executable compiled from the L2/L1 artifact (the production
 //!   path of the three-layer architecture).
 
 use super::ell::EllMatrix;
-use super::spmv::spmv_ell_into;
+use super::spmv::{par_spmv_ell_into, spmv_ell_into};
 use anyhow::Result;
 
 /// SpMV provider for the CG driver.
@@ -27,6 +30,25 @@ impl<'a> SpmvBackend for NativeBackend<'a> {
     }
     fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()> {
         spmv_ell_into(self.a, x, y);
+        Ok(())
+    }
+}
+
+/// Native backend with the SpMV rows chunked across the job queue.
+/// Bit-identical numerics to [`NativeBackend`] (the parallel SpMV
+/// computes each row independently with the same code).
+pub struct NativeParBackend<'a> {
+    pub a: &'a EllMatrix,
+    /// Worker threads for the row chunks (see `coordinator::jobqueue`).
+    pub workers: usize,
+}
+
+impl<'a> SpmvBackend for NativeParBackend<'a> {
+    fn n(&self) -> usize {
+        self.a.n
+    }
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()> {
+        par_spmv_ell_into(self.a, x, y, self.workers);
         Ok(())
     }
 }
@@ -131,6 +153,19 @@ mod tests {
         let ax = spmv_ell_native(&a, &res.x);
         let err: f32 = ax.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f32::max);
         assert!(err < 1e-2, "max |Ax-b| = {err}");
+    }
+
+    #[test]
+    fn parallel_backend_matches_native() {
+        let g = mesh_2d_tri(96, 96, 4); // big enough for the chunked path
+        let a = EllMatrix::from_graph(&g, 0.05);
+        let b: Vec<f32> = (0..g.n()).map(|i| ((i * 3) % 11) as f32 - 5.0).collect();
+        let mut seq = NativeBackend { a: &a };
+        let r_seq = cg_solve(&mut seq, &b, 60, 0.0).unwrap();
+        let mut par = NativeParBackend { a: &a, workers: 4 };
+        let r_par = cg_solve(&mut par, &b, 60, 0.0).unwrap();
+        assert_eq!(r_seq.residual_norms, r_par.residual_norms);
+        assert_eq!(r_seq.x, r_par.x);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::cg::SpmvBackend;
 use super::ell::EllMatrix;
-use super::spmv::spmv_block_rows;
+use super::spmv::spmv_block_rows_full;
 use crate::partition::Partition;
 use anyhow::Result;
 
@@ -49,9 +49,9 @@ impl SpmvBackend for DistributedMatrix {
         for (b, (ell_b, rows)) in self.blocks.iter().enumerate() {
             let t = crate::util::timer::Timer::start();
             let mut y_local = vec![0.0f32; rows.len()];
-            spmv_block_rows(ell_b, x, &mut y_local);
+            spmv_block_rows_full(ell_b, rows, x, &mut y_local);
             for (i, &r) in rows.iter().enumerate() {
-                y[r as usize] = y_local[i] + ell_b.diag[i] * x[r as usize];
+                y[r as usize] = y_local[i];
             }
             self.per_block_secs[b] += t.secs();
         }

@@ -16,6 +16,7 @@
 //! through the native backend or the PJRT artifact — so reported
 //! residuals are genuine.
 
+use crate::exec::{CostModel, ExecBackend, ExecReport, VirtualCluster};
 use crate::graph::{Csr, QuotientGraph};
 use crate::partition::Partition;
 use crate::solver::cg::{cg_solve, CgResult, SpmvBackend};
@@ -114,6 +115,37 @@ impl ClusterSim {
             bottleneck_pu: worst.0,
             per_pu,
         }
+    }
+
+    /// The α-β constants as the exec-engine cost model (the simulated
+    /// transport of the virtual cluster prices with exactly these).
+    pub fn cost_model(&self) -> CostModel {
+        CostModel {
+            alpha: self.alpha,
+            beta: self.beta,
+            t_flop: self.t_flop,
+            allreduce_base: self.allreduce_base,
+        }
+    }
+
+    /// Distributed CG through the virtual-cluster engine: the matrix is
+    /// decomposed into per-PU halo blocks and solved through the chosen
+    /// backend — `sim` reproduces this simulator's α-β accounting by
+    /// executing the distributed algorithm sequentially, `threads` runs
+    /// one OS thread per PU with speed throttling and measures for real.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_cg_virtual(
+        &self,
+        ell: &EllMatrix,
+        part: &Partition,
+        topo: &Topology,
+        backend: ExecBackend,
+        b: &[f32],
+        max_iters: usize,
+        tol: f32,
+    ) -> Result<(CgResult, ExecReport)> {
+        let vc = VirtualCluster::new(ell, part, topo, self.cost_model())?;
+        vc.solve_cg(backend, b, max_iters, tol)
     }
 
     /// Full simulated CG: run the numerics for real through `backend`
@@ -226,6 +258,28 @@ mod tests {
         s.calibrate(&a);
         // On any plausible CPU: 0.01ns .. 100ns per fused op.
         assert!(s.t_flop > 1e-12 && s.t_flop < 1e-7, "t_flop {}", s.t_flop);
+    }
+
+    #[test]
+    fn run_cg_virtual_matches_backend_pair() {
+        use crate::exec::ExecBackend;
+        let g = mesh_2d_tri(16, 16, 5);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![g.n() as f64 / 4.0; 4];
+        let p = partition_with("geoKM", &g, &targets, &topo);
+        let a = EllMatrix::from_graph(&g, 0.1);
+        let b = vec![1.0f32; g.n()];
+        let s = sim();
+        let (res_sim, rep_sim) = s
+            .run_cg_virtual(&a, &p, &topo, ExecBackend::Sim, &b, 100, 1e-5)
+            .unwrap();
+        let (res_thr, _) = s
+            .run_cg_virtual(&a, &p, &topo, ExecBackend::Threads, &b, 100, 1e-5)
+            .unwrap();
+        assert_eq!(res_sim.residual_norms, res_thr.residual_norms);
+        assert!(res_sim.residual_norms.last().unwrap() < &1e-3);
+        assert_eq!(rep_sim.backend, "sim");
+        assert_eq!(rep_sim.compute_secs.len(), 4);
     }
 
     #[test]

@@ -26,6 +26,37 @@ pub struct HaloBlock {
     pub send_lists: Vec<(u32, Vec<u32>)>,
 }
 
+impl HaloBlock {
+    /// Local vector `[owned x | ghost x]` gathered from the global `x`.
+    pub fn gather_local(&self, x: &[f32]) -> Vec<f32> {
+        let mut xl = Vec::with_capacity(self.own.len() + self.ghosts.len());
+        for &g in &self.own {
+            xl.push(x[g as usize]);
+        }
+        for &g in &self.ghosts {
+            xl.push(x[g as usize]);
+        }
+        xl
+    }
+
+    /// The block ELL kernel (diagonal + slots) over a local vector —
+    /// the single definition every distributed path shares; the exec
+    /// engine's exact-trajectory guarantee depends on there being one
+    /// copy of this loop.
+    pub fn spmv_local(&self, xl: &[f32], y_local: &mut [f32]) {
+        let nb = self.own.len();
+        let w = self.ell.w;
+        for li in 0..nb {
+            let mut acc = self.ell.diag[li] * xl[li];
+            let base = li * w;
+            for s in 0..w {
+                acc += self.ell.values[base + s] * xl[self.ell.cols[base + s] as usize];
+            }
+            y_local[li] = acc;
+        }
+    }
+}
+
 /// Halo-exchange distributed matrix.
 pub struct HaloMatrix {
     pub blocks: Vec<HaloBlock>,
@@ -123,30 +154,41 @@ impl HaloMatrix {
         self.blocks[b].send_lists.iter().map(|(_, l)| l.len()).sum()
     }
 
-    /// One full distributed SpMV: exchange halos, then compute locally.
-    /// `x` and `y` are global vectors (the "MPI" is in-process).
-    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
-        for blk in &self.blocks {
-            let nb = blk.own.len();
-            // Local x = [owned | ghosts] (the receive side of the halo
-            // exchange; senders' lists are the mirror image).
-            let mut xl = Vec::with_capacity(nb + blk.ghosts.len());
-            for &g in &blk.own {
-                xl.push(x[g as usize]);
-            }
-            for &g in &blk.ghosts {
-                xl.push(x[g as usize]);
-            }
-            let w = blk.ell.w;
-            for li in 0..nb {
-                let mut acc = blk.ell.diag[li] * xl[li];
-                for s in 0..w {
-                    acc += blk.ell.values[li * w + s]
-                        * xl[blk.ell.cols[li * w + s] as usize];
-                }
-                y[blk.own[li] as usize] = acc;
+    /// The static exchange pattern for the virtual-cluster engine — the
+    /// seam `exec::Comm` transports execute.
+    pub fn exchange_plan(&self, part: &Partition) -> crate::exec::ExchangePlan {
+        crate::exec::ExchangePlan::new(self, part)
+    }
+
+    /// One distributed SpMV with the per-block work chunked across the
+    /// job queue. Identical numerics to [`HaloMatrix::spmv`] (which is
+    /// this with one worker); block rows are disjoint so blocks compute
+    /// independently and the leader scatters.
+    pub fn par_spmv(&self, x: &[f32], y: &mut [f32], workers: usize) {
+        let parts = crate::coordinator::jobqueue::run_jobs(
+            (0..self.blocks.len()).collect(),
+            workers.max(1),
+            |&b| {
+                let blk = &self.blocks[b];
+                let xl = blk.gather_local(x);
+                let mut y_local = vec![0.0f32; blk.own.len()];
+                blk.spmv_local(&xl, &mut y_local);
+                (b, y_local)
+            },
+        );
+        for (b, y_local) in parts {
+            for (li, &g) in self.blocks[b].own.iter().enumerate() {
+                y[g as usize] = y_local[li];
             }
         }
+    }
+
+    /// One full distributed SpMV: exchange halos, then compute locally.
+    /// `x` and `y` are global vectors (the "MPI" is in-process). Local x
+    /// is `[owned | ghosts]` — the receive side of the halo exchange;
+    /// senders' lists are the mirror image.
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        self.par_spmv(x, y, 1);
     }
 }
 
@@ -216,6 +258,30 @@ mod tests {
                 assert_ne!(part.assignment[g as usize] as usize, b);
                 assert!(seen.insert(g), "duplicate ghost {g}");
             }
+        }
+    }
+
+    #[test]
+    fn par_spmv_matches_sequential_spmv() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.29).sin()).collect();
+        let mut seq = vec![0.0f32; ell.n];
+        h.spmv(&x, &mut seq);
+        for workers in [1, 3] {
+            let mut par = vec![0.0f32; ell.n];
+            h.par_spmv(&x, &mut par, workers);
+            assert_eq!(seq, par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn exchange_plan_mirrors_send_volume() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let plan = h.exchange_plan(&part);
+        for b in 0..part.k {
+            assert_eq!(plan.send_volume(b), h.send_volume(b));
         }
     }
 

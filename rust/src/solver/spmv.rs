@@ -15,8 +15,13 @@ pub fn spmv_ell_native(a: &EllMatrix, x: &[f32]) -> Vec<f32> {
 pub fn spmv_ell_into(a: &EllMatrix, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), a.n);
     debug_assert_eq!(y.len(), a.n);
+    spmv_rows_range(a, x, 0, a.n, y);
+}
+
+/// Rows `lo..hi` of diag·x + ELL·x into `out` (length `hi - lo`).
+fn spmv_rows_range(a: &EllMatrix, x: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
     let w = a.w;
-    for u in 0..a.n {
+    for (j, u) in (lo..hi).enumerate() {
         let mut acc = a.diag[u] * x[u];
         let base = u * w;
         for s in 0..w {
@@ -24,12 +29,47 @@ pub fn spmv_ell_into(a: &EllMatrix, x: &[f32], y: &mut [f32]) {
             // cost one fused multiply-add — branch-free by design.
             acc += a.values[base + s] * x[a.cols[base + s] as usize];
         }
-        y[u] = acc;
+        out[j] = acc;
     }
 }
 
-/// Block-row SpMV: `a` holds a subset of rows with *global* column
-/// indexing (see `EllMatrix::block_rows`); `x` is the full global vector.
+/// Rows below which chunking over the job queue costs more than it buys.
+const PAR_MIN_ROWS: usize = 4096;
+
+/// y = diag·x + ELL·x with the rows chunked across
+/// `coordinator::jobqueue::run_jobs` workers. Bit-identical to
+/// [`spmv_ell_into`] (each row is computed independently by the same
+/// code), falls back to the sequential path on small inputs.
+pub fn par_spmv_ell_into(a: &EllMatrix, x: &[f32], y: &mut [f32], workers: usize) {
+    debug_assert_eq!(x.len(), a.n);
+    debug_assert_eq!(y.len(), a.n);
+    let workers = workers.max(1);
+    if workers == 1 || a.n < 2 * PAR_MIN_ROWS {
+        spmv_ell_into(a, x, y);
+        return;
+    }
+    let chunk = a.n.div_ceil(workers).max(PAR_MIN_ROWS);
+    let jobs: Vec<(usize, usize)> = (0..a.n)
+        .step_by(chunk)
+        .map(|lo| (lo, (lo + chunk).min(a.n)))
+        .collect();
+    let parts = crate::coordinator::jobqueue::run_jobs(jobs.clone(), workers, |&(lo, hi)| {
+        let mut out = vec![0.0f32; hi - lo];
+        spmv_rows_range(a, x, lo, hi, &mut out);
+        out
+    });
+    for ((lo, hi), part) in jobs.into_iter().zip(parts) {
+        y[lo..hi].copy_from_slice(&part);
+    }
+}
+
+/// Block-row SpMV **without the diagonal**: `a` holds a subset of rows
+/// with *global* column indexing (see `EllMatrix::block_rows`); `x` is
+/// the full global vector.
+///
+/// `diag[r]` pairs with `x[rows[r]]`, which this function cannot know —
+/// prefer [`spmv_block_rows_full`], which takes the owned global row ids
+/// and folds the diagonal in, so callers cannot silently drop it.
 pub fn spmv_block_rows(a: &EllMatrix, x_global: &[f32], y_local: &mut [f32]) {
     debug_assert_eq!(y_local.len(), a.n);
     let w = a.w;
@@ -41,9 +81,23 @@ pub fn spmv_block_rows(a: &EllMatrix, x_global: &[f32], y_local: &mut [f32]) {
         }
         y_local[r] = acc;
     }
-    // diag indexes the *local* row; its x entry is the owning global row,
-    // which callers fold in because they know the row ids. To keep this
-    // function self-contained we leave the diagonal to the caller.
+}
+
+/// Block-row SpMV *including* the diagonal: `rows` are the owned global
+/// row ids (local row r ↔ global `rows[r]`), so
+/// `y_local[r] = diag[r]·x[rows[r]] + Σ values[r,s]·x[cols[r,s]]`.
+pub fn spmv_block_rows_full(a: &EllMatrix, rows: &[u32], x_global: &[f32], y_local: &mut [f32]) {
+    debug_assert_eq!(rows.len(), a.n);
+    debug_assert_eq!(y_local.len(), a.n);
+    let w = a.w;
+    for r in 0..a.n {
+        let base = r * w;
+        let mut acc = a.diag[r] * x_global[rows[r] as usize];
+        for s in 0..w {
+            acc += a.values[base + s] * x_global[a.cols[base + s] as usize];
+        }
+        y_local[r] = acc;
+    }
 }
 
 #[cfg(test)]
@@ -81,6 +135,43 @@ mod tests {
         let y = spmv_ell_native(&ell, &x);
         for (i, &v) in y.iter().enumerate() {
             assert!((v - 0.5).abs() < 1e-5, "row {i}: {v}");
+        }
+    }
+
+    #[test]
+    fn par_spmv_matches_sequential() {
+        // Big enough to take the chunked path with >1 worker.
+        let g = mesh_2d_tri(100, 100, 4);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.11).sin()).collect();
+        let mut seq = vec![0.0f32; ell.n];
+        spmv_ell_into(&ell, &x, &mut seq);
+        for workers in [1, 2, 5] {
+            let mut par = vec![0.0f32; ell.n];
+            par_spmv_ell_into(&ell, &x, &mut par, workers);
+            assert_eq!(seq, par, "workers={workers} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn block_rows_full_includes_diagonal() {
+        let g = mesh_2d_tri(12, 12, 3);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let assignment: Vec<u32> = (0..g.n()).map(|u| (u % 3) as u32).collect();
+        let x: Vec<f32> = (0..g.n()).map(|i| (i as f32 * 0.23).sin()).collect();
+        let whole = spmv_ell_native(&ell, &x);
+        for b in 0..3u32 {
+            let (rows_ell, rows) = ell.block_rows(&assignment, b);
+            let mut y_local = vec![0.0f32; rows.len()];
+            spmv_block_rows_full(&rows_ell, &rows, &x, &mut y_local);
+            for (i, &r) in rows.iter().enumerate() {
+                assert!(
+                    (y_local[i] - whole[r as usize]).abs() < 1e-4,
+                    "block {b} row {r}: {} vs {}",
+                    y_local[i],
+                    whole[r as usize]
+                );
+            }
         }
     }
 

@@ -1,0 +1,131 @@
+//! Virtual-cluster engine acceptance (ISSUE 1): distributed CG through
+//! the `threads` backend must produce the same residual trajectory as
+//! the `sim` backend (within 1e-6) on a Delaunay instance under a
+//! heterogeneous TOPO3-style topology, and both must agree with the
+//! sequential solver's solution.
+
+use hetpart::blocksizes::block_sizes;
+use hetpart::coordinator::instance;
+use hetpart::exec::{ClusterBackend, ExecBackend, VirtualCluster};
+use hetpart::gen::Family;
+use hetpart::partitioners::{by_name, Ctx};
+use hetpart::solver::cg::{cg_solve, NativeBackend};
+use hetpart::solver::{ClusterSim, EllMatrix};
+use hetpart::topology::{topo3, Topo3Spec};
+
+fn setup(
+    n: usize,
+) -> (
+    hetpart::graph::Csr,
+    EllMatrix,
+    hetpart::topology::Topology,
+    hetpart::partition::Partition,
+) {
+    // Random Delaunay instance (the paper's Fig.-5 family) on a 4-node
+    // TOPO3 cluster with one fast node.
+    let (_, g) = instance(Family::Rdg2d, n, 21);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    let topo = topo3(Topo3Spec {
+        nodes: 4,
+        pus_per_node: 3,
+        fast_nodes: 1,
+        slowdown: 4.0,
+    })
+    .scaled_for_load(g.n() as f64, 0.84);
+    let tw = block_sizes(g.n() as f64, &topo).unwrap().tw;
+    let ctx = Ctx { graph: &g, targets: &tw, topo: &topo, epsilon: 0.05, seed: 2 };
+    let part = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+    (g, ell, topo, part)
+}
+
+fn rhs(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 5.0).collect()
+}
+
+#[test]
+fn threads_backend_matches_sim_residual_trajectory() {
+    let (g, ell, topo, part) = setup(3000);
+    let b = rhs(g.n());
+    let sim = ClusterSim::default();
+    let (res_sim, rep_sim) = sim
+        .run_cg_virtual(&ell, &part, &topo, ExecBackend::Sim, &b, 80, 1e-6)
+        .unwrap();
+    let (res_thr, rep_thr) = sim
+        .run_cg_virtual(&ell, &part, &topo, ExecBackend::Threads, &b, 80, 1e-6)
+        .unwrap();
+    assert_eq!(rep_sim.backend, "sim");
+    assert_eq!(rep_thr.backend, "threads");
+    assert_eq!(res_sim.iterations, res_thr.iterations);
+    assert_eq!(res_sim.residual_norms.len(), res_thr.residual_norms.len());
+    for (i, (a, t)) in res_sim
+        .residual_norms
+        .iter()
+        .zip(&res_thr.residual_norms)
+        .enumerate()
+    {
+        assert!(
+            (a - t).abs() <= 1e-6 * a.abs().max(1.0),
+            "iteration {i}: sim {a} vs threads {t}"
+        );
+    }
+    let max_dx = res_sim
+        .x
+        .iter()
+        .zip(&res_thr.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dx <= 1e-6, "solutions diverged by {max_dx}");
+}
+
+#[test]
+fn engine_solution_agrees_with_sequential_solver() {
+    let (g, ell, topo, part) = setup(2000);
+    let b = rhs(g.n());
+    let sim = ClusterSim::default();
+    let (res, _) = sim
+        .run_cg_virtual(&ell, &part, &topo, ExecBackend::Threads, &b, 60, 0.0)
+        .unwrap();
+    let mut native = NativeBackend { a: &ell };
+    let seq = cg_solve(&mut native, &b, 60, 0.0).unwrap();
+    let max_diff = seq
+        .x
+        .iter()
+        .zip(&res.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "engine CG diverged from sequential by {max_diff}");
+}
+
+#[test]
+fn cluster_backend_drives_generic_cg_solver() {
+    let (g, ell, _topo, part) = setup(2000);
+    let b = rhs(g.n());
+    let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+    let mut engine = ClusterBackend { vc: &vc, backend: ExecBackend::Threads };
+    let res = cg_solve(&mut engine, &b, 60, 1e-5).unwrap();
+    let mut native = NativeBackend { a: &ell };
+    let seq = cg_solve(&mut native, &b, 60, 1e-5).unwrap();
+    let max_diff = seq
+        .x
+        .iter()
+        .zip(&res.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "ClusterBackend diverged by {max_diff}");
+}
+
+#[test]
+fn threads_report_shows_heterogeneous_bottleneck() {
+    let (g, ell, topo, part) = setup(3000);
+    let b = rhs(g.n());
+    let sim = ClusterSim::default();
+    let (_, rep) = sim
+        .run_cg_virtual(&ell, &part, &topo, ExecBackend::Threads, &b, 30, 0.0)
+        .unwrap();
+    assert_eq!(rep.compute_secs.len(), topo.k());
+    assert_eq!(rep.comm_secs.len(), topo.k());
+    assert!(rep.compute_secs.iter().all(|&t| t >= 0.0));
+    assert!(rep.bottleneck_rank() < topo.k());
+    assert!(rep.time_per_iter() > 0.0);
+    assert!(rep.wall_secs > 0.0);
+}
