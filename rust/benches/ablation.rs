@@ -13,7 +13,7 @@
 //! 5. **Jacobi PCG vs plain CG** iteration counts on the benchmark
 //!    Laplacians.
 
-use hetpart::bench_harness::{emit, BenchScale};
+use hetpart::harness::{emit, BenchScale};
 use hetpart::blocksizes::block_sizes;
 use hetpart::coordinator::{instance, run_one};
 use hetpart::gen::Family;

@@ -4,7 +4,7 @@
 //!
 //! On ≥4 cores the chunked/threaded paths should beat the sequential
 //! loop; the `speedup_vs_seq` column makes the comparison explicit.
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let scale = BenchScale::from_env();

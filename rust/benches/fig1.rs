@@ -1,7 +1,7 @@
 //! Regenerates **Fig. 1**: balanced k-means vs hierarchical k-means,
 //! relative edge cut and max communication volume (paper: within ±1%,
 //! slightly larger cut for the hierarchical version).
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let t = experiments::fig1(BenchScale::from_env());

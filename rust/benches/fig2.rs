@@ -2,7 +2,7 @@
 //! TOPO2 topologies; geometric-mean values relative to balanced k-means.
 //! Part (a): 2-D mesh instances (hugeX stand-ins); part (b): 3-D meshes
 //! (alya stand-ins).
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let scale = BenchScale::from_env();

@@ -1,6 +1,6 @@
 //! Regenerates **Fig. 3**: the refinetrace-like adaptive mesh under
 //! TOPO2 with growing PU counts (k = 24·2^i).
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let t = experiments::fig3(BenchScale::from_env());

@@ -1,6 +1,6 @@
 //! Regenerates **Fig. 4**: 3-D rgg and Delaunay graphs under TOPO2 with
 //! growing PU counts; geometric means relative to balanced k-means.
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let t = experiments::fig4(BenchScale::from_env());

@@ -2,7 +2,7 @@
 //! the rdg_2d graph under the heterogeneous-cluster simulator (the
 //! paper tunes down real nodes; we price iterations with the calibrated
 //! α-β model — see DESIGN.md §2).
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let scale = BenchScale::from_env();

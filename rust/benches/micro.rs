@@ -10,7 +10,7 @@
 //! The offline image has no criterion; measurement is warmup + N samples
 //! with median/min reporting (same methodology, fewer features).
 
-use hetpart::bench_harness::{emit, BenchScale};
+use hetpart::harness::{emit, BenchScale};
 use hetpart::gen::Family;
 use hetpart::partitioners::ALL_NAMES;
 use hetpart::solver::spmv::spmv_ell_native;

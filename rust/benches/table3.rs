@@ -1,6 +1,6 @@
 //! Regenerates **Table III**: Algorithm-1 target block sizes and the
 //! tw(fast)/tw(slow) ratios, with the paper's values side by side.
-use hetpart::bench_harness::{emit, experiments};
+use hetpart::harness::{emit, experiments};
 
 fn main() {
     let t = experiments::table3();

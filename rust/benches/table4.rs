@@ -1,6 +1,6 @@
 //! Regenerates **Table IV**: exact cut / max communication volume /
 //! partitioning time for the instance × topology grid at fs = 16.
-use hetpart::bench_harness::{emit, experiments, BenchScale};
+use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
     let t = experiments::table4(BenchScale::from_env());

@@ -369,6 +369,85 @@ mod tests {
         });
     }
 
+    // ----- edge cases: feasibility boundary, degenerate topologies -----
+
+    /// Exactly filling total memory is feasible (every PU saturated);
+    /// one epsilon more is not.
+    #[test]
+    fn all_saturated_boundary_and_infeasibility() {
+        let t = topo_from(vec![
+            Pu { speed: 4.0, memory: 30.0 },
+            Pu { speed: 1.0, memory: 10.0 },
+        ]);
+        // n == M_cap: every PU gets its full memory.
+        let bs = block_sizes(40.0, &t).unwrap();
+        assert_eq!(bs.tw, vec![30.0, 10.0]);
+        assert!((bs.total() - 40.0).abs() < 1e-9);
+        // The faster-per-memory PU is saturated; the last PU ends exactly
+        // full through the non-saturated branch (desW == remaining == mem).
+        assert!(bs.saturated[0]);
+        // Past the boundary: infeasible.
+        let err = block_sizes(40.0 + 1e-6, &t).unwrap_err().to_string();
+        assert!(err.contains("infeasible"), "{err}");
+    }
+
+    /// Single PU: it takes the whole load (when it fits).
+    #[test]
+    fn single_pu_takes_everything() {
+        let t = topo_from(vec![Pu { speed: 3.0, memory: 50.0 }]);
+        let bs = block_sizes(20.0, &t).unwrap();
+        assert_eq!(bs.tw, vec![20.0]);
+        assert!(!bs.saturated[0]);
+        assert!((bs.max_ratio - 20.0 / 3.0).abs() < 1e-12);
+        assert!(block_sizes(50.1, &t).is_err());
+    }
+
+    /// Zero or negative speeds/memories are rejected up front — Algorithm
+    /// 1 divides by both.
+    #[test]
+    fn zero_speed_or_memory_rejected() {
+        let zero_speed = topo_from(vec![
+            Pu { speed: 0.0, memory: 10.0 },
+            Pu { speed: 1.0, memory: 10.0 },
+        ]);
+        let err = block_sizes(5.0, &zero_speed).unwrap_err().to_string();
+        assert!(err.contains("positive"), "{err}");
+        let zero_mem = topo_from(vec![Pu { speed: 1.0, memory: 0.0 }]);
+        assert!(block_sizes(0.0, &zero_mem).is_err()); // load must be > 0 too
+        let neg = topo_from(vec![Pu { speed: -1.0, memory: 10.0 }]);
+        assert!(block_sizes(5.0, &neg).is_err());
+    }
+
+    /// The paper's 2-PU intuition behind Table III: one fast PU at step 5
+    /// (speed 16, memory 13.8) next to one slow PU (speed 1, memory 2).
+    /// At 95% memory fill the fast PU saturates at 13.8 and the slow PU
+    /// absorbs the remainder, pinning tw(fast)/tw(slow) = 13.8/1.21
+    /// ≈ 11.4 — the memory cap, not the 16× speed ratio, sets the split.
+    #[test]
+    fn two_pu_fast_slow_ratio_table3_example() {
+        let t = topo_from(vec![
+            Pu { speed: 16.0, memory: 13.8 },
+            Pu { speed: 1.0, memory: 2.0 },
+        ]);
+        let n = 0.95 * t.total_memory(); // 15.01
+        let bs = block_sizes(n, &t).unwrap();
+        assert!(bs.saturated[0], "fast PU must saturate at 95% fill");
+        assert!(!bs.saturated[1]);
+        assert!((bs.tw[0] - 13.8).abs() < 1e-12);
+        assert!((bs.tw[1] - (n - 13.8)).abs() < 1e-9);
+        let ratio = bs.ratio(0, 1);
+        assert!((ratio - 13.8 / (n - 13.8)).abs() < 1e-9);
+        assert!((ratio - 11.4).abs() < 0.01, "ratio {ratio}");
+        // Unconstrained contrast: with ample memory the split is the pure
+        // 16× speed ratio (Eq. (4)).
+        let ample = topo_from(vec![
+            Pu { speed: 16.0, memory: 1e9 },
+            Pu { speed: 1.0, memory: 1e9 },
+        ]);
+        let bs = block_sizes(n, &ample).unwrap();
+        assert!((bs.ratio(0, 1) - 16.0).abs() < 1e-9);
+    }
+
     #[test]
     fn subsets_aggregate() {
         let t = topo_from(vec![

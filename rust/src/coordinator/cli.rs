@@ -6,6 +6,8 @@
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads]   (virtual-cluster engine)
+//! hetpart harness    --matrix smoke|paper-small|paper-full [--out results/harness]
+//!                    [--workers N] [--verbose]
 //! hetpart version | help
 //! ```
 
@@ -27,6 +29,7 @@ pub fn main() {
         "compare" => cmd_compare(&args),
         "solve" => cmd_solve(&args),
         "experiment" => cmd_experiment(&args),
+        "harness" => cmd_harness(&args),
         "version" => {
             println!("hetpart {}", super::version());
             0
@@ -54,6 +57,9 @@ SUBCOMMANDS
                 sequential α-β-priced supersteps or thread-per-PU)
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
+  harness      run a declarative scenario matrix in parallel and write
+               CSV + JSON artifacts (--matrix smoke|paper-small|paper-full,
+               --out DIR, --workers N, --verbose prints every run)
   version      print version
 
 COMMON OPTIONS
@@ -165,7 +171,7 @@ fn cmd_blocksizes(args: &Args) -> i32 {
 }
 
 fn cmd_experiment(args: &Args) -> i32 {
-    use crate::bench_harness::{emit, experiments, BenchScale};
+    use crate::harness::{emit, experiments, BenchScale};
     let name = match args.positional.get(1) {
         Some(n) => n.clone(),
         None => {
@@ -189,6 +195,50 @@ fn cmd_experiment(args: &Args) -> i32 {
         }
     };
     emit(&name, &format!("paper experiment {name}"), &t);
+    0
+}
+
+/// `hetpart harness --matrix <name>`: run a scenario matrix over the job
+/// queue and persist CSV + JSON artifacts (see EXPERIMENTS.md).
+fn cmd_harness(args: &Args) -> i32 {
+    use crate::harness::{run_matrix, runner, summarize, write_artifacts, MatrixKind};
+    let name: String = args.get("matrix", "smoke".to_string());
+    let Some(kind) = MatrixKind::parse(&name) else {
+        eprintln!("unknown --matrix {name} (expected smoke|paper-small|paper-full)");
+        return 2;
+    };
+    let workers = args.get("workers", crate::coordinator::default_workers());
+    let out: String = args.get("out", "results/harness".to_string());
+    let scenarios = kind.scenarios();
+    println!(
+        "harness matrix '{}': {} scenarios over {} workers",
+        kind.name(),
+        scenarios.len(),
+        workers
+    );
+    let (ok, failed) = run_matrix(&scenarios, workers);
+    if args.flag("verbose") {
+        print!("{}", runner::runs_table(&ok).to_text());
+    }
+    println!("\n=== per-partitioner summary ({} runs) ===", ok.len());
+    print!("{}", runner::summary_table(&summarize(&ok)).to_text());
+    for (id, e) in &failed {
+        eprintln!("FAILED {id}: {e}");
+    }
+    match write_artifacts(&out, kind.name(), &ok, &failed) {
+        Ok(dir) => println!(
+            "[artifacts: {}/runs.csv, runs/<id>.json, summary.csv, summary.json]",
+            dir.display()
+        ),
+        Err(e) => {
+            eprintln!("artifact write failed: {e}");
+            return 1;
+        }
+    }
+    if !failed.is_empty() {
+        eprintln!("{} of {} scenarios failed", failed.len(), scenarios.len());
+        return 1;
+    }
     0
 }
 

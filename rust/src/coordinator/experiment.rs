@@ -27,6 +27,11 @@ pub struct RunResult {
     pub k: usize,
     /// LDHT objective max_i w(b_i)/c_s(p_i) under the topology's speeds.
     pub ldht_objective: f64,
+    /// The Algorithm-1 optimum for this (graph, topology): the smallest
+    /// achievable value of the objective above (Theorem 1). Computed from
+    /// the same scaled topology as the partitioner's targets, so
+    /// `ldht_objective / ldht_optimum` is a well-defined quality ratio.
+    pub ldht_optimum: f64,
 }
 
 /// Run one partitioner on one instance; targets come from Algorithm 1.
@@ -67,6 +72,7 @@ pub fn run_one(
             time_partition: secs,
             k: topo.k(),
             ldht_objective: m.ldht_objective(&speeds),
+            ldht_optimum: bs.max_ratio,
         },
         part,
     ))

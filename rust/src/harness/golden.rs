@@ -1,0 +1,399 @@
+//! Golden-baseline regression gate.
+//!
+//! A golden file (`rust/tests/golden/<matrix>.json`) pins the partition
+//! quality of a small deterministic scenario matrix: per scenario id, the
+//! cut, max communication volume, and LDHT objective. `cargo test`
+//! re-runs the matrix and fails when any metric *regresses* (grows)
+//! beyond the file's tolerances — the gate that keeps partitioner quality
+//! from rotting silently.
+//!
+//! Lifecycle:
+//! - a fresh file carries `"bootstrap": true` and no runs; the first test
+//!   run fills it from the current code and flips bootstrap off;
+//! - `HETPART_UPDATE_GOLDEN=1 cargo test --test golden_baselines`
+//!   refreshes the recorded values after an *intentional* quality change
+//!   (commit the rewritten file with the change that caused it);
+//! - improvements beyond tolerance don't fail the gate but are reported
+//!   as stale-baseline notes, so refreshed files keep headroom honest.
+
+use super::runner::ScenarioResult;
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Relative tolerances per gated metric (0.05 = +5% allowed).
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerances {
+    pub cut: f64,
+    pub max_comm_volume: f64,
+    pub ldht_objective: f64,
+}
+
+impl Default for Tolerances {
+    fn default() -> Self {
+        // The matrix is deterministic, so these bound real quality drift,
+        // not run-to-run noise; volume tolerance is looser because a
+        // single boundary vertex moves it by a whole unit on small
+        // instances.
+        Tolerances { cut: 0.02, max_comm_volume: 0.05, ldht_objective: 0.02 }
+    }
+}
+
+/// The gated metrics of one scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoldenMetrics {
+    pub cut: f64,
+    pub max_comm_volume: f64,
+    pub ldht_objective: f64,
+}
+
+/// A parsed golden-baseline file.
+#[derive(Debug, Clone)]
+pub struct GoldenFile {
+    pub matrix: String,
+    /// True until the first run records real values.
+    pub bootstrap: bool,
+    pub tolerances: Tolerances,
+    /// (scenario id, metrics) in recorded order.
+    pub runs: Vec<(String, GoldenMetrics)>,
+}
+
+impl GoldenFile {
+    /// An empty bootstrap-mode file for a matrix.
+    pub fn bootstrap(matrix: &str) -> GoldenFile {
+        GoldenFile {
+            matrix: matrix.to_string(),
+            bootstrap: true,
+            tolerances: Tolerances::default(),
+            runs: Vec::new(),
+        }
+    }
+
+    /// Capture current results as the new baseline (keeps tolerances).
+    pub fn from_results(&self, results: &[ScenarioResult]) -> GoldenFile {
+        GoldenFile {
+            matrix: self.matrix.clone(),
+            bootstrap: false,
+            tolerances: self.tolerances,
+            runs: results
+                .iter()
+                .map(|r| {
+                    (
+                        r.scenario.id(),
+                        GoldenMetrics {
+                            cut: r.cut,
+                            max_comm_volume: r.max_comm_volume,
+                            ldht_objective: r.ldht_objective,
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<GoldenFile> {
+        let txt = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&txt).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let get_f64 = |v: &Json, key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{}: missing number '{key}'", path.display()))
+        };
+        let matrix = j
+            .get("matrix")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{}: missing 'matrix'", path.display()))?
+            .to_string();
+        let bootstrap = j.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+        let d = Tolerances::default();
+        // A field absent from the tolerances object falls back to the
+        // default; a field *present* but malformed (string, typo'd value)
+        // is a hard error — a gate must never silently run looser than
+        // its file reads.
+        let opt_f64 = |v: &Json, key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x.as_f64().map(Some).ok_or_else(|| {
+                    anyhow!("{}: tolerance '{key}' is not a number", path.display())
+                }),
+            }
+        };
+        let tolerances = match j.get("tolerances") {
+            Some(t) => Tolerances {
+                cut: opt_f64(t, "cut")?.unwrap_or(d.cut),
+                max_comm_volume: opt_f64(t, "max_comm_volume")?.unwrap_or(d.max_comm_volume),
+                ldht_objective: opt_f64(t, "ldht_objective")?.unwrap_or(d.ldht_objective),
+            },
+            None => d,
+        };
+        let mut runs = Vec::new();
+        if let Some(kv) = j.get("runs").and_then(Json::as_obj) {
+            for (id, m) in kv {
+                runs.push((
+                    id.clone(),
+                    GoldenMetrics {
+                        cut: get_f64(m, "cut")?,
+                        max_comm_volume: get_f64(m, "max_comm_volume")?,
+                        ldht_objective: get_f64(m, "ldht_objective")?,
+                    },
+                ));
+            }
+        }
+        Ok(GoldenFile { matrix, bootstrap, tolerances, runs })
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("matrix", Json::Str(self.matrix.clone())),
+            ("bootstrap", Json::Bool(self.bootstrap)),
+            (
+                "tolerances",
+                obj(vec![
+                    ("cut", Json::Num(self.tolerances.cut)),
+                    ("max_comm_volume", Json::Num(self.tolerances.max_comm_volume)),
+                    ("ldht_objective", Json::Num(self.tolerances.ldht_objective)),
+                ]),
+            ),
+            (
+                "runs",
+                Json::Obj(
+                    self.runs
+                        .iter()
+                        .map(|(id, m)| {
+                            (
+                                id.clone(),
+                                obj(vec![
+                                    ("cut", Json::Num(m.cut)),
+                                    ("max_comm_volume", Json::Num(m.max_comm_volume)),
+                                    ("ldht_objective", Json::Num(m.ldht_objective)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().render())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Outcome of comparing a run against a baseline: hard failures
+/// (regressions, coverage drift) and informational notes (improvements
+/// beyond tolerance — the baseline is stale but nothing is broken).
+#[derive(Debug, Clone, Default)]
+pub struct GoldenReport {
+    pub violations: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+/// Compare current results against the baseline.
+pub fn compare(baseline: &GoldenFile, results: &[ScenarioResult]) -> GoldenReport {
+    let mut report = GoldenReport::default();
+    let tol = baseline.tolerances;
+    for (id, want) in &baseline.runs {
+        let Some(got) = results.iter().find(|r| &r.scenario.id() == id) else {
+            report
+                .violations
+                .push(format!("{id}: in baseline but missing from the current run"));
+            continue;
+        };
+        let mut check = |metric: &str, got: f64, want: f64, tol: f64| {
+            if want <= 0.0 {
+                return; // degenerate baseline value; nothing to gate
+            }
+            let rel = got / want - 1.0;
+            if rel > tol {
+                report.violations.push(format!(
+                    "{id}: {metric} regressed {got:.4} vs baseline {want:.4} (+{:.1}% > {:.1}%)",
+                    rel * 100.0,
+                    tol * 100.0
+                ));
+            } else if rel < -tol {
+                report.notes.push(format!(
+                    "{id}: {metric} improved {got:.4} vs baseline {want:.4} ({:.1}%) — refresh goldens",
+                    rel * 100.0
+                ));
+            }
+        };
+        check("cut", got.cut, want.cut, tol.cut);
+        check(
+            "max_comm_volume",
+            got.max_comm_volume,
+            want.max_comm_volume,
+            tol.max_comm_volume,
+        );
+        check("ldht_objective", got.ldht_objective, want.ldht_objective, tol.ldht_objective);
+    }
+    for r in results {
+        let id = r.scenario.id();
+        if !baseline.runs.iter().any(|(b, _)| *b == id) {
+            report.violations.push(format!(
+                "{id}: ran but absent from baseline — refresh goldens to extend coverage"
+            ));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::Family;
+    use crate::harness::scenario::{Scenario, TopoPreset};
+
+    fn result(id_algo: &str, cut: f64, vol: f64, obj: f64) -> ScenarioResult {
+        ScenarioResult {
+            scenario: Scenario {
+                family: Family::Tri2d,
+                n: 100,
+                k: 4,
+                topo: TopoPreset::Uniform,
+                algo: id_algo.to_string(),
+                epsilon: 0.03,
+                seed: 1,
+                solve_iters: 0,
+            },
+            n: 100,
+            m: 180,
+            cut,
+            max_comm_volume: vol,
+            total_comm_volume: vol * 3.0,
+            imbalance: 0.01,
+            ldht_objective: obj,
+            ldht_ratio: 1.02,
+            time_partition: 0.001,
+            sim_time_per_iter: None,
+            final_residual: None,
+        }
+    }
+
+    fn baseline_for(results: &[ScenarioResult]) -> GoldenFile {
+        GoldenFile::bootstrap("test").from_results(results)
+    }
+
+    #[test]
+    fn identical_run_passes() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0), result("b", 50.0, 10.0, 28.0)];
+        let base = baseline_for(&rs);
+        assert!(!base.bootstrap);
+        let rep = compare(&base, &rs);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert!(rep.notes.is_empty(), "{:?}", rep.notes);
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0)];
+        let base = baseline_for(&rs);
+        // +10% cut with 2% tolerance → violation.
+        let bad = vec![result("a", 110.0, 20.0, 30.0)];
+        let rep = compare(&base, &bad);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].contains("cut regressed"), "{}", rep.violations[0]);
+    }
+
+    #[test]
+    fn regression_within_tolerance_passes() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0)];
+        let base = baseline_for(&rs);
+        let ok = vec![result("a", 101.5, 20.9, 30.5)];
+        let rep = compare(&base, &ok);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn volume_regression_detected() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0)];
+        let base = baseline_for(&rs);
+        let bad = vec![result("a", 100.0, 24.0, 30.0)];
+        let rep = compare(&base, &bad);
+        assert_eq!(rep.violations.len(), 1);
+        assert!(rep.violations[0].contains("max_comm_volume"), "{}", rep.violations[0]);
+    }
+
+    #[test]
+    fn improvement_is_note_not_violation() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0)];
+        let base = baseline_for(&rs);
+        let better = vec![result("a", 80.0, 20.0, 30.0)];
+        let rep = compare(&base, &better);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.notes.len(), 1);
+        assert!(rep.notes[0].contains("improved"));
+    }
+
+    #[test]
+    fn coverage_drift_fails_both_ways() {
+        let rs = vec![result("a", 100.0, 20.0, 30.0), result("b", 50.0, 10.0, 28.0)];
+        let base = baseline_for(&rs);
+        // Missing scenario.
+        let rep = compare(&base, &rs[..1]);
+        assert!(rep.violations.iter().any(|v| v.contains("missing from the current run")));
+        // Extra scenario.
+        let mut extra = rs.clone();
+        extra.push(result("c", 10.0, 5.0, 9.0));
+        let rep = compare(&base, &extra);
+        assert!(rep.violations.iter().any(|v| v.contains("absent from baseline")));
+    }
+
+    #[test]
+    fn json_round_trip_via_tempfile() {
+        let rs = vec![result("a", 100.25, 20.5, 30.125)];
+        let base = baseline_for(&rs);
+        let dir = std::env::temp_dir().join("hetpart_golden_test");
+        let path = dir.join("roundtrip.json");
+        base.save(&path).unwrap();
+        let back = GoldenFile::load(&path).unwrap();
+        assert_eq!(back.matrix, "test");
+        assert!(!back.bootstrap);
+        assert_eq!(back.runs.len(), 1);
+        assert_eq!(back.runs[0].1, base.runs[0].1);
+        assert!((back.tolerances.cut - base.tolerances.cut).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn malformed_tolerance_is_a_hard_error() {
+        let dir = std::env::temp_dir().join("hetpart_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_tol.json");
+        std::fs::write(
+            &path,
+            r#"{"matrix": "t", "tolerances": {"cut": "0.005"}, "runs": {}}"#,
+        )
+        .unwrap();
+        let err = GoldenFile::load(&path).unwrap_err().to_string();
+        assert!(err.contains("tolerance 'cut'"), "{err}");
+        // A missing field still falls back to the default.
+        std::fs::write(&path, r#"{"matrix": "t", "tolerances": {"cut": 0.01}, "runs": {}}"#)
+            .unwrap();
+        let f = GoldenFile::load(&path).unwrap();
+        assert!((f.tolerances.cut - 0.01).abs() < 1e-12);
+        let d = Tolerances::default();
+        assert!((f.tolerances.max_comm_volume - d.max_comm_volume).abs() < 1e-12);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bootstrap_file_parses() {
+        let f = GoldenFile::bootstrap("smoke");
+        let txt = f.to_json().render();
+        let dir = std::env::temp_dir().join("hetpart_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bootstrap.json");
+        std::fs::write(&path, &txt).unwrap();
+        let back = GoldenFile::load(&path).unwrap();
+        assert!(back.bootstrap);
+        assert!(back.runs.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,81 @@
+//! Experiment harness: declarative scenario matrices, the runner that
+//! fans them out over the leader/worker job queue, golden-baseline
+//! regression gates, and the per-table/figure drivers of the paper's §VI.
+//!
+//! Three layers:
+//! - [`scenario`] — a [`Scenario`](scenario::Scenario) is one matrix cell
+//!   (mesh family × size × topology preset × partitioner × ε × seed);
+//!   [`MatrixKind`](scenario::MatrixKind) registers the named sweeps
+//!   (`smoke`, `paper-small`, `paper-full`) reachable via
+//!   `hetpart harness --matrix <name>`;
+//! - [`runner`] — executes a matrix in parallel and writes structured
+//!   artifacts (CSV + JSON per run, per-partitioner geomean summaries);
+//! - [`golden`] — compares a deterministic matrix against checked-in
+//!   baselines (`rust/tests/golden/*.json`) with per-metric tolerances,
+//!   the regression gate wired into `cargo test`.
+//!
+//! The [`experiments`] drivers regenerate every table and figure of the
+//! paper's evaluation (shared by the `cargo bench` targets and
+//! `hetpart experiment <name>`).
+//!
+//! Scaling: the paper's instances are 1M–578M vertices on up to 12288
+//! PUs; this testbed is one CPU core. [`BenchScale`] shrinks instance
+//! sizes and PU counts ~100× while preserving the comparisons (who wins,
+//! by what factor, where heterogeneity hurts).
+
+pub mod experiments;
+pub mod golden;
+pub mod runner;
+pub mod scenario;
+
+pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
+pub use runner::{run_matrix, run_scenario, summarize, write_artifacts, ScenarioResult};
+pub use scenario::{alg1_targets, MatrixKind, Scenario, TopoPreset, ALL_PRESETS};
+
+use crate::util::table::Table;
+
+/// Global size knobs, overridable via environment:
+/// `HETPART_BENCH_SCALE=quick|default|full`.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchScale {
+    /// Base vertex count for 2-D instances.
+    pub n2d: usize,
+    /// Base vertex count for 3-D instances.
+    pub n3d: usize,
+    /// Base PU count ("96" in the paper's TOPO1/TOPO2 tables).
+    pub k: usize,
+    /// k sweep for Figs. 3–4: k = base·2^i, i in 0..sweep.
+    pub sweep: usize,
+}
+
+impl BenchScale {
+    pub fn from_env() -> BenchScale {
+        match std::env::var("HETPART_BENCH_SCALE").as_deref() {
+            Ok("quick") => BenchScale { n2d: 2_500, n3d: 2_000, k: 24, sweep: 2 },
+            Ok("full") => BenchScale { n2d: 60_000, n3d: 40_000, k: 96, sweep: 4 },
+            _ => BenchScale { n2d: 12_000, n3d: 8_000, k: 48, sweep: 3 },
+        }
+    }
+}
+
+/// Print a driver's table and persist it as CSV under `results/`.
+pub fn emit(name: &str, title: &str, t: &Table) {
+    println!("\n=== {name}: {title} ===");
+    print!("{}", t.to_text());
+    match t.save_csv(name) {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => eprintln!("[csv save failed: {e}]"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_from_env_default() {
+        // Whatever the env, all fields must be sane.
+        let s = BenchScale::from_env();
+        assert!(s.n2d >= 1000 && s.k >= 8 && s.sweep >= 1);
+    }
+}

@@ -1,0 +1,435 @@
+//! Scenario-matrix runner: fan scenarios out over the leader/worker job
+//! queue, collect structured results, and persist artifacts.
+//!
+//! Artifacts per matrix run (under `<out>/<matrix>/`):
+//! - `runs.csv` — one row per scenario (the raw sweep data);
+//! - `runs/<scenario-id>.json` — one self-describing JSON per run;
+//! - `summary.csv` / `summary.json` — per-partitioner geometric means of
+//!   cut, max communication volume, and LDHT ratio (achieved objective /
+//!   Algorithm-1 optimum), plus cut and volume relative to geoKM on the
+//!   same (graph, topology) cell, as the paper reports (Figs. 2–4).
+
+use super::scenario::Scenario;
+use crate::coordinator::{instance, run_jobs, run_one, run_solve};
+use crate::exec::ExecBackend;
+use crate::gen::Family;
+use crate::graph::Csr;
+use crate::util::json::{obj, Json};
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One completed scenario: the full description plus every measured
+/// quantity the artifacts and golden gates consume.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    /// Actual generated graph size (generators hit ~n approximately).
+    pub n: usize,
+    pub m: usize,
+    pub cut: f64,
+    pub max_comm_volume: f64,
+    pub total_comm_volume: f64,
+    pub imbalance: f64,
+    pub ldht_objective: f64,
+    /// Achieved LDHT objective / Algorithm-1 optimum (≥ 1; 1 = optimal).
+    pub ldht_ratio: f64,
+    pub time_partition: f64,
+    /// Simulated CG seconds/iteration through the virtual-cluster `sim`
+    /// backend (None when `solve_iters == 0`).
+    pub sim_time_per_iter: Option<f64>,
+    /// Final CG residual after `solve_iters` iterations (deterministic).
+    pub final_residual: Option<f64>,
+}
+
+/// Run one scenario against an already-generated instance.
+pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioResult> {
+    let topo = s.topology();
+    let (r, part) = run_one(graph_name, g, &topo, &s.algo, s.epsilon, s.seed)
+        .with_context(|| format!("scenario {}", s.id()))?;
+    let ldht_ratio = if r.ldht_optimum > 0.0 {
+        r.ldht_objective / r.ldht_optimum
+    } else {
+        f64::NAN
+    };
+    let (mut sim_time_per_iter, mut final_residual) = (None, None);
+    if s.solve_iters > 0 {
+        let (solve, _cg) = run_solve(g, &part, &topo, ExecBackend::Sim, 0.05, s.solve_iters, 0.0)
+            .with_context(|| format!("solve for scenario {}", s.id()))?;
+        sim_time_per_iter = Some(solve.time_per_iter);
+        final_residual = Some(solve.final_residual as f64);
+    }
+    Ok(ScenarioResult {
+        scenario: s.clone(),
+        n: g.n(),
+        m: g.m(),
+        cut: r.cut,
+        max_comm_volume: r.max_comm_volume,
+        total_comm_volume: r.total_comm_volume,
+        imbalance: r.imbalance,
+        ldht_objective: r.ldht_objective,
+        ldht_ratio,
+        time_partition: r.time_partition,
+        sim_time_per_iter,
+        final_residual,
+    })
+}
+
+/// Run a whole matrix over `workers` threads. Each unique (family, n,
+/// seed) instance is generated once and shared read-only by all scenarios
+/// that reference it. Failed scenarios come back as `Err` strings keyed
+/// by scenario id; the rest of the matrix still completes.
+pub fn run_matrix(
+    scenarios: &[Scenario],
+    workers: usize,
+) -> (Vec<ScenarioResult>, Vec<(String, String)>) {
+    // Dedup instances.
+    let mut keys: Vec<(Family, usize, u64)> = Vec::new();
+    let mut graph_of: Vec<usize> = Vec::with_capacity(scenarios.len());
+    for s in scenarios {
+        let key = (s.family, s.n, s.seed);
+        let idx = match keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                keys.push(key);
+                keys.len() - 1
+            }
+        };
+        graph_of.push(idx);
+    }
+    let graphs: Vec<(String, Csr)> = keys
+        .iter()
+        .map(|&(family, n, seed)| instance(family, n, seed))
+        .collect();
+
+    let jobs: Vec<usize> = (0..scenarios.len()).collect();
+    let outcomes = run_jobs(jobs, workers, |&i| {
+        let s = &scenarios[i];
+        let (name, g) = &graphs[graph_of[i]];
+        run_scenario(s, name, g).map_err(|e| format!("{e:#}"))
+    });
+
+    let mut ok = Vec::new();
+    let mut failed = Vec::new();
+    for (s, outcome) in scenarios.iter().zip(outcomes) {
+        match outcome {
+            Ok(r) => ok.push(r),
+            Err(e) => failed.push((s.id(), e)),
+        }
+    }
+    (ok, failed)
+}
+
+/// Per-partitioner aggregate over a matrix run.
+#[derive(Debug, Clone)]
+pub struct AlgoSummary {
+    pub algo: String,
+    pub runs: usize,
+    pub gm_cut: f64,
+    pub gm_max_comm_volume: f64,
+    pub gm_ldht_ratio: f64,
+    /// Geomean of cut relative to geoKM on the same (graph, topology)
+    /// cell (NaN when no geoKM baseline ran).
+    pub gm_rel_cut: f64,
+    pub gm_rel_max_comm_volume: f64,
+}
+
+/// Aggregate results per partitioner (first-seen order).
+pub fn summarize(results: &[ScenarioResult]) -> Vec<AlgoSummary> {
+    let mut algos: Vec<String> = Vec::new();
+    for r in results {
+        if !algos.contains(&r.scenario.algo) {
+            algos.push(r.scenario.algo.clone());
+        }
+    }
+    let cell = |r: &ScenarioResult| (r.scenario.family, r.scenario.n, r.scenario.topo, r.scenario.k);
+    algos
+        .iter()
+        .map(|algo| {
+            let mine: Vec<&ScenarioResult> =
+                results.iter().filter(|r| &r.scenario.algo == algo).collect();
+            let pos = |f: &dyn Fn(&ScenarioResult) -> f64| -> Vec<f64> {
+                mine.iter().map(|r| f(r)).filter(|v| *v > 0.0).collect()
+            };
+            let gm = |xs: &[f64]| if xs.is_empty() { f64::NAN } else { geomean(xs) };
+            // Relative to geoKM on the same cell.
+            let mut rel_cut = Vec::new();
+            let mut rel_vol = Vec::new();
+            for r in &mine {
+                if let Some(base) = results
+                    .iter()
+                    .find(|b| b.scenario.algo == "geoKM" && cell(b) == cell(r))
+                {
+                    if base.cut > 0.0 && r.cut > 0.0 {
+                        rel_cut.push(r.cut / base.cut);
+                    }
+                    if base.max_comm_volume > 0.0 && r.max_comm_volume > 0.0 {
+                        rel_vol.push(r.max_comm_volume / base.max_comm_volume);
+                    }
+                }
+            }
+            AlgoSummary {
+                algo: algo.clone(),
+                runs: mine.len(),
+                gm_cut: gm(&pos(&|r| r.cut)),
+                gm_max_comm_volume: gm(&pos(&|r| r.max_comm_volume)),
+                gm_ldht_ratio: gm(&pos(&|r| r.ldht_ratio)),
+                gm_rel_cut: gm(&rel_cut),
+                gm_rel_max_comm_volume: gm(&rel_vol),
+            }
+        })
+        .collect()
+}
+
+fn fmt_opt(v: Option<f64>, scale: f64) -> String {
+    match v {
+        Some(x) => format!("{:.6}", x * scale),
+        None => "-".to_string(),
+    }
+}
+
+/// The `runs.csv` table (also printed by the CLI with `--verbose`).
+pub fn runs_table(results: &[ScenarioResult]) -> Table {
+    let mut t = Table::new(vec![
+        "id", "family", "n", "m", "k", "preset", "algo", "epsilon", "seed", "cut",
+        "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
+        "simT/iter(ms)", "residual",
+    ]);
+    for r in results {
+        let s = &r.scenario;
+        t.row(vec![
+            s.id(),
+            s.family.name().to_string(),
+            r.n.to_string(),
+            r.m.to_string(),
+            s.k.to_string(),
+            s.topo.name().to_string(),
+            s.algo.clone(),
+            format!("{}", s.epsilon),
+            s.seed.to_string(),
+            format!("{:.3}", r.cut),
+            format!("{:.3}", r.max_comm_volume),
+            format!("{:.3}", r.total_comm_volume),
+            format!("{:+.4}", r.imbalance),
+            format!("{:.4}", r.ldht_objective),
+            format!("{:.4}", r.ldht_ratio),
+            format!("{:.4}", r.time_partition),
+            fmt_opt(r.sim_time_per_iter, 1e3),
+            match r.final_residual {
+                Some(x) => format!("{x:.3e}"),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
+/// The `summary.csv` table (printed by the CLI after every run).
+pub fn summary_table(summaries: &[AlgoSummary]) -> Table {
+    let mut t = Table::new(vec![
+        "algo", "runs", "gm_cut", "gm_maxCommVol", "gm_ldhtRatio", "gm_relCut", "gm_relMaxVol",
+    ]);
+    let f = |v: f64| if v.is_finite() { format!("{v:.4}") } else { "-".to_string() };
+    for s in summaries {
+        t.row(vec![
+            s.algo.clone(),
+            s.runs.to_string(),
+            f(s.gm_cut),
+            f(s.gm_max_comm_volume),
+            f(s.gm_ldht_ratio),
+            f(s.gm_rel_cut),
+            f(s.gm_rel_max_comm_volume),
+        ]);
+    }
+    t
+}
+
+/// JSON document for one scenario result.
+pub fn result_json(r: &ScenarioResult) -> Json {
+    let s = &r.scenario;
+    obj(vec![
+        ("id", Json::Str(s.id())),
+        ("family", Json::Str(s.family.name().to_string())),
+        ("n_requested", Json::Num(s.n as f64)),
+        ("n", Json::Num(r.n as f64)),
+        ("m", Json::Num(r.m as f64)),
+        ("k", Json::Num(s.k as f64)),
+        ("preset", Json::Str(s.topo.name().to_string())),
+        ("algo", Json::Str(s.algo.clone())),
+        ("epsilon", Json::Num(s.epsilon)),
+        ("seed", Json::Num(s.seed as f64)),
+        ("cut", Json::Num(r.cut)),
+        ("max_comm_volume", Json::Num(r.max_comm_volume)),
+        ("total_comm_volume", Json::Num(r.total_comm_volume)),
+        ("imbalance", Json::Num(r.imbalance)),
+        ("ldht_objective", Json::Num(r.ldht_objective)),
+        ("ldht_ratio", Json::Num(r.ldht_ratio)),
+        ("time_partition_s", Json::Num(r.time_partition)),
+        (
+            "sim_time_per_iter_s",
+            r.sim_time_per_iter.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "final_residual",
+            r.final_residual.map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// Persist all artifacts for a matrix run; returns the output directory.
+pub fn write_artifacts(
+    out_root: &str,
+    matrix: &str,
+    results: &[ScenarioResult],
+    failed: &[(String, String)],
+) -> Result<PathBuf> {
+    let dir = Path::new(out_root).join(matrix);
+    let runs_dir = dir.join("runs");
+    std::fs::create_dir_all(&runs_dir)
+        .with_context(|| format!("creating {}", runs_dir.display()))?;
+
+    std::fs::write(dir.join("runs.csv"), runs_table(results).to_csv())?;
+    for r in results {
+        std::fs::write(
+            runs_dir.join(format!("{}.json", r.scenario.id())),
+            result_json(r).render(),
+        )?;
+    }
+
+    let summaries = summarize(results);
+    std::fs::write(dir.join("summary.csv"), summary_table(&summaries).to_csv())?;
+    let summary_json = obj(vec![
+        ("matrix", Json::Str(matrix.to_string())),
+        ("scenarios_ok", Json::Num(results.len() as f64)),
+        ("scenarios_failed", Json::Num(failed.len() as f64)),
+        (
+            "failed",
+            Json::Arr(
+                failed
+                    .iter()
+                    .map(|(id, e)| {
+                        obj(vec![
+                            ("id", Json::Str(id.clone())),
+                            ("error", Json::Str(e.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "per_algo",
+            Json::Arr(
+                summaries
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("algo", Json::Str(s.algo.clone())),
+                            ("runs", Json::Num(s.runs as f64)),
+                            ("gm_cut", Json::Num(s.gm_cut)),
+                            ("gm_max_comm_volume", Json::Num(s.gm_max_comm_volume)),
+                            ("gm_ldht_ratio", Json::Num(s.gm_ldht_ratio)),
+                            ("gm_rel_cut", Json::Num(s.gm_rel_cut)),
+                            (
+                                "gm_rel_max_comm_volume",
+                                Json::Num(s.gm_rel_max_comm_volume),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(dir.join("summary.json"), summary_json.render())?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::scenario::TopoPreset;
+
+    fn tiny_scenarios() -> Vec<Scenario> {
+        ["geoKM", "zSFC"]
+            .iter()
+            .map(|algo| Scenario {
+                family: Family::Tri2d,
+                n: 400,
+                k: 4,
+                topo: TopoPreset::Uniform,
+                algo: algo.to_string(),
+                epsilon: 0.05,
+                seed: 7,
+                solve_iters: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn run_matrix_tiny() {
+        let scenarios = tiny_scenarios();
+        let (ok, failed) = run_matrix(&scenarios, 2);
+        assert!(failed.is_empty(), "{failed:?}");
+        assert_eq!(ok.len(), 2);
+        for r in &ok {
+            assert!(r.cut > 0.0);
+            assert!(r.max_comm_volume > 0.0);
+            assert!(r.ldht_ratio >= 1.0 - 1e-9, "ratio {}", r.ldht_ratio);
+        }
+    }
+
+    #[test]
+    fn run_matrix_reports_failures_without_aborting() {
+        let mut scenarios = tiny_scenarios();
+        let template = scenarios[0].clone();
+        scenarios.push(Scenario {
+            algo: "no-such-algo".to_string(),
+            ..template
+        });
+        let (ok, failed) = run_matrix(&scenarios, 1);
+        assert_eq!(ok.len(), 2);
+        assert_eq!(failed.len(), 1);
+        assert!(failed[0].1.contains("no-such-algo"), "{}", failed[0].1);
+    }
+
+    #[test]
+    fn solve_fields_populated_when_requested() {
+        let mut s = tiny_scenarios();
+        s.truncate(1);
+        s[0].solve_iters = 5;
+        let (ok, failed) = run_matrix(&s, 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        assert!(ok[0].sim_time_per_iter.unwrap() > 0.0);
+        assert!(ok[0].final_residual.unwrap().is_finite());
+    }
+
+    #[test]
+    fn summary_geomeans() {
+        let (ok, _) = run_matrix(&tiny_scenarios(), 1);
+        let sums = summarize(&ok);
+        assert_eq!(sums.len(), 2);
+        let km = sums.iter().find(|s| s.algo == "geoKM").unwrap();
+        assert_eq!(km.runs, 1);
+        assert!((km.gm_rel_cut - 1.0).abs() < 1e-12, "geoKM relative to itself");
+        let sfc = sums.iter().find(|s| s.algo == "zSFC").unwrap();
+        assert!(sfc.gm_cut > 0.0);
+        assert!(sfc.gm_rel_cut > 0.0);
+    }
+
+    #[test]
+    fn tables_have_one_row_per_item() {
+        let (ok, _) = run_matrix(&tiny_scenarios(), 1);
+        assert_eq!(runs_table(&ok).rows.len(), ok.len());
+        assert_eq!(summary_table(&summarize(&ok)).rows.len(), 2);
+    }
+
+    #[test]
+    fn result_json_round_trips() {
+        let (ok, _) = run_matrix(&tiny_scenarios(), 1);
+        let j = result_json(&ok[0]);
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("id").unwrap().as_str().unwrap(), ok[0].scenario.id());
+        assert_eq!(back.get("cut").unwrap().as_f64().unwrap(), ok[0].cut);
+        assert_eq!(back.get("sim_time_per_iter_s").unwrap(), &Json::Null);
+    }
+}

@@ -1,0 +1,370 @@
+//! Declarative scenarios: one cell of the paper's experiment matrix.
+//!
+//! A [`Scenario`] names everything needed to reproduce one measurement —
+//! mesh family × size × topology preset × partitioner × ε × seed — and
+//! the [`MatrixKind`] registry enumerates the paper-faithful sweeps
+//! (`smoke`, `paper-small`, `paper-full`). Scenarios are plain data: the
+//! runner ([`super::runner`]) fans them out over the job queue and the
+//! golden gate ([`super::golden`]) keys baselines by [`Scenario::id`].
+
+use crate::blocksizes::{block_sizes, TABLE3_FILL};
+use crate::gen::Family;
+use crate::graph::Csr;
+use crate::partitioners::ALL_NAMES;
+use crate::topology::{topo1, Pu, Topo1Spec, Topology};
+use anyhow::{Context, Result};
+
+/// Paper-faithful topology presets (§VI's categories, scaled for this
+/// testbed). Each builds a concrete [`Topology`] for a requested k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopoPreset {
+    /// Homogeneous PUs (speed 1, memory 2) — the paper's baseline.
+    Uniform,
+    /// TOPO1-style two-speed system: k/6 fast CPU+GPU-class PUs at Table
+    /// III's step 5 (speed 16, memory 13.8), the rest slow.
+    TwoSpeed,
+    /// Hierarchical 2×2×(k/4) cluster (nodes → sockets → cores) of
+    /// homogeneous PUs — exercises tree-aware partitioning/mapping.
+    Hier,
+    /// Memory-saturated TOPO1 variant: fast PUs (speed 16) get memory 4,
+    /// so Algorithm 1 saturates them and spills load to the slow PUs.
+    MemSaturated,
+}
+
+/// All presets, in registry order.
+pub const ALL_PRESETS: [TopoPreset; 4] = [
+    TopoPreset::Uniform,
+    TopoPreset::TwoSpeed,
+    TopoPreset::Hier,
+    TopoPreset::MemSaturated,
+];
+
+impl TopoPreset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopoPreset::Uniform => "uniform",
+            TopoPreset::TwoSpeed => "twospeed",
+            TopoPreset::Hier => "hier2x2",
+            TopoPreset::MemSaturated => "memsat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TopoPreset> {
+        Some(match s {
+            "uniform" | "homog" => TopoPreset::Uniform,
+            "twospeed" | "2speed" => TopoPreset::TwoSpeed,
+            "hier2x2" | "hier" => TopoPreset::Hier,
+            "memsat" | "saturated" => TopoPreset::MemSaturated,
+            _ => return None,
+        })
+    }
+
+    /// Build the concrete topology for `k` PUs. The hierarchical preset
+    /// requires `k` divisible by 4 (fan-out 2×2×(k/4)).
+    pub fn build(&self, k: usize) -> Topology {
+        let fast = Pu { speed: 16.0, memory: 13.8 };
+        match self {
+            TopoPreset::Uniform => Topology::homogeneous(k, 1.0, 2.0),
+            TopoPreset::TwoSpeed => topo1(Topo1Spec {
+                k,
+                num_fast: (k / 6).max(1),
+                fast,
+            }),
+            TopoPreset::Hier => {
+                assert!(k % 4 == 0 && k >= 4, "hier preset needs k divisible by 4, got {k}");
+                Topology::hierarchical(
+                    &[2, 2, k / 4],
+                    |_| Pu { speed: 1.0, memory: 2.0 },
+                    format!("hier2x2x{}", k / 4),
+                )
+            }
+            TopoPreset::MemSaturated => topo1(Topo1Spec {
+                k,
+                num_fast: (k / 6).max(1),
+                fast: Pu { speed: 16.0, memory: 4.0 },
+            }),
+        }
+    }
+}
+
+/// One experiment-matrix cell, fully determined (every scenario is
+/// reproducible bit-for-bit from this description).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Mesh/graph family to generate.
+    pub family: Family,
+    /// Approximate vertex count handed to the generator.
+    pub n: usize,
+    /// Number of PUs/blocks.
+    pub k: usize,
+    /// Topology preset.
+    pub topo: TopoPreset,
+    /// Partitioner name (see `partitioners::by_name`).
+    pub algo: String,
+    /// Imbalance tolerance ε.
+    pub epsilon: f64,
+    /// Seed for both graph generation and partitioning.
+    pub seed: u64,
+    /// If > 0, also run this many distributed-CG iterations through the
+    /// virtual-cluster engine (`sim` backend) and record time/iteration.
+    pub solve_iters: usize,
+}
+
+impl Scenario {
+    /// Stable identifier used as the golden-baseline key and artifact
+    /// file name.
+    pub fn id(&self) -> String {
+        format!(
+            "{}-n{}-k{}-{}-{}-e{}-s{}",
+            self.family.name(),
+            self.n,
+            self.k,
+            self.topo.name(),
+            self.algo,
+            self.epsilon,
+            self.seed
+        )
+    }
+
+    /// The concrete topology this scenario runs on.
+    pub fn topology(&self) -> Topology {
+        self.topo.build(self.k)
+    }
+}
+
+/// Algorithm-1 targets for a (graph, topology) pair, using the same
+/// memory calibration as `coordinator::run_one` (load fills
+/// [`TABLE3_FILL`] of total memory). Returns `(tw, optimal_max_ratio)`;
+/// the second value is the LDHT optimum a partitioner's achieved
+/// objective is compared against (ratio ≥ 1).
+pub fn alg1_targets(g: &Csr, topo: &Topology) -> Result<(Vec<f64>, f64)> {
+    let load = g.total_vertex_weight();
+    let scaled = topo.scaled_for_load(load, TABLE3_FILL);
+    let bs = block_sizes(load, &scaled)
+        .with_context(|| format!("Algorithm 1 on {}", topo.label))?;
+    Ok((bs.tw, bs.max_ratio))
+}
+
+/// Named scenario matrices runnable via `hetpart harness --matrix <name>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixKind {
+    /// 12 tiny scenarios (2 graphs × 2 presets × 3 algorithms) — the CI
+    /// gate and golden-baseline matrix; finishes in seconds, debug build
+    /// included.
+    Smoke,
+    /// The paper's sweep shrunk ~100×: 4 graph families × all 4 presets
+    /// × the 8 study algorithms (+ hierKM on the hierarchical preset).
+    PaperSmall,
+    /// Same structure at benchmark sizes, plus the paper-excluded tools
+    /// (lpPulp, zMJ) on the uniform preset.
+    PaperFull,
+}
+
+impl MatrixKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixKind::Smoke => "smoke",
+            MatrixKind::PaperSmall => "paper-small",
+            MatrixKind::PaperFull => "paper-full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MatrixKind> {
+        Some(match s {
+            "smoke" => MatrixKind::Smoke,
+            "paper-small" | "paper_small" | "small" => MatrixKind::PaperSmall,
+            "paper-full" | "paper_full" | "full" => MatrixKind::PaperFull,
+            _ => return None,
+        })
+    }
+
+    /// Enumerate the matrix. Deterministic: same list, same order, every
+    /// call.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        const SEED: u64 = 42;
+        const EPS: f64 = 0.03;
+        let mut out = Vec::new();
+        match self {
+            MatrixKind::Smoke => {
+                let graphs = [(Family::Tri2d, 900usize), (Family::Rdg2d, 800)];
+                let presets = [TopoPreset::Uniform, TopoPreset::TwoSpeed];
+                let algos = ["geoKM", "zSFC", "pmGraph"];
+                for (family, n) in graphs {
+                    for topo in presets {
+                        for algo in algos {
+                            out.push(Scenario {
+                                family,
+                                n,
+                                k: 8,
+                                topo,
+                                algo: algo.to_string(),
+                                epsilon: EPS,
+                                seed: SEED,
+                                solve_iters: 10,
+                            });
+                        }
+                    }
+                }
+            }
+            MatrixKind::PaperSmall => {
+                let graphs = [
+                    (Family::Tri2d, 2500usize),
+                    (Family::Rdg2d, 2500),
+                    (Family::Refined2d, 2500),
+                    (Family::Tet3d, 2000),
+                ];
+                push_paper_grid(&mut out, &graphs, 24, EPS, SEED, 0, false);
+            }
+            MatrixKind::PaperFull => {
+                let graphs = [
+                    (Family::Tri2d, 12_000usize),
+                    (Family::Rdg2d, 12_000),
+                    (Family::Refined2d, 12_000),
+                    (Family::Tet3d, 8_000),
+                ];
+                push_paper_grid(&mut out, &graphs, 48, EPS, SEED, 40, true);
+            }
+        }
+        out
+    }
+}
+
+/// Shared shape of the paper-small/paper-full grids: every preset × the
+/// eight study algorithms, hierKM added on the hierarchical preset, and
+/// (optionally) the paper-excluded tools on the uniform preset.
+fn push_paper_grid(
+    out: &mut Vec<Scenario>,
+    graphs: &[(Family, usize)],
+    k: usize,
+    epsilon: f64,
+    seed: u64,
+    solve_iters: usize,
+    include_excluded: bool,
+) {
+    for &(family, n) in graphs {
+        for topo in ALL_PRESETS {
+            let mut algos: Vec<&str> = ALL_NAMES.to_vec();
+            if topo == TopoPreset::Hier {
+                algos.push("hierKM");
+            }
+            if include_excluded && topo == TopoPreset::Uniform {
+                algos.extend(crate::partitioners::EXT_NAMES);
+            }
+            for algo in algos {
+                out.push(Scenario {
+                    family,
+                    n,
+                    k,
+                    topo,
+                    algo: algo.to_string(),
+                    epsilon,
+                    seed,
+                    solve_iters,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_names_round_trip() {
+        for p in ALL_PRESETS {
+            assert_eq!(TopoPreset::parse(p.name()), Some(p), "{}", p.name());
+        }
+        assert!(TopoPreset::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn presets_build_k_pus() {
+        for p in ALL_PRESETS {
+            let t = p.build(8);
+            assert_eq!(t.k(), 8, "{}", p.name());
+            assert!(t.pus.iter().all(|pu| pu.speed > 0.0 && pu.memory > 0.0));
+        }
+    }
+
+    #[test]
+    fn hier_preset_is_three_level() {
+        let t = TopoPreset::Hier.build(16);
+        assert_eq!(t.k(), 16);
+        assert_eq!(t.root_children().len(), 2);
+    }
+
+    #[test]
+    fn memsat_preset_saturates_fast_pus() {
+        let t = TopoPreset::MemSaturated.build(12);
+        let load = 100.0;
+        let scaled = t.scaled_for_load(load, TABLE3_FILL);
+        let bs = block_sizes(load, &scaled).unwrap();
+        // The fast PUs (index 0..num_fast) must end saturated.
+        assert!(bs.saturated[0], "fast PU not saturated: {:?}", bs.saturated);
+        assert!(!bs.saturated[11], "slow PU saturated");
+    }
+
+    #[test]
+    fn matrix_names_round_trip() {
+        for m in [MatrixKind::Smoke, MatrixKind::PaperSmall, MatrixKind::PaperFull] {
+            assert_eq!(MatrixKind::parse(m.name()), Some(m));
+        }
+        assert!(MatrixKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn smoke_matrix_shape() {
+        let s = MatrixKind::Smoke.scenarios();
+        assert_eq!(s.len(), 12);
+        // IDs unique and stable across calls.
+        let ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate scenario ids");
+        let again: Vec<String> =
+            MatrixKind::Smoke.scenarios().iter().map(|x| x.id()).collect();
+        assert_eq!(ids, again);
+    }
+
+    #[test]
+    fn paper_small_covers_all_presets_and_algos() {
+        let s = MatrixKind::PaperSmall.scenarios();
+        // 4 graphs × (4 presets × 8 algos + hierKM once) = 4 × 33.
+        assert_eq!(s.len(), 4 * (4 * ALL_NAMES.len() + 1));
+        for p in ALL_PRESETS {
+            assert!(s.iter().any(|x| x.topo == p), "preset {} missing", p.name());
+        }
+        for a in ALL_NAMES {
+            assert!(s.iter().any(|x| x.algo == *a), "algo {a} missing");
+        }
+        assert!(s.iter().any(|x| x.algo == "hierKM"));
+    }
+
+    #[test]
+    fn scenario_id_format() {
+        let s = Scenario {
+            family: Family::Tri2d,
+            n: 900,
+            k: 8,
+            topo: TopoPreset::Uniform,
+            algo: "geoKM".into(),
+            epsilon: 0.03,
+            seed: 42,
+            solve_iters: 0,
+        };
+        assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
+    }
+
+    #[test]
+    fn alg1_targets_sum_to_load() {
+        let g = Family::Tri2d.generate(400, 1);
+        let t = TopoPreset::TwoSpeed.build(6);
+        let (tw, opt) = alg1_targets(&g, &t).unwrap();
+        assert_eq!(tw.len(), 6);
+        let total: f64 = tw.iter().sum();
+        assert!((total - g.total_vertex_weight()).abs() < 1e-6 * total);
+        assert!(opt > 0.0);
+    }
+}

@@ -22,21 +22,23 @@
 //!   over per-PU row blocks behind a `Comm` transport abstraction, with
 //!   a sequential α-β-priced backend and a thread-per-PU shared-memory
 //!   backend;
-//! - an experiment **coordinator** ([`coordinator`]) and benchmark
-//!   harness ([`bench_harness`]) regenerating every table and figure of
-//!   the paper.
+//! - an experiment **coordinator** ([`coordinator`]) and scenario-matrix
+//!   **harness** ([`harness`]): declarative scenarios with paper-faithful
+//!   topology presets, a parallel matrix runner with CSV/JSON artifacts,
+//!   golden-baseline regression gates, and the drivers regenerating every
+//!   table and figure of the paper.
 //!
 //! See [`DESIGN.md`](../../DESIGN.md) for the architecture and
 //! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for how to regenerate the
 //! paper-vs-measured results.
 
-pub mod bench_harness;
 pub mod blocksizes;
 pub mod coordinator;
 pub mod exec;
 pub mod gen;
 pub mod geometry;
 pub mod graph;
+pub mod harness;
 pub mod mapping;
 pub mod partition;
 pub mod partitioners;

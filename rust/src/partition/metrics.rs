@@ -203,4 +203,97 @@ mod tests {
         let m = metrics(&g, &p, &[]);
         assert_eq!(m.cut, 2.5);
     }
+
+    // ----- hand-computed fixtures: path, star, 4-cycle ------------------
+
+    /// Path 0-1-2-3-4 split {0,1} | {2,3,4}: exactly one cut edge (1-2),
+    /// one boundary vertex per side, one unit of volume per side.
+    #[test]
+    fn path_metrics_hand_computed() {
+        let mut b = GraphBuilder::new(5);
+        for u in 0..4 {
+            b.add_edge(u, u + 1);
+        }
+        let g = b.build();
+        let p = Partition::new(vec![0, 0, 1, 1, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 1.0);
+        assert_eq!(m.boundary_vertices, 2); // vertices 1 and 2
+        // Block 0 sends vertex 1 to block 1; block 1 sends vertex 2 back.
+        assert_eq!(m.max_comm_volume, 1.0);
+        assert_eq!(m.total_comm_volume, 2.0);
+        assert_eq!(m.block_weights, vec![2.0, 3.0]);
+        // Uniform targets 2.5 each → imbalance (3 − 2.5)/2.5 = +0.2.
+        assert!((m.imbalance - 0.2).abs() < 1e-12);
+    }
+
+    /// Star: center 0 with leaves 1..=4; center alone in block 0. The
+    /// center is one boundary vertex but its value is sent to ONE foreign
+    /// block once per (vertex, block) pair — volume counts pairs, not cut
+    /// edges.
+    #[test]
+    fn star_metrics_hand_computed() {
+        let mut b = GraphBuilder::new(5);
+        for leaf in 1..5 {
+            b.add_edge(0, leaf);
+        }
+        let g = b.build();
+        // Leaves split across blocks 1 and 2 → center reaches 2 foreign
+        // blocks.
+        let p = Partition::new(vec![0, 1, 1, 2, 2], 3);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 4.0); // all four spokes cut
+        assert_eq!(m.boundary_vertices, 5); // everyone touches a foreign block
+        // Block 0 sends the center to blocks 1 and 2 → volume 2;
+        // blocks 1/2 each send both leaves to block 0 → volume 2 each.
+        assert_eq!(m.max_comm_volume, 2.0);
+        assert_eq!(m.total_comm_volume, 6.0);
+        // Imbalance sign convention: targets may exceed weights; the max
+        // relative deviation can be negative only if ALL blocks are under
+        // target, so with targets (2, 2, 2) → max = 0/2 = 0.
+        let m2 = metrics(&g, &p, &[2.0, 2.0, 2.0]);
+        assert!(m2.imbalance.abs() < 1e-12);
+        // Overweight target set: every block under target → negative.
+        let m3 = metrics(&g, &p, &[4.0, 4.0, 4.0]);
+        assert!(m3.imbalance < 0.0, "imbalance {}", m3.imbalance);
+    }
+
+    /// 4-cycle 0-1-2-3-0 across 2 blocks {0,1} | {2,3}: two cut edges,
+    /// every vertex boundary, each block sends both its vertices once.
+    #[test]
+    fn four_cycle_metrics_hand_computed() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        b.add_edge(3, 0);
+        let g = b.build();
+        let p = Partition::new(vec![0, 0, 1, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 2.0); // edges 1-2 and 3-0
+        assert_eq!(m.boundary_vertices, 4);
+        assert_eq!(m.max_comm_volume, 2.0);
+        assert_eq!(m.total_comm_volume, 4.0);
+        // Perfectly balanced against uniform targets.
+        assert!(m.imbalance.abs() < 1e-12);
+        // LDHT objective with speeds (2, 1): max(2/2, 2/1) = 2 — the slow
+        // PU dominates even at equal weights.
+        assert_eq!(m.ldht_objective(&[2.0, 1.0]), 2.0);
+    }
+
+    /// Vertex weights scale communication volume (a heavy boundary vertex
+    /// costs its weight per foreign block).
+    #[test]
+    fn weighted_vertices_scale_volume() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1);
+        b.set_vertex_weights(vec![3.0, 1.0]);
+        let g = b.build();
+        let p = Partition::new(vec![0, 1], 2);
+        let m = metrics(&g, &p, &[]);
+        assert_eq!(m.cut, 1.0);
+        // Block 0 ships weight-3 vertex 0; block 1 ships unit vertex 1.
+        assert_eq!(m.max_comm_volume, 3.0);
+        assert_eq!(m.total_comm_volume, 4.0);
+    }
 }

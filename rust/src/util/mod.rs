@@ -3,10 +3,11 @@
 //! This offline build has no access to `rand`, `clap`, `criterion`, or
 //! `serde`, so the equivalents live here: a counter-based PRNG
 //! ([`rng::Rng`]), a CLI argument parser ([`cli::Args`]), timing helpers
-//! ([`timer`]), descriptive statistics ([`stats`]), and a plain-text table
-//! writer ([`table`]).
+//! ([`timer`]), descriptive statistics ([`stats`]), a plain-text table
+//! writer ([`table`]), and a minimal JSON reader/writer ([`json`]).
 
 pub mod cli;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,123 @@
+//! Mesh-generator sanity suite: every instance family the experiment
+//! matrices draw from must produce a structurally sound graph —
+//! symmetric CSR, no self-loops (both via `Csr::validate`), coordinates
+//! attached, connectivity (exact for the mesh families, giant-component
+//! for random geometric graphs), and bit-identical output for a fixed
+//! seed.
+
+use hetpart::gen::{Family, ALL_FAMILIES};
+use hetpart::graph::Csr;
+
+const N: usize = 1200;
+const SEED: u64 = 20260728;
+
+fn assert_same_graph(a: &Csr, b: &Csr, label: &str) {
+    assert_eq!(a.xadj, b.xadj, "{label}: xadj differs");
+    assert_eq!(a.adjncy, b.adjncy, "{label}: adjncy differs");
+    assert_eq!(a.adjwgt, b.adjwgt, "{label}: adjwgt differs");
+    assert_eq!(a.vwgt, b.vwgt, "{label}: vwgt differs");
+    assert_eq!(a.coords.len(), b.coords.len(), "{label}: coords differ");
+    for (i, (p, q)) in a.coords.iter().zip(&b.coords).enumerate() {
+        assert!(
+            p.x == q.x && p.y == q.y && p.z == q.z,
+            "{label}: coord {i} differs"
+        );
+    }
+}
+
+/// Structure: valid symmetric CSR, no self-loops, coordinates, sane size.
+#[test]
+fn every_family_generates_valid_csr() {
+    for family in ALL_FAMILIES {
+        let g = family.generate(N, SEED);
+        let label = family.name();
+        g.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert!(g.has_coords(), "{label}: no coordinates");
+        assert!(g.n() >= N / 2, "{label}: n {} far below requested {N}", g.n());
+        assert!(g.m() > g.n() / 2, "{label}: suspiciously few edges ({})", g.m());
+        // Adjacency lists hold no duplicate neighbors.
+        for u in 0..g.n() {
+            let nb = g.neighbors(u);
+            for w in nb.windows(2) {
+                assert_ne!(w[0], w[1], "{label}: duplicate edge at vertex {u}");
+            }
+        }
+    }
+}
+
+/// Connectivity: mesh/triangulation families are connected by
+/// construction; random geometric graphs only promise a giant component
+/// at the default average degree 6.
+#[test]
+fn generators_are_connected() {
+    for family in ALL_FAMILIES {
+        let g = family.generate(N, SEED);
+        let comps = g.num_components();
+        match family {
+            Family::Rgg2d | Family::Rgg3d => {
+                // Giant component: stragglers allowed, but ≤ 5% of n
+                // components total.
+                assert!(
+                    comps <= g.n() / 20,
+                    "{}: {comps} components on n={}",
+                    family.name(),
+                    g.n()
+                );
+            }
+            _ => assert_eq!(comps, 1, "{}: {comps} components", family.name()),
+        }
+    }
+}
+
+/// Determinism: the same (family, n, seed) triple yields a bit-identical
+/// graph, and a different seed yields a different one.
+#[test]
+fn generators_deterministic_under_seed() {
+    for family in ALL_FAMILIES {
+        let a = family.generate(N, SEED);
+        let b = family.generate(N, SEED);
+        assert_same_graph(&a, &b, family.name());
+        // Families whose randomness shapes the graph must change with the
+        // seed (structured meshes only jitter coordinates).
+        let c = family.generate(N, SEED + 1);
+        match family {
+            Family::Rgg2d | Family::Rgg3d | Family::Rdg2d | Family::Refined2d => {
+                assert_ne!(
+                    a.adjncy,
+                    c.adjncy,
+                    "{}: seed does not influence structure",
+                    family.name()
+                );
+            }
+            Family::Tri2d | Family::Tet3d => {
+                let coords_differ = a
+                    .coords
+                    .iter()
+                    .zip(&c.coords)
+                    .any(|(p, q)| p.x != q.x || p.y != q.y || p.z != q.z);
+                assert!(
+                    coords_differ,
+                    "{}: seed does not influence coordinates",
+                    family.name()
+                );
+            }
+        }
+    }
+}
+
+/// BFS sanity on the connected families: every vertex reachable, and
+/// the diameter of a 2-D mesh grows like √n (a cheap shape check that
+/// catches accidentally-clustered or star-like outputs).
+#[test]
+fn mesh_bfs_shape() {
+    let g = Family::Tri2d.generate(N, SEED);
+    let dist = g.bfs(0);
+    assert!(dist.iter().all(|&d| d != usize::MAX), "unreachable vertex");
+    let ecc = *dist.iter().max().unwrap();
+    let side = (g.n() as f64).sqrt();
+    assert!(
+        (ecc as f64) >= 0.5 * side && (ecc as f64) <= 6.0 * side,
+        "eccentricity {ecc} implausible for a {:.0}² mesh",
+        side
+    );
+}

@@ -1,0 +1,145 @@
+//! Golden-baseline regression gate over the deterministic `smoke`
+//! scenario matrix.
+//!
+//! The checked-in baseline lives at `tests/golden/smoke.json`. Fresh
+//! files carry `"bootstrap": true`; the first test run records the
+//! current metrics into the file and passes. From then on the gate fails
+//! whenever a partitioner's cut, max communication volume, or LDHT
+//! objective regresses beyond the file's tolerances.
+//!
+//! Refresh after an *intentional* quality change with
+//! `HETPART_UPDATE_GOLDEN=1 cargo test --test golden_baselines` and
+//! commit the rewritten file alongside the change (see EXPERIMENTS.md).
+
+use hetpart::harness::{compare, run_matrix, GoldenFile, MatrixKind, ScenarioResult};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn golden_path(matrix: &MatrixKind) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("{}.json", matrix.name()))
+}
+
+fn run_smoke(workers: usize) -> Vec<ScenarioResult> {
+    let scenarios = MatrixKind::Smoke.scenarios();
+    let (ok, failed) = run_matrix(&scenarios, workers);
+    assert!(failed.is_empty(), "smoke scenarios failed: {failed:?}");
+    assert_eq!(ok.len(), scenarios.len());
+    ok
+}
+
+/// The matrix is deterministic (asserted below), so all three tests in
+/// this binary share one computation of it.
+fn smoke_results() -> &'static [ScenarioResult] {
+    static RESULTS: OnceLock<Vec<ScenarioResult>> = OnceLock::new();
+    RESULTS.get_or_init(|| run_smoke(2))
+}
+
+#[test]
+fn golden_smoke_gate() {
+    let path = golden_path(&MatrixKind::Smoke);
+    let baseline = GoldenFile::load(&path)
+        .unwrap_or_else(|e| panic!("golden file {} unreadable: {e}", path.display()));
+    assert_eq!(baseline.matrix, "smoke");
+    let results = smoke_results();
+
+    // Only the documented opt-in value refreshes; HETPART_UPDATE_GOLDEN=0
+    // (or empty, or exported by accident) must not rewrite baselines.
+    let refresh = matches!(
+        std::env::var("HETPART_UPDATE_GOLDEN").as_deref(),
+        Ok("1") | Ok("true")
+    );
+    if baseline.bootstrap || refresh {
+        let fresh = baseline.from_results(results);
+        fresh.save(&path).unwrap();
+        println!(
+            "[golden] {} the baseline at {} ({} runs recorded)",
+            if refresh { "refreshed" } else { "bootstrapped" },
+            path.display(),
+            fresh.runs.len()
+        );
+        // Exercise the gate end-to-end against the file just written: a
+        // reload + compare of identical results must be clean, so the
+        // comparison machinery is verified on every bootstrap/refresh.
+        let reloaded = GoldenFile::load(&path).unwrap();
+        assert!(!reloaded.bootstrap);
+        assert_eq!(reloaded.runs.len(), results.len());
+        let rep = compare(&reloaded, results);
+        assert!(rep.violations.is_empty(), "self-compare failed: {:?}", rep.violations);
+        assert!(rep.notes.is_empty(), "self-compare notes: {:?}", rep.notes);
+        return;
+    }
+
+    let report = compare(&baseline, results);
+    for note in &report.notes {
+        println!("[golden note] {note}");
+    }
+    assert!(
+        report.violations.is_empty(),
+        "golden-baseline regressions:\n  {}\n(refresh intentionally with \
+         HETPART_UPDATE_GOLDEN=1 cargo test --test golden_baselines)",
+        report.violations.join("\n  ")
+    );
+}
+
+/// The gated metrics must be bit-identical run to run and independent of
+/// the worker count — the property that makes the golden gate sound.
+#[test]
+fn smoke_matrix_is_deterministic() {
+    let a = run_smoke(1);
+    let b = smoke_results(); // computed with workers = 2
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.scenario.id(), y.scenario.id());
+        assert_eq!(x.cut, y.cut, "{}: cut differs across runs", x.scenario.id());
+        assert_eq!(
+            x.max_comm_volume,
+            y.max_comm_volume,
+            "{}: maxCommVol differs",
+            x.scenario.id()
+        );
+        assert_eq!(
+            x.ldht_objective,
+            y.ldht_objective,
+            "{}: ldht objective differs",
+            x.scenario.id()
+        );
+        // The virtual-cluster solve is deterministic too (rank-order
+        // reductions), even though its *timing* is not.
+        assert_eq!(
+            x.final_residual,
+            y.final_residual,
+            "{}: CG residual differs",
+            x.scenario.id()
+        );
+    }
+}
+
+/// Every smoke scenario must satisfy the structural quality bounds the
+/// paper assumes before its tables mean anything.
+#[test]
+fn smoke_results_are_sane() {
+    for r in smoke_results() {
+        let id = r.scenario.id();
+        assert!(r.cut > 0.0, "{id}: zero cut");
+        assert!(r.max_comm_volume > 0.0, "{id}: zero volume");
+        assert!(r.max_comm_volume <= r.total_comm_volume, "{id}: max > total volume");
+        // On the uniform preset the LDHT optimum n/k is a pigeonhole
+        // bound, so no partition can beat it. On saturated heterogeneous
+        // presets a partitioner may legally dip below the *memory-
+        // constrained* optimum by overfilling a saturated PU within ε.
+        if r.scenario.topo == hetpart::harness::TopoPreset::Uniform {
+            assert!(r.ldht_ratio >= 1.0 - 1e-9, "{id}: beat the LDHT optimum? {}", r.ldht_ratio);
+        } else {
+            assert!(
+                r.ldht_ratio >= 1.0 - r.scenario.epsilon - 0.05,
+                "{id}: ldht ratio {} implausibly low",
+                r.ldht_ratio
+            );
+        }
+        assert!(r.time_partition >= 0.0, "{id}");
+        let t = r.sim_time_per_iter.expect("smoke scenarios request a solve");
+        assert!(t > 0.0, "{id}: sim time {t}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Partition-invariant suite: one parametrized loop asserting, for every
+//! registered partitioner (the paper's eight, hierKM, and the two
+//! paper-excluded extensions), the structural contract every caller
+//! relies on:
+//!
+//! 1. assignment length = n and every block id < k (via `validate`);
+//! 2. no empty block when k ≤ n;
+//! 3. block weights ≤ (1+ε)·tw(b_i) within each algorithm's documented
+//!    slack (single-pass geometric tools drift above ε on heterogeneous
+//!    targets; refined/combinatorial ones must respect it);
+//! 4. bit-identical assignments for a fixed seed (determinism — the
+//!    property the golden-baseline gate builds on).
+
+use hetpart::gen::Family;
+use hetpart::harness::{alg1_targets, TopoPreset};
+use hetpart::partitioners::{by_name, Ctx, ALL_NAMES, EXT_NAMES};
+use hetpart::topology::Topology;
+
+/// Every algorithm under test, with its documented per-block slack
+/// factor: block i may weigh up to (1+ε)·tw(b_i)·slack. Slack 1.0 means
+/// the ε contract is exact; the single-pass geometric tools (SFC order
+/// packing, coordinate/inertial bisection, multijagged) get headroom
+/// because they cannot rebalance after their one sweep — the same bounds
+/// pipeline.rs documents for imbalance.
+fn algos_with_slack() -> Vec<(&'static str, f64)> {
+    let mut out: Vec<(&'static str, f64)> = Vec::new();
+    for a in ALL_NAMES {
+        let slack = match a {
+            "zSFC" | "zRCB" | "zRIB" => 1.5,
+            _ => 1.10,
+        };
+        out.push((a, slack));
+    }
+    // hierKM composes per-level k-means errors before its smoothing pass,
+    // so it gets more headroom than flat geoKM.
+    out.push(("hierKM", 1.25));
+    for a in EXT_NAMES {
+        out.push((a, 1.5));
+    }
+    out
+}
+
+/// The (graph, topology) grid each partitioner must survive: one
+/// uniform and one heterogeneous two-speed flat topology on a structured
+/// and an unstructured mesh, plus the hierarchical 2×2×2 preset (the
+/// shape hierKM is built for).
+fn grid() -> Vec<(Family, usize, Topology)> {
+    vec![
+        (Family::Tri2d, 900, TopoPreset::Uniform.build(8)),
+        (Family::Rdg2d, 800, TopoPreset::TwoSpeed.build(8)),
+        (Family::Refined2d, 800, TopoPreset::Hier.build(8)),
+    ]
+}
+
+#[test]
+fn all_partitioners_uphold_invariants() {
+    const EPS: f64 = 0.05;
+    const SEED: u64 = 9;
+    for (family, n, topo) in grid() {
+        let g = family.generate(n, SEED);
+        let (targets, _) = alg1_targets(&g, &topo).unwrap();
+        let scaled = topo.scaled_for_load(
+            g.total_vertex_weight(),
+            hetpart::blocksizes::TABLE3_FILL,
+        );
+        for (algo, slack) in algos_with_slack() {
+            let p = by_name(algo).unwrap_or_else(|| panic!("{algo} not registered"));
+            let ctx = Ctx {
+                graph: &g,
+                targets: &targets,
+                topo: &scaled,
+                epsilon: EPS,
+                seed: SEED,
+            };
+            let label = format!("{algo} on {} / {}", family.name(), topo.label);
+            let part = p
+                .partition(&ctx)
+                .unwrap_or_else(|e| panic!("{label}: {e}"));
+
+            // 1. Structure: length n, every block id < k.
+            part.validate(&g).unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(part.k, topo.k(), "{label}: k mismatch");
+
+            // 2. No empty block (k = 8 ≪ n = 800+).
+            let sizes = part.block_sizes();
+            assert!(
+                sizes.iter().all(|&s| s > 0),
+                "{label}: empty block in {sizes:?}"
+            );
+
+            // 3. Per-block weight bound within documented slack.
+            let weights = part.block_weights(&g);
+            for (i, (&w, &tw)) in weights.iter().zip(&targets).enumerate() {
+                assert!(
+                    w <= (1.0 + EPS) * tw * slack + 1e-9,
+                    "{label}: block {i} weight {w:.1} > (1+ε)·{tw:.1}·{slack}"
+                );
+            }
+
+            // 4. Determinism for a fixed seed.
+            let again = p
+                .partition(&ctx)
+                .unwrap_or_else(|e| panic!("{label} (rerun): {e}"));
+            assert_eq!(
+                part.assignment, again.assignment,
+                "{label}: nondeterministic for fixed seed"
+            );
+        }
+    }
+}
+
+/// The registry itself: 9+ algorithms resolve, and names round-trip
+/// through `by_name` case-insensitively.
+#[test]
+fn registry_covers_nine_plus_algorithms() {
+    let all = algos_with_slack();
+    assert!(all.len() >= 9, "expected ≥9 partitioners, found {}", all.len());
+    for (name, _) in all {
+        assert!(by_name(name).is_some(), "{name} missing");
+        assert!(by_name(&name.to_uppercase()).is_some(), "{name} not case-insensitive");
+    }
+}
