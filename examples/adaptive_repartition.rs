@@ -1,0 +1,114 @@
+//! **Adaptive repartitioning demo**: a refinetrace-style workload whose
+//! load follows a moving refinement front, repartitioned every epoch.
+//!
+//! Two strategies side by side on the same trace:
+//! - **scratch-remap** — re-run `geoKM` from scratch, then relabel the
+//!   fresh blocks onto PUs (within Algorithm-1 speed classes) to keep as
+//!   much data in place as possible;
+//! - **diffusion** — keep the partition and shift boundary vertices from
+//!   overloaded toward underloaded PUs on the quotient graph.
+//!
+//! The per-epoch table shows the trade-off the repartitioning subsystem
+//! is about: both stay within a few percent of the from-scratch LDHT
+//! objective, while migrating a fraction of what naive scratch
+//! repartitioning (fresh labels every epoch) would move. Migration is
+//! executed through the `exec::Comm` seam, so the `sim` backend prices
+//! it with the α-β model (`--backend threads` measures it instead).
+//!
+//! Run: `cargo run --release --example adaptive_repartition`
+//! (options: --n 2000 --k 8 --epochs 6 --backend sim|threads)
+
+use hetpart::exec::ExecBackend;
+use hetpart::gen::Family;
+use hetpart::harness::TopoPreset;
+use hetpart::repart::{
+    repartitioner_for_trace, run_trace, DynamicKind, EpochTrace, TraceOptions, TraceResult,
+};
+use hetpart::util::cli::Args;
+use hetpart::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get("n", 2_000usize);
+    let k = args.get("k", 8usize);
+    let epochs = args.get("epochs", 6usize).max(2);
+    let backend = {
+        let s: String = args.get("backend", "sim".to_string());
+        ExecBackend::parse(&s).unwrap_or_else(|| {
+            eprintln!("unknown --backend {s} (expected sim|threads)");
+            std::process::exit(2);
+        })
+    };
+
+    let g = Family::Refined2d.generate(n, 42);
+    let topo = TopoPreset::TwoSpeed.build(k);
+    println!(
+        "workload refined_2d: n={} m={} | twospeed k={k} | {epochs}-epoch refine-front trace",
+        g.n(),
+        g.m()
+    );
+
+    let opts = TraceOptions {
+        scratch_algo: "geoKM".to_string(),
+        backend,
+        epsilon: 0.03,
+        seed: 42,
+    };
+    let mut results: Vec<TraceResult> = Vec::new();
+    for name in ["scratchRemap", "diffusion"] {
+        let rp = repartitioner_for_trace(name, &opts.scratch_algo).expect("registry");
+        let trace =
+            EpochTrace::new(&g, topo.clone(), DynamicKind::RefineFront, epochs, opts.seed);
+        results.push(run_trace(&trace, rp.as_ref(), &opts)?);
+    }
+
+    // Side-by-side per-epoch table.
+    let mut t = Table::new(vec![
+        "epoch",
+        "load",
+        "remap obj/scr",
+        "remap migW",
+        "diff obj/scr",
+        "diff migW",
+        "naive migW",
+    ]);
+    let (remap, diff) = (&results[0], &results[1]);
+    for e in 0..epochs {
+        let (r, d) = (&remap.records[e], &diff.records[e]);
+        let ratio = |x: f64| if x.is_finite() { format!("{x:.4}") } else { "-".into() };
+        t.row(vec![
+            e.to_string(),
+            format!("{:.0}", r.load),
+            ratio(r.obj_vs_scratch()),
+            format!("{:.0}", r.migrated_weight),
+            ratio(d.obj_vs_scratch()),
+            format!("{:.0}", d.migrated_weight),
+            format!("{:.0}", r.naive_migrated_weight),
+        ]);
+    }
+    print!("{}", t.to_text());
+
+    for res in &results {
+        let naive = res.total_naive_migrated_weight();
+        println!(
+            "{:>12}: worst obj/scratch {:.4} | migrated {:.0} of naive {:.0}{} | {} words via {}",
+            res.repartitioner,
+            res.worst_obj_vs_scratch(),
+            res.total_migrated_weight(),
+            naive,
+            if naive > 0.0 {
+                format!(" ({:.1}%)", 100.0 * res.total_migrated_weight() / naive)
+            } else {
+                String::new()
+            },
+            res.total_migration_volume(),
+            res.backend,
+        );
+    }
+    println!(
+        "\nBoth repartitioners track the moving front: quality stays within a\n\
+         few percent of from-scratch repartitioning while migration collapses\n\
+         versus naive fresh labels. Recorded in EXPERIMENTS.md §4."
+    );
+    Ok(())
+}

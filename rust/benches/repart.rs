@@ -1,0 +1,66 @@
+//! Dynamic-repartitioning benchmark: the three repartitioners over a
+//! refine-front trace and a speed-drift trace on the twospeed preset,
+//! reporting per-strategy totals (worst quality ratio vs from-scratch,
+//! migrated weight vs naive scratch, words shipped, repartition time).
+//!
+//! Scale via `HETPART_BENCH_SCALE=quick|default|full` as usual.
+
+use hetpart::gen::Family;
+use hetpart::harness::{emit, BenchScale, TopoPreset};
+use hetpart::repart::{
+    repartitioner_for_trace, run_trace, DynamicKind, EpochTrace, TraceOptions, REPART_NAMES,
+};
+use hetpart::util::table::Table;
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let n = scale.n2d / 2;
+    let k = (scale.k / 2).max(6);
+    let epochs = 6;
+    let g = Family::Refined2d.generate(n, 42);
+    let topo = TopoPreset::TwoSpeed.build(k);
+    println!(
+        "repart bench: refined_2d n={} m={} | twospeed k={k} | {epochs} epochs",
+        g.n(),
+        g.m()
+    );
+
+    let mut t = Table::new(vec![
+        "trace",
+        "repartitioner",
+        "worstObj/scratch",
+        "migWeight",
+        "migW/naive",
+        "migWords",
+        "tRepart(s)",
+    ]);
+    for kind in [DynamicKind::RefineFront, DynamicKind::SpeedDrift] {
+        for name in REPART_NAMES {
+            let opts = TraceOptions::default();
+            let rp = repartitioner_for_trace(name, &opts.scratch_algo).expect("registry");
+            let trace = EpochTrace::new(&g, topo.clone(), kind, epochs, 42);
+            match run_trace(&trace, rp.as_ref(), &opts) {
+                Ok(res) => {
+                    let naive = res.total_naive_migrated_weight();
+                    let t_total: f64 =
+                        res.records.iter().map(|r| r.time_repartition).sum();
+                    t.row(vec![
+                        kind.name().to_string(),
+                        name.to_string(),
+                        format!("{:.4}", res.worst_obj_vs_scratch()),
+                        format!("{:.0}", res.total_migrated_weight()),
+                        if naive > 0.0 {
+                            format!("{:.3}", res.total_migrated_weight() / naive)
+                        } else {
+                            "-".to_string()
+                        },
+                        res.total_migration_volume().to_string(),
+                        format!("{t_total:.3}"),
+                    ]);
+                }
+                Err(e) => eprintln!("WARN {name} on {}: {e:#}", kind.name()),
+            }
+        }
+    }
+    emit("repart", "dynamic repartitioning: quality vs migration", &t);
+}

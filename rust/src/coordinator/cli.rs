@@ -6,8 +6,12 @@
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads]   (virtual-cluster engine)
-//! hetpart harness    --matrix smoke|paper-small|paper-full [--out results/harness]
-//!                    [--workers N] [--verbose]
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic
+//!                    [--out results/harness] [--workers N] [--verbose]
+//! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
+//!                    --dynamic refine-front|speed-drift --epochs 6
+//!                    --repart scratchRemap|diffusion|increKM
+//!                    [--algo geoKM] [--backend sim|threads] [--csv FILE]
 //! hetpart version | help
 //! ```
 
@@ -30,6 +34,7 @@ pub fn main() {
         "solve" => cmd_solve(&args),
         "experiment" => cmd_experiment(&args),
         "harness" => cmd_harness(&args),
+        "repart" => cmd_repart(&args),
         "version" => {
             println!("hetpart {}", super::version());
             0
@@ -58,8 +63,13 @@ SUBCOMMANDS
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
-               CSV + JSON artifacts (--matrix smoke|paper-small|paper-full,
-               --out DIR, --workers N, --verbose prints every run)
+               CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
+               |dynamic, --out DIR, --workers N, --verbose prints every run)
+  repart       replay an adaptive multi-epoch workload and repartition it
+               (--dynamic refine-front|speed-drift, --epochs E,
+                --repart scratchRemap|diffusion|increKM, --preset
+                uniform|twospeed|hier2x2|memsat, --algo <static baseline>,
+                --backend sim|threads prices migration, --csv FILE)
   version      print version
 
 COMMON OPTIONS
@@ -204,7 +214,7 @@ fn cmd_harness(args: &Args) -> i32 {
     use crate::harness::{run_matrix, runner, summarize, write_artifacts, MatrixKind};
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
-        eprintln!("unknown --matrix {name} (expected smoke|paper-small|paper-full)");
+        eprintln!("unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic)");
         return 2;
     };
     let workers = args.get("workers", crate::coordinator::default_workers());
@@ -238,6 +248,103 @@ fn cmd_harness(args: &Args) -> i32 {
     if !failed.is_empty() {
         eprintln!("{} of {} scenarios failed", failed.len(), scenarios.len());
         return 1;
+    }
+    0
+}
+
+/// `hetpart repart`: replay a dynamic trace (moving refinement front or
+/// PU speed drift) and repartition every epoch, printing the per-epoch
+/// quality/migration table (optionally also written as CSV).
+fn cmd_repart(args: &Args) -> i32 {
+    use crate::harness::TopoPreset;
+    use crate::repart::{
+        epoch_table, repartitioner_for_trace, run_trace, DynamicKind, EpochTrace, TraceOptions,
+    };
+    let (name, g) = load_graph(args);
+    let k = args.get("k", 8usize);
+    let preset_name: String = args.get("preset", "twospeed".to_string());
+    let Some(preset) = TopoPreset::parse(&preset_name) else {
+        eprintln!("unknown --preset {preset_name} (expected uniform|twospeed|hier2x2|memsat)");
+        return 2;
+    };
+    if preset == TopoPreset::Hier && (k % 4 != 0 || k < 4) {
+        eprintln!("--preset hier2x2 needs --k divisible by 4, got {k}");
+        return 2;
+    }
+    let dyn_name: String = args.get("dynamic", "refine-front".to_string());
+    let Some(kind) = DynamicKind::parse(&dyn_name) else {
+        eprintln!("unknown --dynamic {dyn_name} (expected none|refine-front|speed-drift)");
+        return 2;
+    };
+    let backend_name: String = args.get("backend", "sim".to_string());
+    let Some(backend) = crate::exec::ExecBackend::parse(&backend_name) else {
+        eprintln!("unknown --backend {backend_name} (expected sim|threads)");
+        return 2;
+    };
+    let epochs = args.get("epochs", 6usize).max(1);
+    // Seed default matches load_graph's (and the other subcommands'), so
+    // one --seed value governs generation, partitioning and the trace.
+    let opts = TraceOptions {
+        scratch_algo: args.get("algo", "geoKM".to_string()),
+        backend,
+        epsilon: args.get("epsilon", 0.03),
+        seed: args.get("seed", 1u64),
+    };
+    let rp_name: String = args.get("repart", "diffusion".to_string());
+    let Some(rp) = repartitioner_for_trace(&rp_name, &opts.scratch_algo) else {
+        eprintln!("unknown --repart {rp_name} (expected scratchRemap|diffusion|increKM)");
+        return 2;
+    };
+    let trace = EpochTrace::new(&g, preset.build(k), kind, epochs, opts.seed);
+    println!(
+        "graph {name}: n={} m={} | preset {} k={k} | dynamic {} x{epochs} epochs | \
+         repartitioner {} (scratch baseline {}) | backend {}",
+        g.n(),
+        g.m(),
+        preset.name(),
+        kind.name(),
+        rp.name(),
+        opts.scratch_algo,
+        backend.name(),
+    );
+    let res = match run_trace(&trace, rp.as_ref(), &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let t = epoch_table(&res);
+    print!("{}", t.to_text());
+    let naive = res.total_naive_migrated_weight();
+    let worst = res.worst_obj_vs_scratch();
+    println!(
+        "totals: migrated weight {:.1} ({} words) vs naive scratch {:.1}{} | \
+         worst obj/scratch {}",
+        res.total_migrated_weight(),
+        res.total_migration_volume(),
+        naive,
+        if naive > 0.0 {
+            format!(" (ratio {:.3})", res.total_migrated_weight() / naive)
+        } else {
+            String::new()
+        },
+        if worst.is_finite() { format!("{worst:.4}") } else { "-".to_string() },
+    );
+    if let Some(path) = args.opt::<String>("csv") {
+        let p = std::path::PathBuf::from(&path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        match std::fs::write(&p, t.to_csv()) {
+            Ok(()) => println!("[saved {}]", p.display()),
+            Err(e) => {
+                eprintln!("csv write failed: {e}");
+                return 1;
+            }
+        }
     }
     0
 }

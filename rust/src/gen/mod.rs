@@ -14,7 +14,7 @@ pub mod rgg;
 
 pub use delaunay::rdg_2d;
 pub use mesh::{mesh_2d_tri, mesh_3d_tet};
-pub use refine::refined_mesh_2d;
+pub use refine::{front_center, front_weights, refined_mesh_2d, FRONT_BAND, FRONT_RADIUS};
 pub use rgg::{rgg_2d, rgg_3d};
 
 use crate::graph::Csr;

@@ -15,6 +15,37 @@ use crate::graph::{Csr, GraphBuilder};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 
+/// Radius of the circular refinement front.
+pub const FRONT_RADIUS: f64 = 0.25;
+
+/// Width of the band around the front inside which triangles refine.
+pub const FRONT_BAND: f64 = 0.08;
+
+/// Center of the circular front at sweep parameter `t` (the front sweeps
+/// its center along the domain diagonal; the fractional part of `t` wraps
+/// it around, so traces longer than one sweep keep moving).
+pub fn front_center(t: f64) -> (f64, f64) {
+    let f = t - t.floor();
+    (0.15 + 0.7 * f, 0.15 + 0.7 * f)
+}
+
+/// Per-vertex load weights induced by the moving front at sweep parameter
+/// `t`: a smooth Gaussian annulus of amplitude `amp` and width `band`
+/// around the front circle — the load profile of an adaptive FEM step
+/// whose elements concentrate where the solution feature currently is.
+/// Weights are ≥ 1 everywhere (every vertex still carries its base work).
+pub fn front_weights(coords: &[Point], t: f64, amp: f64, band: f64) -> Vec<f64> {
+    let (cx, cy) = front_center(t);
+    coords
+        .iter()
+        .map(|p| {
+            let d = ((p.x - cx).powi(2) + (p.y - cy).powi(2)).sqrt();
+            let off = (d - FRONT_RADIUS) / band;
+            1.0 + amp * (-0.5 * off * off).exp()
+        })
+        .collect()
+}
+
 /// Triangle soup with shared-vertex bookkeeping.
 struct Mesh {
     pts: Vec<Point>,
@@ -92,10 +123,9 @@ pub fn refined_mesh_2d(target_n: usize, seed: u64) -> Csr {
     let mut step = 0usize;
     while mesh.pts.len() < target_n && step < 24 {
         let t = step as f64 / 8.0; // front position parameter
-        let cx = 0.15 + 0.7 * (t - t.floor());
-        let cy = 0.15 + 0.7 * (t - t.floor());
-        let r_front = 0.25;
-        let band = 0.08;
+        let (cx, cy) = front_center(t);
+        let r_front = FRONT_RADIUS;
+        let band = FRONT_BAND;
         let mut next: Vec<[u32; 3]> = Vec::with_capacity(mesh.tris.len() * 2);
         let tris = std::mem::take(&mut mesh.tris);
         for t in tris {
@@ -186,5 +216,44 @@ mod tests {
         let a = refined_mesh_2d(2000, 5);
         let b = refined_mesh_2d(2000, 5);
         assert_eq!(a.adjncy, b.adjncy);
+    }
+
+    #[test]
+    fn front_center_sweeps_and_wraps() {
+        let (x0, y0) = front_center(0.0);
+        assert_eq!((x0, y0), (0.15, 0.15));
+        let (x1, _) = front_center(0.5);
+        assert!((x1 - 0.5).abs() < 1e-12);
+        // Fractional wrap: t = 1.25 and t = 0.25 give the same center.
+        assert_eq!(front_center(1.25), front_center(0.25));
+    }
+
+    #[test]
+    fn front_weights_peak_on_the_annulus() {
+        let g = refined_mesh_2d(3000, 4);
+        let w = front_weights(&g.coords, 0.5, 6.0, 0.1);
+        assert_eq!(w.len(), g.n());
+        assert!(w.iter().all(|&x| x >= 1.0));
+        // A vertex right on the front circle weighs ~1 + amp; a far-away
+        // corner vertex stays ~1.
+        let (cx, cy) = front_center(0.5);
+        let on_front = g
+            .coords
+            .iter()
+            .position(|p| {
+                let d = ((p.x - cx).powi(2) + (p.y - cy).powi(2)).sqrt();
+                (d - FRONT_RADIUS).abs() < 0.02
+            })
+            .expect("some vertex near the front");
+        let far = g
+            .coords
+            .iter()
+            .position(|p| {
+                let d = ((p.x - cx).powi(2) + (p.y - cy).powi(2)).sqrt();
+                (d - FRONT_RADIUS).abs() > 0.35
+            })
+            .expect("some vertex far from the front");
+        assert!(w[on_front] > 5.0, "front weight {}", w[on_front]);
+        assert!(w[far] < 1.1, "far weight {}", w[far]);
     }
 }

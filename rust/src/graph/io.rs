@@ -8,26 +8,35 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Read, Write};
 use std::path::Path;
 
-/// Write a graph in METIS format (1-indexed). Includes edge weights if
-/// present (fmt code 001).
+/// Write a graph in METIS format (1-indexed). Includes edge weights
+/// (fmt code 001) and/or vertex weights (fmt codes 010/011, with
+/// `ncon = 1`) when present. LDHT is a weighted-vertex problem, so
+/// per-epoch load weights survive the round trip; weights are written
+/// with Rust's shortest round-tripping float representation (integral
+/// weights print as plain integers, the strict METIS convention).
 pub fn write_metis(g: &Csr, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    let weighted = !g.adjwgt.is_empty();
-    if weighted {
-        writeln!(w, "{} {} 001", g.n(), g.m())?;
-    } else {
-        writeln!(w, "{} {}", g.n(), g.m())?;
+    let has_ewgt = !g.adjwgt.is_empty();
+    let has_vwgt = !g.vwgt.is_empty();
+    match (has_vwgt, has_ewgt) {
+        (false, false) => writeln!(w, "{} {}", g.n(), g.m())?,
+        (false, true) => writeln!(w, "{} {} 001", g.n(), g.m())?,
+        (true, false) => writeln!(w, "{} {} 010 1", g.n(), g.m())?,
+        (true, true) => writeln!(w, "{} {} 011 1", g.n(), g.m())?,
     }
     for u in 0..g.n() {
         let mut line = String::new();
+        if has_vwgt {
+            line.push_str(&format!("{}", g.vwgt[u]));
+        }
         for e in g.arc_range(u) {
             if !line.is_empty() {
                 line.push(' ');
             }
             line.push_str(&(g.adjncy[e] + 1).to_string());
-            if weighted {
+            if has_ewgt {
                 line.push(' ');
                 line.push_str(&format!("{}", g.adjwgt[e]));
             }
@@ -37,9 +46,11 @@ pub fn write_metis(g: &Csr, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read a METIS-format graph (supports fmt 000/001; vertex weights not
-/// supported — our instances are unit-weight as in the paper's LDHT
-/// scenario).
+/// Read a METIS-format graph (fmt 000/001/010/011 with `ncon ≤ 1`).
+/// Inconsistent headers are hard errors: an `ncon` without the
+/// vertex-weight fmt digit, multi-constraint weights, vertex sizes
+/// (fmt 1xx), or non-binary fmt digits all reject instead of silently
+/// mis-parsing the vertex lines.
 pub fn read_metis(path: &Path) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
@@ -58,17 +69,35 @@ pub fn read_metis(path: &Path) -> Result<Csr> {
         }
     };
     let parts: Vec<&str> = header.split_whitespace().collect();
-    if parts.len() < 2 {
+    if parts.len() < 2 || parts.len() > 4 {
         bail!("bad METIS header: {header}");
     }
     let n: usize = parts[0].parse()?;
     let m: usize = parts[1].parse()?;
     let fmt = parts.get(2).copied().unwrap_or("000");
-    let has_ewgt = fmt.ends_with('1');
-    if fmt.len() == 3 && &fmt[1..2] == "1" {
-        bail!("vertex-weighted METIS files not supported");
+    if fmt.is_empty() || fmt.len() > 3 || fmt.chars().any(|c| c != '0' && c != '1') {
+        bail!("bad METIS fmt code '{fmt}'");
+    }
+    let fmt = format!("{fmt:0>3}");
+    let has_vsize = fmt.as_bytes()[0] == b'1';
+    let has_vwgt = fmt.as_bytes()[1] == b'1';
+    let has_ewgt = fmt.as_bytes()[2] == b'1';
+    if has_vsize {
+        bail!("vertex sizes (fmt 1xx) not supported");
+    }
+    if let Some(ncon_tok) = parts.get(3) {
+        let ncon: usize = ncon_tok
+            .parse()
+            .with_context(|| format!("bad ncon '{ncon_tok}'"))?;
+        if !has_vwgt {
+            bail!("inconsistent METIS header: ncon={ncon} but fmt {fmt} has no vertex weights");
+        }
+        if ncon != 1 {
+            bail!("multi-constraint vertex weights (ncon={ncon}) not supported");
+        }
     }
     let mut b = super::GraphBuilder::new(n);
+    let mut vwgt: Vec<f64> = Vec::with_capacity(if has_vwgt { n } else { 0 });
     let mut u = 0usize;
     for line in lines {
         let line = line?;
@@ -82,7 +111,20 @@ pub fn read_metis(path: &Path) -> Result<Csr> {
             }
             continue;
         }
-        let toks: Vec<&str> = t.split_whitespace().collect();
+        let mut toks: Vec<&str> = t.split_whitespace().collect();
+        if has_vwgt {
+            if toks.is_empty() {
+                bail!("vertex {u}: missing vertex weight (fmt {fmt})");
+            }
+            let w: f64 = toks[0]
+                .parse()
+                .with_context(|| format!("vertex {u}: bad vertex weight '{}'", toks[0]))?;
+            if !w.is_finite() || w < 0.0 {
+                bail!("vertex {u}: invalid vertex weight {w}");
+            }
+            vwgt.push(w);
+            toks.remove(0);
+        }
         if has_ewgt {
             if toks.len() % 2 != 0 {
                 bail!("odd token count on weighted line {u}");
@@ -106,6 +148,9 @@ pub fn read_metis(path: &Path) -> Result<Csr> {
     }
     if u != n {
         bail!("expected {n} vertex lines, got {u}");
+    }
+    if has_vwgt {
+        b.set_vertex_weights(vwgt);
     }
     let g = b.build();
     if g.m() != m {
@@ -292,5 +337,88 @@ mod tests {
         let g = read_metis(&p).unwrap();
         assert_eq!(g.n(), 2);
         assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn metis_vertex_weight_roundtrip() {
+        // fmt 010: vertex weights only (integral and fractional — LDHT
+        // epoch loads are fractional).
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.set_vertex_weights(vec![3.0, 1.5, 7.25]);
+        let g = b.build();
+        let p = tmpfile("vweighted.graph");
+        write_metis(&g, &p).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert!(txt.starts_with("3 2 010 1\n"), "header: {txt}");
+        let h = read_metis(&p).unwrap();
+        assert_eq!(h.vwgt, g.vwgt);
+        assert_eq!(h.adjncy, g.adjncy);
+        assert_eq!(h.total_vertex_weight(), 11.75);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn metis_vertex_and_edge_weight_roundtrip() {
+        // fmt 011: both weight kinds on every line.
+        let mut b = GraphBuilder::new(3);
+        b.add_weighted_edge(0, 1, 2.0);
+        b.add_weighted_edge(1, 2, 3.5);
+        b.set_vertex_weights(vec![2.0, 4.0, 6.0]);
+        let g = b.build();
+        let p = tmpfile("vweighted_both.graph");
+        write_metis(&g, &p).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert!(txt.starts_with("3 2 011 1\n"), "header: {txt}");
+        let h = read_metis(&p).unwrap();
+        assert_eq!(h.vwgt, g.vwgt);
+        assert_eq!(h.adjwgt, g.adjwgt);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn metis_isolated_vertex_keeps_its_weight() {
+        let p = tmpfile("isolated_vw.graph");
+        // Vertex 3 (the last line) has a weight but no neighbors.
+        std::fs::write(&p, "3 1 010 1\n5 2\n9 1\n1\n").unwrap();
+        let g = read_metis(&p).unwrap();
+        assert_eq!(g.vwgt, vec![5.0, 9.0, 1.0]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn metis_rejects_inconsistent_headers() {
+        let cases: [(&str, &str); 6] = [
+            // ncon without the vertex-weight fmt digit.
+            ("2 1 001 1\n2 1\n1 1\n", "ncon"),
+            // multi-constraint weights.
+            ("2 1 010 2\n1 1 2\n2 2 1\n", "multi-constraint"),
+            // vertex sizes.
+            ("2 1 100\n2\n1\n", "vertex sizes"),
+            // non-binary fmt digit.
+            ("2 1 020\n2\n1\n", "fmt"),
+            // too many header fields.
+            ("2 1 011 1 9\n2 1\n1 1\n", "header"),
+            // vertex-weight line missing the weight token.
+            ("2 1 010 1\n\n1\n", "missing vertex weight"),
+        ];
+        for (i, (content, needle)) in cases.iter().enumerate() {
+            let p = tmpfile(&format!("bad_header_{i}.graph"));
+            std::fs::write(&p, content).unwrap();
+            let err = read_metis(&p).unwrap_err().to_string();
+            assert!(
+                err.contains(needle),
+                "case {i}: error '{err}' missing '{needle}'"
+            );
+        }
+    }
+
+    #[test]
+    fn metis_rejects_negative_vertex_weight() {
+        let p = tmpfile("neg_vw.graph");
+        std::fs::write(&p, "2 1 010 1\n-1 2\n1 1\n").unwrap();
+        assert!(read_metis(&p).is_err());
     }
 }

@@ -261,6 +261,8 @@ mod tests {
                 epsilon: 0.03,
                 seed: 1,
                 solve_iters: 0,
+                dynamic: crate::repart::DynamicKind::None,
+                epochs: 0,
             },
             n: 100,
             m: 180,
@@ -273,6 +275,7 @@ mod tests {
             time_partition: 0.001,
             sim_time_per_iter: None,
             final_residual: None,
+            dynamic: None,
         }
     }
 

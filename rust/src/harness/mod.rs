@@ -4,9 +4,10 @@
 //!
 //! Three layers:
 //! - [`scenario`] — a [`Scenario`](scenario::Scenario) is one matrix cell
-//!   (mesh family × size × topology preset × partitioner × ε × seed);
+//!   (mesh family × size × topology preset × partitioner × ε × seed,
+//!   plus a `dynamic` axis for multi-epoch repartitioning traces);
 //!   [`MatrixKind`](scenario::MatrixKind) registers the named sweeps
-//!   (`smoke`, `paper-small`, `paper-full`) reachable via
+//!   (`smoke`, `paper-small`, `paper-full`, `dynamic`) reachable via
 //!   `hetpart harness --matrix <name>`;
 //! - [`runner`] — executes a matrix in parallel and writes structured
 //!   artifacts (CSV + JSON per run, per-partitioner geomean summaries);
@@ -29,7 +30,9 @@ pub mod runner;
 pub mod scenario;
 
 pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
-pub use runner::{run_matrix, run_scenario, summarize, write_artifacts, ScenarioResult};
+pub use runner::{
+    run_matrix, run_scenario, summarize, write_artifacts, DynamicSummary, ScenarioResult,
+};
 pub use scenario::{alg1_targets, MatrixKind, Scenario, TopoPreset, ALL_PRESETS};
 
 use crate::util::table::Table;

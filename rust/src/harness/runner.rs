@@ -14,10 +14,13 @@ use crate::coordinator::{instance, run_jobs, run_one, run_solve};
 use crate::exec::ExecBackend;
 use crate::gen::Family;
 use crate::graph::Csr;
+use crate::repart::{
+    repartitioner_for_trace, run_trace, DynamicKind, EpochTrace, TraceOptions,
+};
 use crate::util::json::{obj, Json};
 use crate::util::stats::geomean;
 use crate::util::table::Table;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One completed scenario: the full description plus every measured
@@ -41,10 +44,30 @@ pub struct ScenarioResult {
     pub sim_time_per_iter: Option<f64>,
     /// Final CG residual after `solve_iters` iterations (deterministic).
     pub final_residual: Option<f64>,
+    /// Multi-epoch aggregates for dynamic scenarios (None for static).
+    pub dynamic: Option<DynamicSummary>,
+}
+
+/// Aggregates of a dynamic (multi-epoch) scenario. The per-epoch quality
+/// fields of [`ScenarioResult`] hold the *final* epoch's values.
+#[derive(Debug, Clone)]
+pub struct DynamicSummary {
+    pub epochs: usize,
+    /// Total vertex weight migrated across epochs.
+    pub migrated_weight: f64,
+    /// Total words shipped through the `Comm` transport.
+    pub migration_volume: usize,
+    /// Weight a naive scratch repartition would have migrated.
+    pub naive_migrated_weight: f64,
+    /// Worst per-epoch LDHT objective relative to from-scratch.
+    pub worst_obj_vs_scratch: f64,
 }
 
 /// Run one scenario against an already-generated instance.
 pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioResult> {
+    if s.dynamic != DynamicKind::None {
+        return run_dynamic_scenario(s, g);
+    }
     let topo = s.topology();
     let (r, part) = run_one(graph_name, g, &topo, &s.algo, s.epsilon, s.seed)
         .with_context(|| format!("scenario {}", s.id()))?;
@@ -73,6 +96,52 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         time_partition: r.time_partition,
         sim_time_per_iter,
         final_residual,
+        dynamic: None,
+    })
+}
+
+/// Run a multi-epoch (dynamic) scenario: `algo` names a repartitioner,
+/// the trace follows the scenario's dynamic kind, and the recorded
+/// quality metrics are the *final* epoch's (the state the system ends
+/// in), with migration aggregated over the whole trace.
+fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
+    let opts = TraceOptions {
+        scratch_algo: "geoKM".to_string(),
+        backend: ExecBackend::Sim,
+        epsilon: s.epsilon,
+        seed: s.seed,
+    };
+    let rp = repartitioner_for_trace(&s.algo, &opts.scratch_algo)
+        .ok_or_else(|| anyhow!("unknown repartitioner {}", s.algo))?;
+    let trace = EpochTrace::new(g, s.topology(), s.dynamic, s.epochs.max(2), s.seed);
+    let res = run_trace(&trace, rp.as_ref(), &opts)
+        .with_context(|| format!("dynamic scenario {}", s.id()))?;
+    let last = res.records.last().expect("trace has at least one epoch");
+    let ldht_ratio = if last.ldht_optimum > 0.0 {
+        last.ldht_objective / last.ldht_optimum
+    } else {
+        f64::NAN
+    };
+    Ok(ScenarioResult {
+        scenario: s.clone(),
+        n: g.n(),
+        m: g.m(),
+        cut: last.cut,
+        max_comm_volume: last.max_comm_volume,
+        total_comm_volume: last.total_comm_volume,
+        imbalance: last.imbalance,
+        ldht_objective: last.ldht_objective,
+        ldht_ratio,
+        time_partition: res.records.iter().map(|r| r.time_repartition).sum(),
+        sim_time_per_iter: None,
+        final_residual: None,
+        dynamic: Some(DynamicSummary {
+            epochs: res.records.len(),
+            migrated_weight: res.total_migrated_weight(),
+            migration_volume: res.total_migration_volume(),
+            naive_migrated_weight: res.total_naive_migrated_weight(),
+            worst_obj_vs_scratch: res.worst_obj_vs_scratch(),
+        }),
     })
 }
 
@@ -194,10 +263,35 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
     let mut t = Table::new(vec![
         "id", "family", "n", "m", "k", "preset", "algo", "epsilon", "seed", "cut",
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
-        "simT/iter(ms)", "residual",
+        "simT/iter(ms)", "residual", "dynamic", "epochs", "migWeight", "migW/naive",
+        "objVsScratch",
     ]);
     for r in results {
         let s = &r.scenario;
+        let (dynamic, epochs, mig_w, mig_vs_naive, obj_vs) = match &r.dynamic {
+            None => (
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ),
+            Some(d) => (
+                s.dynamic.name().to_string(),
+                d.epochs.to_string(),
+                format!("{:.1}", d.migrated_weight),
+                if d.naive_migrated_weight > 0.0 {
+                    format!("{:.3}", d.migrated_weight / d.naive_migrated_weight)
+                } else {
+                    "-".to_string()
+                },
+                if d.worst_obj_vs_scratch.is_finite() {
+                    format!("{:.4}", d.worst_obj_vs_scratch)
+                } else {
+                    "-".to_string()
+                },
+            ),
+        };
         t.row(vec![
             s.id(),
             s.family.name().to_string(),
@@ -220,6 +314,11 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 Some(x) => format!("{x:.3e}"),
                 None => "-".to_string(),
             },
+            dynamic,
+            epochs,
+            mig_w,
+            mig_vs_naive,
+            obj_vs,
         ]);
     }
     t
@@ -273,6 +372,26 @@ pub fn result_json(r: &ScenarioResult) -> Json {
         (
             "final_residual",
             r.final_residual.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "dynamic",
+            match &r.dynamic {
+                None => Json::Null,
+                Some(d) => obj(vec![
+                    ("kind", Json::Str(r.scenario.dynamic.name().to_string())),
+                    ("epochs", Json::Num(d.epochs as f64)),
+                    ("migrated_weight", Json::Num(d.migrated_weight)),
+                    ("migration_volume", Json::Num(d.migration_volume as f64)),
+                    (
+                        "naive_migrated_weight",
+                        Json::Num(d.naive_migrated_weight),
+                    ),
+                    (
+                        "worst_obj_vs_scratch",
+                        Json::Num(d.worst_obj_vs_scratch),
+                    ),
+                ]),
+            },
         ),
     ])
 }
@@ -361,6 +480,8 @@ mod tests {
                 epsilon: 0.05,
                 seed: 7,
                 solve_iters: 0,
+                dynamic: DynamicKind::None,
+                epochs: 0,
             })
             .collect()
     }
@@ -431,5 +552,39 @@ mod tests {
         assert_eq!(back.get("id").unwrap().as_str().unwrap(), ok[0].scenario.id());
         assert_eq!(back.get("cut").unwrap().as_f64().unwrap(), ok[0].cut);
         assert_eq!(back.get("sim_time_per_iter_s").unwrap(), &Json::Null);
+        assert_eq!(back.get("dynamic").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn dynamic_scenario_runs_through_the_repart_driver() {
+        let s = Scenario {
+            family: Family::Refined2d,
+            n: 900,
+            k: 4,
+            topo: TopoPreset::Uniform,
+            algo: "diffusion".to_string(),
+            epsilon: 0.03,
+            seed: 7,
+            solve_iters: 0,
+            dynamic: DynamicKind::RefineFront,
+            epochs: 3,
+        };
+        let (ok, failed) = run_matrix(&[s], 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        let r = &ok[0];
+        let d = r.dynamic.as_ref().expect("dynamic summary missing");
+        assert_eq!(d.epochs, 3);
+        assert!(d.migrated_weight > 0.0, "nothing migrated on a front trace");
+        assert!(d.migration_volume > 0);
+        assert!(d.worst_obj_vs_scratch.is_finite());
+        assert!(r.cut > 0.0);
+        // JSON carries the dynamic block.
+        let back = Json::parse(&result_json(r).render()).unwrap();
+        let dj = back.get("dynamic").unwrap();
+        assert_eq!(dj.get("epochs").unwrap().as_f64().unwrap(), 3.0);
+        // The table renders dynamic columns.
+        let table = runs_table(&ok);
+        assert_eq!(table.rows.len(), 1);
+        assert!(table.rows[0].iter().any(|c| c == "refine-front"));
     }
 }

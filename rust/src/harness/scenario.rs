@@ -11,6 +11,7 @@ use crate::blocksizes::{block_sizes, TABLE3_FILL};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partitioners::ALL_NAMES;
+use crate::repart::{DynamicKind, REPART_NAMES};
 use crate::topology::{topo1, Pu, Topo1Spec, Topology};
 use anyhow::{Context, Result};
 
@@ -108,13 +109,21 @@ pub struct Scenario {
     /// If > 0, also run this many distributed-CG iterations through the
     /// virtual-cluster engine (`sim` backend) and record time/iteration.
     pub solve_iters: usize,
+    /// The dynamic axis: `none` runs the classic one-shot pipeline;
+    /// `refine-front`/`speed-drift` replay a multi-epoch trace where
+    /// `algo` names a *repartitioner* (`repart::repartitioner_by_name`).
+    pub dynamic: DynamicKind,
+    /// Number of epochs for dynamic scenarios (≥ 2; ignored for `none`).
+    pub epochs: usize,
 }
 
 impl Scenario {
     /// Stable identifier used as the golden-baseline key and artifact
-    /// file name.
+    /// file name. Static scenarios keep their historical id (so golden
+    /// baselines survive the dynamic axis); dynamic scenarios append
+    /// `-dyn<kind>-E<epochs>`.
     pub fn id(&self) -> String {
-        format!(
+        let base = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
             self.family.name(),
             self.n,
@@ -123,7 +132,12 @@ impl Scenario {
             self.algo,
             self.epsilon,
             self.seed
-        )
+        );
+        if self.dynamic == DynamicKind::None {
+            base
+        } else {
+            format!("{base}-dyn{}-E{}", self.dynamic.name(), self.epochs)
+        }
     }
 
     /// The concrete topology this scenario runs on.
@@ -158,6 +172,9 @@ pub enum MatrixKind {
     /// Same structure at benchmark sizes, plus the paper-excluded tools
     /// (lpPulp, zMJ) on the uniform preset.
     PaperFull,
+    /// The dynamic-repartitioning matrix: refine-front and speed-drift
+    /// traces × the three repartitioners on the twospeed preset.
+    Dynamic,
 }
 
 impl MatrixKind {
@@ -166,6 +183,7 @@ impl MatrixKind {
             MatrixKind::Smoke => "smoke",
             MatrixKind::PaperSmall => "paper-small",
             MatrixKind::PaperFull => "paper-full",
+            MatrixKind::Dynamic => "dynamic",
         }
     }
 
@@ -174,6 +192,7 @@ impl MatrixKind {
             "smoke" => MatrixKind::Smoke,
             "paper-small" | "paper_small" | "small" => MatrixKind::PaperSmall,
             "paper-full" | "paper_full" | "full" => MatrixKind::PaperFull,
+            "dynamic" | "dyn" | "repart" => MatrixKind::Dynamic,
             _ => return None,
         })
     }
@@ -201,8 +220,28 @@ impl MatrixKind {
                                 epsilon: EPS,
                                 seed: SEED,
                                 solve_iters: 10,
+                                dynamic: DynamicKind::None,
+                                epochs: 0,
                             });
                         }
+                    }
+                }
+            }
+            MatrixKind::Dynamic => {
+                for dynamic in [DynamicKind::RefineFront, DynamicKind::SpeedDrift] {
+                    for algo in REPART_NAMES {
+                        out.push(Scenario {
+                            family: Family::Refined2d,
+                            n: 1500,
+                            k: 8,
+                            topo: TopoPreset::TwoSpeed,
+                            algo: algo.to_string(),
+                            epsilon: EPS,
+                            seed: SEED,
+                            solve_iters: 0,
+                            dynamic,
+                            epochs: 5,
+                        });
                     }
                 }
             }
@@ -260,6 +299,8 @@ fn push_paper_grid(
                     epsilon,
                     seed,
                     solve_iters,
+                    dynamic: DynamicKind::None,
+                    epochs: 0,
                 });
             }
         }
@@ -307,10 +348,36 @@ mod tests {
 
     #[test]
     fn matrix_names_round_trip() {
-        for m in [MatrixKind::Smoke, MatrixKind::PaperSmall, MatrixKind::PaperFull] {
+        for m in [
+            MatrixKind::Smoke,
+            MatrixKind::PaperSmall,
+            MatrixKind::PaperFull,
+            MatrixKind::Dynamic,
+        ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
         assert!(MatrixKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn dynamic_matrix_shape() {
+        let s = MatrixKind::Dynamic.scenarios();
+        // 2 dynamics × 3 repartitioners.
+        assert_eq!(s.len(), 6);
+        for x in &s {
+            assert_ne!(x.dynamic, DynamicKind::None);
+            assert!(x.epochs >= 2);
+            assert!(
+                crate::repart::repartitioner_by_name(&x.algo).is_some(),
+                "{} not a repartitioner",
+                x.algo
+            );
+        }
+        // IDs unique.
+        let mut ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), s.len());
     }
 
     #[test]
@@ -344,7 +411,7 @@ mod tests {
 
     #[test]
     fn scenario_id_format() {
-        let s = Scenario {
+        let mut s = Scenario {
             family: Family::Tri2d,
             n: 900,
             k: 8,
@@ -353,8 +420,18 @@ mod tests {
             epsilon: 0.03,
             seed: 42,
             solve_iters: 0,
+            dynamic: DynamicKind::None,
+            epochs: 0,
         };
+        // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
+        s.dynamic = DynamicKind::RefineFront;
+        s.epochs = 5;
+        s.algo = "diffusion".into();
+        assert_eq!(
+            s.id(),
+            "tri_2d-n900-k8-uniform-diffusion-e0.03-s42-dynrefine-front-E5"
+        );
     }
 
     #[test]

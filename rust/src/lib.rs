@@ -22,11 +22,17 @@
 //!   over per-PU row blocks behind a `Comm` transport abstraction, with
 //!   a sequential α-β-priced backend and a thread-per-PU shared-memory
 //!   backend;
+//! - the **dynamic repartitioning subsystem** ([`repart`]): epoch traces
+//!   replaying adaptive workloads (moving refinement front, PU speed
+//!   drift), three repartitioners behind one `Repartitioner` trait
+//!   (scratch-remap, diffusive rebalancing, incremental geoKM), and data
+//!   migration executed and priced through the `exec::Comm` seam;
 //! - an experiment **coordinator** ([`coordinator`]) and scenario-matrix
 //!   **harness** ([`harness`]): declarative scenarios with paper-faithful
-//!   topology presets, a parallel matrix runner with CSV/JSON artifacts,
-//!   golden-baseline regression gates, and the drivers regenerating every
-//!   table and figure of the paper.
+//!   topology presets (plus a `dynamic` axis for multi-epoch scenarios),
+//!   a parallel matrix runner with CSV/JSON artifacts, golden-baseline
+//!   regression gates, and the drivers regenerating every table and
+//!   figure of the paper.
 //!
 //! See [`DESIGN.md`](../../DESIGN.md) for the architecture and
 //! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for how to regenerate the
@@ -43,6 +49,7 @@ pub mod mapping;
 pub mod partition;
 pub mod partitioners;
 pub mod prop;
+pub mod repart;
 pub mod runtime;
 pub mod solver;
 pub mod topology;

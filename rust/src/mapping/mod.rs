@@ -82,8 +82,10 @@ pub fn mapping_cost(q: &QuotientGraph, cost: &CommCost, pi: &[u32]) -> f64 {
 }
 
 /// Speed classes: blocks may only map to PUs of (nearly) the same speed,
-/// because Algorithm 1 sized block i for PU i's capability.
-fn speed_classes(topo: &Topology) -> Vec<Vec<u32>> {
+/// because Algorithm 1 sized block i for PU i's capability. Public so the
+/// repartitioning subsystem's scratch-remap step shares the exact same
+/// class boundaries as the static mapping heuristics.
+pub fn speed_classes(topo: &Topology) -> Vec<Vec<u32>> {
     let mut classes: Vec<(f64, Vec<u32>)> = Vec::new();
     for (i, pu) in topo.pus.iter().enumerate() {
         match classes
@@ -280,10 +282,7 @@ mod tests {
         let (_g, q, _) = quotient_for(8);
         let topo = hier_topo(2, 4);
         let cost = CommCost::from_topology(&topo);
-        let scrambled: Vec<u32> = vec![0, 4, 1, 5, 2, 6, 3, 7]
-            .into_iter()
-            .map(|x: u32| x)
-            .collect();
+        let scrambled: Vec<u32> = vec![0, 4, 1, 5, 2, 6, 3, 7];
         let (refined, rc) = refine_mapping(&q, &cost, &topo, scrambled.clone(), 10);
         assert!(rc <= mapping_cost(&q, &cost, &scrambled));
         let mut sorted = refined;

@@ -90,6 +90,54 @@ pub fn metrics(g: &Csr, p: &Partition, targets: &[f64]) -> Metrics {
     }
 }
 
+/// Epoch-to-epoch migration metrics of a repartitioning step: how much
+/// application data must move when the assignment changes from `prev` to
+/// `next` (the cost side of the dynamic-repartitioning trade-off; the
+/// quality side is the per-epoch [`Metrics`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationMetrics {
+    /// Total vertex weight that changed blocks.
+    pub migrated_weight: f64,
+    /// Number of vertices that changed blocks (= words shipped when each
+    /// vertex carries one value, the unit `repart::execute_migration`
+    /// prices through the `Comm` seam).
+    pub migrated_vertices: usize,
+    /// Total vertex weight of the graph (denominator for fractions).
+    pub total_weight: f64,
+}
+
+impl MigrationMetrics {
+    /// Migrated weight as a fraction of total weight (0 when empty).
+    pub fn frac_weight(&self) -> f64 {
+        if self.total_weight > 0.0 {
+            self.migrated_weight / self.total_weight
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Compare two assignments of the *same* vertex set under the current
+/// epoch's vertex weights. Panics if either partition disagrees with the
+/// graph on the vertex count.
+pub fn migration(g: &Csr, prev: &Partition, next: &Partition) -> MigrationMetrics {
+    assert_eq!(prev.n(), g.n(), "prev partition size != graph size");
+    assert_eq!(next.n(), g.n(), "next partition size != graph size");
+    let mut migrated_weight = 0.0;
+    let mut migrated_vertices = 0usize;
+    for u in 0..g.n() {
+        if prev.assignment[u] != next.assignment[u] {
+            migrated_weight += g.vertex_weight(u);
+            migrated_vertices += 1;
+        }
+    }
+    MigrationMetrics {
+        migrated_weight,
+        migrated_vertices,
+        total_weight: g.total_vertex_weight(),
+    }
+}
+
 impl Metrics {
     /// The LDHT objective (Eq. (2)): max_i w(b_i)/c_s(p_i).
     pub fn ldht_objective(&self, speeds: &[f64]) -> f64 {
@@ -279,6 +327,37 @@ mod tests {
         // LDHT objective with speeds (2, 1): max(2/2, 2/1) = 2 — the slow
         // PU dominates even at equal weights.
         assert_eq!(m.ldht_objective(&[2.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn migration_counts_changed_vertices_and_weight() {
+        let g = grid3x2();
+        let a = Partition::new(vec![0, 0, 0, 1, 1, 1], 2);
+        let b = Partition::new(vec![0, 0, 1, 1, 1, 1], 2);
+        let m = migration(&g, &a, &b);
+        assert_eq!(m.migrated_vertices, 1);
+        assert_eq!(m.migrated_weight, 1.0);
+        assert_eq!(m.total_weight, 6.0);
+        assert!((m.frac_weight() - 1.0 / 6.0).abs() < 1e-12);
+        // Identical partitions migrate nothing.
+        let z = migration(&g, &a, &a);
+        assert_eq!(z.migrated_vertices, 0);
+        assert_eq!(z.migrated_weight, 0.0);
+    }
+
+    #[test]
+    fn migration_respects_vertex_weights() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.set_vertex_weights(vec![5.0, 1.0, 2.0]);
+        let g = b.build();
+        let p = Partition::new(vec![0, 0, 1], 2);
+        let q = Partition::new(vec![1, 0, 1], 2);
+        let m = migration(&g, &p, &q);
+        assert_eq!(m.migrated_vertices, 1);
+        assert_eq!(m.migrated_weight, 5.0);
+        assert_eq!(m.total_weight, 8.0);
     }
 
     /// Vertex weights scale communication volume (a heavy boundary vertex

@@ -7,7 +7,7 @@
 
 mod metrics;
 
-pub use metrics::{Metrics, metrics};
+pub use metrics::{metrics, migration, Metrics, MigrationMetrics};
 
 use crate::graph::Csr;
 

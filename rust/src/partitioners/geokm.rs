@@ -54,53 +54,83 @@ impl Partitioner for GeoKMeans {
         if k == 1 {
             return Ok(Partition::trivial(n));
         }
-        let mut centers = seed_centers(g, ctx.targets);
-        let mut influence = vec![1.0f64; k];
-        let mut assignment = vec![0u32; n];
-        let mut weights = vec![0.0f64; k];
-        for _iter in 0..self.max_iters {
-            // Assignment step (the hot loop) — chunked across the job
-            // queue. Each vertex's nearest center is independent, and
-            // the weights are re-accumulated sequentially in vertex
-            // order, so the result is bit-identical to the sequential
-            // loop regardless of worker count.
-            let workers = self
-                .workers
-                .unwrap_or_else(crate::coordinator::jobqueue::default_workers);
-            assign_step(g, &centers, &influence, &mut assignment, workers);
-            weights.iter_mut().for_each(|w| *w = 0.0);
-            for u in 0..n {
-                weights[assignment[u] as usize] += g.vertex_weight(u);
-            }
-            // Center update.
-            let mut sums = vec![Point::zero(g.coords[0].dim); k];
-            let mut wsum = vec![0.0f64; k];
-            for u in 0..n {
-                let b = assignment[u] as usize;
-                let w = g.vertex_weight(u);
-                sums[b] = sums[b].add(&g.coords[u].scale(w));
-                wsum[b] += w;
-            }
-            for i in 0..k {
-                if wsum[i] > 0.0 {
-                    centers[i] = sums[i].scale(1.0 / wsum[i]);
-                }
-            }
-            // Influence update toward targets.
-            let mut max_over = 0.0f64;
-            for i in 0..k {
-                let ratio = (weights[i] / ctx.targets[i]).max(1e-12);
-                influence[i] = (influence[i] * ratio.powf(self.gamma)).clamp(1e-3, 1e3);
-                max_over = max_over.max(weights[i] / ctx.targets[i] - 1.0);
-            }
-            if max_over <= ctx.epsilon * 0.5 {
-                break;
-            }
-        }
-        // Strict rebalance to meet the ε bound exactly.
-        rebalance(g, &centers, ctx.targets, ctx.epsilon, &mut assignment);
+        let centers = seed_centers(g, ctx.targets);
+        let workers = self
+            .workers
+            .unwrap_or_else(crate::coordinator::jobqueue::default_workers);
+        let assignment = lloyd_from_centers(
+            g,
+            centers,
+            ctx.targets,
+            ctx.epsilon,
+            self.max_iters,
+            self.gamma,
+            workers,
+        );
         Ok(Partition::new(assignment, k))
     }
+}
+
+/// The influence-k-means core of `geoKM`, warm-startable from arbitrary
+/// centers: Lloyd iterations with per-cluster influence factors steering
+/// weights toward the targets, followed by the strict ε rebalance. Used
+/// by [`GeoKMeans::partition`] (Hilbert-seeded centers) and by the
+/// incremental repartitioner (`repart::IncrementalGeoKM`, previous
+/// epoch's centers). Deterministic regardless of `workers`.
+pub fn lloyd_from_centers(
+    g: &crate::graph::Csr,
+    mut centers: Vec<Point>,
+    targets: &[f64],
+    epsilon: f64,
+    max_iters: usize,
+    gamma: f64,
+    workers: usize,
+) -> Vec<u32> {
+    let k = targets.len();
+    let n = g.n();
+    debug_assert_eq!(centers.len(), k);
+    let mut influence = vec![1.0f64; k];
+    let mut assignment = vec![0u32; n];
+    let mut weights = vec![0.0f64; k];
+    for _iter in 0..max_iters {
+        // Assignment step (the hot loop) — chunked across the job
+        // queue. Each vertex's nearest center is independent, and
+        // the weights are re-accumulated sequentially in vertex
+        // order, so the result is bit-identical to the sequential
+        // loop regardless of worker count.
+        assign_step(g, &centers, &influence, &mut assignment, workers);
+        weights.iter_mut().for_each(|w| *w = 0.0);
+        for u in 0..n {
+            weights[assignment[u] as usize] += g.vertex_weight(u);
+        }
+        // Center update.
+        let mut sums = vec![Point::zero(g.coords[0].dim); k];
+        let mut wsum = vec![0.0f64; k];
+        for u in 0..n {
+            let b = assignment[u] as usize;
+            let w = g.vertex_weight(u);
+            sums[b] = sums[b].add(&g.coords[u].scale(w));
+            wsum[b] += w;
+        }
+        for i in 0..k {
+            if wsum[i] > 0.0 {
+                centers[i] = sums[i].scale(1.0 / wsum[i]);
+            }
+        }
+        // Influence update toward targets.
+        let mut max_over = 0.0f64;
+        for i in 0..k {
+            let ratio = (weights[i] / targets[i]).max(1e-12);
+            influence[i] = (influence[i] * ratio.powf(gamma)).clamp(1e-3, 1e3);
+            max_over = max_over.max(weights[i] / targets[i] - 1.0);
+        }
+        if max_over <= epsilon * 0.5 {
+            break;
+        }
+    }
+    // Strict rebalance to meet the ε bound exactly.
+    rebalance(g, &centers, targets, epsilon, &mut assignment);
+    assignment
 }
 
 /// Index of the center minimizing `dist²(p, c_i) · f_i` (ties go to the
@@ -364,6 +394,19 @@ mod tests {
             .map(|u| nearest_center(&g.coords[u], &centers, &influence))
             .collect();
         assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn lloyd_from_centers_matches_default_pipeline() {
+        // The extracted core, driven from the same Hilbert seeds, must
+        // reproduce GeoKMeans::partition exactly (any worker count).
+        let g = rgg_2d(1500, 4);
+        let topo = Topology::homogeneous(5, 1.0, 1e9);
+        let targets = vec![300.0; 5];
+        let p = GeoKMeans::default().partition(&ctx(&g, &targets, &topo)).unwrap();
+        let centers = seed_centers(&g, &targets);
+        let a = lloyd_from_centers(&g, centers, &targets, 0.03, 40, 0.6, 1);
+        assert_eq!(p.assignment, a);
     }
 
     #[test]

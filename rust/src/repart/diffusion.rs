@@ -1,0 +1,255 @@
+//! Diffusive rebalancing on the quotient graph.
+//!
+//! Keeps the previous epoch's partition and repairs it in place: boundary
+//! vertices flow from overloaded blocks toward underloaded quotient
+//! neighbors, respecting the heterogeneous capacities `(1+ε)·tw(b_i)`.
+//! Each move is chosen by cut gain (external arcs to the receiver minus
+//! internal arcs), so the repaired partition stays locally compact. When
+//! no admissible boundary move remains but some block is still over its
+//! capacity (a load spike far from any underloaded neighbor), a bounded
+//! fallback pass teleports the lightest surplus vertices directly — that
+//! guarantees the ε bound whenever it is satisfiable, which is what
+//! bounds the LDHT objective at `(1+ε)·`optimum regardless of how far
+//! the load moved.
+//!
+//! Migration is inherently small: only the surplus weight (plus the
+//! little the gain heuristic shuffles along the way) ever moves, in
+//! contrast to a from-scratch repartition that relabels freely.
+
+use super::{EpochCtx, Repartitioner};
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+
+pub struct Diffusion {
+    /// Maximum diffusion rounds before the fallback pass.
+    pub max_rounds: usize,
+}
+
+impl Default for Diffusion {
+    fn default() -> Self {
+        Diffusion { max_rounds: 48 }
+    }
+}
+
+impl Repartitioner for Diffusion {
+    fn name(&self) -> &'static str {
+        "diffusion"
+    }
+
+    fn repartition(&self, ctx: &EpochCtx) -> Result<Partition> {
+        let g = ctx.graph;
+        let k = ctx.k();
+        ensure!(ctx.prev.k == k, "prev partition k={} vs targets {}", ctx.prev.k, k);
+        ensure!(ctx.prev.n() == g.n(), "prev partition size != graph size");
+        let mut assignment = ctx.prev.assignment.clone();
+        let caps: Vec<f64> = ctx.targets.iter().map(|t| t * (1.0 + ctx.epsilon)).collect();
+        let mut weights = vec![0.0f64; k];
+        for u in 0..g.n() {
+            weights[assignment[u] as usize] += g.vertex_weight(u);
+        }
+
+        for _round in 0..self.max_rounds {
+            if !(0..k).any(|i| weights[i] > caps[i]) {
+                break;
+            }
+            let mut moved = false;
+            // One sweep: every vertex of an overloaded block may hop to
+            // the best admissible neighbor block. Sequential in vertex
+            // order with in-flight weight updates — deterministic.
+            for u in 0..g.n() {
+                let b = assignment[u] as usize;
+                if weights[b] <= caps[b] {
+                    continue;
+                }
+                let wu = g.vertex_weight(u);
+                let load_b = weights[b] / ctx.targets[b].max(1e-300);
+                // Arc weight from u into each candidate block.
+                let mut to_b = 0.0f64;
+                let mut cands: Vec<(u32, f64)> = Vec::new(); // (block, arc weight)
+                for e in g.arc_range(u) {
+                    let bv = assignment[g.adjncy[e] as usize];
+                    if bv as usize == b {
+                        to_b += g.arc_weight(e);
+                    } else {
+                        match cands.iter_mut().find(|(j, _)| *j == bv) {
+                            Some((_, w)) => *w += g.arc_weight(e),
+                            None => cands.push((bv, g.arc_weight(e))),
+                        }
+                    }
+                }
+                // Best admissible receiver: fits under cap, strictly less
+                // loaded than the sender, max cut gain (ties: lower id).
+                let mut best: Option<(f64, u32)> = None;
+                for &(j, wj) in &cands {
+                    let ju = j as usize;
+                    if weights[ju] + wu > caps[ju] {
+                        continue;
+                    }
+                    let load_j = weights[ju] / ctx.targets[ju].max(1e-300);
+                    if load_j >= load_b {
+                        continue;
+                    }
+                    let gain = wj - to_b;
+                    let better = match best {
+                        None => true,
+                        Some((bg, bj)) => gain > bg + 1e-12 || ((gain - bg).abs() <= 1e-12 && j < bj),
+                    };
+                    if better {
+                        best = Some((gain, j));
+                    }
+                }
+                if let Some((_, j)) = best {
+                    assignment[u] = j;
+                    weights[b] -= wu;
+                    weights[j as usize] += wu;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        // Fallback: teleport the lightest surplus vertices of any block
+        // still over its capacity into the most underloaded block that
+        // fits — guarantees the ε bound when it is satisfiable at all.
+        for b in 0..k {
+            if weights[b] <= caps[b] {
+                continue;
+            }
+            let mut mine: Vec<u32> = (0..g.n() as u32)
+                .filter(|&u| assignment[u as usize] == b as u32)
+                .collect();
+            mine.sort_by(|&x, &y| {
+                g.vertex_weight(x as usize)
+                    .partial_cmp(&g.vertex_weight(y as usize))
+                    .unwrap()
+                    .then(x.cmp(&y))
+            });
+            for &u in &mine {
+                if weights[b] <= caps[b] {
+                    break;
+                }
+                let wu = g.vertex_weight(u as usize);
+                // Most headroom relative to target, must fit.
+                let mut best: Option<(f64, usize)> = None;
+                for j in 0..k {
+                    if j == b || weights[j] + wu > caps[j] {
+                        continue;
+                    }
+                    let load_j = weights[j] / ctx.targets[j].max(1e-300);
+                    if best.map(|(bl, _)| load_j < bl).unwrap_or(true) {
+                        best = Some((load_j, j));
+                    }
+                }
+                let Some((_, j)) = best else { break };
+                assignment[u as usize] = j as u32;
+                weights[b] -= wu;
+                weights[j] += wu;
+            }
+        }
+
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::refine::front_weights;
+    use crate::gen::refined_mesh_2d;
+    use crate::partition::{metrics, migration};
+    use crate::partitioners::{by_name, Ctx};
+    use crate::topology::Topology;
+
+    /// A weighted epoch pair: partition under epoch-0 weights, then ask
+    /// diffusion to repair under shifted weights.
+    fn epoch_pair() -> (crate::graph::Csr, crate::graph::Csr, Partition, Vec<f64>) {
+        let mut g0 = refined_mesh_2d(1500, 11);
+        let mut g1 = g0.clone();
+        g0.vwgt = front_weights(&g0.coords, 0.0, 6.0, 0.12);
+        g1.vwgt = front_weights(&g1.coords, 0.6, 6.0, 0.12);
+        let k = 6;
+        let topo = Topology::homogeneous(k, 1.0, 1e9);
+        let targets0: Vec<f64> = vec![g0.total_vertex_weight() / k as f64; k];
+        let ctx = Ctx { graph: &g0, targets: &targets0, topo: &topo, epsilon: 0.03, seed: 1 };
+        let prev = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let targets1: Vec<f64> = vec![g1.total_vertex_weight() / k as f64; k];
+        (g0, g1, prev, targets1)
+    }
+
+    #[test]
+    fn diffusion_restores_the_epsilon_bound() {
+        let (_g0, g1, prev, targets) = epoch_pair();
+        let topo = Topology::homogeneous(6, 1.0, 1e9);
+        let ectx = EpochCtx {
+            graph: &g1,
+            prev: &prev,
+            targets: &targets,
+            topo: &topo,
+            epsilon: 0.03,
+            seed: 1,
+            scratch: None,
+        };
+        // The stale partition violates the new targets...
+        let before = metrics(&g1, &prev, &targets);
+        assert!(before.imbalance > 0.03, "trace too tame: {}", before.imbalance);
+        // ...and diffusion repairs it within ε.
+        let next = Diffusion::default().repartition(&ectx).unwrap();
+        next.validate(&g1).unwrap();
+        let after = metrics(&g1, &next, &targets);
+        assert!(
+            after.imbalance <= 0.03 + 1e-9,
+            "diffusion left imbalance {}",
+            after.imbalance
+        );
+    }
+
+    #[test]
+    fn diffusion_moves_little_and_is_deterministic() {
+        let (_g0, g1, prev, targets) = epoch_pair();
+        let topo = Topology::homogeneous(6, 1.0, 1e9);
+        let ectx = EpochCtx {
+            graph: &g1,
+            prev: &prev,
+            targets: &targets,
+            topo: &topo,
+            epsilon: 0.03,
+            seed: 1,
+            scratch: None,
+        };
+        let a = Diffusion::default().repartition(&ectx).unwrap();
+        let b = Diffusion::default().repartition(&ectx).unwrap();
+        assert_eq!(a.assignment, b.assignment, "diffusion not deterministic");
+        // Migration stays a modest fraction of the total weight (it only
+        // moves surplus, not whole blocks).
+        let m = migration(&g1, &prev, &a);
+        assert!(
+            m.frac_weight() < 0.5,
+            "diffusion moved {}% of the weight",
+            m.frac_weight() * 100.0
+        );
+        assert!(m.migrated_vertices > 0, "nothing moved at all");
+    }
+
+    #[test]
+    fn already_balanced_input_is_untouched() {
+        let (g0, _g1, prev, _t) = epoch_pair();
+        // Same weights as the epoch the partition was built for: every
+        // block is already within ε, so diffusion must be the identity.
+        let k = 6;
+        let targets: Vec<f64> = vec![g0.total_vertex_weight() / k as f64; k];
+        let topo = Topology::homogeneous(k, 1.0, 1e9);
+        let ectx = EpochCtx {
+            graph: &g0,
+            prev: &prev,
+            targets: &targets,
+            topo: &topo,
+            epsilon: 0.03,
+            seed: 1,
+            scratch: None,
+        };
+        let next = Diffusion::default().repartition(&ectx).unwrap();
+        assert_eq!(next.assignment, prev.assignment);
+    }
+}

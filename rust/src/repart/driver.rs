@@ -1,0 +1,351 @@
+//! The epoch loop: run a repartitioner over an [`EpochTrace`], measuring
+//! per-epoch quality *and* migration, with a from-scratch baseline
+//! alongside.
+//!
+//! For every epoch e ≥ 1 the driver computes:
+//! - the repartitioner's next partition and its quality metrics (cut,
+//!   max communication volume, imbalance, LDHT objective vs the
+//!   Algorithm-1 optimum for this epoch's load);
+//! - the *from-scratch* baseline: a fresh static partition of the same
+//!   epoch, whose objective anchors the quality ratio and whose labels,
+//!   taken naively, define the migration a repartition-oblivious system
+//!   would pay;
+//! - the actual migration, executed through the `exec::Comm` seam
+//!   ([`super::execute_migration`]) so the chosen backend prices it.
+
+use super::migrate::{execute_migration, migration_plan};
+use super::trace::EpochTrace;
+use super::Repartitioner;
+use crate::blocksizes::{block_sizes, TABLE3_FILL};
+use crate::exec::ExecBackend;
+use crate::partition::{metrics, migration, Partition};
+use crate::partitioners::by_name;
+use crate::repart::EpochCtx;
+use crate::util::table::Table;
+use crate::util::timer::Timer;
+use anyhow::{anyhow, Context, Result};
+
+/// Driver knobs.
+pub struct TraceOptions {
+    /// Static partitioner used for the epoch-0 partition and the
+    /// from-scratch baseline.
+    pub scratch_algo: String,
+    /// Transport that executes (and prices) the migration.
+    pub backend: ExecBackend,
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions {
+            scratch_algo: "geoKM".to_string(),
+            backend: ExecBackend::Sim,
+            epsilon: 0.03,
+            seed: 42,
+        }
+    }
+}
+
+/// Everything measured at one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub n: usize,
+    /// Total vertex weight this epoch.
+    pub load: f64,
+    pub cut: f64,
+    pub max_comm_volume: f64,
+    pub total_comm_volume: f64,
+    pub imbalance: f64,
+    pub ldht_objective: f64,
+    /// Algorithm-1 optimum for this epoch's (load, topology).
+    pub ldht_optimum: f64,
+    /// From-scratch baseline's LDHT objective this epoch.
+    pub scratch_objective: f64,
+    /// Vertex weight the repartitioner moved (0 at epoch 0).
+    pub migrated_weight: f64,
+    pub migrated_vertices: usize,
+    /// Words shipped through the `Comm` transport (one per moved vertex).
+    pub migration_volume: usize,
+    /// Slowest rank's migration seconds under the chosen backend.
+    pub migration_secs: f64,
+    /// Weight a naive scratch repartition (fresh labels, no remap) would
+    /// have moved this epoch.
+    pub naive_migrated_weight: f64,
+    /// Repartitioning seconds this epoch.
+    pub time_repartition: f64,
+}
+
+impl EpochRecord {
+    /// Quality ratio vs the from-scratch baseline (≤ 1.15 is the
+    /// subsystem's acceptance bar).
+    pub fn obj_vs_scratch(&self) -> f64 {
+        if self.scratch_objective > 0.0 {
+            self.ldht_objective / self.scratch_objective
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// A completed trace run.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    pub repartitioner: String,
+    pub backend: &'static str,
+    /// One record per epoch (epoch 0 = initial static partition, zero
+    /// migration by definition).
+    pub records: Vec<EpochRecord>,
+}
+
+impl TraceResult {
+    /// Total weight migrated across all epochs.
+    pub fn total_migrated_weight(&self) -> f64 {
+        self.records.iter().map(|r| r.migrated_weight).sum()
+    }
+
+    /// Total weight a naive scratch repartition would have migrated.
+    pub fn total_naive_migrated_weight(&self) -> f64 {
+        self.records.iter().map(|r| r.naive_migrated_weight).sum()
+    }
+
+    /// Total words shipped through the transport.
+    pub fn total_migration_volume(&self) -> usize {
+        self.records.iter().map(|r| r.migration_volume).sum()
+    }
+
+    /// Worst per-epoch quality ratio vs from-scratch (epochs ≥ 1; NaN
+    /// for a single-epoch trace, which has no repartitioned epochs).
+    pub fn worst_obj_vs_scratch(&self) -> f64 {
+        let worst = self
+            .records
+            .iter()
+            .skip(1)
+            .map(|r| r.obj_vs_scratch())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if worst.is_finite() {
+            worst
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Algorithm-1 targets for an epoch: scale the topology's normalized
+/// memory to the epoch load (the `run_one` calibration) and solve.
+fn epoch_targets(
+    g: &crate::graph::Csr,
+    topo: &crate::topology::Topology,
+) -> Result<(crate::topology::Topology, Vec<f64>, f64)> {
+    let load = g.total_vertex_weight();
+    let scaled = topo.scaled_for_load(load, TABLE3_FILL);
+    let bs = block_sizes(load, &scaled)
+        .with_context(|| format!("Algorithm 1 on {}", topo.label))?;
+    Ok((scaled, bs.tw, bs.max_ratio))
+}
+
+/// Run `rp` over the trace. Deterministic given the trace and options.
+pub fn run_trace(
+    trace: &EpochTrace,
+    rp: &dyn Repartitioner,
+    opts: &TraceOptions,
+) -> Result<TraceResult> {
+    let scratch = by_name(&opts.scratch_algo)
+        .ok_or_else(|| anyhow!("unknown partitioner {}", opts.scratch_algo))?;
+    // A front is a geometric object: a coordinate-less graph (e.g. a
+    // METIS file) would silently degenerate to a static trace.
+    anyhow::ensure!(
+        trace.kind != crate::repart::DynamicKind::RefineFront || trace.base.has_coords(),
+        "refine-front traces need vertex coordinates"
+    );
+    let mut records = Vec::with_capacity(trace.epochs);
+
+    // Epoch 0: everyone starts from the same static partition.
+    let e0 = trace.epoch(0);
+    let (scaled0, tw0, opt0) = epoch_targets(&e0.graph, &e0.topo)?;
+    let timer = Timer::start();
+    let initial = scratch.partition(&crate::partitioners::Ctx {
+        graph: &e0.graph,
+        targets: &tw0,
+        topo: &scaled0,
+        epsilon: opts.epsilon,
+        seed: opts.seed,
+    })?;
+    let t0_secs = timer.secs();
+    initial.validate(&e0.graph).map_err(anyhow::Error::msg)?;
+    let speeds0: Vec<f64> = scaled0.pus.iter().map(|p| p.speed).collect();
+    let m0 = metrics(&e0.graph, &initial, &tw0);
+    records.push(EpochRecord {
+        epoch: 0,
+        n: e0.graph.n(),
+        load: e0.graph.total_vertex_weight(),
+        cut: m0.cut,
+        max_comm_volume: m0.max_comm_volume,
+        total_comm_volume: m0.total_comm_volume,
+        imbalance: m0.imbalance,
+        ldht_objective: m0.ldht_objective(&speeds0),
+        ldht_optimum: opt0,
+        scratch_objective: m0.ldht_objective(&speeds0),
+        migrated_weight: 0.0,
+        migrated_vertices: 0,
+        migration_volume: 0,
+        migration_secs: 0.0,
+        naive_migrated_weight: 0.0,
+        time_repartition: t0_secs,
+    });
+
+    let mut prev_ours = initial.clone();
+    let mut prev_naive = initial;
+    for e in 1..trace.epochs {
+        let ep = trace.epoch(e);
+        let (scaled, tw, opt) = epoch_targets(&ep.graph, &ep.topo)?;
+        let speeds: Vec<f64> = scaled.pus.iter().map(|p| p.speed).collect();
+
+        // From-scratch baseline: fresh labels, no relation to last epoch.
+        let fresh = scratch.partition(&crate::partitioners::Ctx {
+            graph: &ep.graph,
+            targets: &tw,
+            topo: &scaled,
+            epsilon: opts.epsilon,
+            seed: opts.seed,
+        })?;
+        fresh.validate(&ep.graph).map_err(anyhow::Error::msg)?;
+        let scratch_obj = metrics(&ep.graph, &fresh, &tw).ldht_objective(&speeds);
+        let naive_mig = migration(&ep.graph, &prev_naive, &fresh);
+
+        // The repartitioner under test.
+        let timer = Timer::start();
+        let part = rp
+            .repartition(&EpochCtx {
+                graph: &ep.graph,
+                prev: &prev_ours,
+                targets: &tw,
+                topo: &scaled,
+                epsilon: opts.epsilon,
+                seed: opts.seed,
+                scratch: Some((opts.scratch_algo.as_str(), &fresh)),
+            })
+            .with_context(|| format!("{} at epoch {e}", rp.name()))?;
+        let rep_secs = timer.secs();
+        part.validate(&ep.graph).map_err(anyhow::Error::msg)?;
+
+        // Execute the actual data migration through the Comm seam (the
+        // payload is one state word per vertex; values are the global
+        // vertex ids so delivery is verifiable).
+        let mig = migration(&ep.graph, &prev_ours, &part);
+        let mp = migration_plan(&prev_ours, &part)?;
+        let values: Vec<f32> = (0..ep.graph.n()).map(|u| u as f32).collect();
+        let (delivered, mig_report) = execute_migration(&mp, opts.backend, &values)?;
+        debug_assert_eq!(delivered, values, "migration corrupted the payload");
+        debug_assert_eq!(mig_report.moved_words, mig.migrated_vertices);
+
+        let m = metrics(&ep.graph, &part, &tw);
+        records.push(EpochRecord {
+            epoch: e,
+            n: ep.graph.n(),
+            load: ep.graph.total_vertex_weight(),
+            cut: m.cut,
+            max_comm_volume: m.max_comm_volume,
+            total_comm_volume: m.total_comm_volume,
+            imbalance: m.imbalance,
+            ldht_objective: m.ldht_objective(&speeds),
+            ldht_optimum: opt,
+            scratch_objective: scratch_obj,
+            migrated_weight: mig.migrated_weight,
+            migrated_vertices: mig.migrated_vertices,
+            migration_volume: mig_report.moved_words,
+            migration_secs: mig_report.max_rank_secs(),
+            naive_migrated_weight: naive_mig.migrated_weight,
+            time_repartition: rep_secs,
+        });
+        prev_ours = part;
+        prev_naive = fresh;
+    }
+    Ok(TraceResult {
+        repartitioner: rp.name().to_string(),
+        backend: opts.backend.name(),
+        records,
+    })
+}
+
+/// Per-epoch table (printed by `hetpart repart` and the example).
+pub fn epoch_table(res: &TraceResult) -> Table {
+    let mut t = Table::new(vec![
+        "epoch", "n", "load", "cut", "maxCommVol", "imbalance", "ldhtObj", "ldhtOpt",
+        "obj/scratch", "migWeight", "migW/naive", "migWords", "migSecs", "tRepart(s)",
+    ]);
+    for r in &res.records {
+        let ratio = r.obj_vs_scratch();
+        let mig_vs_naive = if r.naive_migrated_weight > 0.0 {
+            format!("{:.3}", r.migrated_weight / r.naive_migrated_weight)
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![
+            r.epoch.to_string(),
+            r.n.to_string(),
+            format!("{:.1}", r.load),
+            format!("{:.1}", r.cut),
+            format!("{:.1}", r.max_comm_volume),
+            format!("{:+.4}", r.imbalance),
+            format!("{:.4}", r.ldht_objective),
+            format!("{:.4}", r.ldht_optimum),
+            if ratio.is_finite() { format!("{ratio:.4}") } else { "-".to_string() },
+            format!("{:.1}", r.migrated_weight),
+            mig_vs_naive,
+            r.migration_volume.to_string(),
+            format!("{:.3e}", r.migration_secs),
+            format!("{:.4}", r.time_repartition),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::refined_mesh_2d;
+    use crate::repart::trace::DynamicKind;
+    use crate::repart::Diffusion;
+    use crate::topology::Topology;
+
+    #[test]
+    fn trace_run_produces_one_record_per_epoch() {
+        let g = refined_mesh_2d(1200, 5);
+        let topo = Topology::homogeneous(6, 1.0, 2.0);
+        let trace = EpochTrace::new(&g, topo, DynamicKind::RefineFront, 4, 5);
+        let res = run_trace(&trace, &Diffusion::default(), &TraceOptions::default()).unwrap();
+        assert_eq!(res.records.len(), 4);
+        assert_eq!(res.repartitioner, "diffusion");
+        assert_eq!(res.backend, "sim");
+        assert_eq!(res.records[0].migrated_vertices, 0);
+        for (e, r) in res.records.iter().enumerate() {
+            assert_eq!(r.epoch, e);
+            assert!(r.cut > 0.0, "epoch {e}: zero cut");
+            assert!(r.ldht_objective > 0.0);
+            assert!(r.ldht_optimum > 0.0);
+            assert!(r.load > 0.0);
+        }
+        // Something must migrate on a moving-front trace.
+        assert!(res.total_migrated_weight() > 0.0);
+        assert!(res.total_migration_volume() > 0);
+        // The table renders one row per record.
+        assert_eq!(epoch_table(&res).rows.len(), 4);
+    }
+
+    #[test]
+    fn trace_run_is_deterministic() {
+        let g = refined_mesh_2d(900, 6);
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        let trace = EpochTrace::new(&g, topo, DynamicKind::RefineFront, 3, 6);
+        let a = run_trace(&trace, &Diffusion::default(), &TraceOptions::default()).unwrap();
+        let b = run_trace(&trace, &Diffusion::default(), &TraceOptions::default()).unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.cut, y.cut);
+            assert_eq!(x.migrated_weight, y.migrated_weight);
+            assert_eq!(x.migration_volume, y.migration_volume);
+            assert_eq!(x.ldht_objective, y.ldht_objective);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Incremental balanced k-means: warm-start `geoKM` from the previous
+//! epoch's block centers.
+//!
+//! A from-scratch `geoKM` re-seeds along the Hilbert curve, so its block
+//! *labels* bear no relation to the previous epoch and migration is
+//! dominated by label churn. Warm-starting the influence-k-means core
+//! ([`lloyd_from_centers`]) from the previous blocks' weighted centroids
+//! keeps label ↔ region identity by construction: clusters track the
+//! load front instead of being reinvented, and only the vertices the
+//! front actually pushed across a cluster boundary migrate.
+
+use super::{EpochCtx, Repartitioner};
+use crate::geometry::Point;
+use crate::partition::Partition;
+use crate::partitioners::geokm::lloyd_from_centers;
+use anyhow::{ensure, Result};
+
+pub struct IncrementalGeoKM {
+    /// Lloyd rounds per epoch (fewer than scratch geoKM's 40 — the warm
+    /// start is already close).
+    pub max_iters: usize,
+    /// Influence exponent γ (as `GeoKMeans`).
+    pub gamma: f64,
+}
+
+impl Default for IncrementalGeoKM {
+    fn default() -> Self {
+        IncrementalGeoKM { max_iters: 12, gamma: 0.6 }
+    }
+}
+
+impl Repartitioner for IncrementalGeoKM {
+    fn name(&self) -> &'static str {
+        "increKM"
+    }
+
+    fn repartition(&self, ctx: &EpochCtx) -> Result<Partition> {
+        let g = ctx.graph;
+        let k = ctx.k();
+        ensure!(g.has_coords(), "increKM requires vertex coordinates");
+        ensure!(ctx.prev.k == k, "prev partition k={} vs targets {}", ctx.prev.k, k);
+        ensure!(ctx.prev.n() == g.n(), "prev partition size != graph size");
+        if k == 1 {
+            return Ok(Partition::trivial(g.n()));
+        }
+        // Previous blocks' centroids under the *current* weights.
+        let dim = g.coords[0].dim;
+        let mut sums = vec![Point::zero(dim); k];
+        let mut wsum = vec![0.0f64; k];
+        for u in 0..g.n() {
+            let b = ctx.prev.assignment[u] as usize;
+            let w = g.vertex_weight(u);
+            sums[b] = sums[b].add(&g.coords[u].scale(w));
+            wsum[b] += w;
+        }
+        let centers: Vec<Point> = (0..k)
+            .map(|i| {
+                if wsum[i] > 0.0 {
+                    sums[i].scale(1.0 / wsum[i])
+                } else {
+                    // Empty previous block: park its center on a vertex so
+                    // it can win territory again.
+                    g.coords[i % g.n()]
+                }
+            })
+            .collect();
+        // The extracted core is bit-identical for any worker count, so
+        // use the same parallel assignment step GeoKMeans does.
+        let assignment = lloyd_from_centers(
+            g,
+            centers,
+            ctx.targets,
+            ctx.epsilon,
+            self.max_iters,
+            self.gamma,
+            crate::coordinator::jobqueue::default_workers(),
+        );
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::refine::front_weights;
+    use crate::gen::refined_mesh_2d;
+    use crate::partition::{metrics, migration};
+    use crate::partitioners::{by_name, Ctx};
+    use crate::topology::Topology;
+
+    #[test]
+    fn warm_start_tracks_the_front_with_less_migration_than_fresh_labels() {
+        let mut g0 = refined_mesh_2d(1500, 13);
+        let mut g1 = g0.clone();
+        g0.vwgt = front_weights(&g0.coords, 0.2, 6.0, 0.12);
+        g1.vwgt = front_weights(&g1.coords, 0.5, 6.0, 0.12);
+        let k = 6;
+        let topo = Topology::homogeneous(k, 1.0, 1e9);
+        let t0: Vec<f64> = vec![g0.total_vertex_weight() / k as f64; k];
+        let prev = by_name("geoKM")
+            .unwrap()
+            .partition(&Ctx { graph: &g0, targets: &t0, topo: &topo, epsilon: 0.03, seed: 1 })
+            .unwrap();
+        let t1: Vec<f64> = vec![g1.total_vertex_weight() / k as f64; k];
+        let ectx = EpochCtx {
+            graph: &g1,
+            prev: &prev,
+            targets: &t1,
+            topo: &topo,
+            epsilon: 0.03,
+            seed: 1,
+            scratch: None,
+        };
+        let ours = IncrementalGeoKM::default().repartition(&ectx).unwrap();
+        ours.validate(&g1).unwrap();
+        // Meets the ε bound (the shared strict rebalance guarantees it).
+        let m = metrics(&g1, &ours, &t1);
+        assert!(m.imbalance <= 0.031, "imbalance {}", m.imbalance);
+        // Determinism.
+        let again = IncrementalGeoKM::default().repartition(&ectx).unwrap();
+        assert_eq!(ours.assignment, again.assignment);
+        // Migration is recorded sanely.
+        let mig = migration(&g1, &prev, &ours);
+        assert!(mig.frac_weight() < 0.9, "warm start moved almost everything");
+    }
+}

@@ -1,0 +1,252 @@
+//! Epoch-to-epoch data migration, executed through the `exec::Comm` seam.
+//!
+//! When the assignment changes from `prev` to `next`, every vertex whose
+//! block changed must ship its state from the old PU to the new one.
+//! That movement is expressed as an ordinary
+//! [`ExchangePlan`](crate::exec::ExchangePlan) — rank o's "owned" vector
+//! holds the values of the vertices it had last epoch, its segments send
+//! the departing values into the receivers' inboxes — and then *executed*
+//! by either transport: [`SimComm`] prices it with the α-β model,
+//! [`ThreadComm`] measures real scatter/copy/barrier time under one OS
+//! thread per PU. Both transports run the same plan, so the migration
+//! *volume* (words shipped per rank) is identical by construction — the
+//! invariant `tests/repart.rs` pins.
+
+use crate::exec::{Comm, CostModel, ExchangePlan, ExecBackend, SendSegment, SimComm, ThreadComm};
+use crate::partition::Partition;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// A migration expressed as an exchange plan plus the vertex layout the
+/// plan's local indices refer to.
+pub struct MigrationPlan {
+    pub plan: Arc<ExchangePlan>,
+    /// Global vertex ids owned by each rank under `prev` (ascending; the
+    /// plan's `src` indices point into these lists).
+    pub own: Vec<Vec<u32>>,
+    /// Global vertex ids arriving at each rank (ascending; the plan's
+    /// `dst` slots point into these lists).
+    pub arrivals: Vec<Vec<u32>>,
+}
+
+impl MigrationPlan {
+    /// Total words shipped (one value per moved vertex).
+    pub fn total_words(&self) -> usize {
+        self.arrivals.iter().map(|a| a.len()).sum()
+    }
+}
+
+/// Build the migration plan for the assignment change `prev` → `next`.
+pub fn migration_plan(prev: &Partition, next: &Partition) -> Result<MigrationPlan> {
+    ensure!(prev.n() == next.n(), "partition sizes differ: {} vs {}", prev.n(), next.n());
+    ensure!(prev.k == next.k, "partition k differ: {} vs {}", prev.k, next.k);
+    let k = prev.k;
+    let n = prev.n();
+    // Ownership under the previous epoch (ascending global ids).
+    let mut own: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for u in 0..n {
+        own[prev.assignment[u] as usize].push(u as u32);
+    }
+    // Arrivals per receiving rank (ascending global ids, because u runs
+    // ascending) — the inbox layout.
+    let mut arrivals: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for u in 0..n {
+        let (pb, nb) = (prev.assignment[u], next.assignment[u]);
+        if pb != nb {
+            arrivals[nb as usize].push(u as u32);
+        }
+    }
+    // Segments: for each sender, group departing vertices by receiver.
+    let mut sends: Vec<Vec<SendSegment>> = Vec::with_capacity(k);
+    for o in 0..k {
+        let mut segs: Vec<SendSegment> = Vec::new();
+        for (li, &g) in own[o].iter().enumerate() {
+            let r = next.assignment[g as usize];
+            if r as usize == o {
+                continue;
+            }
+            let dst = arrivals[r as usize]
+                .binary_search(&g)
+                .expect("moved vertex missing from arrivals") as u32;
+            match segs.iter_mut().find(|s| s.to == r) {
+                Some(s) => {
+                    s.src.push(li as u32);
+                    s.dst.push(dst);
+                }
+                None => segs.push(SendSegment {
+                    to: r,
+                    src: vec![li as u32],
+                    dst: vec![dst],
+                }),
+            }
+        }
+        segs.sort_by_key(|s| s.to);
+        sends.push(segs);
+    }
+    let plan = ExchangePlan {
+        ghost_len: arrivals.iter().map(|a| a.len()).collect(),
+        own_len: own.iter().map(|o| o.len()).collect(),
+        sends,
+    };
+    Ok(MigrationPlan { plan: Arc::new(plan), own, arrivals })
+}
+
+/// Cost/volume report of one executed migration.
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// Which transport executed it (`sim` or `threads`).
+    pub backend: &'static str,
+    /// Total words shipped across all ranks.
+    pub moved_words: usize,
+    /// Words sent per rank.
+    pub per_rank_send_words: Vec<usize>,
+    /// Communication seconds per rank: α-β priced (`sim`) or measured
+    /// scatter/copy/barrier (`threads`).
+    pub per_rank_secs: Vec<f64>,
+}
+
+impl MigrationReport {
+    /// The makespan contribution: slowest rank's migration seconds.
+    pub fn max_rank_secs(&self) -> f64 {
+        self.per_rank_secs.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Execute the migration of `values` (one f32 per vertex, e.g. the
+/// solver state) through the chosen transport. Returns the post-migration
+/// global vector — moved entries really traveled through the transport —
+/// and the cost report.
+pub fn execute_migration(
+    mp: &MigrationPlan,
+    backend: ExecBackend,
+    values: &[f32],
+) -> Result<(Vec<f32>, MigrationReport)> {
+    let k = mp.plan.k();
+    ensure!(
+        values.len() == mp.own.iter().map(|o| o.len()).sum::<usize>(),
+        "values length {} != vertex count",
+        values.len()
+    );
+    let mut delivered = values.to_vec();
+    let (secs, label): (Vec<f64>, &'static str) = match backend {
+        ExecBackend::Sim => {
+            let comm = SimComm::new(mp.plan.clone(), CostModel::default());
+            for rank in 0..k {
+                let owned: Vec<f32> =
+                    mp.own[rank].iter().map(|&g| values[g as usize]).collect();
+                comm.post_halo(rank, &owned);
+            }
+            for rank in 0..k {
+                let mut inbox = vec![0.0f32; mp.plan.ghost_len[rank]];
+                comm.recv_halo(rank, &mut inbox);
+                for (slot, &g) in mp.arrivals[rank].iter().enumerate() {
+                    delivered[g as usize] = inbox[slot];
+                }
+            }
+            (comm.comm_secs(), comm.label())
+        }
+        ExecBackend::Threads => {
+            let comm = ThreadComm::new(mp.plan.clone());
+            let inboxes: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..k)
+                    .map(|rank| {
+                        let comm = &comm;
+                        let mp = &mp;
+                        scope.spawn(move || {
+                            let owned: Vec<f32> =
+                                mp.own[rank].iter().map(|&g| values[g as usize]).collect();
+                            comm.post_halo(rank, &owned);
+                            comm.sync(rank);
+                            let mut inbox = vec![0.0f32; mp.plan.ghost_len[rank]];
+                            comm.recv_halo(rank, &mut inbox);
+                            (rank, inbox)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, inbox) in inboxes {
+                for (slot, &g) in mp.arrivals[rank].iter().enumerate() {
+                    delivered[g as usize] = inbox[slot];
+                }
+            }
+            (comm.comm_secs(), comm.label())
+        }
+    };
+    let per_rank_send_words: Vec<usize> =
+        (0..k).map(|r| mp.plan.send_volume(r)).collect();
+    let report = MigrationReport {
+        backend: label,
+        moved_words: per_rank_send_words.iter().sum(),
+        per_rank_send_words,
+        per_rank_secs: secs,
+    };
+    Ok((delivered, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn partitions() -> (Partition, Partition) {
+        // 10 vertices over 3 ranks; vertices 2, 5, 9 move.
+        let prev = Partition::new(vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 2], 3);
+        let next = Partition::new(vec![0, 0, 1, 1, 1, 2, 2, 2, 2, 0], 3);
+        (prev, next)
+    }
+
+    #[test]
+    fn plan_shape_matches_moves() {
+        let (prev, next) = partitions();
+        let mp = migration_plan(&prev, &next).unwrap();
+        assert_eq!(mp.total_words(), 3);
+        assert_eq!(mp.plan.k(), 3);
+        // Vertex 2 leaves rank 0 for rank 1; 5 leaves 1 for 2; 9 leaves 2
+        // for 0.
+        assert_eq!(mp.arrivals[0], vec![9]);
+        assert_eq!(mp.arrivals[1], vec![2]);
+        assert_eq!(mp.arrivals[2], vec![5]);
+        assert_eq!(mp.plan.send_volume(0), 1);
+        assert_eq!(mp.plan.send_volume(1), 1);
+        assert_eq!(mp.plan.send_volume(2), 1);
+        // src indices are local to the sender's own list.
+        assert_eq!(mp.plan.sends[0][0].src, vec![2]); // vertex 2 is own[0][2]
+        assert_eq!(mp.plan.sends[2][0].src, vec![3]); // vertex 9 is own[2][3]
+    }
+
+    #[test]
+    fn both_backends_deliver_identical_values_and_volumes() {
+        let (prev, next) = partitions();
+        let mp = migration_plan(&prev, &next).unwrap();
+        let values: Vec<f32> = (0..10).map(|u| 100.0 + u as f32).collect();
+        let (d_sim, r_sim) = execute_migration(&mp, ExecBackend::Sim, &values).unwrap();
+        let (d_thr, r_thr) = execute_migration(&mp, ExecBackend::Threads, &values).unwrap();
+        assert_eq!(d_sim, values, "payload values must be preserved");
+        assert_eq!(d_sim, d_thr, "backends delivered different states");
+        assert_eq!(r_sim.per_rank_send_words, r_thr.per_rank_send_words);
+        assert_eq!(r_sim.moved_words, 3);
+        assert_eq!(r_sim.backend, "sim");
+        assert_eq!(r_thr.backend, "threads");
+        assert!(r_sim.max_rank_secs() > 0.0, "sim migration must be priced");
+    }
+
+    #[test]
+    fn identity_migration_is_empty() {
+        let p = Partition::new(vec![0, 1, 0, 1], 2);
+        let mp = migration_plan(&p, &p).unwrap();
+        assert_eq!(mp.total_words(), 0);
+        let values = vec![1.0f32; 4];
+        let (d, rep) = execute_migration(&mp, ExecBackend::Sim, &values).unwrap();
+        assert_eq!(d, values);
+        assert_eq!(rep.moved_words, 0);
+    }
+
+    #[test]
+    fn mismatched_partitions_rejected() {
+        let a = Partition::new(vec![0, 1], 2);
+        let b = Partition::new(vec![0, 1, 1], 2);
+        assert!(migration_plan(&a, &b).is_err());
+        let c = Partition::new(vec![0, 1], 3);
+        assert!(migration_plan(&a, &c).is_err());
+    }
+}

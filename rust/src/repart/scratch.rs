@@ -1,0 +1,274 @@
+//! Scratch-remap repartitioning: re-run a static partitioner from
+//! scratch, then relabel the fresh blocks onto PUs so migration is small.
+//!
+//! A from-scratch partition gives the best quality the static algorithm
+//! can offer for the new load, but its block *labels* carry no relation
+//! to where the data currently lives — naively adopting them migrates
+//! almost everything. Because Algorithm 1 sizes block i for PU i, blocks
+//! may be relabeled freely *within speed classes* (equal-speed PUs have
+//! equal targets) without changing the LDHT objective at all. Scratch-
+//! remap exploits exactly that freedom: greedy bipartite matching of new
+//! blocks to PUs on the weight overlap with the previous assignment,
+//! with [`CommCost`] distances breaking ties toward placements that keep
+//! communicating blocks near each other, followed by a pairwise-swap
+//! pass and a guarantee that the result never overlaps less than the
+//! identity labeling (so migration is never worse than naive scratch).
+
+use super::{EpochCtx, Repartitioner};
+use crate::graph::QuotientGraph;
+use crate::mapping::{speed_classes, CommCost};
+use crate::partition::Partition;
+use crate::partitioners::{by_name, Ctx};
+use anyhow::{anyhow, ensure, Result};
+
+pub struct ScratchRemap {
+    /// Static partitioner to run from scratch each epoch.
+    pub algo: String,
+}
+
+impl Default for ScratchRemap {
+    fn default() -> Self {
+        ScratchRemap { algo: "geoKM".to_string() }
+    }
+}
+
+impl Repartitioner for ScratchRemap {
+    fn name(&self) -> &'static str {
+        "scratchRemap"
+    }
+
+    fn repartition(&self, ctx: &EpochCtx) -> Result<Partition> {
+        let k = ctx.k();
+        ensure!(ctx.prev.k == k, "prev partition k={} vs targets {}", ctx.prev.k, k);
+        // Reuse the driver's from-scratch partition when it ran the same
+        // (deterministic) algorithm — partitioning dominates the per-epoch
+        // cost and recomputing it would yield the identical result.
+        let fresh_owned;
+        let fresh: &Partition = match ctx.scratch {
+            Some((algo, p)) if algo.eq_ignore_ascii_case(&self.algo) => p,
+            _ => {
+                let partitioner = by_name(&self.algo)
+                    .ok_or_else(|| anyhow!("unknown partitioner {}", self.algo))?;
+                fresh_owned = partitioner.partition(&Ctx {
+                    graph: ctx.graph,
+                    targets: ctx.targets,
+                    topo: ctx.topo,
+                    epsilon: ctx.epsilon,
+                    seed: ctx.seed,
+                })?;
+                &fresh_owned
+            }
+        };
+        ensure!(fresh.k == k, "{} produced k={} blocks, expected {k}", self.algo, fresh.k);
+        let pi = remap_for_overlap(ctx.graph, ctx.prev, fresh, ctx.topo);
+        let assignment: Vec<u32> =
+            fresh.assignment.iter().map(|&b| pi[b as usize]).collect();
+        Ok(Partition::new(assignment, k))
+    }
+}
+
+/// Overlap matrix: `overlap[b][p]` = vertex weight assigned to fresh
+/// block `b` that previously lived on PU `p` (weight that does NOT
+/// migrate if `b` is placed on `p`).
+fn overlap_matrix(
+    g: &crate::graph::Csr,
+    prev: &Partition,
+    fresh: &Partition,
+    k: usize,
+) -> Vec<Vec<f64>> {
+    let mut overlap = vec![vec![0.0f64; k]; k];
+    for u in 0..g.n() {
+        overlap[fresh.assignment[u] as usize][prev.assignment[u] as usize] +=
+            g.vertex_weight(u);
+    }
+    overlap
+}
+
+/// Choose a block→PU relabeling `pi` (a permutation within speed
+/// classes) maximizing the total kept weight Σ_b overlap[b][pi[b]].
+///
+/// Greedy construction in descending block-mass order with CommCost
+/// tie-breaks, floored at the identity labeling, then a pairwise-swap
+/// hill climb — deterministic throughout.
+pub fn remap_for_overlap(
+    g: &crate::graph::Csr,
+    prev: &Partition,
+    fresh: &Partition,
+    topo: &crate::topology::Topology,
+) -> Vec<u32> {
+    let k = fresh.k;
+    let overlap = overlap_matrix(g, prev, fresh, k);
+    let classes = speed_classes(topo);
+    let class_of: Vec<usize> = {
+        let mut m = vec![0usize; k];
+        for (ci, c) in classes.iter().enumerate() {
+            for &p in c {
+                m[p as usize] = ci;
+            }
+        }
+        m
+    };
+    // Tie-break data: quotient graph of the fresh partition + tree
+    // distances, so equal-overlap choices prefer communication-friendly
+    // placements (the mapping objective).
+    let q = QuotientGraph::build(g, &fresh.assignment, k);
+    let cost = CommCost::from_topology(topo);
+
+    // Greedy: heaviest fresh blocks first (stable tie-break by id).
+    let mass: Vec<f64> = (0..k).map(|b| overlap[b].iter().sum()).collect();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        mass[b].partial_cmp(&mass[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut free: Vec<Vec<u32>> = classes.clone();
+    let mut pi = vec![u32::MAX; k];
+    for &b in &order {
+        let ci = class_of[b];
+        let mut best: Option<(f64, f64, usize)> = None; // (overlap, -commcost, idx)
+        for (fi, &p) in free[ci].iter().enumerate() {
+            let ov = overlap[b][p as usize];
+            // Mapping cost of placing b at p against already-placed
+            // quotient neighbors (lower is better).
+            let mut cc = 0.0;
+            for &(nb, vol) in &q.adj[b] {
+                let placed = pi[nb as usize];
+                if placed != u32::MAX {
+                    cc += vol * cost.d(p as usize, placed as usize);
+                }
+            }
+            let better = match best {
+                None => true,
+                Some((bov, bcc, _)) => ov > bov + 1e-12 || ((ov - bov).abs() <= 1e-12 && -cc > bcc + 1e-12),
+            };
+            if better {
+                best = Some((ov, -cc, fi));
+            }
+        }
+        let (_, _, fi) = best.expect("speed class exhausted");
+        pi[b] = free[ci].swap_remove(fi);
+    }
+
+    // Floor at the identity labeling (always class-valid): never overlap
+    // less than naive scratch would keep.
+    let total = |pi: &[u32]| -> f64 {
+        (0..k).map(|b| overlap[b][pi[b] as usize]).sum()
+    };
+    let identity: Vec<u32> = (0..k as u32).collect();
+    if total(&identity) > total(&pi) {
+        pi = identity;
+    }
+
+    // Pairwise-swap hill climb within classes on total overlap.
+    let mut cur = total(&pi);
+    for _round in 0..k.max(4) {
+        let mut improved = false;
+        for class in &classes {
+            for x in 0..class.len() {
+                for y in (x + 1)..class.len() {
+                    let (a, b) = (class[x] as usize, class[y] as usize);
+                    pi.swap(a, b);
+                    let c = total(&pi);
+                    if c > cur + 1e-12 {
+                        cur = c;
+                        improved = true;
+                    } else {
+                        pi.swap(a, b); // revert
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    pi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::partition::{metrics, migration};
+    use crate::topology::{topo1, Pu, Topo1Spec};
+
+    fn setup() -> (crate::graph::Csr, crate::topology::Topology, Vec<f64>) {
+        let g = mesh_2d_tri(24, 24, 3);
+        let topo = topo1(Topo1Spec {
+            k: 6,
+            num_fast: 2,
+            fast: Pu { speed: 4.0, memory: 1e9 },
+        });
+        // Simple proportional targets (memory unconstrained).
+        let total_speed: f64 = topo.pus.iter().map(|p| p.speed).sum();
+        let targets: Vec<f64> = topo
+            .pus
+            .iter()
+            .map(|p| g.total_vertex_weight() * p.speed / total_speed)
+            .collect();
+        (g, topo, targets)
+    }
+
+    #[test]
+    fn remap_is_class_respecting_permutation() {
+        let (g, topo, targets) = setup();
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 1 };
+        let prev = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let fresh = by_name("zSFC").unwrap().partition(&ctx).unwrap();
+        let pi = remap_for_overlap(&g, &prev, &fresh, &topo);
+        let mut sorted = pi.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<u32>>(), "not a permutation");
+        for (b, &p) in pi.iter().enumerate() {
+            assert_eq!(
+                topo.pus[b].speed, topo.pus[p as usize].speed,
+                "block {b} crossed speed class to PU {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn remap_never_migrates_more_than_identity() {
+        let (g, topo, targets) = setup();
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 1 };
+        let prev = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let fresh = by_name("zRCB").unwrap().partition(&ctx).unwrap();
+        let pi = remap_for_overlap(&g, &prev, &fresh, &topo);
+        let remapped = Partition::new(
+            fresh.assignment.iter().map(|&b| pi[b as usize]).collect(),
+            6,
+        );
+        let naive = migration(&g, &prev, &fresh).migrated_weight;
+        let ours = migration(&g, &prev, &remapped).migrated_weight;
+        assert!(ours <= naive + 1e-9, "remap migrated {ours} > naive {naive}");
+    }
+
+    #[test]
+    fn remap_preserves_ldht_objective() {
+        // Relabeling within equal-speed classes permutes equal targets, so
+        // the block-weight multiset per speed is unchanged and the LDHT
+        // objective is bit-identical to the fresh partition's.
+        let (g, topo, targets) = setup();
+        let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 1 };
+        let prev = by_name("zSFC").unwrap().partition(&ctx).unwrap();
+        let rp = ScratchRemap::default();
+        let ectx = EpochCtx {
+            graph: &g,
+            prev: &prev,
+            targets: &targets,
+            topo: &topo,
+            epsilon: 0.05,
+            seed: 1,
+            scratch: None,
+        };
+        let ours = rp.repartition(&ectx).unwrap();
+        ours.validate(&g).unwrap();
+        let fresh = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let obj_ours = metrics(&g, &ours, &targets).ldht_objective(&speeds);
+        let obj_fresh = metrics(&g, &fresh, &targets).ldht_objective(&speeds);
+        assert!(
+            (obj_ours - obj_fresh).abs() < 1e-9,
+            "remap changed the objective: {obj_ours} vs {obj_fresh}"
+        );
+    }
+}

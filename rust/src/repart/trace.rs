@@ -1,0 +1,237 @@
+//! Adaptive-workload traces: the per-epoch inputs a repartitioner reacts
+//! to.
+//!
+//! Two drivers of change, matching the paper's motivation (§IV) and the
+//! dynamic scenario axis of the harness:
+//!
+//! - **refine-front**: the vertex set stays fixed but per-vertex load
+//!   weights follow `gen::refine`'s moving circular front (each vertex's
+//!   weight models the number of refined FEM elements it carries this
+//!   epoch) — the "refinetrace" character without losing the vertex
+//!   correspondence migration accounting needs;
+//! - **speed-drift**: the graph stays fixed but PU speeds drift
+//!   multiplicatively epoch to epoch (co-scheduled jobs, thermal
+//!   throttling), so Algorithm-1 targets move under the partition.
+
+use crate::gen::refine::{front_weights, FRONT_BAND};
+use crate::graph::Csr;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Which quantity changes between epochs (the harness `dynamic` axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DynamicKind {
+    /// Static workload (the degenerate single-epoch case).
+    None,
+    /// Vertex weights follow a moving refinement front.
+    RefineFront,
+    /// PU speeds drift over epochs.
+    SpeedDrift,
+}
+
+impl DynamicKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DynamicKind::None => "none",
+            DynamicKind::RefineFront => "refine-front",
+            DynamicKind::SpeedDrift => "speed-drift",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DynamicKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" | "static" => DynamicKind::None,
+            "refine-front" | "refinefront" | "refine_front" | "front" => {
+                DynamicKind::RefineFront
+            }
+            "speed-drift" | "speeddrift" | "speed_drift" | "drift" => DynamicKind::SpeedDrift,
+            _ => return None,
+        })
+    }
+}
+
+/// All dynamic kinds, in registry order.
+pub const ALL_DYNAMICS: [DynamicKind; 3] = [
+    DynamicKind::None,
+    DynamicKind::RefineFront,
+    DynamicKind::SpeedDrift,
+];
+
+/// One epoch's concrete inputs.
+pub struct Epoch {
+    /// The epoch graph: base structure with this epoch's vertex weights.
+    pub graph: Csr,
+    /// The epoch topology (speeds drifted for [`DynamicKind::SpeedDrift`]).
+    pub topo: Topology,
+}
+
+/// A replayable multi-epoch workload over a fixed base graph.
+pub struct EpochTrace<'a> {
+    /// Base graph (vertex weights ignored; each epoch sets its own).
+    pub base: &'a Csr,
+    /// Base topology (unscaled preset specs; the driver load-scales).
+    pub topo: Topology,
+    pub kind: DynamicKind,
+    /// Number of epochs (≥ 1; epoch 0 is the initial static partition).
+    pub epochs: usize,
+    pub seed: u64,
+    /// Refine-front weight amplitude (peak extra weight on the front).
+    pub amp: f64,
+    /// Refine-front band width.
+    pub band: f64,
+    /// Speed-drift step: per epoch each PU's speed multiplies by a factor
+    /// in [1/(1+drift), 1+drift], clamped to ×4 / ÷4 of the original.
+    pub drift: f64,
+}
+
+impl<'a> EpochTrace<'a> {
+    /// A trace with the default front/drift magnitudes.
+    pub fn new(
+        base: &'a Csr,
+        topo: Topology,
+        kind: DynamicKind,
+        epochs: usize,
+        seed: u64,
+    ) -> EpochTrace<'a> {
+        assert!(epochs >= 1, "a trace needs at least one epoch");
+        EpochTrace {
+            base,
+            topo,
+            kind,
+            epochs,
+            seed,
+            amp: 6.0,
+            band: 1.5 * FRONT_BAND,
+            drift: 0.35,
+        }
+    }
+
+    /// Front sweep parameter for epoch `e`: 0 at epoch 0, advancing by
+    /// `1/epochs` per epoch, so the last epoch sits at `(epochs−1)/epochs`
+    /// — strictly below 1, because `front_center` wraps at t = 1 and a
+    /// final epoch at exactly 1.0 would teleport the front back to the
+    /// start instead of finishing the sweep.
+    pub fn sweep_t(&self, e: usize) -> f64 {
+        e as f64 / self.epochs as f64
+    }
+
+    /// Materialize epoch `e` (0-based, `e < epochs`). Deterministic:
+    /// epoch e is the same whether reached by iterating or directly.
+    pub fn epoch(&self, e: usize) -> Epoch {
+        assert!(e < self.epochs, "epoch {e} out of range (epochs {})", self.epochs);
+        let mut graph = self.base.clone();
+        let mut topo = self.topo.clone();
+        match self.kind {
+            DynamicKind::None => {
+                // Static: the base graph's own weights, unchanged.
+            }
+            DynamicKind::RefineFront => {
+                // The front *defines* the epoch load profile (any base
+                // weights are replaced, not scaled).
+                graph.vwgt = front_weights(&graph.coords, self.sweep_t(e), self.amp, self.band);
+            }
+            DynamicKind::SpeedDrift => {
+                // Weights stay whatever the base graph carries; only the
+                // PU speeds move.
+                // Replay the multiplicative walk up to epoch e so that
+                // epoch e is independent of how it was reached.
+                let mut rng = Rng::new(self.seed ^ 0x5eed_d21f_7a11_0b5e);
+                let original: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+                let mut factors = vec![1.0f64; topo.k()];
+                for _ in 0..e {
+                    for f in factors.iter_mut() {
+                        let step = 1.0 + self.drift * (2.0 * rng.f64() - 1.0);
+                        *f = (*f * step).clamp(0.25, 4.0);
+                    }
+                }
+                for (pu, (&orig, &f)) in
+                    topo.pus.iter_mut().zip(original.iter().zip(&factors))
+                {
+                    pu.speed = orig * f;
+                }
+            }
+        }
+        Epoch { graph, topo }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::refined_mesh_2d;
+    use crate::topology::Topology;
+
+    fn base() -> Csr {
+        refined_mesh_2d(1200, 7)
+    }
+
+    #[test]
+    fn dynamic_kind_names_round_trip() {
+        for k in ALL_DYNAMICS {
+            assert_eq!(DynamicKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(DynamicKind::parse("refinefront"), Some(DynamicKind::RefineFront));
+        assert!(DynamicKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn refine_front_weights_move_with_epochs() {
+        let g = base();
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        let trace = EpochTrace::new(&g, topo, DynamicKind::RefineFront, 5, 42);
+        // The sweep is monotone and never wraps: the last epoch's front
+        // must sit strictly before t = 1 (a wrap would teleport the load
+        // back to the epoch-0 position).
+        for e in 1..5 {
+            assert!(trace.sweep_t(e) > trace.sweep_t(e - 1));
+        }
+        assert!(trace.sweep_t(4) < 1.0);
+        let e0 = trace.epoch(0);
+        let e4 = trace.epoch(4);
+        assert_eq!(e0.graph.n(), g.n());
+        assert_eq!(e0.graph.vwgt.len(), g.n());
+        // The weight profile must actually change across the sweep.
+        let diff: f64 = e0
+            .graph
+            .vwgt
+            .iter()
+            .zip(&e4.graph.vwgt)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0, "front weights did not move (diff {diff})");
+        // Speeds untouched on a refine-front trace.
+        assert_eq!(
+            e4.topo.pus.iter().map(|p| p.speed).collect::<Vec<_>>(),
+            trace.topo.pus.iter().map(|p| p.speed).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn speed_drift_changes_speeds_deterministically() {
+        let g = base();
+        let topo = Topology::homogeneous(6, 1.0, 2.0);
+        let trace = EpochTrace::new(&g, topo, DynamicKind::SpeedDrift, 4, 9);
+        let a = trace.epoch(3);
+        let b = trace.epoch(3);
+        let sa: Vec<f64> = a.topo.pus.iter().map(|p| p.speed).collect();
+        let sb: Vec<f64> = b.topo.pus.iter().map(|p| p.speed).collect();
+        assert_eq!(sa, sb, "epoch materialization not deterministic");
+        assert!(sa.iter().any(|&s| (s - 1.0).abs() > 1e-6), "no drift: {sa:?}");
+        assert!(sa.iter().all(|&s| (0.25..=4.0).contains(&s)), "clamp: {sa:?}");
+        // Weights stay unit on a drift trace.
+        assert!(a.graph.vwgt.is_empty());
+        // Epoch 0 is the undrifted topology.
+        let e0 = trace.epoch(0);
+        assert!(e0.topo.pus.iter().all(|p| p.speed == 1.0));
+    }
+
+    #[test]
+    fn none_kind_is_static() {
+        let g = base();
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        let trace = EpochTrace::new(&g, topo, DynamicKind::None, 3, 1);
+        let e2 = trace.epoch(2);
+        assert!(e2.graph.vwgt.is_empty());
+        assert!(e2.topo.pus.iter().all(|p| p.speed == 1.0));
+    }
+}

@@ -137,7 +137,7 @@ mod tests {
         let ratio_s1 = s1.speed / s1.memory;
         assert!((ratio_s1 - 0.5 * ratio_f).abs() < 1e-12);
         let s2 = t.pus[95];
-        assert_eq!(*&s2, SLOW_PU);
+        assert_eq!(s2, SLOW_PU);
         assert_eq!(t.k(), 96);
     }
 

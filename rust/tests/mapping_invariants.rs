@@ -1,0 +1,187 @@
+//! Invariants of the block → PU mapping heuristics (`hetpart::mapping`):
+//!
+//! 1. `greedy_mapping` and `refine_mapping` only permute blocks *within
+//!    speed classes* — block i was sized by Algorithm 1 for PU i's
+//!    capability, so a mapping across classes would silently change the
+//!    LDHT objective;
+//! 2. `refine_mapping` never increases `mapping_cost`, from any start;
+//! 3. both are deterministic for a given (graph, partition, topology)
+//!    seed — the property the golden gates and the repartitioning
+//!    subsystem's scratch-remap rely on.
+
+use hetpart::gen::{mesh_2d_tri, rgg_2d};
+use hetpart::graph::QuotientGraph;
+use hetpart::mapping::{
+    greedy_mapping, identity_mapping, mapping_cost, refine_mapping, speed_classes, CommCost,
+};
+use hetpart::partitioners::{by_name, Ctx};
+use hetpart::topology::{topo1, topo2, Pu, Topo1Spec, Topo2Spec, Topology};
+
+/// Partition a mesh on a topology and build its quotient graph.
+fn quotient_for(topo: &Topology, seed: u64) -> QuotientGraph {
+    let g = mesh_2d_tri(24, 24, seed);
+    let k = topo.k();
+    let total_speed: f64 = topo.pus.iter().map(|p| p.speed).sum();
+    let targets: Vec<f64> = topo
+        .pus
+        .iter()
+        .map(|p| g.n() as f64 * p.speed / total_speed)
+        .collect();
+    let ctx = Ctx { graph: &g, targets: &targets, topo, epsilon: 0.05, seed };
+    let p = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+    QuotientGraph::build(&g, &p.assignment, k)
+}
+
+/// Mixed-speed test topologies: two-class flat, three-class flat, and a
+/// hierarchical homogeneous one (single class — everything may permute).
+fn topologies() -> Vec<Topology> {
+    vec![
+        topo1(Topo1Spec {
+            k: 8,
+            num_fast: 2,
+            fast: Pu { speed: 4.0, memory: 5.2 },
+        }),
+        topo2(Topo2Spec {
+            k: 9,
+            num_fast: 3,
+            fast: Pu { speed: 16.0, memory: 13.8 },
+        }),
+        Topology::hierarchical(&[2, 4], |_| Pu { speed: 1.0, memory: 2.0 }, "h24"),
+    ]
+}
+
+fn assert_is_permutation(pi: &[u32], k: usize, label: &str) {
+    let mut sorted = pi.to_vec();
+    sorted.sort_unstable();
+    assert_eq!(
+        sorted,
+        (0..k as u32).collect::<Vec<u32>>(),
+        "{label}: not a permutation: {pi:?}"
+    );
+}
+
+/// Every block must land on a PU with exactly its own PU's speed.
+fn assert_within_speed_classes(pi: &[u32], topo: &Topology, label: &str) {
+    for (b, &p) in pi.iter().enumerate() {
+        assert_eq!(
+            topo.pus[b].speed, topo.pus[p as usize].speed,
+            "{label}: block {b} (speed {}) mapped to PU {p} (speed {})",
+            topo.pus[b].speed, topo.pus[p as usize].speed
+        );
+    }
+}
+
+#[test]
+fn speed_classes_partition_the_pus() {
+    for topo in topologies() {
+        let classes = speed_classes(&topo);
+        let mut all: Vec<u32> = classes.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..topo.k() as u32).collect::<Vec<u32>>());
+        for class in &classes {
+            let s0 = topo.pus[class[0] as usize].speed;
+            assert!(
+                class.iter().all(|&p| topo.pus[p as usize].speed == s0),
+                "class mixes speeds: {class:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_mapping_respects_speed_classes() {
+    for (i, topo) in topologies().into_iter().enumerate() {
+        let q = quotient_for(&topo, 3 + i as u64);
+        let cost = CommCost::from_topology(&topo);
+        let pi = greedy_mapping(&q, &cost, &topo);
+        assert_is_permutation(&pi, topo.k(), &topo.label);
+        assert_within_speed_classes(&pi, &topo, &topo.label);
+    }
+}
+
+#[test]
+fn refine_mapping_is_monotone_and_class_respecting() {
+    for (i, topo) in topologies().into_iter().enumerate() {
+        let q = quotient_for(&topo, 11 + i as u64);
+        let cost = CommCost::from_topology(&topo);
+        // Several starts: identity, greedy, and deterministic in-class
+        // rotations (a scramble that stays class-valid).
+        let classes = speed_classes(&topo);
+        let mut rotated = identity_mapping(topo.k());
+        for class in &classes {
+            if class.len() >= 2 {
+                // Rotate the class's PUs by one.
+                let first = rotated[class[0] as usize];
+                for w in 0..class.len() - 1 {
+                    rotated[class[w] as usize] = rotated[class[w + 1] as usize];
+                }
+                rotated[class[class.len() - 1] as usize] = first;
+            }
+        }
+        let starts = vec![
+            identity_mapping(topo.k()),
+            greedy_mapping(&q, &cost, &topo),
+            rotated,
+        ];
+        for (si, start) in starts.into_iter().enumerate() {
+            let before = mapping_cost(&q, &cost, &start);
+            let (pi, after) = refine_mapping(&q, &cost, &topo, start, 10);
+            assert!(
+                after <= before + 1e-9,
+                "{} start {si}: refine increased cost {before} -> {after}",
+                topo.label
+            );
+            assert!(
+                (mapping_cost(&q, &cost, &pi) - after).abs() < 1e-9,
+                "{} start {si}: reported cost disagrees with the mapping",
+                topo.label
+            );
+            assert_is_permutation(&pi, topo.k(), &topo.label);
+            assert_within_speed_classes(&pi, &topo, &topo.label);
+        }
+    }
+}
+
+#[test]
+fn mappings_are_seed_deterministic() {
+    for topo in topologies() {
+        let qa = quotient_for(&topo, 21);
+        let qb = quotient_for(&topo, 21);
+        let cost = CommCost::from_topology(&topo);
+        let ga = greedy_mapping(&qa, &cost, &topo);
+        let gb = greedy_mapping(&qb, &cost, &topo);
+        assert_eq!(ga, gb, "{}: greedy not deterministic", topo.label);
+        let (ra, ca) = refine_mapping(&qa, &cost, &topo, ga.clone(), 10);
+        let (rb, cb) = refine_mapping(&qb, &cost, &topo, gb, 10);
+        assert_eq!(ra, rb, "{}: refine not deterministic", topo.label);
+        assert_eq!(ca, cb);
+    }
+}
+
+#[test]
+fn rgg_instances_also_respect_the_invariants() {
+    // A second instance family so the invariants are not an artifact of
+    // structured meshes.
+    let g = rgg_2d(2000, 5);
+    let topo = topo1(Topo1Spec {
+        k: 6,
+        num_fast: 2,
+        fast: Pu { speed: 8.0, memory: 8.5 },
+    });
+    let total_speed: f64 = topo.pus.iter().map(|p| p.speed).sum();
+    let targets: Vec<f64> = topo
+        .pus
+        .iter()
+        .map(|p| g.n() as f64 * p.speed / total_speed)
+        .collect();
+    let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 2 };
+    let p = by_name("zRCB").unwrap().partition(&ctx).unwrap();
+    let q = QuotientGraph::build(&g, &p.assignment, 6);
+    let cost = CommCost::from_topology(&topo);
+    let pi = greedy_mapping(&q, &cost, &topo);
+    assert_is_permutation(&pi, 6, "rgg");
+    assert_within_speed_classes(&pi, &topo, "rgg");
+    let id_cost = mapping_cost(&q, &cost, &identity_mapping(6));
+    let (_, refined_cost) = refine_mapping(&q, &cost, &topo, identity_mapping(6), 10);
+    assert!(refined_cost <= id_cost + 1e-9);
+}

@@ -1,0 +1,173 @@
+//! Acceptance tests for the dynamic repartitioning subsystem (ISSUE 3):
+//!
+//! On a refine-front trace (6 epochs, twospeed topology), diffusive and
+//! scratch-remap repartitioning each keep the per-epoch LDHT objective
+//! within 1.15× of a from-scratch repartition while migrating a small
+//! fraction of the weight a naive scratch repartition (fresh labels
+//! every epoch) moves; migration volumes agree between the `sim` and
+//! `threads` backends because both execute the same `ExchangePlan`.
+
+use hetpart::exec::ExecBackend;
+use hetpart::gen::refined_mesh_2d;
+use hetpart::harness::TopoPreset;
+use hetpart::partition::Partition;
+use hetpart::repart::{
+    execute_migration, migration_plan, repartitioner_for_trace, run_trace, DynamicKind,
+    EpochTrace, TraceOptions, TraceResult,
+};
+
+const EPOCHS: usize = 6;
+
+fn front_trace_result(repartitioner: &str, backend: ExecBackend) -> TraceResult {
+    let g = refined_mesh_2d(1500, 42);
+    let topo = TopoPreset::TwoSpeed.build(8);
+    let trace = EpochTrace::new(&g, topo, DynamicKind::RefineFront, EPOCHS, 42);
+    let opts = TraceOptions {
+        scratch_algo: "geoKM".to_string(),
+        backend,
+        epsilon: 0.03,
+        seed: 42,
+    };
+    let rp = repartitioner_for_trace(repartitioner, &opts.scratch_algo).expect("registry");
+    run_trace(&trace, rp.as_ref(), &opts).expect("trace run")
+}
+
+/// The headline acceptance bar: quality within 1.15× of from-scratch at
+/// every epoch, migration far below naive scratch over the trace.
+fn assert_quality_and_migration(res: &TraceResult) {
+    assert_eq!(res.records.len(), EPOCHS);
+    for r in res.records.iter().skip(1) {
+        let ratio = r.obj_vs_scratch();
+        assert!(
+            ratio.is_finite() && ratio <= 1.15,
+            "{} epoch {}: LDHT objective {:.4} is {:.3}x the from-scratch {:.4}",
+            res.repartitioner,
+            r.epoch,
+            r.ldht_objective,
+            ratio,
+            r.scratch_objective
+        );
+    }
+    let ours = res.total_migrated_weight();
+    let naive = res.total_naive_migrated_weight();
+    let total_load: f64 = res.records.iter().skip(1).map(|r| r.load).sum();
+    assert!(naive > 0.0, "{}: naive scratch migrated nothing — trace too tame", res.repartitioner);
+    // <35% of what naive scratch moves; when naive itself is already
+    // negligible (<5% of the cumulative load) there is nothing left to
+    // save and the absolute bound applies instead.
+    let bound = f64::max(0.35 * naive, 0.05 * total_load);
+    assert!(
+        ours < bound,
+        "{}: migrated {ours:.1} vs naive {naive:.1} (bound {bound:.1}, load {total_load:.1})",
+        res.repartitioner
+    );
+}
+
+#[test]
+fn scratch_remap_meets_the_acceptance_bar() {
+    let res = front_trace_result("scratchRemap", ExecBackend::Sim);
+    assert_quality_and_migration(&res);
+    // Structural guarantee: relabeling within equal-speed classes keeps
+    // the block-weight multiset per speed, so the objective matches the
+    // from-scratch baseline bit-for-bit.
+    for r in res.records.iter().skip(1) {
+        assert!(
+            (r.obj_vs_scratch() - 1.0).abs() < 1e-12,
+            "epoch {}: remap changed the objective (ratio {})",
+            r.epoch,
+            r.obj_vs_scratch()
+        );
+    }
+}
+
+#[test]
+fn diffusion_meets_the_acceptance_bar() {
+    let res = front_trace_result("diffusion", ExecBackend::Sim);
+    assert_quality_and_migration(&res);
+    // Diffusion must beat naive scratch *strictly* on migration — it only
+    // ever moves surplus.
+    assert!(res.total_migrated_weight() < res.total_naive_migrated_weight());
+}
+
+#[test]
+fn incremental_geokm_stays_close_to_scratch_quality() {
+    // increKM is not part of the pinned 1.15×/35% bar but must satisfy
+    // the same quality bound (its strict rebalance guarantees the ε cap).
+    let res = front_trace_result("increKM", ExecBackend::Sim);
+    for r in res.records.iter().skip(1) {
+        let ratio = r.obj_vs_scratch();
+        assert!(
+            ratio.is_finite() && ratio <= 1.15,
+            "increKM epoch {}: ratio {ratio:.4}",
+            r.epoch
+        );
+    }
+    assert!(res.total_migration_volume() > 0);
+}
+
+#[test]
+fn migration_volumes_agree_between_backends() {
+    // The same trace priced by both transports: identical partitions,
+    // identical plans, identical volumes — only the seconds differ.
+    let sim = front_trace_result("diffusion", ExecBackend::Sim);
+    let thr = front_trace_result("diffusion", ExecBackend::Threads);
+    assert_eq!(sim.backend, "sim");
+    assert_eq!(thr.backend, "threads");
+    for (a, b) in sim.records.iter().zip(&thr.records) {
+        assert_eq!(
+            a.migration_volume, b.migration_volume,
+            "epoch {}: volumes diverge across backends",
+            a.epoch
+        );
+        assert_eq!(a.migrated_weight, b.migrated_weight, "epoch {}", a.epoch);
+        assert_eq!(a.migrated_vertices, b.migrated_vertices, "epoch {}", a.epoch);
+        assert_eq!(a.cut, b.cut, "epoch {}: partitions depend on the backend", a.epoch);
+    }
+}
+
+#[test]
+fn migration_execution_delivers_identically_on_both_transports() {
+    // Down at the plan level: a nontrivial assignment change, executed by
+    // both transports, must deliver byte-identical state and per-rank
+    // volumes.
+    let n = 400;
+    let prev = Partition::new((0..n).map(|u| (u % 4) as u32).collect(), 4);
+    let next = Partition::new((0..n).map(|u| ((u / 7) % 4) as u32).collect(), 4);
+    let mp = migration_plan(&prev, &next).expect("plan");
+    assert!(mp.total_words() > 0);
+    let values: Vec<f32> = (0..n).map(|u| u as f32).collect();
+    let (d_sim, r_sim) = execute_migration(&mp, ExecBackend::Sim, &values).unwrap();
+    let (d_thr, r_thr) = execute_migration(&mp, ExecBackend::Threads, &values).unwrap();
+    assert_eq!(d_sim, values, "payload corrupted in sim transport");
+    assert_eq!(d_sim, d_thr, "transports delivered different state");
+    assert_eq!(r_sim.per_rank_send_words, r_thr.per_rank_send_words);
+    assert_eq!(r_sim.moved_words, r_thr.moved_words);
+    // Each transport accounts nonzero cost for a nontrivial migration.
+    assert!(r_sim.max_rank_secs() > 0.0);
+    assert!(r_thr.max_rank_secs() > 0.0);
+}
+
+#[test]
+fn speed_drift_traces_run_end_to_end() {
+    // The second dynamic axis: PU speeds drift, weights stay unit. Every
+    // repartitioner must remain valid and track the drifting targets.
+    let g = refined_mesh_2d(1200, 7);
+    let topo = TopoPreset::TwoSpeed.build(8);
+    for name in ["scratchRemap", "diffusion", "increKM"] {
+        let trace = EpochTrace::new(&g, topo.clone(), DynamicKind::SpeedDrift, 5, 7);
+        let opts = TraceOptions::default();
+        let rp = repartitioner_for_trace(name, &opts.scratch_algo).unwrap();
+        let res = run_trace(&trace, rp.as_ref(), &opts).unwrap();
+        assert_eq!(res.records.len(), 5);
+        for r in &res.records {
+            assert!(r.ldht_objective > 0.0, "{name} epoch {}", r.epoch);
+            assert!(r.ldht_optimum > 0.0);
+        }
+        // Drifting speeds change the targets, so *something* must move
+        // over the trace for every strategy.
+        assert!(
+            res.total_migrated_weight() > 0.0,
+            "{name}: drift trace migrated nothing"
+        );
+    }
+}
