@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         backend,
         epsilon: 0.03,
         seed: 42,
+        ..TraceOptions::default()
     };
     let mut results: Vec<TraceResult> = Vec::new();
     for name in ["scratchRemap", "diffusion"] {
@@ -108,7 +109,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nBoth repartitioners track the moving front: quality stays within a\n\
          few percent of from-scratch repartitioning while migration collapses\n\
-         versus naive fresh labels. Recorded in EXPERIMENTS.md §4."
+         versus naive fresh labels. Recorded in EXPERIMENTS.md §3."
     );
     Ok(())
 }

@@ -1,9 +1,14 @@
 //! Exec-engine benchmarks: sequential-sim vs thread-per-PU distributed
-//! execution, and the SpMV hot path (whole-matrix sequential loop vs the
-//! chunked job-queue path vs per-block threaded execution).
+//! execution, the SpMV hot path (whole-matrix sequential loop vs the
+//! chunked job-queue path vs per-block threaded execution), and the
+//! compute/communication-overlap study (blocking vs nonblocking halo
+//! exchange, classic vs pipelined CG).
 //!
 //! On ≥4 cores the chunked/threaded paths should beat the sequential
-//! loop; the `speedup_vs_seq` column makes the comparison explicit.
+//! loop; the `speedup_vs_seq` column makes the comparison explicit. The
+//! overlap table's `speedup` column shows the sim-priced win of hiding
+//! the halo exchange behind the interior SpMV, and `identical` confirms
+//! the numerics are untouched.
 use hetpart::harness::{emit, experiments, BenchScale};
 
 fn main() {
@@ -17,5 +22,10 @@ fn main() {
         "exec_spmv",
         "SpMV hot path: sequential vs chunked vs threaded",
         &experiments::exec_spmv(scale),
+    );
+    emit(
+        "exec_overlap",
+        "nonblocking Comm: overlap off vs on, classic vs pipelined CG",
+        &experiments::exec_overlap(scale),
     );
 }

@@ -45,6 +45,15 @@ pub fn check_feasible(n: f64, topo: &Topology) -> Result<()> {
 
 /// **Algorithm 1** (paper §IV). Computes the optimal `tw(b_i)` for load
 /// `n` on `topo`, in `O(k log k)`.
+///
+/// PUs are visited by decreasing `c_s/m_cap`; each receives either its
+/// proportional share of the *remaining* load or its full memory,
+/// whichever is smaller. The result minimizes
+/// `max_i tw(b_i)/c_s(p_i)` subject to `tw(b_i) ≤ m_cap(p_i)` —
+/// provably optimal (paper Theorem 1, re-proved by this crate's
+/// property tests). Errors when the instance is infeasible
+/// ([`check_feasible`]): non-positive load/speeds/memories, or a load
+/// exceeding total memory.
 pub fn block_sizes(n: f64, topo: &Topology) -> Result<BlockSizes> {
     check_feasible(n, topo)?;
     let k = topo.k();

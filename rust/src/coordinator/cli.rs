@@ -5,13 +5,13 @@
 //! hetpart partition  --family rdg2d --n 16384 --algo geoKM --k 24 [--topo topo1 ...]
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
-//!                    [--backend sim|threads]   (virtual-cluster engine)
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic
+//!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic [--overlap on|off]
 //!                    [--out results/harness] [--workers N] [--verbose]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
-//!                    [--algo geoKM] [--backend sim|threads] [--csv FILE]
+//!                    [--algo geoKM] [--backend sim|threads] [--overlap on|off] [--csv FILE]
 //! hetpart version | help
 //! ```
 
@@ -24,6 +24,7 @@ use crate::util::cli::Args;
 use crate::util::table::Table;
 use crate::util::fmt_f64;
 
+/// CLI entry point: dispatch on the first positional argument.
 pub fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -59,17 +60,22 @@ SUBCOMMANDS
   compare      run all {} partitioners on one instance (Table IV row)
   solve        partition + distributed CG under the cluster simulator
                (--backend sim|threads runs the virtual-cluster engine:
-                sequential α-β-priced supersteps or thread-per-PU)
+                sequential α-β-priced supersteps or thread-per-PU;
+                --overlap on hides the halo exchange behind the interior
+                SpMV through the nonblocking Comm path; --cg pipelined
+                runs the single-reduction CG variant)
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic, --out DIR, --workers N, --verbose prints every run)
+               |dynamic, --overlap on flips every scenario's overlap axis,
+               --out DIR, --workers N, --verbose prints every run)
   repart       replay an adaptive multi-epoch workload and repartition it
                (--dynamic refine-front|speed-drift, --epochs E,
                 --repart scratchRemap|diffusion|increKM, --preset
                 uniform|twospeed|hier2x2|memsat, --algo <static baseline>,
-                --backend sim|threads prices migration, --csv FILE)
+                --backend sim|threads prices migration, --overlap on
+                migrates through the nonblocking path, --csv FILE)
   version      print version
 
 COMMON OPTIONS
@@ -85,6 +91,19 @@ COMMON OPTIONS
         ALL_NAMES.len(),
         ALL_NAMES.join("|"),
     );
+}
+
+/// Parse the `--overlap on|off` axis (a bare `--overlap` counts as on).
+/// `None` means an unrecognized value was passed.
+fn overlap_from_args(args: &Args) -> Option<bool> {
+    if args.flag("overlap") {
+        return Some(true);
+    }
+    match args.get("overlap", "off".to_string()).to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
 }
 
 /// Build the topology from CLI options.
@@ -219,12 +238,30 @@ fn cmd_harness(args: &Args) -> i32 {
     };
     let workers = args.get("workers", crate::coordinator::default_workers());
     let out: String = args.get("out", "results/harness".to_string());
-    let scenarios = kind.scenarios();
+    let Some(overlap) = overlap_from_args(args) else {
+        eprintln!("unknown --overlap value (expected on|off)");
+        return 2;
+    };
+    let mut scenarios = kind.scenarios();
+    if overlap {
+        for s in &mut scenarios {
+            s.overlap = true;
+        }
+    }
+    // Overlapped runs get their own artifact directory (<matrix>-ov), so
+    // the on/off comparison EXPERIMENTS.md §4 describes never overwrites
+    // the blocking run's runs.csv / summary.* it is compared against.
+    let matrix_label = if overlap {
+        format!("{}-ov", kind.name())
+    } else {
+        kind.name().to_string()
+    };
     println!(
-        "harness matrix '{}': {} scenarios over {} workers",
+        "harness matrix '{}': {} scenarios over {} workers{}",
         kind.name(),
         scenarios.len(),
-        workers
+        workers,
+        if overlap { " (overlap on)" } else { "" }
     );
     let (ok, failed) = run_matrix(&scenarios, workers);
     if args.flag("verbose") {
@@ -235,7 +272,7 @@ fn cmd_harness(args: &Args) -> i32 {
     for (id, e) in &failed {
         eprintln!("FAILED {id}: {e}");
     }
-    match write_artifacts(&out, kind.name(), &ok, &failed) {
+    match write_artifacts(&out, &matrix_label, &ok, &failed) {
         Ok(dir) => println!(
             "[artifacts: {}/runs.csv, runs/<id>.json, summary.csv, summary.json]",
             dir.display()
@@ -282,11 +319,16 @@ fn cmd_repart(args: &Args) -> i32 {
         return 2;
     };
     let epochs = args.get("epochs", 6usize).max(1);
+    let Some(nonblocking) = overlap_from_args(args) else {
+        eprintln!("unknown --overlap value (expected on|off)");
+        return 2;
+    };
     // Seed default matches load_graph's (and the other subcommands'), so
     // one --seed value governs generation, partitioning and the trace.
     let opts = TraceOptions {
         scratch_algo: args.get("algo", "geoKM".to_string()),
         backend,
+        nonblocking,
         epsilon: args.get("epsilon", 0.03),
         seed: args.get("seed", 1u64),
     };
@@ -298,7 +340,7 @@ fn cmd_repart(args: &Args) -> i32 {
     let trace = EpochTrace::new(&g, preset.build(k), kind, epochs, opts.seed);
     println!(
         "graph {name}: n={} m={} | preset {} k={k} | dynamic {} x{epochs} epochs | \
-         repartitioner {} (scratch baseline {}) | backend {}",
+         repartitioner {} (scratch baseline {}) | backend {}{}",
         g.n(),
         g.m(),
         preset.name(),
@@ -306,6 +348,7 @@ fn cmd_repart(args: &Args) -> i32 {
         rp.name(),
         opts.scratch_algo,
         backend.name(),
+        if opts.nonblocking { " (nonblocking migration)" } else { "" },
     );
     let res = match run_trace(&trace, rp.as_ref(), &opts) {
         Ok(r) => r,
@@ -419,37 +462,66 @@ fn cmd_solve(args: &Args) -> i32 {
             return 1;
         }
     };
+    // Engine execution options are validated regardless of the path
+    // taken, so a typo'd value never silently runs something else.
+    let Some(overlap) = overlap_from_args(args) else {
+        eprintln!("unknown --overlap value (expected on|off)");
+        return 2;
+    };
+    let cg_name: String = args.get("cg", "classic".to_string());
+    let Some(variant) = crate::exec::CgVariant::parse(&cg_name) else {
+        eprintln!("unknown --cg {cg_name} (expected classic|pipelined)");
+        return 2;
+    };
     // Virtual-cluster engine path: thread-per-PU or sequential-sim
-    // distributed CG behind the Comm seam.
+    // distributed CG behind the Comm seam, optionally with nonblocking
+    // compute/communication overlap and the pipelined CG variant.
     if let Some(bs) = args.opt::<String>("backend") {
         let Some(backend) = crate::exec::ExecBackend::parse(&bs) else {
             eprintln!("unknown --backend {bs} (expected sim|threads)");
             return 2;
         };
-        let (s, cg) =
-            match crate::coordinator::run_solve(&g, &part, &topo, backend, shift, iters, 1e-6) {
-                Ok(x) => x,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return 1;
-                }
-            };
+        let opts = crate::exec::SolveOpts { overlap, variant };
+        let (s, cg) = match crate::coordinator::run_solve_opts(
+            &g, &part, &topo, backend, shift, iters, 1e-6, opts,
+        ) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
         let mut t = Table::new(vec![
-            "algo", "backend", "cut", "maxCommVol", "iters", "residual", "t/iter(s)", "wall(s)",
+            "algo", "backend", "cg", "overlap", "cut", "maxCommVol", "iters", "residual",
+            "t/iter(s)", "commHidden(s)", "ovEff", "wall(s)",
         ]);
         t.row(vec![
             r.algo.clone(),
             s.backend.to_string(),
+            variant.name().to_string(),
+            if s.overlap { "on" } else { "off" }.to_string(),
             fmt_f64(r.cut),
             fmt_f64(r.max_comm_volume),
             cg.iterations.to_string(),
             format!("{:.2e}", s.final_residual),
             format!("{:.2e}", s.time_per_iter),
+            format!("{:.2e}", s.comm_hidden_secs),
+            format!("{:.4}", s.overlap_efficiency),
             format!("{:.3}", s.wall_secs),
         ]);
         print!("{}", t.to_text());
         println!("bottleneck PU {}", s.bottleneck_rank);
         return 0;
+    }
+    // The legacy ClusterSim path below knows nothing about overlap or CG
+    // variants — refuse rather than silently run a blocking classic
+    // solve the user did not ask for.
+    if overlap || variant != crate::exec::CgVariant::Classic {
+        eprintln!(
+            "--overlap on / --cg {} require the virtual-cluster engine: add --backend sim|threads",
+            variant.name()
+        );
+        return 2;
     }
     let ell = EllMatrix::from_graph(&g, shift);
     let mut sim = ClusterSim::default();

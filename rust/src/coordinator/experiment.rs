@@ -3,7 +3,7 @@
 //! quality metrics and timings.
 
 use crate::blocksizes::block_sizes;
-use crate::exec::ExecBackend;
+use crate::exec::{ExecBackend, SolveOpts};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partition::{metrics, Metrics, Partition};
@@ -16,14 +16,23 @@ use anyhow::{anyhow, Context, Result};
 /// One measured (graph, topology, algorithm) cell.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Instance name (family + size).
     pub graph_name: String,
+    /// Topology label.
     pub topo_label: String,
+    /// Partitioner name.
     pub algo: String,
+    /// Edge cut of the partition.
     pub cut: f64,
+    /// Largest per-block communication volume.
     pub max_comm_volume: f64,
+    /// Total communication volume over all blocks.
     pub total_comm_volume: f64,
+    /// Relative imbalance vs the Algorithm-1 targets.
     pub imbalance: f64,
+    /// Partitioning seconds.
     pub time_partition: f64,
+    /// Number of blocks/PUs.
     pub k: usize,
     /// LDHT objective max_i w(b_i)/c_s(p_i) under the topology's speeds.
     pub ldht_objective: f64,
@@ -83,12 +92,24 @@ pub fn run_one(
 pub struct SolveResult {
     /// Which engine backend ran (`sim` or `threads`).
     pub backend: &'static str,
+    /// CG iterations executed.
     pub iterations: usize,
+    /// ‖r‖ after the final iteration.
     pub final_residual: f32,
     /// Bottleneck (compute + comm) seconds per iteration.
     pub time_per_iter: f64,
+    /// Rank whose compute + comm bounds the run.
     pub bottleneck_rank: usize,
+    /// Leader wall-clock for the whole solve.
     pub wall_secs: f64,
+    /// Whether the halo exchange overlapped the interior SpMV.
+    pub overlap: bool,
+    /// Total priced communication seconds hidden behind overlapped
+    /// compute, summed over ranks (0 for blocking or `threads` runs).
+    pub comm_hidden_secs: f64,
+    /// Hidden / (hidden + exposed) priced communication — the harness's
+    /// overlap-efficiency column (0 when nothing was hidden).
+    pub overlap_efficiency: f64,
 }
 
 /// The right-hand side every solve driver uses, so `hetpart solve` with
@@ -99,8 +120,9 @@ pub fn default_rhs(n: usize) -> Vec<f32> {
 }
 
 /// Run distributed CG for a partition through the virtual-cluster
-/// engine. The simulator is calibrated on the assembled matrix, so the
-/// `sim` backend prices iterations with measured kernel speed while the
+/// engine (blocking exchange, classic CG — see [`run_solve_opts`]).
+/// The simulator is calibrated on the assembled matrix, so the `sim`
+/// backend prices iterations with measured kernel speed while the
 /// `threads` backend measures thread-per-PU execution for real.
 pub fn run_solve(
     g: &Csr,
@@ -111,11 +133,30 @@ pub fn run_solve(
     max_iters: usize,
     tol: f32,
 ) -> Result<(SolveResult, CgResult)> {
+    run_solve_opts(g, part, topo, backend, shift, max_iters, tol, SolveOpts::default())
+}
+
+/// [`run_solve`] with explicit execution options: compute/communication
+/// overlap through the nonblocking `Comm` path and/or the pipelined
+/// single-reduction CG variant. The returned [`SolveResult`] carries the
+/// overlap-efficiency accounting the harness surfaces.
+#[allow(clippy::too_many_arguments)]
+pub fn run_solve_opts(
+    g: &Csr,
+    part: &Partition,
+    topo: &Topology,
+    backend: ExecBackend,
+    shift: f64,
+    max_iters: usize,
+    tol: f32,
+    opts: SolveOpts,
+) -> Result<(SolveResult, CgResult)> {
     let ell = EllMatrix::from_graph(g, shift);
     let mut sim = ClusterSim::default();
     sim.calibrate(&ell);
     let b = default_rhs(g.n());
-    let (cg, rep) = sim.run_cg_virtual(&ell, part, topo, backend, &b, max_iters, tol)?;
+    let (cg, rep) =
+        sim.run_cg_virtual_opts(&ell, part, topo, backend, &b, max_iters, tol, opts)?;
     Ok((
         SolveResult {
             backend: rep.backend,
@@ -124,6 +165,9 @@ pub fn run_solve(
             time_per_iter: rep.time_per_iter(),
             bottleneck_rank: rep.bottleneck_rank(),
             wall_secs: rep.wall_secs,
+            overlap: opts.overlap,
+            comm_hidden_secs: rep.comm_hidden_total(),
+            overlap_efficiency: rep.overlap_efficiency(),
         },
         cg,
     ))
@@ -131,10 +175,15 @@ pub fn run_solve(
 
 /// A grid: instances × topologies × algorithms.
 pub struct Grid {
+    /// Named instances to partition.
     pub graphs: Vec<(String, Csr)>,
+    /// Topologies to run each instance on.
     pub topologies: Vec<Topology>,
+    /// Partitioner names (see `partitioners::by_name`).
     pub algos: Vec<String>,
+    /// Imbalance tolerance ε.
     pub epsilon: f64,
+    /// Seed shared by all cells.
     pub seed: u64,
 }
 

@@ -17,9 +17,22 @@
 //! The `Comm` seam is deliberately transport-shaped (post / sync / read,
 //! like bale's conveyors): an MPI or GPU transport slots in without
 //! touching the executor or the solvers.
+//!
+//! The seam also carries nonblocking primitives (`isend`/`irecv` request
+//! handles plus `test`/`wait`/`wait_all`, see [`Comm`]) so executors can
+//! overlap the halo exchange with the interior rows of the SpMV and run
+//! the pipelined single-reduction CG variant ([`CgVariant::Pipelined`]).
+//! `SimComm` prices an overlap region at `max(compute, comm)` instead of
+//! their sum — the simulator rewards overlap the way real hardware does —
+//! while `ThreadComm` realizes the overlap through in-flight channels.
+//! Overlap never changes numerics: on/off runs are bit-identical.
 
 mod cluster;
 mod comm;
 
-pub use cluster::{ClusterBackend, ExecBackend, ExecReport, VirtualCluster};
-pub use comm::{Comm, CostModel, ExchangePlan, SendSegment, SimComm, ThreadComm};
+pub use cluster::{
+    CgVariant, ClusterBackend, ExecBackend, ExecReport, SolveOpts, VirtualCluster,
+};
+pub use comm::{
+    Comm, CommRequest, CostModel, ExchangePlan, SendSegment, SimComm, ThreadComm,
+};

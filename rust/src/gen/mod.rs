@@ -38,6 +38,7 @@ pub enum Family {
 }
 
 impl Family {
+    /// Parse a family name as written on the CLI (e.g. `rdg2d`).
     pub fn parse(s: &str) -> Option<Family> {
         Some(match s {
             "rgg2d" | "rgg_2d" => Family::Rgg2d,
@@ -50,6 +51,7 @@ impl Family {
         })
     }
 
+    /// Canonical family name (e.g. `rdg_2d`).
     pub fn name(&self) -> &'static str {
         match self {
             Family::Rgg2d => "rgg_2d",

@@ -7,17 +7,23 @@
 /// A point in R^2 or R^3. For 2-D points, `z == 0.0` and `dim == 2`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Point {
+    /// x coordinate.
     pub x: f64,
+    /// y coordinate.
     pub y: f64,
+    /// z coordinate (0 for 2-D points).
     pub z: f64,
+    /// Dimensionality tag (2 or 3).
     pub dim: u8,
 }
 
 impl Point {
+    /// 2-D point.
     pub fn new2(x: f64, y: f64) -> Point {
         Point { x, y, z: 0.0, dim: 2 }
     }
 
+    /// 3-D point.
     pub fn new3(x: f64, y: f64, z: f64) -> Point {
         Point { x, y, z, dim: 3 }
     }
@@ -33,6 +39,7 @@ impl Point {
     }
 
     #[inline]
+    /// Set coordinate `axis` (0 = x, 1 = y, 2 = z).
     pub fn set_coord(&mut self, axis: usize, v: f64) {
         match axis {
             0 => self.x = v,
@@ -51,11 +58,13 @@ impl Point {
     }
 
     #[inline]
+    /// Euclidean distance to `o`.
     pub fn dist(&self, o: &Point) -> f64 {
         self.dist2(o).sqrt()
     }
 
     #[inline]
+    /// Componentwise sum.
     pub fn add(&self, o: &Point) -> Point {
         Point {
             x: self.x + o.x,
@@ -66,6 +75,7 @@ impl Point {
     }
 
     #[inline]
+    /// Scale every coordinate by `s`.
     pub fn scale(&self, s: f64) -> Point {
         Point {
             x: self.x * s,
@@ -75,6 +85,7 @@ impl Point {
         }
     }
 
+    /// Origin of the given dimensionality.
     pub fn zero(dim: u8) -> Point {
         Point { x: 0.0, y: 0.0, z: 0.0, dim }
     }
@@ -83,7 +94,9 @@ impl Point {
 /// Axis-aligned bounding box.
 #[derive(Debug, Clone, Copy)]
 pub struct Aabb {
+    /// Componentwise minimum corner.
     pub min: Point,
+    /// Componentwise maximum corner.
     pub max: Point,
 }
 

@@ -17,6 +17,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Builder for an `n`-vertex graph with no edges yet.
     pub fn new(n: usize) -> GraphBuilder {
         GraphBuilder {
             n,

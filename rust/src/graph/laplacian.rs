@@ -45,6 +45,7 @@ impl Laplacian {
     }
 
     #[inline]
+    /// Matrix dimension.
     pub fn n(&self) -> usize {
         self.diag.len()
     }

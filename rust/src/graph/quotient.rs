@@ -11,6 +11,7 @@ use super::Csr;
 /// Quotient graph over `k` blocks.
 #[derive(Debug, Clone)]
 pub struct QuotientGraph {
+    /// Number of blocks (quotient vertices).
     pub k: usize,
     /// Adjacency: for each block, sorted (neighbor block, comm volume).
     pub adj: Vec<Vec<(u32, f64)>>,

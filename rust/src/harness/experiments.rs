@@ -396,6 +396,56 @@ pub fn exec_compare(scale: BenchScale) -> Table {
     t
 }
 
+/// **Overlap study**: the nonblocking `Comm` path on a twospeed
+/// halo-heavy instance — sim-priced seconds per iteration with the halo
+/// exchange blocking vs overlapped with the interior SpMV, for the
+/// classic and pipelined CG variants, plus the hidden-communication and
+/// overlap-efficiency columns the harness reports. The `identical`
+/// column confirms overlap on/off residual trajectories agree bit for
+/// bit (the engine's contract).
+pub fn exec_overlap(scale: BenchScale) -> Table {
+    use crate::coordinator::run_solve_opts;
+    use crate::exec::{CgVariant, SolveOpts};
+    use crate::harness::TopoPreset;
+    let (name, g) = instance(Family::Rdg2d, scale.n2d, SEED);
+    let k = (scale.k / 2).max(6);
+    let topo = TopoPreset::TwoSpeed.build(k);
+    let mut t = Table::new(vec![
+        "algo", "cg", "off_t/iter(ms)", "on_t/iter(ms)", "speedup", "hidden(ms)", "ovEff",
+        "identical",
+    ]);
+    for algo in ["geoKM", "zSFC"] {
+        let p = match run_one(&name, &g, &topo, algo, EPS, SEED) {
+            Ok((_, p)) => p,
+            Err(e) => {
+                eprintln!("WARN exec_overlap {algo}: {e}");
+                continue;
+            }
+        };
+        for variant in [CgVariant::Classic, CgVariant::Pipelined] {
+            let off = SolveOpts { overlap: false, variant };
+            let on = SolveOpts { overlap: true, variant };
+            let run = |o| run_solve_opts(&g, &p, &topo, ExecBackend::Sim, 0.05, 40, 0.0, o);
+            match (run(off), run(on)) {
+                (Ok((so, co)), Ok((sn, cn))) => {
+                    t.row(vec![
+                        algo.to_string(),
+                        variant.name().to_string(),
+                        format!("{:.4}", so.time_per_iter * 1e3),
+                        format!("{:.4}", sn.time_per_iter * 1e3),
+                        format!("{:.3}", so.time_per_iter / sn.time_per_iter),
+                        format!("{:.4}", sn.comm_hidden_secs * 1e3),
+                        format!("{:.4}", sn.overlap_efficiency),
+                        (co.residual_norms == cn.residual_norms).to_string(),
+                    ]);
+                }
+                (Err(e), _) | (_, Err(e)) => eprintln!("WARN exec_overlap {algo}: {e}"),
+            }
+        }
+    }
+    t
+}
+
 /// Warmup + 5 samples of one SpMV path; returns the median seconds.
 fn sample_spmv(y: &mut [f32], mut f: impl FnMut(&mut [f32])) -> f64 {
     f(y);

@@ -24,8 +24,11 @@ use std::path::Path;
 /// Relative tolerances per gated metric (0.05 = +5% allowed).
 #[derive(Debug, Clone, Copy)]
 pub struct Tolerances {
+    /// Relative tolerance on the edge cut.
     pub cut: f64,
+    /// Relative tolerance on the max communication volume.
     pub max_comm_volume: f64,
+    /// Relative tolerance on the LDHT objective.
     pub ldht_objective: f64,
 }
 
@@ -42,17 +45,22 @@ impl Default for Tolerances {
 /// The gated metrics of one scenario.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GoldenMetrics {
+    /// Recorded edge cut.
     pub cut: f64,
+    /// Recorded max per-block communication volume.
     pub max_comm_volume: f64,
+    /// Recorded LDHT objective.
     pub ldht_objective: f64,
 }
 
 /// A parsed golden-baseline file.
 #[derive(Debug, Clone)]
 pub struct GoldenFile {
+    /// Matrix name this baseline pins (`smoke`, ...).
     pub matrix: String,
     /// True until the first run records real values.
     pub bootstrap: bool,
+    /// Per-metric relative tolerances.
     pub tolerances: Tolerances,
     /// (scenario id, metrics) in recorded order.
     pub runs: Vec<(String, GoldenMetrics)>,
@@ -91,6 +99,7 @@ impl GoldenFile {
         }
     }
 
+    /// Parse a golden file from disk.
     pub fn load(path: &Path) -> Result<GoldenFile> {
         let txt = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -143,6 +152,7 @@ impl GoldenFile {
         Ok(GoldenFile { matrix, bootstrap, tolerances, runs })
     }
 
+    /// Render as the on-disk JSON document.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("matrix", Json::Str(self.matrix.clone())),
@@ -176,6 +186,7 @@ impl GoldenFile {
         ])
     }
 
+    /// Write the file (creating parent directories as needed).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -191,7 +202,9 @@ impl GoldenFile {
 /// beyond tolerance — the baseline is stale but nothing is broken).
 #[derive(Debug, Clone, Default)]
 pub struct GoldenReport {
+    /// Hard failures: regressions and coverage drift.
     pub violations: Vec<String>,
+    /// Informational notes: improvements beyond tolerance (stale baseline).
     pub notes: Vec<String>,
 }
 
@@ -263,6 +276,7 @@ mod tests {
                 solve_iters: 0,
                 dynamic: crate::repart::DynamicKind::None,
                 epochs: 0,
+                overlap: false,
             },
             n: 100,
             m: 180,
@@ -275,6 +289,8 @@ mod tests {
             time_partition: 0.001,
             sim_time_per_iter: None,
             final_residual: None,
+            comm_hidden_secs: None,
+            overlap_efficiency: None,
             dynamic: None,
         }
     }

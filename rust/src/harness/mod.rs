@@ -52,6 +52,7 @@ pub struct BenchScale {
 }
 
 impl BenchScale {
+    /// Read the scale from `HETPART_BENCH_SCALE` (`quick|default|full`).
     pub fn from_env() -> BenchScale {
         match std::env::var("HETPART_BENCH_SCALE").as_deref() {
             Ok("quick") => BenchScale { n2d: 2_500, n3d: 2_000, k: 24, sweep: 2 },

@@ -10,8 +10,8 @@
 //!   same (graph, topology) cell, as the paper reports (Figs. 2–4).
 
 use super::scenario::Scenario;
-use crate::coordinator::{instance, run_jobs, run_one, run_solve};
-use crate::exec::ExecBackend;
+use crate::coordinator::{instance, run_jobs, run_one, run_solve_opts};
+use crate::exec::{ExecBackend, SolveOpts};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::repart::{
@@ -27,23 +27,37 @@ use std::path::{Path, PathBuf};
 /// quantity the artifacts and golden gates consume.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
+    /// The scenario that produced this result.
     pub scenario: Scenario,
     /// Actual generated graph size (generators hit ~n approximately).
     pub n: usize,
+    /// Generated edge count.
     pub m: usize,
+    /// Edge cut of the partition.
     pub cut: f64,
+    /// Largest per-block communication volume.
     pub max_comm_volume: f64,
+    /// Total communication volume over all blocks.
     pub total_comm_volume: f64,
+    /// Relative imbalance vs the Algorithm-1 targets.
     pub imbalance: f64,
+    /// Achieved LDHT objective `max_i w(b_i)/c_s(p_i)`.
     pub ldht_objective: f64,
     /// Achieved LDHT objective / Algorithm-1 optimum (≥ 1; 1 = optimal).
     pub ldht_ratio: f64,
+    /// Partitioning seconds.
     pub time_partition: f64,
     /// Simulated CG seconds/iteration through the virtual-cluster `sim`
     /// backend (None when `solve_iters == 0`).
     pub sim_time_per_iter: Option<f64>,
     /// Final CG residual after `solve_iters` iterations (deterministic).
     pub final_residual: Option<f64>,
+    /// Priced communication seconds hidden behind overlapped compute,
+    /// summed over ranks (None without a solve; 0 with `overlap: off`).
+    pub comm_hidden_secs: Option<f64>,
+    /// Hidden / (hidden + exposed) priced communication (None without a
+    /// solve; 0 with `overlap: off`).
+    pub overlap_efficiency: Option<f64>,
     /// Multi-epoch aggregates for dynamic scenarios (None for static).
     pub dynamic: Option<DynamicSummary>,
 }
@@ -52,6 +66,7 @@ pub struct ScenarioResult {
 /// fields of [`ScenarioResult`] hold the *final* epoch's values.
 #[derive(Debug, Clone)]
 pub struct DynamicSummary {
+    /// Epochs the trace ran.
     pub epochs: usize,
     /// Total vertex weight migrated across epochs.
     pub migrated_weight: f64,
@@ -77,11 +92,16 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         f64::NAN
     };
     let (mut sim_time_per_iter, mut final_residual) = (None, None);
+    let (mut comm_hidden_secs, mut overlap_efficiency) = (None, None);
     if s.solve_iters > 0 {
-        let (solve, _cg) = run_solve(g, &part, &topo, ExecBackend::Sim, 0.05, s.solve_iters, 0.0)
-            .with_context(|| format!("solve for scenario {}", s.id()))?;
+        let opts = SolveOpts { overlap: s.overlap, ..SolveOpts::default() };
+        let (solve, _cg) =
+            run_solve_opts(g, &part, &topo, ExecBackend::Sim, 0.05, s.solve_iters, 0.0, opts)
+                .with_context(|| format!("solve for scenario {}", s.id()))?;
         sim_time_per_iter = Some(solve.time_per_iter);
         final_residual = Some(solve.final_residual as f64);
+        comm_hidden_secs = Some(solve.comm_hidden_secs);
+        overlap_efficiency = Some(solve.overlap_efficiency);
     }
     Ok(ScenarioResult {
         scenario: s.clone(),
@@ -96,6 +116,8 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         time_partition: r.time_partition,
         sim_time_per_iter,
         final_residual,
+        comm_hidden_secs,
+        overlap_efficiency,
         dynamic: None,
     })
 }
@@ -108,6 +130,7 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
     let opts = TraceOptions {
         scratch_algo: "geoKM".to_string(),
         backend: ExecBackend::Sim,
+        nonblocking: s.overlap,
         epsilon: s.epsilon,
         seed: s.seed,
     };
@@ -135,6 +158,8 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
         time_partition: res.records.iter().map(|r| r.time_repartition).sum(),
         sim_time_per_iter: None,
         final_residual: None,
+        comm_hidden_secs: None,
+        overlap_efficiency: None,
         dynamic: Some(DynamicSummary {
             epochs: res.records.len(),
             migrated_weight: res.total_migrated_weight(),
@@ -193,14 +218,20 @@ pub fn run_matrix(
 /// Per-partitioner aggregate over a matrix run.
 #[derive(Debug, Clone)]
 pub struct AlgoSummary {
+    /// Partitioner (or repartitioner) name.
     pub algo: String,
+    /// Scenarios aggregated.
     pub runs: usize,
+    /// Geometric mean of the edge cut.
     pub gm_cut: f64,
+    /// Geometric mean of the max communication volume.
     pub gm_max_comm_volume: f64,
+    /// Geometric mean of the LDHT ratio (achieved / optimum).
     pub gm_ldht_ratio: f64,
     /// Geomean of cut relative to geoKM on the same (graph, topology)
     /// cell (NaN when no geoKM baseline ran).
     pub gm_rel_cut: f64,
+    /// Like `gm_rel_cut`, for the max communication volume.
     pub gm_rel_max_comm_volume: f64,
 }
 
@@ -263,8 +294,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
     let mut t = Table::new(vec![
         "id", "family", "n", "m", "k", "preset", "algo", "epsilon", "seed", "cut",
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
-        "simT/iter(ms)", "residual", "dynamic", "epochs", "migWeight", "migW/naive",
-        "objVsScratch",
+        "simT/iter(ms)", "residual", "overlap", "commHidden(ms)", "ovEff", "dynamic",
+        "epochs", "migWeight", "migW/naive", "objVsScratch",
     ]);
     for r in results {
         let s = &r.scenario;
@@ -312,6 +343,12 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             fmt_opt(r.sim_time_per_iter, 1e3),
             match r.final_residual {
                 Some(x) => format!("{x:.3e}"),
+                None => "-".to_string(),
+            },
+            if s.overlap { "on" } else { "off" }.to_string(),
+            fmt_opt(r.comm_hidden_secs, 1e3),
+            match r.overlap_efficiency {
+                Some(x) => format!("{x:.4}"),
                 None => "-".to_string(),
             },
             dynamic,
@@ -372,6 +409,15 @@ pub fn result_json(r: &ScenarioResult) -> Json {
         (
             "final_residual",
             r.final_residual.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("overlap", Json::Bool(s.overlap)),
+        (
+            "comm_hidden_secs",
+            r.comm_hidden_secs.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "overlap_efficiency",
+            r.overlap_efficiency.map(Json::Num).unwrap_or(Json::Null),
         ),
         (
             "dynamic",
@@ -482,6 +528,7 @@ mod tests {
                 solve_iters: 0,
                 dynamic: DynamicKind::None,
                 epochs: 0,
+                overlap: false,
             })
             .collect()
     }
@@ -522,6 +569,34 @@ mod tests {
         assert!(failed.is_empty(), "{failed:?}");
         assert!(ok[0].sim_time_per_iter.unwrap() > 0.0);
         assert!(ok[0].final_residual.unwrap().is_finite());
+    }
+
+    #[test]
+    fn overlap_axis_populates_efficiency_and_preserves_quality() {
+        let mut off = tiny_scenarios();
+        off.truncate(1);
+        off[0].solve_iters = 5;
+        let mut on = off.clone();
+        on[0].overlap = true;
+        assert_eq!(on[0].id(), format!("{}-ov", off[0].id()), "overlap id suffix");
+        let (r_off, f1) = run_matrix(&off, 1);
+        let (r_on, f2) = run_matrix(&on, 1);
+        assert!(f1.is_empty() && f2.is_empty(), "{f1:?} {f2:?}");
+        // Partition quality is untouched by the axis; the solve numerics
+        // are bit-identical (the residual is deterministic).
+        assert_eq!(r_off[0].cut, r_on[0].cut);
+        assert_eq!(r_off[0].final_residual, r_on[0].final_residual);
+        assert_eq!(r_off[0].comm_hidden_secs, Some(0.0));
+        assert_eq!(r_off[0].overlap_efficiency, Some(0.0));
+        let eff = r_on[0].overlap_efficiency.unwrap();
+        assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
+        assert!(r_on[0].comm_hidden_secs.unwrap() > 0.0);
+        // The columns render and round-trip.
+        let table = runs_table(&r_on);
+        assert!(table.rows[0].iter().any(|c| c == "on"));
+        let back = Json::parse(&result_json(&r_on[0]).render()).unwrap();
+        assert_eq!(back.get("overlap").unwrap(), &Json::Bool(true));
+        assert!(back.get("overlap_efficiency").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]
@@ -568,6 +643,7 @@ mod tests {
             solve_iters: 0,
             dynamic: DynamicKind::RefineFront,
             epochs: 3,
+            overlap: false,
         };
         let (ok, failed) = run_matrix(&[s], 1);
         assert!(failed.is_empty(), "{failed:?}");

@@ -41,6 +41,7 @@ pub const ALL_PRESETS: [TopoPreset; 4] = [
 ];
 
 impl TopoPreset {
+    /// Canonical preset name (the harness's `preset` column).
     pub fn name(&self) -> &'static str {
         match self {
             TopoPreset::Uniform => "uniform",
@@ -50,6 +51,7 @@ impl TopoPreset {
         }
     }
 
+    /// Parse a preset name as written on the CLI.
     pub fn parse(s: &str) -> Option<TopoPreset> {
         Some(match s {
             "uniform" | "homog" => TopoPreset::Uniform,
@@ -115,15 +117,21 @@ pub struct Scenario {
     pub dynamic: DynamicKind,
     /// Number of epochs for dynamic scenarios (≥ 2; ignored for `none`).
     pub epochs: usize,
+    /// The overlap axis: run the scenario's distributed solve (and a
+    /// dynamic scenario's migration) through the nonblocking `Comm` path,
+    /// hiding the halo exchange behind the interior SpMV. Numerics are
+    /// identical to `off`; only the priced/measured communication drops.
+    pub overlap: bool,
 }
 
 impl Scenario {
     /// Stable identifier used as the golden-baseline key and artifact
-    /// file name. Static scenarios keep their historical id (so golden
-    /// baselines survive the dynamic axis); dynamic scenarios append
-    /// `-dyn<kind>-E<epochs>`.
+    /// file name. Static blocking scenarios keep their historical id (so
+    /// golden baselines survive the dynamic and overlap axes); dynamic
+    /// scenarios append `-dyn<kind>-E<epochs>`, overlapped scenarios
+    /// append `-ov`.
     pub fn id(&self) -> String {
-        let base = format!(
+        let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
             self.family.name(),
             self.n,
@@ -133,11 +141,13 @@ impl Scenario {
             self.epsilon,
             self.seed
         );
-        if self.dynamic == DynamicKind::None {
-            base
-        } else {
-            format!("{base}-dyn{}-E{}", self.dynamic.name(), self.epochs)
+        if self.dynamic != DynamicKind::None {
+            id.push_str(&format!("-dyn{}-E{}", self.dynamic.name(), self.epochs));
         }
+        if self.overlap {
+            id.push_str("-ov");
+        }
+        id
     }
 
     /// The concrete topology this scenario runs on.
@@ -178,6 +188,7 @@ pub enum MatrixKind {
 }
 
 impl MatrixKind {
+    /// Canonical matrix name (the `--matrix` value).
     pub fn name(&self) -> &'static str {
         match self {
             MatrixKind::Smoke => "smoke",
@@ -187,6 +198,7 @@ impl MatrixKind {
         }
     }
 
+    /// Parse a matrix name as written on the CLI.
     pub fn parse(s: &str) -> Option<MatrixKind> {
         Some(match s {
             "smoke" => MatrixKind::Smoke,
@@ -222,6 +234,7 @@ impl MatrixKind {
                                 solve_iters: 10,
                                 dynamic: DynamicKind::None,
                                 epochs: 0,
+                                overlap: false,
                             });
                         }
                     }
@@ -241,6 +254,7 @@ impl MatrixKind {
                             solve_iters: 0,
                             dynamic,
                             epochs: 5,
+                            overlap: false,
                         });
                     }
                 }
@@ -301,6 +315,7 @@ fn push_paper_grid(
                     solve_iters,
                     dynamic: DynamicKind::None,
                     epochs: 0,
+                    overlap: false,
                 });
             }
         }
@@ -422,6 +437,7 @@ mod tests {
             solve_iters: 0,
             dynamic: DynamicKind::None,
             epochs: 0,
+            overlap: false,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");

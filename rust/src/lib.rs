@@ -21,7 +21,10 @@
 //! - the **virtual-cluster execution engine** ([`exec`]): distributed CG
 //!   over per-PU row blocks behind a `Comm` transport abstraction, with
 //!   a sequential α-β-priced backend and a thread-per-PU shared-memory
-//!   backend;
+//!   backend; the seam carries nonblocking primitives (isend/irecv +
+//!   request handles) so the halo exchange overlaps the interior SpMV —
+//!   priced at `max(compute, comm)` by the simulator — and a pipelined
+//!   single-reduction CG variant;
 //! - the **dynamic repartitioning subsystem** ([`repart`]): epoch traces
 //!   replaying adaptive workloads (moving refinement front, PU speed
 //!   drift), three repartitioners behind one `Repartitioner` trait
@@ -34,9 +37,13 @@
 //!   regression gates, and the drivers regenerating every table and
 //!   figure of the paper.
 //!
-//! See [`DESIGN.md`](../../DESIGN.md) for the architecture and
-//! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for how to regenerate the
-//! paper-vs-measured results.
+//! See the top-level `README.md` for the module map and CLI tour,
+//! `DESIGN.md` for the architecture, and `EXPERIMENTS.md` for how to
+//! regenerate the paper-vs-measured results.
+
+// Every public item carries documentation; `cargo doc --no-deps` runs in
+// CI with RUSTDOCFLAGS="-D warnings", so a missing doc is a CI failure.
+#![warn(missing_docs)]
 
 pub mod blocksizes;
 pub mod coordinator;

@@ -25,6 +25,7 @@ use crate::topology::{Topology, TreeNode};
 /// Pairwise PU communication distances from the topology tree.
 #[derive(Debug, Clone)]
 pub struct CommCost {
+    /// Number of PUs.
     pub k: usize,
     /// Row-major k×k hop distances (0 on the diagonal).
     pub dist: Vec<f64>,
@@ -68,6 +69,7 @@ impl CommCost {
     }
 
     #[inline]
+    /// Distance between PUs `a` and `b` (0 on the diagonal).
     pub fn d(&self, a: usize, b: usize) -> f64 {
         self.dist[a * self.k + b]
     }

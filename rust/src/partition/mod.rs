@@ -21,6 +21,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Partition from an explicit assignment (`assignment[u]` = block of `u`).
     pub fn new(assignment: Vec<u32>, k: usize) -> Partition {
         debug_assert!(assignment.iter().all(|&b| (b as usize) < k));
         Partition { assignment, k }
@@ -32,10 +33,12 @@ impl Partition {
     }
 
     #[inline]
+    /// Block that vertex `u` belongs to.
     pub fn block_of(&self, u: usize) -> u32 {
         self.assignment[u]
     }
 
+    /// Number of vertices.
     pub fn n(&self) -> usize {
         self.assignment.len()
     }

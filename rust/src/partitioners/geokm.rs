@@ -23,6 +23,9 @@ use crate::geometry::{hilbert_index, Aabb, Point};
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Balanced (influence) k-means (`geoKM`), the study's geometric
+/// baseline: Lloyd iterations with per-center influence scaling until
+/// block weights meet the heterogeneous targets.
 pub struct GeoKMeans {
     /// Maximum Lloyd rounds.
     pub max_iters: usize,

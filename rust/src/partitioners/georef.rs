@@ -35,7 +35,10 @@ const SWEEPS_PER_LEVEL: usize = 2;
 const COARSE_VERTS_PER_BLOCK: usize = 20;
 
 #[derive(Default)]
+/// Geographer-style refinement (`geoRef`): a balanced-k-means seed
+/// plus boundary refinement moves under the heterogeneous caps.
 pub struct GeoRef {
+    /// The balanced-k-means seed stage.
     pub inner: GeoKMeans,
 }
 
@@ -185,6 +188,7 @@ fn extend_candidates(
 /// refinement (paper §VI-b: "the local refinement routine from ParMetis").
 #[derive(Default)]
 pub struct GeoPmRef {
+    /// The balanced-k-means seed stage.
     pub inner: GeoKMeans,
 }
 

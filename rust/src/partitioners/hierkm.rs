@@ -14,7 +14,10 @@ use crate::partition::Partition;
 use crate::topology::{Topology, TreeNode};
 use anyhow::{ensure, Result};
 
+/// Hierarchical balanced k-means (`hierKM`): recursive geoKM over the
+/// topology tree's hierarchy list (paper §V).
 pub struct HierKMeans {
+    /// The flat balanced-k-means core reused per tree level.
     pub inner: GeoKMeans,
     /// Apply the paper's fast global smoothing pass after the hierarchy
     /// ("as a fast post-processing step, we do a global repartitioning

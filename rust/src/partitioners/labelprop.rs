@@ -13,7 +13,9 @@ use super::{Ctx, Partitioner};
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Size-constrained label propagation (the `lpPulp` stand-in).
 pub struct LabelProp {
+    /// Propagation sweeps over the vertex set.
     pub sweeps: usize,
 }
 

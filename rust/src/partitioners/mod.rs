@@ -33,6 +33,7 @@ use anyhow::Result;
 
 /// Everything a partitioner may use.
 pub struct Ctx<'a> {
+    /// The graph to partition.
     pub graph: &'a Csr,
     /// Target block weights from Algorithm 1 (`tw(b_i)`), length k.
     pub targets: &'a [f64],
@@ -45,6 +46,7 @@ pub struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
+    /// Number of blocks (= number of targets).
     pub fn k(&self) -> usize {
         self.targets.len()
     }
@@ -52,7 +54,9 @@ impl<'a> Ctx<'a> {
 
 /// A partitioning algorithm.
 pub trait Partitioner {
+    /// Algorithm name as used by [`by_name`] and the result tables.
     fn name(&self) -> &'static str;
+    /// Compute a partition for the given context.
     fn partition(&self, ctx: &Ctx) -> Result<Partition>;
 }
 

@@ -13,6 +13,8 @@ use crate::geometry::Aabb;
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Multi-jagged coordinate partitioner (`zMJ`): recursive
+/// unequal-count coordinate cuts in jagged strips.
 pub struct MultiJagged {
     /// Parts per multi-section level (the "jagged" fan-out).
     pub fanout: usize,

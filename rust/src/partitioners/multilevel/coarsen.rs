@@ -5,6 +5,7 @@ use crate::graph::Csr;
 
 /// One coarsening level: the coarse graph plus the fine→coarse vertex map.
 pub struct CoarseLevel {
+    /// The coarsened graph at this level.
     pub graph: Csr,
     /// `map[fine] = coarse` vertex id.
     pub map: Vec<u32>,

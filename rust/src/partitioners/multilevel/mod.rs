@@ -18,6 +18,7 @@ use crate::graph::Csr;
 /// A full coarsening hierarchy: `levels[0]` is built from the input
 /// graph; `levels.last()` is the coarsest.
 pub struct Hierarchy {
+    /// Coarsening hierarchy, finest first.
     pub levels: Vec<CoarseLevel>,
 }
 

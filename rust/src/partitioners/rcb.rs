@@ -11,6 +11,7 @@ use crate::geometry::Aabb;
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Recursive coordinate bisection (`zRCB`): axis-aligned median cuts.
 pub struct Rcb;
 
 impl Partitioner for Rcb {

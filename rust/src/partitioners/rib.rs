@@ -11,6 +11,8 @@ use crate::geometry::Point;
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Recursive inertial bisection (`zRIB`): split along the principal
+/// axis of the point set, recursively.
 pub struct Rib;
 
 impl Partitioner for Rib {

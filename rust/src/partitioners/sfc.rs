@@ -9,6 +9,8 @@ use crate::geometry::{hilbert_index, Aabb};
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Hilbert space-filling-curve partitioner (`zSFC`): order vertices
+/// along the curve, cut into consecutive chunks matching the targets.
 pub struct Sfc;
 
 impl Partitioner for Sfc {

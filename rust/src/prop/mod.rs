@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 
 /// A random-value generator plus a shrinking strategy.
 pub trait Gen {
+    /// The type of values this generator produces.
     type Value: std::fmt::Debug + Clone;
     /// Draw a random value.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
@@ -95,6 +96,7 @@ pub mod gens {
         }
     }
 
+    /// Generator for a `usize` drawn uniformly from `r`.
     pub fn usize_in(r: Range<usize>) -> UsizeGen {
         UsizeGen(r)
     }
@@ -116,13 +118,16 @@ pub mod gens {
         }
     }
 
+    /// Generator for an `f64` drawn uniformly from `r`.
     pub fn f64_in(r: Range<f64>) -> F64Gen {
         F64Gen(r)
     }
 
     /// Vec of usize with random length.
     pub struct VecUsizeGen {
+        /// Length range of the generated vector.
         pub len: Range<usize>,
+        /// Range each element is drawn from.
         pub elem: Range<usize>,
     }
     impl Gen for VecUsizeGen {
@@ -154,13 +159,16 @@ pub mod gens {
         }
     }
 
+    /// Generator for `Vec<usize>` with the given length/element ranges.
     pub fn vec_usize(len: Range<usize>, elem: Range<usize>) -> VecUsizeGen {
         VecUsizeGen { len, elem }
     }
 
     /// Vec of f64 with random length.
     pub struct VecF64Gen {
+        /// Length range of the generated vector.
         pub len: Range<usize>,
+        /// Range each element is drawn from.
         pub elem: Range<f64>,
     }
     impl Gen for VecF64Gen {
@@ -180,6 +188,7 @@ pub mod gens {
         }
     }
 
+    /// Generator for `Vec<f64>` with the given length/element ranges.
     pub fn vec_f64(len: Range<usize>, elem: Range<f64>) -> VecF64Gen {
         VecF64Gen { len, elem }
     }
@@ -203,6 +212,7 @@ pub mod gens {
         }
     }
 
+    /// Generator combining two generators into a pair.
     pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> PairGen<A, B> {
         PairGen(a, b)
     }

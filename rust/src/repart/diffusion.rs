@@ -20,6 +20,9 @@ use super::{EpochCtx, Repartitioner};
 use crate::partition::Partition;
 use anyhow::{ensure, Result};
 
+/// Diffusive repartitioner: boundary vertices flow on the quotient
+/// graph from overloaded toward underloaded blocks under the
+/// heterogeneous `(1+ε)·tw` caps.
 pub struct Diffusion {
     /// Maximum diffusion rounds before the fallback pass.
     pub max_rounds: usize,

@@ -13,7 +13,7 @@
 //! - the actual migration, executed through the `exec::Comm` seam
 //!   ([`super::execute_migration`]) so the chosen backend prices it.
 
-use super::migrate::{execute_migration, migration_plan};
+use super::migrate::{execute_migration_opts, migration_plan};
 use super::trace::EpochTrace;
 use super::Repartitioner;
 use crate::blocksizes::{block_sizes, TABLE3_FILL};
@@ -32,7 +32,13 @@ pub struct TraceOptions {
     pub scratch_algo: String,
     /// Transport that executes (and prices) the migration.
     pub backend: ExecBackend,
+    /// Drive the migration through the nonblocking `Comm` path (one
+    /// aggregated isend per destination; identical volumes and delivered
+    /// state, pinned by `migrate`'s tests). `hetpart repart --overlap on`.
+    pub nonblocking: bool,
+    /// Imbalance tolerance ε handed to every (re)partitioner.
     pub epsilon: f64,
+    /// Seed for the trace and all partitioners (runs are deterministic).
     pub seed: u64,
 }
 
@@ -41,6 +47,7 @@ impl Default for TraceOptions {
         TraceOptions {
             scratch_algo: "geoKM".to_string(),
             backend: ExecBackend::Sim,
+            nonblocking: false,
             epsilon: 0.03,
             seed: 42,
         }
@@ -50,14 +57,21 @@ impl Default for TraceOptions {
 /// Everything measured at one epoch.
 #[derive(Debug, Clone)]
 pub struct EpochRecord {
+    /// Epoch index (0 = initial static partition).
     pub epoch: usize,
+    /// Vertices this epoch.
     pub n: usize,
     /// Total vertex weight this epoch.
     pub load: f64,
+    /// Edge cut of the partition.
     pub cut: f64,
+    /// Largest per-block communication volume.
     pub max_comm_volume: f64,
+    /// Total communication volume over all blocks.
     pub total_comm_volume: f64,
+    /// Relative imbalance vs this epoch's targets.
     pub imbalance: f64,
+    /// Achieved LDHT objective `max_i w(b_i)/c_s(p_i)`.
     pub ldht_objective: f64,
     /// Algorithm-1 optimum for this epoch's (load, topology).
     pub ldht_optimum: f64,
@@ -65,6 +79,7 @@ pub struct EpochRecord {
     pub scratch_objective: f64,
     /// Vertex weight the repartitioner moved (0 at epoch 0).
     pub migrated_weight: f64,
+    /// Vertices that changed blocks.
     pub migrated_vertices: usize,
     /// Words shipped through the `Comm` transport (one per moved vertex).
     pub migration_volume: usize,
@@ -92,7 +107,9 @@ impl EpochRecord {
 /// A completed trace run.
 #[derive(Debug, Clone)]
 pub struct TraceResult {
+    /// Repartitioner that produced this trace.
     pub repartitioner: String,
+    /// Transport that executed the migrations (`sim`/`threads`).
     pub backend: &'static str,
     /// One record per epoch (epoch 0 = initial static partition, zero
     /// migration by definition).
@@ -236,7 +253,8 @@ pub fn run_trace(
         let mig = migration(&ep.graph, &prev_ours, &part);
         let mp = migration_plan(&prev_ours, &part)?;
         let values: Vec<f32> = (0..ep.graph.n()).map(|u| u as f32).collect();
-        let (delivered, mig_report) = execute_migration(&mp, opts.backend, &values)?;
+        let (delivered, mig_report) =
+            execute_migration_opts(&mp, opts.backend, &values, opts.nonblocking)?;
         debug_assert_eq!(delivered, values, "migration corrupted the payload");
         debug_assert_eq!(mig_report.moved_words, mig.migrated_vertices);
 

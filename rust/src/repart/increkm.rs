@@ -15,6 +15,8 @@ use crate::partition::Partition;
 use crate::partitioners::geokm::lloyd_from_centers;
 use anyhow::{ensure, Result};
 
+/// Incremental geoKM: warm-start balanced k-means from the previous
+/// epoch's centroids, so labels keep their region identity.
 pub struct IncrementalGeoKM {
     /// Lloyd rounds per epoch (fewer than scratch geoKM's 40 — the warm
     /// start is already close).

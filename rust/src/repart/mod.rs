@@ -43,7 +43,9 @@ pub mod trace;
 pub use diffusion::Diffusion;
 pub use driver::{epoch_table, run_trace, EpochRecord, TraceOptions, TraceResult};
 pub use increkm::IncrementalGeoKM;
-pub use migrate::{execute_migration, migration_plan, MigrationPlan, MigrationReport};
+pub use migrate::{
+    execute_migration, execute_migration_opts, migration_plan, MigrationPlan, MigrationReport,
+};
 pub use scratch::ScratchRemap;
 pub use trace::{DynamicKind, Epoch, EpochTrace};
 
@@ -78,6 +80,7 @@ pub struct EpochCtx<'a> {
 }
 
 impl<'a> EpochCtx<'a> {
+    /// Number of blocks (= number of targets).
     pub fn k(&self) -> usize {
         self.targets.len()
     }
@@ -86,7 +89,9 @@ impl<'a> EpochCtx<'a> {
 /// A dynamic repartitioning strategy: produce the next epoch's partition
 /// from the previous one under the current load.
 pub trait Repartitioner {
+    /// Strategy name as used by [`repartitioner_by_name`].
     fn name(&self) -> &'static str;
+    /// Produce the next epoch's partition from `ctx.prev`.
     fn repartition(&self, ctx: &EpochCtx) -> Result<Partition>;
 }
 

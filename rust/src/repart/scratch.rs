@@ -21,6 +21,9 @@ use crate::partition::Partition;
 use crate::partitioners::{by_name, Ctx};
 use anyhow::{anyhow, ensure, Result};
 
+/// Scratch-remap repartitioner: re-run a static algorithm from
+/// scratch, then relabel the fresh blocks onto PUs within speed classes
+/// to minimize migration (objective bit-identical to from-scratch).
 pub struct ScratchRemap {
     /// Static partitioner to run from scratch each epoch.
     pub algo: String,

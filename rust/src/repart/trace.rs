@@ -30,6 +30,7 @@ pub enum DynamicKind {
 }
 
 impl DynamicKind {
+    /// Canonical kind name (the harness's `dynamic` column).
     pub fn name(&self) -> &'static str {
         match self {
             DynamicKind::None => "none",
@@ -38,6 +39,7 @@ impl DynamicKind {
         }
     }
 
+    /// Parse a kind name as written on the CLI.
     pub fn parse(s: &str) -> Option<DynamicKind> {
         Some(match s.to_ascii_lowercase().as_str() {
             "none" | "static" => DynamicKind::None,
@@ -71,9 +73,11 @@ pub struct EpochTrace<'a> {
     pub base: &'a Csr,
     /// Base topology (unscaled preset specs; the driver load-scales).
     pub topo: Topology,
+    /// Which change driver the trace replays.
     pub kind: DynamicKind,
     /// Number of epochs (≥ 1; epoch 0 is the initial static partition).
     pub epochs: usize,
+    /// Seed the trace (and its speed walk) derives from.
     pub seed: u64,
     /// Refine-front weight amplitude (peak extra weight on the front).
     pub amp: f64,

@@ -7,14 +7,18 @@ use std::path::{Path, PathBuf};
 /// One line of the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ManifestEntry {
+    /// Artifact file stem.
     pub name: String,
+    /// Rows the artifact was compiled for.
     pub n: usize,
+    /// ELL width the artifact was compiled for.
     pub w: usize,
     /// CG iterations (None for plain spmv artifacts).
     pub iters: Option<usize>,
 }
 
 impl ManifestEntry {
+    /// Is this an spmv artifact (vs a fused CG loop)?
     pub fn is_spmv(&self) -> bool {
         self.iters.is_none()
     }
@@ -23,7 +27,9 @@ impl ManifestEntry {
 /// Parsed manifest plus the directory it came from.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was found in.
     pub dir: PathBuf,
+    /// Parsed manifest entries.
     pub entries: Vec<ManifestEntry>,
 }
 
@@ -98,6 +104,7 @@ pub fn default_dir() -> PathBuf {
 pub struct ArtifactSet;
 
 impl ArtifactSet {
+    /// Locate and parse the artifact manifest (see module docs).
     pub fn discover() -> Result<Manifest> {
         Manifest::load(&default_dir())
     }

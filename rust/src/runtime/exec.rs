@@ -16,11 +16,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// PJRT client on the host CPU.
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(Runtime { client })
     }
 
+    /// Platform name reported by the PJRT client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -63,8 +65,11 @@ impl Runtime {
 /// fixed shapes (n, w).
 pub struct SpmvExec {
     exe: xla::PjRtLoadedExecutable,
+    /// Rows the artifact was compiled for.
     pub n: usize,
+    /// ELL width the artifact was compiled for.
     pub w: usize,
+    /// Artifact name from the manifest.
     pub name: String,
 }
 
@@ -133,13 +138,18 @@ impl SpmvExec {
 /// One compiled CG executable: full solve, returns (x, residual norms).
 pub struct CgExec {
     exe: xla::PjRtLoadedExecutable,
+    /// Rows the artifact was compiled for.
     pub n: usize,
+    /// ELL width the artifact was compiled for.
     pub w: usize,
+    /// CG iterations baked into the compiled loop.
     pub iters: usize,
+    /// Artifact name from the manifest.
     pub name: String,
 }
 
 impl CgExec {
+    /// Execute the compiled CG loop on the given system.
     pub fn run(
         &self,
         values: &[f32],

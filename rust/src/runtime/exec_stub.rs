@@ -20,18 +20,22 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Always fails: the `pjrt` feature is disabled in this build.
     pub fn cpu() -> Result<Runtime> {
         bail!("built without the `pjrt` feature: PJRT runtime unavailable (requires an image that ships the xla crate — add it to [dependencies] and build with --features pjrt)")
     }
 
+    /// Stub platform name.
     pub fn platform(&self) -> String {
         match self.void {}
     }
 
+    /// Unreachable in practice (`cpu()` never succeeds in a stub build).
     pub fn load_spmv(&self, _manifest: &Manifest, _entry: &ManifestEntry) -> Result<SpmvExec> {
         match self.void {}
     }
 
+    /// Unreachable in practice (`cpu()` never succeeds in a stub build).
     pub fn load_cg(&self, _manifest: &Manifest, _entry: &ManifestEntry) -> Result<CgExec> {
         match self.void {}
     }
@@ -40,8 +44,11 @@ impl Runtime {
 /// One compiled SpMV executable — stubbed.
 pub struct SpmvExec {
     void: Never,
+    /// Rows the artifact was compiled for.
     pub n: usize,
+    /// ELL width the artifact was compiled for.
     pub w: usize,
+    /// Artifact name from the manifest.
     pub name: String,
 }
 
@@ -51,16 +58,19 @@ pub struct BoundSpmv<'a> {
 }
 
 impl<'a> BoundSpmv<'a> {
+    /// Unreachable in practice (the stub cannot be constructed).
     pub fn run(&self, _x: &[f32]) -> Result<Vec<f32>> {
         match self.exec.void {}
     }
 }
 
 impl SpmvExec {
+    /// Unreachable in practice (the stub cannot be constructed).
     pub fn bind(&self, _values: &[f32], _cols: &[i32], _diag: &[f32]) -> Result<BoundSpmv<'_>> {
         match self.void {}
     }
 
+    /// Unreachable in practice (the stub cannot be constructed).
     pub fn run(&self, _values: &[f32], _cols: &[i32], _diag: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
         match self.void {}
     }
@@ -69,13 +79,18 @@ impl SpmvExec {
 /// One compiled CG executable — stubbed.
 pub struct CgExec {
     void: Never,
+    /// Rows the artifact was compiled for.
     pub n: usize,
+    /// ELL width the artifact was compiled for.
     pub w: usize,
+    /// CG iterations baked into the compiled loop.
     pub iters: usize,
+    /// Artifact name from the manifest.
     pub name: String,
 }
 
 impl CgExec {
+    /// Unreachable in practice (the stub cannot be constructed).
     pub fn run(
         &self,
         _values: &[f32],

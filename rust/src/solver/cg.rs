@@ -14,6 +14,7 @@ use anyhow::Result;
 
 /// SpMV provider for the CG driver.
 pub trait SpmvBackend {
+    /// Problem size (rows of the operator).
     fn n(&self) -> usize;
     /// y = A·x.
     fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> Result<()>;
@@ -21,6 +22,7 @@ pub trait SpmvBackend {
 
 /// Native backend over an [`EllMatrix`].
 pub struct NativeBackend<'a> {
+    /// The matrix applied on every `spmv` call.
     pub a: &'a EllMatrix,
 }
 
@@ -38,6 +40,7 @@ impl<'a> SpmvBackend for NativeBackend<'a> {
 /// Bit-identical numerics to [`NativeBackend`] (the parallel SpMV
 /// computes each row independently with the same code).
 pub struct NativeParBackend<'a> {
+    /// The matrix applied on every `spmv` call.
     pub a: &'a EllMatrix,
     /// Worker threads for the row chunks (see `coordinator::jobqueue`).
     pub workers: usize,
@@ -62,6 +65,7 @@ pub struct PjrtBackend<'a> {
 }
 
 impl<'a> PjrtBackend<'a> {
+    /// Bind the padded matrix device-resident on `exec`.
     pub fn new(exec: &'a crate::runtime::SpmvExec, a: &EllMatrix) -> Result<PjrtBackend<'a>> {
         anyhow::ensure!(a.n == exec.n && a.w == exec.w, "matrix/artifact shape mismatch");
         Ok(PjrtBackend { bound: exec.bind(&a.values, &a.cols, &a.diag)?, n: a.n })
@@ -82,9 +86,11 @@ impl<'a> SpmvBackend for PjrtBackend<'a> {
 /// CG outcome.
 #[derive(Debug, Clone)]
 pub struct CgResult {
+    /// Final iterate.
     pub x: Vec<f32>,
     /// ‖r‖ after every iteration.
     pub residual_norms: Vec<f32>,
+    /// Iterations executed.
     pub iterations: usize,
 }
 

@@ -5,17 +5,82 @@
 //! MPI version: per-PU row blocks with global-indexed columns + a halo
 //! of the global vector — and the per-PU compute times feed the
 //! heterogeneous simulator.
+//!
+//! Also home of [`pipelined_cg_solve`], the sequential reference for the
+//! Saad/Eller-style single-reduction CG the virtual-cluster engine runs
+//! as `exec::CgVariant::Pipelined` (see DESIGN.md §5 for the
+//! derivation): both dot products a CG iteration needs, p·Ap and Ap·Ap,
+//! are available right after the SpMV, so they ride **one** allreduce
+//! and ‖r‖² follows from the recurrence `rs' = α²·(Ap·Ap) − rs` instead
+//! of a second reduction — halving the per-iteration synchronization
+//! count at the price of a slightly different round-off trajectory.
 
-use super::cg::SpmvBackend;
+use super::cg::{CgResult, SpmvBackend};
 use super::ell::EllMatrix;
 use super::spmv::spmv_block_rows_full;
 use crate::partition::Partition;
 use anyhow::Result;
 
+/// Single-reduction (pipelined) CG from x₀ = 0: one combined reduction
+/// per iteration instead of two. Same solution as [`super::cg_solve`]
+/// within CG round-off; the reported residual norms come from the
+/// recurrence, not an explicit r·r.
+///
+/// Dot products accumulate in f64 (like the distributed engine's
+/// rank-order reductions), so this function is the sequential
+/// cross-check for `VirtualCluster::solve_cg_opts` with
+/// `CgVariant::Pipelined`.
+pub fn pipelined_cg_solve<B: SpmvBackend>(
+    backend: &mut B,
+    b: &[f32],
+    max_iters: usize,
+    tol: f32,
+) -> Result<CgResult> {
+    let n = backend.n();
+    assert_eq!(b.len(), n);
+    const TINY: f64 = 1e-30;
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut ap = vec![0.0f32; n];
+    let dot = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x * *y) as f64).sum()
+    };
+    let mut rs = dot(&r, &r);
+    let b_norm = rs.sqrt().max(TINY);
+    let mut norms = Vec::with_capacity(max_iters);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        backend.spmv(&p, &mut ap)?;
+        // The single combined "allreduce": both scalars in one message.
+        let p_ap = dot(&p, &ap).max(TINY);
+        let ap_ap = dot(&ap, &ap);
+        let alpha = rs / p_ap;
+        // rs' = rs − 2α(p·Ap) + α²(Ap·Ap) with α = rs/(p·Ap) collapses
+        // to α²(Ap·Ap) − rs; clamp against late-stage cancellation.
+        let rs_new = (alpha * alpha * ap_ap - rs).max(0.0);
+        let beta = (rs_new / rs.max(TINY)) as f32;
+        let alpha = alpha as f32;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+        iters += 1;
+        norms.push(rs.sqrt() as f32);
+        if rs.sqrt() <= tol as f64 * b_norm {
+            break;
+        }
+    }
+    Ok(CgResult { x, residual_norms: norms, iterations: iters })
+}
+
 /// Row-distributed ELL matrix.
 pub struct DistributedMatrix {
     /// Per block: (row-block with global columns, owned global rows).
     pub blocks: Vec<(EllMatrix, Vec<u32>)>,
+    /// Global number of rows.
     pub n: usize,
     /// Wall-clock seconds spent in each block's SpMV since the last
     /// `take_times` (drives the simulator's per-PU compute observation).
@@ -23,6 +88,7 @@ pub struct DistributedMatrix {
 }
 
 impl DistributedMatrix {
+    /// Split `ell` into per-PU row blocks according to `part`.
     pub fn new(ell: &EllMatrix, part: &Partition) -> DistributedMatrix {
         let blocks: Vec<(EllMatrix, Vec<u32>)> = (0..part.k as u32)
             .map(|b| ell.block_rows(&part.assignment, b))
@@ -118,6 +184,58 @@ mod tests {
         assert!(times.iter().all(|&t| t >= 0.0));
         // Second take is reset.
         assert!(dist.take_times().iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn pipelined_cg_matches_classic_solution() {
+        let (_g, ell, _part) = setup();
+        let b: Vec<f32> = (0..ell.n).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
+        // 40 iterations keeps both solvers well above the f32 convergence
+        // floor, where the ‖r‖² recurrence is a faithful tracker; at the
+        // floor it deviates by design (the pipelined-CG trade-off).
+        let mut whole = NativeBackend { a: &ell };
+        let seq = cg_solve(&mut whole, &b, 40, 0.0).unwrap();
+        let mut whole = NativeBackend { a: &ell };
+        let pipe = pipelined_cg_solve(&mut whole, &b, 40, 0.0).unwrap();
+        assert_eq!(pipe.iterations, seq.iterations);
+        let max_diff = seq
+            .x
+            .iter()
+            .zip(&pipe.x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "pipelined diverged from classic: {max_diff}");
+        // The recurrence residual tracks the explicit one away from the
+        // floor.
+        let (a, b) = (
+            *seq.residual_norms.last().unwrap(),
+            *pipe.residual_norms.last().unwrap(),
+        );
+        assert!((a - b).abs() <= 0.25 * a.abs().max(1e-6), "residuals {a} vs {b}");
+    }
+
+    #[test]
+    fn pipelined_cg_works_on_the_distributed_backend() {
+        let (_g, ell, part) = setup();
+        let b: Vec<f32> = (0..ell.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let mut dist = DistributedMatrix::new(&ell, &part);
+        let par = pipelined_cg_solve(&mut dist, &b, 120, 1e-5).unwrap();
+        let whole = spmv_ell_native(&ell, &par.x);
+        let err = whole
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-2, "max |Ax-b| {err}");
+    }
+
+    #[test]
+    fn pipelined_cg_handles_zero_rhs() {
+        let (_g, ell, _part) = setup();
+        let b = vec![0.0f32; ell.n];
+        let mut whole = NativeBackend { a: &ell };
+        let res = pipelined_cg_solve(&mut whole, &b, 10, 1e-6).unwrap();
+        assert!(res.x.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! through the native backend or the PJRT artifact — so reported
 //! residuals are genuine.
 
-use crate::exec::{CostModel, ExecBackend, ExecReport, VirtualCluster};
+use crate::exec::{CostModel, ExecBackend, ExecReport, SolveOpts, VirtualCluster};
 use crate::graph::{Csr, QuotientGraph};
 use crate::partition::Partition;
 use crate::solver::cg::{cg_solve, CgResult, SpmvBackend};
@@ -144,8 +144,26 @@ impl ClusterSim {
         max_iters: usize,
         tol: f32,
     ) -> Result<(CgResult, ExecReport)> {
+        self.run_cg_virtual_opts(ell, part, topo, backend, b, max_iters, tol, SolveOpts::default())
+    }
+
+    /// [`ClusterSim::run_cg_virtual`] with explicit execution options —
+    /// nonblocking compute/communication overlap and/or the pipelined
+    /// single-reduction CG variant (see `exec::SolveOpts`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_cg_virtual_opts(
+        &self,
+        ell: &EllMatrix,
+        part: &Partition,
+        topo: &Topology,
+        backend: ExecBackend,
+        b: &[f32],
+        max_iters: usize,
+        tol: f32,
+        opts: SolveOpts,
+    ) -> Result<(CgResult, ExecReport)> {
         let vc = VirtualCluster::new(ell, part, topo, self.cost_model())?;
-        vc.solve_cg(backend, b, max_iters, tol)
+        vc.solve_cg_opts(backend, b, max_iters, tol, opts)
     }
 
     /// Full simulated CG: run the numerics for real through `backend`

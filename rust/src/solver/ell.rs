@@ -8,12 +8,15 @@ use anyhow::{ensure, Result};
 /// ELL matrix (f32, matching the AOT artifacts).
 #[derive(Debug, Clone)]
 pub struct EllMatrix {
+    /// Number of rows.
     pub n: usize,
+    /// Slots per row (the padded ELL width).
     pub w: usize,
     /// Row-major (n, w).
     pub values: Vec<f32>,
     /// Row-major (n, w).
     pub cols: Vec<i32>,
+    /// Diagonal entries, stored separately from the slots.
     pub diag: Vec<f32>,
 }
 
@@ -24,6 +27,7 @@ impl EllMatrix {
         EllMatrix::from_laplacian(&lap)
     }
 
+    /// Build from an assembled Laplacian (diagonal split out).
     pub fn from_laplacian(lap: &Laplacian) -> EllMatrix {
         let n = lap.n();
         let w = lap.max_row_nnz().max(1);

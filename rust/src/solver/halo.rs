@@ -24,6 +24,13 @@ pub struct HaloBlock {
     pub ghosts: Vec<u32>,
     /// For each neighbor PU: (neighbor, owned-local-indices to send).
     pub send_lists: Vec<(u32, Vec<u32>)>,
+    /// Local rows that reference no ghost column — computable before the
+    /// halo exchange completes, i.e. the compute a nonblocking exchange
+    /// can hide behind (ascending local indices).
+    pub interior: Vec<u32>,
+    /// Local rows that touch at least one ghost column — they must wait
+    /// for the exchange (ascending; `interior ∪ boundary` = all rows).
+    pub boundary: Vec<u32>,
 }
 
 impl HaloBlock {
@@ -39,31 +46,52 @@ impl HaloBlock {
         xl
     }
 
-    /// The block ELL kernel (diagonal + slots) over a local vector —
-    /// the single definition every distributed path shares; the exec
-    /// engine's exact-trajectory guarantee depends on there being one
-    /// copy of this loop.
-    pub fn spmv_local(&self, xl: &[f32], y_local: &mut [f32]) {
-        let nb = self.own.len();
+    /// One row of the block ELL kernel (diagonal + slots) — the single
+    /// definition every distributed path shares; the exec engine's
+    /// exact-trajectory guarantee depends on there being one copy of
+    /// this loop body ([`HaloBlock::spmv_local`] and
+    /// [`HaloBlock::spmv_rows`] both delegate here).
+    #[inline]
+    fn spmv_row(&self, xl: &[f32], li: usize) -> f32 {
         let w = self.ell.w;
-        for li in 0..nb {
-            let mut acc = self.ell.diag[li] * xl[li];
-            let base = li * w;
-            for s in 0..w {
-                acc += self.ell.values[base + s] * xl[self.ell.cols[base + s] as usize];
-            }
-            y_local[li] = acc;
+        let mut acc = self.ell.diag[li] * xl[li];
+        let base = li * w;
+        for s in 0..w {
+            acc += self.ell.values[base + s] * xl[self.ell.cols[base + s] as usize];
+        }
+        acc
+    }
+
+    /// The block ELL kernel over a local vector: every owned row through
+    /// the shared [`HaloBlock::spmv_row`] body.
+    pub fn spmv_local(&self, xl: &[f32], y_local: &mut [f32]) {
+        for li in 0..self.own.len() {
+            y_local[li] = self.spmv_row(xl, li);
+        }
+    }
+
+    /// The same kernel over a subset of local rows. Running it on
+    /// [`HaloBlock::interior`] and then [`HaloBlock::boundary`] produces a
+    /// `y_local` bit-identical to [`HaloBlock::spmv_local`] (same row
+    /// body, rows written independently) — the property that makes
+    /// compute/communication overlap numerics-free.
+    pub fn spmv_rows(&self, xl: &[f32], y_local: &mut [f32], rows: &[u32]) {
+        for &li in rows {
+            y_local[li as usize] = self.spmv_row(xl, li as usize);
         }
     }
 }
 
 /// Halo-exchange distributed matrix.
 pub struct HaloMatrix {
+    /// One block per PU, in rank order.
     pub blocks: Vec<HaloBlock>,
+    /// Global number of rows.
     pub n: usize,
 }
 
 impl HaloMatrix {
+    /// Decompose `ell` into per-block halo structures under `part`.
     pub fn new(ell: &EllMatrix, part: &Partition) -> HaloMatrix {
         let k = part.k;
         let n = ell.n;
@@ -111,6 +139,21 @@ impl HaloMatrix {
                     };
                 }
             }
+            // Split rows by whether they reference a ghost column: the
+            // interior rows are exactly the work a nonblocking halo
+            // exchange can hide.
+            let mut interior = Vec::new();
+            let mut boundary = Vec::new();
+            for li in 0..nb {
+                let touches_ghost = (0..w).any(|s| {
+                    values[li * w + s] != 0.0 && cols[li * w + s] as usize >= nb
+                });
+                if touches_ghost {
+                    boundary.push(li as u32);
+                } else {
+                    interior.push(li as u32);
+                }
+            }
             let ell_local = EllMatrix {
                 n: nb,
                 w,
@@ -123,6 +166,8 @@ impl HaloMatrix {
                 own,
                 ghosts,
                 send_lists: Vec::new(), // filled below
+                interior,
+                boundary,
             });
         }
         // Send lists: for each block's ghosts, tell the owner to send.
@@ -299,6 +344,43 @@ mod tests {
             .map(|(p, q)| (p - q).abs())
             .fold(0.0f32, f32::max);
         assert!(err < 1e-2, "max |Ax-b| {err}");
+    }
+
+    #[test]
+    fn interior_boundary_split_covers_all_rows_and_matches_full_spmv() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.23).cos()).collect();
+        for blk in &h.blocks {
+            let nb = blk.own.len();
+            // Disjoint cover of all local rows.
+            let mut seen = vec![false; nb];
+            for &li in blk.interior.iter().chain(&blk.boundary) {
+                assert!(!seen[li as usize], "row {li} in both splits");
+                seen[li as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "split misses rows");
+            // Boundary rows are exactly those touching ghost columns.
+            for &li in &blk.boundary {
+                let li = li as usize;
+                let touches = (0..blk.ell.w).any(|s| {
+                    blk.ell.values[li * blk.ell.w + s] != 0.0
+                        && blk.ell.cols[li * blk.ell.w + s] as usize >= nb
+                });
+                assert!(touches, "boundary row {li} has no ghost column");
+            }
+            // interior-then-boundary ≡ the full kernel, bit for bit.
+            let xl = blk.gather_local(&x);
+            let mut full = vec![0.0f32; nb];
+            blk.spmv_local(&xl, &mut full);
+            let mut split = vec![0.0f32; nb];
+            blk.spmv_rows(&xl, &mut split, &blk.interior);
+            blk.spmv_rows(&xl, &mut split, &blk.boundary);
+            assert_eq!(full, split);
+        }
+        // A nontrivial partition must actually have both kinds of rows.
+        assert!(h.blocks.iter().any(|b| !b.interior.is_empty()));
+        assert!(h.blocks.iter().any(|b| !b.boundary.is_empty()));
     }
 
     #[test]

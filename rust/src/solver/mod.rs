@@ -17,7 +17,7 @@ pub mod precond;
 pub mod spmv;
 
 pub use cg::{cg_solve, CgResult};
-pub use distcg::DistributedMatrix;
+pub use distcg::{pipelined_cg_solve, DistributedMatrix};
 pub use halo::HaloMatrix;
 pub use precond::pcg_solve;
 pub use distsim::{ClusterSim, SimReport};

@@ -13,8 +13,16 @@ pub struct Pu {
 /// [`Topology::nodes`]; leaves reference a PU index.
 #[derive(Debug, Clone)]
 pub enum TreeNode {
-    Inner { children: Vec<usize> },
-    Leaf { pu: usize },
+    /// Aggregating inner node.
+    Inner {
+        /// Child node indices into [`Topology::nodes`].
+        children: Vec<usize>,
+    },
+    /// Leaf of the tree: one processing unit.
+    Leaf {
+        /// Index into [`Topology::pus`].
+        pu: usize,
+    },
 }
 
 /// A compute-system topology: `k` PUs at the leaves of a tree.
@@ -24,9 +32,11 @@ pub enum TreeNode {
 /// [`Topology::flat`].
 #[derive(Debug, Clone)]
 pub struct Topology {
+    /// Processing units, in leaf order.
     pub pus: Vec<Pu>,
     /// Tree nodes; `nodes[root]` is the root.
     pub nodes: Vec<TreeNode>,
+    /// Index of the root in [`Topology::nodes`].
     pub root: usize,
     /// Human-readable label used in experiment tables.
     pub label: String,

@@ -50,8 +50,11 @@ pub fn topo1(spec: Topo1Spec) -> Topology {
 /// TOPO2 parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct Topo2Spec {
+    /// Total PU count.
     pub k: usize,
+    /// Number of fast PUs (the first `num_fast` leaves).
     pub num_fast: usize,
+    /// Speed/memory of each fast PU.
     pub fast: Pu,
 }
 

@@ -10,11 +10,14 @@ use std::path::Path;
 /// A rectangular table of strings with a header row.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Column headers, in display order.
     pub header: Vec<String>,
+    /// Table rows (each as long as `header`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
         Table {
             header: header.into_iter().map(Into::into).collect(),
@@ -22,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header length).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(

@@ -9,6 +9,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a wall-clock timer.
     pub fn start() -> Timer {
         Timer { start: Instant::now() }
     }
@@ -18,6 +19,7 @@ impl Timer {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Elapsed time since [`Timer::start`].
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
@@ -45,6 +47,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Fresh phase timer with no recorded phases.
     pub fn new() -> PhaseTimer {
         PhaseTimer::default()
     }
@@ -65,10 +68,12 @@ impl PhaseTimer {
         r
     }
 
+    /// Total seconds over all recorded phases.
     pub fn total(&self) -> f64 {
         self.phases.iter().map(|(_, s)| s).sum()
     }
 
+    /// Recorded `(name, seconds)` phases, in order.
     pub fn phases(&self) -> &[(String, f64)] {
         &self.phases
     }

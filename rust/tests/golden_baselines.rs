@@ -36,12 +36,31 @@ fn smoke_results() -> &'static [ScenarioResult] {
     RESULTS.get_or_init(|| run_smoke(2))
 }
 
+/// True when running under CI (GitHub Actions exports `CI=true`).
+fn on_ci() -> bool {
+    matches!(
+        std::env::var("CI").as_deref().map(str::to_ascii_lowercase).as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
+
 #[test]
 fn golden_smoke_gate() {
     let path = golden_path(&MatrixKind::Smoke);
     let baseline = GoldenFile::load(&path)
         .unwrap_or_else(|e| panic!("golden file {} unreadable: {e}", path.display()));
     assert_eq!(baseline.matrix, "smoke");
+    // A bootstrap-mode file is an *unarmed* gate: tolerable on a dev
+    // machine (the run below fills it in), a loud failure on CI — the
+    // filled-in file must be committed so CI compares against pinned
+    // values instead of re-bootstrapping every run (EXPERIMENTS.md §2).
+    assert!(
+        !(baseline.bootstrap && on_ci()),
+        "golden file {} is still in bootstrap mode: the regression gate is UNARMED.\n\
+         Run `cargo test --test golden_baselines` on a toolchain machine and commit\n\
+         the filled-in rust/tests/golden/smoke.json (see EXPERIMENTS.md §2).",
+        path.display()
+    );
     let results = smoke_results();
 
     // Only the documented opt-in value refreshes; HETPART_UPDATE_GOLDEN=0

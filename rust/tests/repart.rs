@@ -27,6 +27,7 @@ fn front_trace_result(repartitioner: &str, backend: ExecBackend) -> TraceResult 
         backend,
         epsilon: 0.03,
         seed: 42,
+        ..TraceOptions::default()
     };
     let rp = repartitioner_for_trace(repartitioner, &opts.scratch_algo).expect("registry");
     run_trace(&trace, rp.as_ref(), &opts).expect("trace run")

@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Check that relative links in markdown files resolve to real paths.
+
+Usage: python3 tools/check_md_links.py README.md DESIGN.md ...
+
+Scans inline markdown links `[text](target)` in each given file and
+fails (exit 1) when a relative target does not exist on disk, resolving
+targets against the linking file's directory. External links (http/https/
+mailto) and pure in-page anchors (`#...`) are skipped; a `path#anchor`
+target is checked for the path part only. Run from anywhere inside the
+repository; CI runs it from the repository root.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    try:
+        text = md.read_text(encoding="utf-8")
+    except OSError as e:
+        return [f"{md}: unreadable: {e}"]
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno}: broken relative link -> {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print(__doc__.strip())
+        return 2
+    all_errors = []
+    for name in argv:
+        md = Path(name)
+        if not md.exists():
+            all_errors.append(f"{md}: file not found")
+            continue
+        all_errors.extend(check_file(md))
+    for err in all_errors:
+        print(err)
+    if all_errors:
+        print(f"{len(all_errors)} broken link(s)")
+        return 1
+    print(f"checked {len(argv)} file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
