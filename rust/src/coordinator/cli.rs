@@ -3,11 +3,12 @@
 //! ```text
 //! hetpart blocksizes --k 96 --topo topo1 --num-fast 8 --fast-speed 16 --fast-mem 13.8
 //! hetpart partition  --family rdg2d --n 16384 --algo geoKM --k 24 [--topo topo1 ...]
+//!                    [--backend sim|threads --ranks N]   (distributed partitioning)
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic [--overlap on|off]
-//!                    [--out results/harness] [--workers N] [--verbose]
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist
+//!                    [--overlap on|off] [--out results/harness] [--workers N] [--verbose]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
@@ -57,6 +58,9 @@ USAGE: hetpart <subcommand> [--options]
 SUBCOMMANDS
   blocksizes   run Algorithm 1 and print target block weights
   partition    generate a graph, partition with one algorithm, print metrics
+               (--backend sim|threads --ranks N runs the *partitioner* on
+                the virtual cluster — geoKM|zRCB|zMJ — bit-identical to
+                the sequential run, reporting priced/measured partSecs)
   compare      run all {} partitioners on one instance (Table IV row)
   solve        partition + distributed CG under the cluster simulator
                (--backend sim|threads runs the virtual-cluster engine:
@@ -68,8 +72,11 @@ SUBCOMMANDS
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic, --overlap on flips every scenario's overlap axis,
-               --out DIR, --workers N, --verbose prints every run)
+               |dynamic|partdist — partdist sweeps the distributed
+               partitioners over backend/rank axes for the quality-vs-
+               partition-time scatter; --overlap on flips every
+               scenario's overlap axis, --out DIR, --workers N,
+               --verbose prints every run)
   repart       replay an adaptive multi-epoch workload and repartition it
                (--dynamic refine-front|speed-drift, --epochs E,
                 --repart scratchRemap|diffusion|increKM, --preset
@@ -233,7 +240,9 @@ fn cmd_harness(args: &Args) -> i32 {
     use crate::harness::{run_matrix, runner, summarize, write_artifacts, MatrixKind};
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
-        eprintln!("unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic)");
+        eprintln!(
+            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist)"
+        );
         return 2;
     };
     let workers = args.get("workers", crate::coordinator::default_workers());
@@ -411,6 +420,50 @@ fn cmd_partition(args: &Args) -> i32 {
     let epsilon = args.get("epsilon", 0.03);
     let seed = args.get("seed", 1u64);
     println!("graph {name}: n={} m={} | topo {}", g.n(), g.m(), topo.label);
+    // Distributed path: run the partitioner itself on the virtual
+    // cluster (`--backend sim|threads --ranks N`) and report partSecs —
+    // the partitioning-time axis of the paper's Tables IV–VI. The
+    // partition is bit-identical to the sequential path below.
+    if let Some(bs) = args.opt::<String>("backend") {
+        let Some(backend) = crate::exec::ExecBackend::parse(&bs) else {
+            eprintln!("unknown --backend {bs} (expected sim|threads)");
+            return 2;
+        };
+        let ranks = args.get("ranks", 4usize);
+        return match crate::coordinator::run_one_dist(
+            &name, &g, &topo, &algo, epsilon, seed, backend, ranks,
+        ) {
+            Ok((r, _p, rep)) => {
+                let mut t = Table::new(vec![
+                    "algo", "backend", "ranks", "cut", "maxCommVol", "imbalance", "ldhtObj",
+                    "partSecs", "wall(s)",
+                ]);
+                t.row(vec![
+                    r.algo.clone(),
+                    rep.backend.to_string(),
+                    rep.ranks.to_string(),
+                    fmt_f64(r.cut),
+                    fmt_f64(r.max_comm_volume),
+                    fmt_f64(r.imbalance),
+                    fmt_f64(r.ldht_objective),
+                    format!("{:.3e}", rep.part_secs()),
+                    format!("{:.3}", rep.wall_secs),
+                ]);
+                print!("{}", t.to_text());
+                println!(
+                    "bottleneck rank {} (compute {:.3e}s comm {:.3e}s)",
+                    rep.bottleneck_rank(),
+                    rep.compute_secs[rep.bottleneck_rank()],
+                    rep.comm_secs[rep.bottleneck_rank()],
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        };
+    }
     match run_one(&name, &g, &topo, &algo, epsilon, seed) {
         Ok((r, _p)) => {
             let mut t = Table::new(vec!["algo", "cut", "maxCommVol", "imbalance", "ldhtObj", "time(s)"]);

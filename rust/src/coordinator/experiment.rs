@@ -3,7 +3,7 @@
 //! quality metrics and timings.
 
 use crate::blocksizes::block_sizes;
-use crate::exec::{ExecBackend, SolveOpts};
+use crate::exec::{CostModel, DistPartReport, ExecBackend, SolveOpts, VirtualCluster};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partition::{metrics, Metrics, Partition};
@@ -67,23 +67,85 @@ pub fn run_one(
     let (part, secs) = timed(|| partitioner.partition(&ctx));
     let part = part?;
     part.validate(g).map_err(|e| anyhow!("{algo}: {e}"))?;
-    let m: Metrics = metrics(g, &part, &bs.tw);
-    let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
     Ok((
-        RunResult {
-            graph_name: graph_name.to_string(),
-            topo_label: topo.label.clone(),
-            algo: algo.to_string(),
-            cut: m.cut,
-            max_comm_volume: m.max_comm_volume,
-            total_comm_volume: m.total_comm_volume,
-            imbalance: m.imbalance,
-            time_partition: secs,
-            k: topo.k(),
-            ldht_objective: m.ldht_objective(&speeds),
-            ldht_optimum: bs.max_ratio,
-        },
+        assemble_result(graph_name, g, topo, algo, &bs.tw, bs.max_ratio, &part, secs),
         part,
+    ))
+}
+
+/// Quality metrics + timing → one [`RunResult`] row (shared by the
+/// sequential and distributed partitioning paths, so both report through
+/// the same columns).
+#[allow(clippy::too_many_arguments)]
+fn assemble_result(
+    graph_name: &str,
+    g: &Csr,
+    topo: &Topology,
+    algo: &str,
+    targets: &[f64],
+    ldht_optimum: f64,
+    part: &Partition,
+    time_partition: f64,
+) -> RunResult {
+    let m: Metrics = metrics(g, part, targets);
+    let speeds: Vec<f64> = topo.pus.iter().map(|p| p.speed).collect();
+    RunResult {
+        graph_name: graph_name.to_string(),
+        topo_label: topo.label.clone(),
+        algo: algo.to_string(),
+        cut: m.cut,
+        max_comm_volume: m.max_comm_volume,
+        total_comm_volume: m.total_comm_volume,
+        imbalance: m.imbalance,
+        time_partition,
+        k: topo.k(),
+        ldht_objective: m.ldht_objective(&speeds),
+        ldht_optimum,
+    }
+}
+
+/// [`run_one`] with the partitioner executed *on the virtual cluster*:
+/// the same Algorithm-1 targets and quality metrics, but the partition
+/// is computed by the distributed implementation of `algo`
+/// (`partitioners::dist`) over `ranks` rank threads through the chosen
+/// `Comm` transport. Returns the usual quality row (whose
+/// `time_partition` is the measured leader wall-clock), the partition —
+/// bit-identical to the sequential `run_one`'s — and the per-rank
+/// [`DistPartReport`] carrying `partSecs` (α-β priced on `sim`,
+/// measured on `threads`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_one_dist(
+    graph_name: &str,
+    g: &Csr,
+    topo: &Topology,
+    algo: &str,
+    epsilon: f64,
+    seed: u64,
+    backend: ExecBackend,
+    ranks: usize,
+) -> Result<(RunResult, Partition, DistPartReport)> {
+    let load = g.total_vertex_weight();
+    let scaled = topo.scaled_for_load(load, crate::blocksizes::TABLE3_FILL);
+    let bs = block_sizes(load, &scaled)
+        .with_context(|| format!("block sizes for {}", topo.label))?;
+    let (out, secs) = timed(|| {
+        VirtualCluster::partition_dist(
+            g,
+            &bs.tw,
+            epsilon,
+            seed,
+            algo,
+            backend,
+            ranks,
+            CostModel::default(),
+        )
+    });
+    let (part, report) = out.with_context(|| format!("distributed {algo} on {graph_name}"))?;
+    part.validate(g).map_err(|e| anyhow!("{algo}: {e}"))?;
+    Ok((
+        assemble_result(graph_name, g, topo, algo, &bs.tw, bs.max_ratio, &part, secs),
+        part,
+        report,
     ))
 }
 
@@ -291,6 +353,26 @@ mod tests {
         let (name, g) = instance(Family::Tri2d, 100, 1);
         let topo = Topology::homogeneous(2, 1.0, 1e9);
         assert!(run_one(&name, &g, &topo, "bogus", 0.05, 1).is_err());
+    }
+
+    #[test]
+    fn run_one_dist_matches_sequential_quality() {
+        let (name, g) = instance(Family::Tri2d, 900, 1);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let (seq, p_seq) = run_one(&name, &g, &topo, "zRCB", 0.05, 1).unwrap();
+        let (r, p, rep) =
+            run_one_dist(&name, &g, &topo, "zRCB", 0.05, 1, ExecBackend::Sim, 2).unwrap();
+        assert_eq!(p.assignment, p_seq.assignment, "distributed zRCB diverged");
+        assert_eq!(r.cut, seq.cut);
+        assert_eq!(r.max_comm_volume, seq.max_comm_volume);
+        assert_eq!(r.ldht_objective, seq.ldht_objective);
+        assert_eq!(rep.ranks, 2);
+        assert!(rep.part_secs() > 0.0);
+        // Algorithms without a distributed implementation are a clean error.
+        let err = run_one_dist(&name, &g, &topo, "pmGraph", 0.05, 1, ExecBackend::Sim, 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("distributed"), "{err}");
     }
 
     #[test]

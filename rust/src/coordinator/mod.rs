@@ -6,8 +6,8 @@ pub mod experiment;
 pub mod jobqueue;
 
 pub use experiment::{
-    default_rhs, instance, relative_to, run_one, run_solve, run_solve_opts, Grid, RunResult,
-    SolveResult,
+    default_rhs, instance, relative_to, run_one, run_one_dist, run_solve, run_solve_opts, Grid,
+    RunResult, SolveResult,
 };
 pub use jobqueue::{default_workers, run_jobs};
 

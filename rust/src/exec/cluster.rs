@@ -254,6 +254,41 @@ impl VirtualCluster {
         self.speeds.len()
     }
 
+    /// Run a *partitioner* on the virtual cluster: cut `g` into `ranks`
+    /// row strips and execute the distributed implementation of `algo`
+    /// (see `partitioners::dist::DIST_NAMES`) through the chosen
+    /// transport, returning the assembled partition plus the per-rank
+    /// partitioning-time report (priced on `sim`, measured on
+    /// `threads`).
+    ///
+    /// This is an associated constructor-style entry point rather than a
+    /// method: partitioning is what *produces* the partition a
+    /// `VirtualCluster` instance is built from. The result is
+    /// bit-identical to the sequential `partitioners::by_name(algo)` run
+    /// with the same inputs (pinned by `tests/dist_partition.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn partition_dist(
+        g: &crate::graph::Csr,
+        targets: &[f64],
+        epsilon: f64,
+        seed: u64,
+        algo: &str,
+        backend: ExecBackend,
+        ranks: usize,
+        cost: CostModel,
+    ) -> Result<(Partition, super::partition::DistPartReport)> {
+        use crate::partitioners::dist::{dist_by_name, DIST_NAMES};
+        let p = dist_by_name(algo).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no distributed implementation for '{algo}' (available: {})",
+                DIST_NAMES.join(", ")
+            )
+        })?;
+        super::partition::run_dist_partition(
+            g, targets, epsilon, seed, p.as_ref(), backend, ranks, cost,
+        )
+    }
+
     /// Run distributed CG from x₀ = 0 through the chosen backend
     /// (blocking exchange, classic CG — see
     /// [`VirtualCluster::solve_cg_opts`] for overlap and variants).

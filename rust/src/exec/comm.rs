@@ -47,12 +47,46 @@
 //!   `min(comm, compute)` is tracked per rank
 //!   ([`Comm::comm_hidden_secs`]) and feeds the harness's
 //!   overlap-efficiency columns.
+//!
+//! # Generic rendezvous collectives
+//!
+//! Beyond the halo-shaped traffic, the trait carries four MPI-flavored
+//! *generic* collectives — [`Comm::allreduce_vec`] (with [`ReduceOp`]
+//! sum/min/max), [`Comm::allgatherv`], [`Comm::alltoallv`], and
+//! [`Comm::broadcast`] — the vocabulary distributed *partitioners* need
+//! (they run before any partition, and hence any halo structure,
+//! exists). These are blocking rendezvous operations: every rank thread
+//! calls them in the same order and each call synchronizes internally
+//! (a fixed barrier-phase sequence), so they must be driven by `k`
+//! concurrent rank threads — `k == 1` passes trivially and is priced as
+//! free. `Sum`
+//! folds contributions in rank order (bit-deterministic); `Min`/`Max`
+//! are exact and order-independent. [`SimComm`] prices each call with an
+//! α-β tree model (`ceil(log2 k)` latency rounds + β per byte moved);
+//! [`ThreadComm`] charges measured wall-clock including the rendezvous
+//! wait.
 
 use crate::partition::Partition;
 use crate::solver::halo::HaloMatrix;
 use crate::util::timer::Timer;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Barrier, Mutex};
+
+/// Element-wise combine rule for [`Comm::allreduce_vec`].
+///
+/// `Sum` combines the per-rank contributions **in rank order** (the same
+/// determinism contract as the scalar reduction channels); `Min`/`Max`
+/// are associative and exact in f64, so they are order-independent by
+/// construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Rank-order sum.
+    Sum,
+    /// Element-wise minimum.
+    Min,
+    /// Element-wise maximum.
+    Max,
+}
 
 /// One rank's outgoing traffic to one neighbor.
 #[derive(Debug, Clone)]
@@ -106,6 +140,17 @@ impl ExchangePlan {
             ghost_len: h.blocks.iter().map(|b| b.ghosts.len()).collect(),
             own_len: h.blocks.iter().map(|b| b.own.len()).collect(),
             sends,
+        }
+    }
+
+    /// A plan with no halo traffic, for transports used only for the
+    /// generic collectives (e.g. distributed partitioning, which runs
+    /// *before* any partition — and hence any halo structure — exists).
+    pub fn collectives_only(k: usize) -> ExchangePlan {
+        ExchangePlan {
+            sends: vec![Vec::new(); k],
+            ghost_len: vec![0; k],
+            own_len: vec![0; k],
         }
     }
 
@@ -227,6 +272,141 @@ pub trait Comm: Sync {
     fn comm_hidden_secs(&self) -> Vec<f64> {
         vec![0.0; self.k()]
     }
+
+    // ---- generic rendezvous collectives --------------------------------
+    //
+    // MPI-flavored blocking collectives for algorithms that run *through*
+    // the transport but outside the halo structure (distributed
+    // partitioning runs before any partition exists). Unlike the
+    // split-phase calls above, these synchronize internally, so they must
+    // be invoked from k concurrent rank threads, every rank issuing the
+    // same sequence of collective calls (k == 1 trivially passes). The
+    // priced transport charges an α-β tree cost per call (free at k = 1);
+    // the measured transport charges wall-clock including rendezvous
+    // waits.
+
+    /// Combine `data` element-wise across ranks (in place). `Sum` folds
+    /// the contributions in rank order, so results are bit-deterministic
+    /// regardless of thread scheduling; every rank must pass the same
+    /// length.
+    fn allreduce_vec(&self, rank: usize, data: &mut [f64], op: ReduceOp);
+    /// Gather the variable-length per-rank contributions, concatenated in
+    /// rank order; every rank receives the same vector.
+    fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64>;
+    /// Personalized all-to-all: `parts[d]` is shipped to rank `d`;
+    /// returns the parts addressed to `rank`, indexed by source rank.
+    fn alltoallv(&self, rank: usize, parts: &[Vec<f64>]) -> Vec<Vec<f64>>;
+    /// Replicate `root`'s vector on every rank (non-root `data` is
+    /// overwritten).
+    fn broadcast(&self, rank: usize, root: usize, data: &mut Vec<f64>);
+}
+
+/// Shared state of the generic *rendezvous* collectives
+/// ([`Comm::allreduce_vec`], [`Comm::allgatherv`], [`Comm::alltoallv`],
+/// [`Comm::broadcast`]): per-rank contribution slots plus a dedicated
+/// barrier. Every collective is a fixed sequence of barrier phases
+/// (deposit, rendezvous, read, rendezvous — allreduce inserts a
+/// leader-fold phase) so the slots can be reused by the next call.
+///
+/// Unlike the split-phase halo/reduction calls (which the sequential
+/// superstep executor can drive one rank at a time), these collectives
+/// block at a real [`Barrier`], so they must be called from `k`
+/// concurrent rank threads (`k == 1` trivially passes). Both transports
+/// share this mechanism; they differ only in how the call is *costed*
+/// (α-β priced vs wall-clock measured).
+struct Collectives {
+    k: usize,
+    barrier: Barrier,
+    /// Per-rank contribution for allreduce/allgatherv/broadcast.
+    parts: Vec<Mutex<Vec<f64>>>,
+    /// The folded allreduce result (leader-written).
+    reduced: Mutex<Vec<f64>>,
+    /// Per *sender* rank: parts-by-destination for alltoallv.
+    a2a: Vec<Mutex<Vec<Vec<f64>>>>,
+}
+
+impl Collectives {
+    fn new(k: usize) -> Collectives {
+        Collectives {
+            k,
+            barrier: Barrier::new(k),
+            parts: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+            reduced: Mutex::new(Vec::new()),
+            a2a: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Combine `data` element-wise across ranks (`Sum` in rank order).
+    /// Every rank must pass the same length.
+    ///
+    /// One rank (the barrier leader — *which* one is irrelevant, the
+    /// fold is in rank order either way) combines the slots once and the
+    /// rest copy the result: Θ(k·len) total instead of every rank
+    /// redoing the fold, so the measured transport's comm time reflects
+    /// a real reduction, not k replicated ones.
+    fn allreduce(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
+        *self.parts[rank].lock().unwrap() = data.to_vec();
+        if self.barrier.wait().is_leader() {
+            let mut acc = self.parts[0].lock().unwrap().clone();
+            debug_assert_eq!(acc.len(), data.len(), "allreduce_vec length mismatch");
+            for r in 1..self.k {
+                let part = self.parts[r].lock().unwrap();
+                debug_assert_eq!(part.len(), acc.len(), "allreduce_vec length mismatch");
+                for (a, &v) in acc.iter_mut().zip(part.iter()) {
+                    match op {
+                        ReduceOp::Sum => *a += v,
+                        ReduceOp::Min => *a = a.min(v),
+                        ReduceOp::Max => *a = a.max(v),
+                    }
+                }
+            }
+            *self.reduced.lock().unwrap() = acc;
+        }
+        self.barrier.wait();
+        data.copy_from_slice(&self.reduced.lock().unwrap());
+        self.barrier.wait();
+    }
+
+    /// Concatenate the per-rank contributions in rank order. Returns the
+    /// full concatenation (every rank gets the same vector).
+    fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64> {
+        *self.parts[rank].lock().unwrap() = local.to_vec();
+        self.barrier.wait();
+        let mut out = Vec::new();
+        for r in 0..self.k {
+            out.extend_from_slice(&self.parts[r].lock().unwrap());
+        }
+        self.barrier.wait();
+        out
+    }
+
+    /// Personalized exchange: `parts[d]` is shipped to rank `d`; the
+    /// return value is indexed by *source* rank.
+    fn alltoallv(&self, rank: usize, parts: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        debug_assert_eq!(parts.len(), self.k, "alltoallv needs one part per rank");
+        *self.a2a[rank].lock().unwrap() = parts.to_vec();
+        self.barrier.wait();
+        let mut out = Vec::with_capacity(self.k);
+        for r in 0..self.k {
+            out.push(self.a2a[r].lock().unwrap()[rank].clone());
+        }
+        self.barrier.wait();
+        out
+    }
+
+    /// Replicate `root`'s vector on every rank (non-root `data` is
+    /// overwritten, resizing as needed).
+    fn broadcast(&self, rank: usize, root: usize, data: &mut Vec<f64>) {
+        debug_assert!(root < self.k, "broadcast root {root} out of range");
+        if rank == root {
+            *self.parts[root].lock().unwrap() = data.clone();
+        }
+        self.barrier.wait();
+        if rank != root {
+            *data = self.parts[root].lock().unwrap().clone();
+        }
+        self.barrier.wait();
+    }
 }
 
 /// Shared mailbox state: per-rank ghost inboxes, two reduction channels,
@@ -305,6 +485,7 @@ pub struct SimComm {
     cost: CostModel,
     regions: Vec<Mutex<OverlapRegion>>,
     hidden: Vec<Mutex<f64>>,
+    colls: Collectives,
 }
 
 impl SimComm {
@@ -318,6 +499,29 @@ impl SimComm {
             cost,
             regions: (0..k).map(|_| Mutex::new(OverlapRegion::default())).collect(),
             hidden: (0..k).map(|_| Mutex::new(0.0)).collect(),
+            colls: Collectives::new(k),
+        }
+    }
+
+    /// Tree depth of a k-rank collective: `ceil(log2 k)` rounds, so a
+    /// single-rank "collective" is free — unlike the scalar reduction
+    /// channels, whose legacy pricing floors at one latency.
+    fn tree_depth(&self) -> f64 {
+        let k = self.k();
+        if k <= 1 {
+            0.0
+        } else {
+            (k as f64).log2().ceil()
+        }
+    }
+
+    /// Price one generic collective for one rank: `depth` latency rounds
+    /// plus β per byte that actually crosses the transport.
+    fn charge_collective(&self, rank: usize, bytes_moved: f64) {
+        let depth = self.tree_depth();
+        if depth > 0.0 {
+            self.mb
+                .charge(rank, self.cost.allreduce_base * depth + self.cost.beta * bytes_moved);
         }
     }
 
@@ -442,6 +646,56 @@ impl Comm for SimComm {
     fn comm_hidden_secs(&self) -> Vec<f64> {
         self.hidden.iter().map(|m| *m.lock().unwrap()).collect()
     }
+
+    fn allreduce_vec(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
+        // A tree allreduce moves the vector once per level.
+        self.charge_collective(rank, 8.0 * data.len() as f64 * self.tree_depth());
+        self.colls.allreduce(rank, data, op);
+    }
+
+    fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64> {
+        let out = self.colls.allgatherv(rank, local);
+        // Receive-dominated: each rank pulls in everyone else's share.
+        self.charge_collective(rank, 8.0 * (out.len() - local.len()) as f64);
+        out
+    }
+
+    fn alltoallv(&self, rank: usize, parts: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let sent: usize = parts
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != rank)
+            .map(|(_, p)| p.len())
+            .sum();
+        let out = self.colls.alltoallv(rank, parts);
+        let recvd: usize = out
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| *s != rank)
+            .map(|(_, p)| p.len())
+            .sum();
+        if self.k() > 1 {
+            // One message per peer plus β for every word shipped each way.
+            self.mb.charge(
+                rank,
+                self.cost.alpha * (self.k() - 1) as f64
+                    + self.cost.beta * 8.0 * (sent + recvd) as f64,
+            );
+        }
+        out
+    }
+
+    fn broadcast(&self, rank: usize, root: usize, data: &mut Vec<f64>) {
+        if rank == root {
+            // The payload length is known before the call on the root
+            // only; price both ends from it (symmetric tree).
+            self.charge_collective(rank, 8.0 * data.len() as f64);
+        }
+        self.colls.broadcast(rank, root, data);
+        if rank != root {
+            self.charge_collective(rank, 8.0 * data.len() as f64);
+        }
+    }
 }
 
 /// One in-flight notification of the nonblocking thread transport: the
@@ -476,6 +730,7 @@ pub struct ThreadComm {
     nb_got: Vec<Mutex<usize>>,
     /// Per rank: whether an exchange is in flight, and its sequence.
     nb_open: Vec<Mutex<(bool, u32)>>,
+    colls: Collectives,
 }
 
 impl ThreadComm {
@@ -506,6 +761,7 @@ impl ThreadComm {
             nb_expected,
             nb_got: (0..k).map(|_| Mutex::new(0usize)).collect(),
             nb_open: (0..k).map(|_| Mutex::new((false, 0u32))).collect(),
+            colls: Collectives::new(k),
         }
     }
 
@@ -658,6 +914,36 @@ impl Comm for ThreadComm {
         // Measured transport: hidden time shows up as *absent* wall-clock,
         // not as an accounting line.
         vec![0.0; self.k()]
+    }
+
+    // The measured transport charges each rank the wall-clock of the
+    // whole collective, rendezvous waits included — lagging into a
+    // collective is the thread analogue of arriving late at the barrier.
+
+    fn allreduce_vec(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
+        let t = Timer::start();
+        self.colls.allreduce(rank, data, op);
+        self.mb.charge(rank, t.secs());
+    }
+
+    fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64> {
+        let t = Timer::start();
+        let out = self.colls.allgatherv(rank, local);
+        self.mb.charge(rank, t.secs());
+        out
+    }
+
+    fn alltoallv(&self, rank: usize, parts: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let t = Timer::start();
+        let out = self.colls.alltoallv(rank, parts);
+        self.mb.charge(rank, t.secs());
+        out
+    }
+
+    fn broadcast(&self, rank: usize, root: usize, data: &mut Vec<f64>) {
+        let t = Timer::start();
+        self.colls.broadcast(rank, root, data);
+        self.mb.charge(rank, t.secs());
     }
 }
 
@@ -860,6 +1146,115 @@ mod tests {
         comm.isend_halo(0, &owned);
         comm.wait_all(0);
         assert!(comm.comm_secs()[0] > 0.0, "outstanding exchange must be charged");
+    }
+
+    /// Run `f(rank)` on k concurrent rank threads, collecting results in
+    /// rank order (the calling convention the rendezvous collectives
+    /// require).
+    fn on_ranks<R: Send>(k: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        let slots: Vec<Mutex<Option<R>>> = (0..k).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for (rank, slot) in slots.iter().enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    *slot.lock().unwrap() = Some(f(rank));
+                });
+            }
+        });
+        slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+    }
+
+    #[test]
+    fn collectives_sum_in_rank_order_and_agree_across_backends() {
+        let k = 4;
+        let plan = Arc::new(ExchangePlan::collectives_only(k));
+        let sim = SimComm::new(plan.clone(), CostModel::default());
+        let thr = ThreadComm::new(plan);
+        let input = |rank: usize| -> Vec<f64> {
+            (0..5).map(|i| (rank * 10 + i) as f64 * 0.37).collect()
+        };
+        let via = |comm: &dyn Comm| -> Vec<Vec<f64>> {
+            on_ranks(k, |rank| {
+                let mut v = input(rank);
+                comm.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+                v
+            })
+        };
+        let s = via(&sim);
+        let t = via(&thr);
+        // Rank-order fold reference.
+        let mut want = input(0);
+        for r in 1..k {
+            for (w, v) in want.iter_mut().zip(input(r)) {
+                *w += v;
+            }
+        }
+        for rank in 0..k {
+            assert_eq!(s[rank], want, "sim rank {rank}");
+            assert_eq!(t[rank], want, "threads rank {rank}");
+        }
+        // Priced cost recorded on sim, measured on threads.
+        assert!(sim.comm_secs().iter().all(|&c| c > 0.0));
+        assert!(thr.comm_secs().iter().all(|&c| c >= 0.0));
+    }
+
+    #[test]
+    fn allgatherv_concatenates_and_broadcast_replicates() {
+        let k = 3;
+        let plan = Arc::new(ExchangePlan::collectives_only(k));
+        let comm = SimComm::new(plan, CostModel::default());
+        let gathered = on_ranks(k, |rank| {
+            let local: Vec<f64> = (0..=rank).map(|i| i as f64 + rank as f64).collect();
+            comm.allgatherv(rank, &local)
+        });
+        let want = vec![0.0, 1.0, 2.0, 2.0, 3.0, 4.0];
+        for (rank, g) in gathered.iter().enumerate() {
+            assert_eq!(g, &want, "rank {rank}");
+        }
+        let bcast = on_ranks(k, |rank| {
+            let mut v = if rank == 1 { vec![7.0, 8.0, 9.0] } else { Vec::new() };
+            comm.broadcast(rank, 1, &mut v);
+            v
+        });
+        for (rank, b) in bcast.iter().enumerate() {
+            assert_eq!(b, &vec![7.0, 8.0, 9.0], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn alltoallv_is_a_transpose() {
+        let k = 3;
+        let plan = Arc::new(ExchangePlan::collectives_only(k));
+        let comm = ThreadComm::new(plan);
+        let part = |from: usize, to: usize| -> Vec<f64> {
+            (0..(from + to) % 3).map(|i| (from * 100 + to * 10 + i) as f64).collect()
+        };
+        let got = on_ranks(k, |rank| {
+            let parts: Vec<Vec<f64>> = (0..k).map(|d| part(rank, d)).collect();
+            comm.alltoallv(rank, &parts)
+        });
+        for to in 0..k {
+            for from in 0..k {
+                assert_eq!(got[to][from], part(from, to), "{from} -> {to}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free_and_trivial() {
+        let plan = Arc::new(ExchangePlan::collectives_only(1));
+        let comm = SimComm::new(plan, CostModel::default());
+        let mut v = vec![1.5, -2.0];
+        comm.allreduce_vec(0, &mut v, ReduceOp::Sum);
+        assert_eq!(v, vec![1.5, -2.0]);
+        comm.allreduce_vec(0, &mut v, ReduceOp::Min);
+        assert_eq!(v, vec![1.5, -2.0]);
+        assert_eq!(comm.allgatherv(0, &v), v);
+        let mut b = vec![3.0];
+        comm.broadcast(0, 0, &mut b);
+        let back = comm.alltoallv(0, &[vec![9.0]]);
+        assert_eq!(back, vec![vec![9.0]]);
+        assert_eq!(comm.comm_secs(), vec![0.0], "self-collectives must be free");
     }
 
     #[test]

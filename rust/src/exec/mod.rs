@@ -26,13 +26,25 @@
 //! their sum — the simulator rewards overlap the way real hardware does —
 //! while `ThreadComm` realizes the overlap through in-flight channels.
 //! Overlap never changes numerics: on/off runs are bit-identical.
+//!
+//! Beyond the solver-shaped traffic, the seam carries generic
+//! rendezvous collectives (`allreduce_vec`/`allgatherv`/`alltoallv`/
+//! `broadcast`, see [`Comm`]) so *partitioning itself* can execute on
+//! the cluster: [`run_dist_partition`] drives a
+//! `partitioners::dist::DistPartitioner` with one rank thread per row
+//! strip and reports priced (`sim`) or measured (`threads`)
+//! partitioning time per rank ([`DistPartReport`]) — the paper's
+//! quality-vs-partitioning-time axis. Distributed partitions are
+//! bit-identical to their sequential counterparts at every rank count.
 
 mod cluster;
 mod comm;
+mod partition;
 
 pub use cluster::{
     CgVariant, ClusterBackend, ExecBackend, ExecReport, SolveOpts, VirtualCluster,
 };
+pub use partition::{run_dist_partition, DistPartReport};
 pub use comm::{
-    Comm, CommRequest, CostModel, ExchangePlan, SendSegment, SimComm, ThreadComm,
+    Comm, CommRequest, CostModel, ExchangePlan, ReduceOp, SendSegment, SimComm, ThreadComm,
 };

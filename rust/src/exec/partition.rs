@@ -1,0 +1,214 @@
+//! Distributed-partitioning driver: run a
+//! [`DistPartitioner`](crate::partitioners::dist::DistPartitioner) on
+//! the virtual cluster and report *partitioning time* the same way the
+//! solver reports solve time — α-β priced on the `sim` transport,
+//! wall-clock measured on `threads`.
+//!
+//! Both backends drive the algorithm with one OS thread per rank (the
+//! rendezvous collectives require concurrent ranks); the backends differ
+//! only in costing. On `sim`, compute is modeled from the algorithm's
+//! deterministic operation count (`modeled_ops · t_flop`, speed-1 ranks)
+//! and communication is α-β priced per collective, so the reported
+//! [`DistPartReport::part_secs`] is exactly reproducible run to run —
+//! the number the harness's `partSecs` column and the paper's
+//! quality-vs-partitioning-time scatter consume. On `threads`, both
+//! shares are measured.
+
+use super::cluster::ExecBackend;
+use super::comm::{Comm, CostModel, ExchangePlan, SimComm, ThreadComm};
+use crate::graph::Csr;
+use crate::partition::Partition;
+use crate::partitioners::dist::{build_strips, DistCtx, DistPartitioner};
+use crate::util::timer::Timer;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::sync::{Arc, Mutex};
+
+/// Per-rank cost breakdown of one distributed partitioning run.
+#[derive(Debug, Clone)]
+pub struct DistPartReport {
+    /// Which transport ran (`"sim"` / `"threads"`).
+    pub backend: &'static str,
+    /// Rank count the partitioner executed on.
+    pub ranks: usize,
+    /// Algorithm name.
+    pub algo: String,
+    /// Per-rank compute seconds: modeled (`sim`) or measured (`threads`).
+    pub compute_secs: Vec<f64>,
+    /// Per-rank communication seconds: α-β priced (`sim`) or measured
+    /// scatter/rendezvous (`threads`).
+    pub comm_secs: Vec<f64>,
+    /// Leader wall-clock for the whole run (thread spawn included).
+    pub wall_secs: f64,
+}
+
+impl DistPartReport {
+    /// Partitioning makespan: the slowest rank's compute + communication
+    /// — deterministic on the priced backend, measured on `threads`.
+    pub fn part_secs(&self) -> f64 {
+        (0..self.ranks)
+            .map(|r| self.compute_secs[r] + self.comm_secs[r])
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Rank whose compute + comm bounds the run.
+    pub fn bottleneck_rank(&self) -> usize {
+        (0..self.ranks)
+            .max_by(|&a, &b| {
+                let ta = self.compute_secs[a] + self.comm_secs[a];
+                let tb = self.compute_secs[b] + self.comm_secs[b];
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Run `algo` over `ranks` virtual-cluster ranks and assemble the
+/// global partition.
+///
+/// The graph is cut into segment-aligned row strips, one rank thread per
+/// strip; ranks communicate exclusively through the transport's generic
+/// collectives. Error paths inside rank functions must be replicated
+/// decisions (every implementation in `partitioners::dist` keeps them
+/// so), otherwise a lone failing rank would abandon its peers at a
+/// rendezvous.
+#[allow(clippy::too_many_arguments)]
+pub fn run_dist_partition(
+    g: &Csr,
+    targets: &[f64],
+    epsilon: f64,
+    seed: u64,
+    algo: &dyn DistPartitioner,
+    backend: ExecBackend,
+    ranks: usize,
+    cost: CostModel,
+) -> Result<(Partition, DistPartReport)> {
+    ensure!(g.n() >= 1, "empty graph");
+    let k = targets.len();
+    let wall = Timer::start();
+    let strips = build_strips(g, ranks)?;
+    let dim = g.coords[0].dim;
+    let plan = Arc::new(ExchangePlan::collectives_only(ranks));
+    let comm: Box<dyn Comm> = match backend {
+        ExecBackend::Sim => Box::new(SimComm::new(plan, cost)),
+        ExecBackend::Threads => Box::new(ThreadComm::new(plan)),
+    };
+    let comm = &*comm;
+    type RankRet = Result<(Vec<u32>, f64, f64)>;
+    let slots: Vec<Mutex<Option<RankRet>>> = (0..ranks).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for (rank, (strip, slot)) in strips.into_iter().zip(&slots).enumerate() {
+            scope.spawn(move || {
+                let ctx = DistCtx {
+                    rank,
+                    ranks,
+                    n_global: g.n(),
+                    dim,
+                    strip,
+                    targets,
+                    epsilon,
+                    seed,
+                };
+                let t = Timer::start();
+                let run = || -> RankRet {
+                    let outcome = algo
+                        .partition_rank(&ctx, comm)
+                        .with_context(|| format!("rank {rank}"))?;
+                    ensure!(
+                        outcome.assignment.len() == ctx.strip.n_local(),
+                        "rank {rank}: strip assignment has wrong length"
+                    );
+                    Ok((outcome.assignment, outcome.modeled_ops, t.secs()))
+                };
+                *slot.lock().unwrap() = Some(run());
+            });
+        }
+    });
+    let mut assignment = Vec::with_capacity(g.n());
+    let mut modeled_ops = vec![0.0f64; ranks];
+    let mut elapsed = vec![0.0f64; ranks];
+    for (rank, slot) in slots.into_iter().enumerate() {
+        let (strip_assign, ops, secs) = slot
+            .into_inner()
+            .unwrap()
+            .ok_or_else(|| anyhow!("rank {rank} produced no result"))??;
+        assignment.extend_from_slice(&strip_assign);
+        modeled_ops[rank] = ops;
+        elapsed[rank] = secs;
+    }
+    let comm_secs = comm.comm_secs();
+    let compute_secs: Vec<f64> = match backend {
+        ExecBackend::Sim => modeled_ops.iter().map(|&ops| ops * cost.t_flop).collect(),
+        ExecBackend::Threads => (0..ranks)
+            .map(|r| (elapsed[r] - comm_secs[r]).max(0.0))
+            .collect(),
+    };
+    let report = DistPartReport {
+        backend: comm.label(),
+        ranks,
+        algo: algo.name().to_string(),
+        compute_secs,
+        comm_secs,
+        wall_secs: wall.secs(),
+    };
+    Ok((Partition::new(assignment, k), report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::partitioners::dist::dist_by_name;
+    use crate::partitioners::{by_name, Ctx};
+    use crate::topology::Topology;
+
+    #[test]
+    fn dist_geokm_matches_sequential_and_prices_ranks() {
+        let g = mesh_2d_tri(30, 30, 1);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let targets = vec![g.n() as f64 / 4.0; 4];
+        let ctx = Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.05, seed: 3 };
+        let seq = by_name("geoKM").unwrap().partition(&ctx).unwrap();
+        let algo = dist_by_name("geoKM").unwrap();
+        for ranks in [1, 2, 4] {
+            let (p, rep) = run_dist_partition(
+                &g,
+                &targets,
+                0.05,
+                3,
+                algo.as_ref(),
+                ExecBackend::Sim,
+                ranks,
+                CostModel::default(),
+            )
+            .unwrap();
+            assert_eq!(p.assignment, seq.assignment, "ranks={ranks}");
+            assert_eq!(rep.ranks, ranks);
+            assert_eq!(rep.backend, "sim");
+            assert!(rep.part_secs() > 0.0);
+            assert!(rep.bottleneck_rank() < ranks);
+            if ranks == 1 {
+                assert_eq!(rep.comm_secs, vec![0.0], "self-collectives must be free");
+            } else {
+                assert!(rep.comm_secs.iter().all(|&c| c > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_sizes_are_rejected() {
+        let g = mesh_2d_tri(10, 10, 1);
+        let targets = vec![g.n() as f64 / 2.0; 2];
+        let algo = dist_by_name("zRCB").unwrap();
+        assert!(run_dist_partition(
+            &g,
+            &targets,
+            0.05,
+            1,
+            algo.as_ref(),
+            ExecBackend::Sim,
+            3,
+            CostModel::default(),
+        )
+        .is_err());
+    }
+}

@@ -277,6 +277,8 @@ mod tests {
                 dynamic: crate::repart::DynamicKind::None,
                 epochs: 0,
                 overlap: false,
+                part_backend: None,
+                part_ranks: 0,
             },
             n: 100,
             m: 180,
@@ -291,6 +293,7 @@ mod tests {
             final_residual: None,
             comm_hidden_secs: None,
             overlap_efficiency: None,
+            part_secs: None,
             dynamic: None,
         }
     }

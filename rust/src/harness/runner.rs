@@ -58,6 +58,11 @@ pub struct ScenarioResult {
     /// Hidden / (hidden + exposed) priced communication (None without a
     /// solve; 0 with `overlap: off`).
     pub overlap_efficiency: Option<f64>,
+    /// Partitioning makespan through the virtual cluster — priced
+    /// (`sim`) or measured (`threads`) bottleneck-rank seconds — for
+    /// scenarios on the `part_backend` axis (None for the sequential
+    /// path, whose wall-clock is `time_partition`).
+    pub part_secs: Option<f64>,
     /// Multi-epoch aggregates for dynamic scenarios (None for static).
     pub dynamic: Option<DynamicSummary>,
 }
@@ -81,11 +86,37 @@ pub struct DynamicSummary {
 /// Run one scenario against an already-generated instance.
 pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioResult> {
     if s.dynamic != DynamicKind::None {
+        anyhow::ensure!(
+            s.part_backend.is_none(),
+            "scenario {}: the part_backend axis applies to static scenarios only",
+            s.id()
+        );
         return run_dynamic_scenario(s, g);
     }
     let topo = s.topology();
-    let (r, part) = run_one(graph_name, g, &topo, &s.algo, s.epsilon, s.seed)
-        .with_context(|| format!("scenario {}", s.id()))?;
+    // Partitioning path: sequential (the historical default) or on the
+    // virtual cluster through partitioners::dist — the latter yields a
+    // bit-identical partition plus the partSecs column.
+    let mut part_secs = None;
+    let (r, part) = match s.part_backend {
+        None => run_one(graph_name, g, &topo, &s.algo, s.epsilon, s.seed)
+            .with_context(|| format!("scenario {}", s.id()))?,
+        Some(backend) => {
+            let (r, part, report) = crate::coordinator::run_one_dist(
+                graph_name,
+                g,
+                &topo,
+                &s.algo,
+                s.epsilon,
+                s.seed,
+                backend,
+                s.part_ranks,
+            )
+            .with_context(|| format!("scenario {}", s.id()))?;
+            part_secs = Some(report.part_secs());
+            (r, part)
+        }
+    };
     let ldht_ratio = if r.ldht_optimum > 0.0 {
         r.ldht_objective / r.ldht_optimum
     } else {
@@ -118,6 +149,7 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         final_residual,
         comm_hidden_secs,
         overlap_efficiency,
+        part_secs,
         dynamic: None,
     })
 }
@@ -160,6 +192,7 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
         final_residual: None,
         comm_hidden_secs: None,
         overlap_efficiency: None,
+        part_secs: None,
         dynamic: Some(DynamicSummary {
             epochs: res.records.len(),
             migrated_weight: res.total_migrated_weight(),
@@ -294,8 +327,9 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
     let mut t = Table::new(vec![
         "id", "family", "n", "m", "k", "preset", "algo", "epsilon", "seed", "cut",
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
-        "simT/iter(ms)", "residual", "overlap", "commHidden(ms)", "ovEff", "dynamic",
-        "epochs", "migWeight", "migW/naive", "objVsScratch",
+        "partBackend", "partRanks", "partSecs(ms)", "simT/iter(ms)", "residual", "overlap",
+        "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
+        "objVsScratch",
     ]);
     for r in results {
         let s = &r.scenario;
@@ -340,6 +374,16 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             format!("{:.4}", r.ldht_objective),
             format!("{:.4}", r.ldht_ratio),
             format!("{:.4}", r.time_partition),
+            match s.part_backend {
+                Some(b) => b.name().to_string(),
+                None => "-".to_string(),
+            },
+            if s.part_backend.is_some() {
+                s.part_ranks.to_string()
+            } else {
+                "-".to_string()
+            },
+            fmt_opt(r.part_secs, 1e3),
             fmt_opt(r.sim_time_per_iter, 1e3),
             match r.final_residual {
                 Some(x) => format!("{x:.3e}"),
@@ -402,6 +446,21 @@ pub fn result_json(r: &ScenarioResult) -> Json {
         ("ldht_objective", Json::Num(r.ldht_objective)),
         ("ldht_ratio", Json::Num(r.ldht_ratio)),
         ("time_partition_s", Json::Num(r.time_partition)),
+        (
+            "part_backend",
+            match s.part_backend {
+                Some(b) => Json::Str(b.name().to_string()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "part_ranks",
+            match s.part_backend {
+                Some(_) => Json::Num(s.part_ranks as f64),
+                None => Json::Null,
+            },
+        ),
+        ("part_secs", r.part_secs.map(Json::Num).unwrap_or(Json::Null)),
         (
             "sim_time_per_iter_s",
             r.sim_time_per_iter.map(Json::Num).unwrap_or(Json::Null),
@@ -529,6 +588,8 @@ mod tests {
                 dynamic: DynamicKind::None,
                 epochs: 0,
                 overlap: false,
+                part_backend: None,
+                part_ranks: 0,
             })
             .collect()
     }
@@ -600,6 +661,35 @@ mod tests {
     }
 
     #[test]
+    fn part_backend_axis_is_bit_identical_and_records_part_secs() {
+        let mut seq = tiny_scenarios();
+        seq.truncate(1); // geoKM, which has a distributed implementation
+        let mut dist = seq.clone();
+        dist[0].part_backend = Some(ExecBackend::Sim);
+        dist[0].part_ranks = 2;
+        assert_eq!(dist[0].id(), format!("{}-pbsimR2", seq[0].id()));
+        let (r_seq, f1) = run_matrix(&seq, 1);
+        let (r_dist, f2) = run_matrix(&dist, 1);
+        assert!(f1.is_empty() && f2.is_empty(), "{f1:?} {f2:?}");
+        // Same partition, hence identical quality columns.
+        assert_eq!(r_seq[0].cut, r_dist[0].cut);
+        assert_eq!(r_seq[0].max_comm_volume, r_dist[0].max_comm_volume);
+        assert_eq!(r_seq[0].ldht_objective, r_dist[0].ldht_objective);
+        assert_eq!(r_seq[0].part_secs, None);
+        assert!(r_dist[0].part_secs.unwrap() > 0.0);
+        // Columns render and round-trip.
+        let table = runs_table(&r_dist);
+        assert!(table.rows[0].iter().any(|c| c == "sim"));
+        let back = Json::parse(&result_json(&r_dist[0]).render()).unwrap();
+        assert_eq!(back.get("part_backend").unwrap().as_str().unwrap(), "sim");
+        assert_eq!(back.get("part_ranks").unwrap().as_f64().unwrap(), 2.0);
+        assert!(back.get("part_secs").unwrap().as_f64().unwrap() > 0.0);
+        let back_seq = Json::parse(&result_json(&r_seq[0]).render()).unwrap();
+        assert_eq!(back_seq.get("part_backend").unwrap(), &Json::Null);
+        assert_eq!(back_seq.get("part_secs").unwrap(), &Json::Null);
+    }
+
+    #[test]
     fn summary_geomeans() {
         let (ok, _) = run_matrix(&tiny_scenarios(), 1);
         let sums = summarize(&ok);
@@ -644,6 +734,8 @@ mod tests {
             dynamic: DynamicKind::RefineFront,
             epochs: 3,
             overlap: false,
+            part_backend: None,
+            part_ranks: 0,
         };
         let (ok, failed) = run_matrix(&[s], 1);
         assert!(failed.is_empty(), "{failed:?}");

@@ -8,8 +8,10 @@
 //! golden gate ([`super::golden`]) keys baselines by [`Scenario::id`].
 
 use crate::blocksizes::{block_sizes, TABLE3_FILL};
+use crate::exec::ExecBackend;
 use crate::gen::Family;
 use crate::graph::Csr;
+use crate::partitioners::dist::DIST_NAMES;
 use crate::partitioners::ALL_NAMES;
 use crate::repart::{DynamicKind, REPART_NAMES};
 use crate::topology::{topo1, Pu, Topo1Spec, Topology};
@@ -122,14 +124,25 @@ pub struct Scenario {
     /// hiding the halo exchange behind the interior SpMV. Numerics are
     /// identical to `off`; only the priced/measured communication drops.
     pub overlap: bool,
+    /// The partitioning-backend axis: `None` runs the sequential
+    /// partitioner (the historical path); `Some(backend)` computes the
+    /// partition *on the virtual cluster* over [`Scenario::part_ranks`]
+    /// ranks via `partitioners::dist` — bit-identical partition, plus
+    /// the priced/measured `partSecs` column. Only meaningful for algos
+    /// in `partitioners::dist::DIST_NAMES` and static scenarios.
+    pub part_backend: Option<ExecBackend>,
+    /// Rank count for the distributed partitioning axis (ignored when
+    /// `part_backend` is `None`).
+    pub part_ranks: usize,
 }
 
 impl Scenario {
     /// Stable identifier used as the golden-baseline key and artifact
     /// file name. Static blocking scenarios keep their historical id (so
-    /// golden baselines survive the dynamic and overlap axes); dynamic
-    /// scenarios append `-dyn<kind>-E<epochs>`, overlapped scenarios
-    /// append `-ov`.
+    /// golden baselines survive the dynamic, overlap, and partitioning
+    /// axes); dynamic scenarios append `-dyn<kind>-E<epochs>`,
+    /// overlapped scenarios append `-ov`, distributed-partitioning
+    /// scenarios append `-pb<backend>R<ranks>`.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
@@ -146,6 +159,9 @@ impl Scenario {
         }
         if self.overlap {
             id.push_str("-ov");
+        }
+        if let Some(backend) = self.part_backend {
+            id.push_str(&format!("-pb{}R{}", backend.name(), self.part_ranks));
         }
         id
     }
@@ -185,6 +201,12 @@ pub enum MatrixKind {
     /// The dynamic-repartitioning matrix: refine-front and speed-drift
     /// traces × the three repartitioners on the twospeed preset.
     Dynamic,
+    /// The distributed-partitioning matrix: the dist-capable algorithms
+    /// (`partitioners::dist::DIST_NAMES`) × partitioning backend/rank
+    /// axes, plus the sequential baseline row per cell — one run
+    /// reproduces the paper's quality-vs-partitioning-time scatter
+    /// (`partSecs` against cut/LDHT).
+    PartDist,
 }
 
 impl MatrixKind {
@@ -195,6 +217,7 @@ impl MatrixKind {
             MatrixKind::PaperSmall => "paper-small",
             MatrixKind::PaperFull => "paper-full",
             MatrixKind::Dynamic => "dynamic",
+            MatrixKind::PartDist => "partdist",
         }
     }
 
@@ -205,6 +228,7 @@ impl MatrixKind {
             "paper-small" | "paper_small" | "small" => MatrixKind::PaperSmall,
             "paper-full" | "paper_full" | "full" => MatrixKind::PaperFull,
             "dynamic" | "dyn" | "repart" => MatrixKind::Dynamic,
+            "partdist" | "part-dist" | "part_dist" => MatrixKind::PartDist,
             _ => return None,
         })
     }
@@ -235,6 +259,8 @@ impl MatrixKind {
                                 dynamic: DynamicKind::None,
                                 epochs: 0,
                                 overlap: false,
+                                part_backend: None,
+                                part_ranks: 0,
                             });
                         }
                     }
@@ -255,6 +281,8 @@ impl MatrixKind {
                             dynamic,
                             epochs: 5,
                             overlap: false,
+                            part_backend: None,
+                            part_ranks: 0,
                         });
                     }
                 }
@@ -276,6 +304,40 @@ impl MatrixKind {
                     (Family::Tet3d, 8_000),
                 ];
                 push_paper_grid(&mut out, &graphs, 48, EPS, SEED, 40, true);
+            }
+            MatrixKind::PartDist => {
+                // Per (graph, algo) cell: the sequential baseline, the
+                // priced scaling sweep (sim at 1/2/4 ranks), and one
+                // measured point (threads at 4 ranks).
+                let graphs = [(Family::Tri2d, 2500usize), (Family::Rdg2d, 2500)];
+                let axes: [(Option<ExecBackend>, usize); 5] = [
+                    (None, 0),
+                    (Some(ExecBackend::Sim), 1),
+                    (Some(ExecBackend::Sim), 2),
+                    (Some(ExecBackend::Sim), 4),
+                    (Some(ExecBackend::Threads), 4),
+                ];
+                for (family, n) in graphs {
+                    for algo in DIST_NAMES {
+                        for (part_backend, part_ranks) in axes {
+                            out.push(Scenario {
+                                family,
+                                n,
+                                k: 8,
+                                topo: TopoPreset::Uniform,
+                                algo: algo.to_string(),
+                                epsilon: EPS,
+                                seed: SEED,
+                                solve_iters: 0,
+                                dynamic: DynamicKind::None,
+                                epochs: 0,
+                                overlap: false,
+                                part_backend,
+                                part_ranks,
+                            });
+                        }
+                    }
+                }
             }
         }
         out
@@ -316,6 +378,8 @@ fn push_paper_grid(
                     dynamic: DynamicKind::None,
                     epochs: 0,
                     overlap: false,
+                    part_backend: None,
+                    part_ranks: 0,
                 });
             }
         }
@@ -368,10 +432,38 @@ mod tests {
             MatrixKind::PaperSmall,
             MatrixKind::PaperFull,
             MatrixKind::Dynamic,
+            MatrixKind::PartDist,
         ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
         assert!(MatrixKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn partdist_matrix_shape() {
+        let s = MatrixKind::PartDist.scenarios();
+        // 2 graphs × 3 dist algos × (1 seq + 3 sim + 1 threads) axes.
+        assert_eq!(s.len(), 2 * DIST_NAMES.len() * 5);
+        for x in &s {
+            assert!(DIST_NAMES.contains(&x.algo.as_str()), "{} not dist-capable", x.algo);
+            if let Some(b) = x.part_backend {
+                assert!(x.part_ranks >= 1);
+                assert!(matches!(b, ExecBackend::Sim | ExecBackend::Threads));
+            } else {
+                assert_eq!(x.part_ranks, 0);
+            }
+        }
+        // The sim sweep covers ranks 1, 2, 4 for the scatter's time axis.
+        for ranks in [1usize, 2, 4] {
+            assert!(s
+                .iter()
+                .any(|x| x.part_backend == Some(ExecBackend::Sim) && x.part_ranks == ranks));
+        }
+        // IDs unique (the -pb suffix disambiguates the axes).
+        let mut ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), s.len());
     }
 
     #[test]
@@ -438,9 +530,15 @@ mod tests {
             dynamic: DynamicKind::None,
             epochs: 0,
             overlap: false,
+            part_backend: None,
+            part_ranks: 0,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
+        s.part_backend = Some(ExecBackend::Sim);
+        s.part_ranks = 4;
+        assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42-pbsimR4");
+        s.part_backend = None;
         s.dynamic = DynamicKind::RefineFront;
         s.epochs = 5;
         s.algo = "diffusion".into();

@@ -8,10 +8,14 @@
 //! - the **LDHT problem** machinery: heterogeneous topology trees
 //!   ([`topology`]), optimal block-size computation (Algorithm 1,
 //!   [`blocksizes`]), and partition quality metrics ([`partition`]);
-//! - **eight partitioning algorithms** ([`partitioners`]): balanced
+//! - **eleven partitioning algorithms** ([`partitioners`]): balanced
 //!   k-means (`geoKM`), its hierarchical variant, Geographer-R refinement
 //!   (`geoRef`, `geoPMRef`), ParMetis-like multilevel (`pmGraph`,
-//!   `pmGeom`), and the Zoltan geometric trio (`zSFC`, `zRCB`, `zRIB`);
+//!   `pmGeom`), the Zoltan geometric trio (`zSFC`, `zRCB`, `zRIB`), and
+//!   the paper-excluded tools (`lpPulp`, `zMJ`); the paper-central
+//!   parallel families additionally run *distributed on the virtual
+//!   cluster* ([`partitioners::dist`]) with bit-identical output and
+//!   priced/measured partitioning time;
 //! - **mesh/graph substrates**: CSR graphs ([`graph`]), generators for
 //!   random geometric graphs, Delaunay triangulations and adaptive meshes
 //!   ([`gen`]);

@@ -1,0 +1,170 @@
+//! Distributed `geoKM` — Geographer-style balanced k-means over
+//! row-distributed strips, bit-identical to the sequential
+//! [`GeoKMeans`](crate::partitioners::geokm::GeoKMeans).
+//!
+//! Per Lloyd round each rank assigns only its own strip (the dominant
+//! `O(n·k)` cost, divided across ranks) and contributes its canonical
+//! accumulation-segment partials through one `allgatherv`; every rank
+//! then folds the complete segment sequence with the exact code the
+//! sequential loop uses, so centers, influence factors and the
+//! termination decision are replicated bit for bit. The Hilbert seeding
+//! and the strict ε rebalance are global-greedy one-shot phases over
+//! coordinates gathered once up front (priced / measured like any other
+//! transfer): the seeding is computed on rank 0 and `broadcast` ships
+//! the exact center coordinates, the rebalance runs replicated — either
+//! way every rank's view, and therefore the final assignment, is
+//! identical.
+
+use super::{DistCtx, DistPartitioner, RankOutcome};
+use crate::exec::Comm;
+use crate::geometry::Point;
+use crate::partitioners::geokm::{
+    acc_seg_range, fold_stats, nearest_center, rebalance_weighted, seed_centers_weighted,
+    segment_stats, ACC_SEGMENTS,
+};
+use anyhow::{ensure, Result};
+
+/// Distributed balanced (influence) k-means: `geoKM` executed on the
+/// virtual cluster. The knobs mirror [`GeoKMeans`]'s and must match the
+/// sequential run being reproduced.
+///
+/// [`GeoKMeans`]: crate::partitioners::geokm::GeoKMeans
+pub struct DistGeoKM {
+    /// Maximum Lloyd rounds (sequential default: 40).
+    pub max_iters: usize,
+    /// Influence exponent γ (sequential default: 0.6).
+    pub gamma: f64,
+}
+
+impl Default for DistGeoKM {
+    fn default() -> Self {
+        DistGeoKM { max_iters: 40, gamma: 0.6 }
+    }
+}
+
+impl DistPartitioner for DistGeoKM {
+    fn name(&self) -> &'static str {
+        "geoKM"
+    }
+
+    fn partition_rank(&self, ctx: &DistCtx, comm: &dyn Comm) -> Result<RankOutcome> {
+        let k = ctx.k();
+        let n = ctx.n_global;
+        let strip = &ctx.strip;
+        let nloc = strip.n_local();
+        ensure!(k >= 1 && n >= k, "need n >= k >= 1");
+        let mut ops = 0.0f64;
+        if k == 1 {
+            return Ok(RankOutcome { assignment: vec![0; nloc], modeled_ops: 0.0 });
+        }
+
+        // One up-front gather of [x, y, z, w] per owned vertex: the
+        // replicated seeding and rebalance phases read it, the Lloyd
+        // loop does not.
+        let mut flat = Vec::with_capacity(nloc * 4);
+        for u in 0..nloc {
+            let p = strip.coords[u];
+            flat.extend_from_slice(&[p.x, p.y, p.z, strip.vertex_weight(u)]);
+        }
+        let all = comm.allgatherv(ctx.rank, &flat);
+        ensure!(all.len() == n * 4, "gathered coordinate block has wrong size");
+        let coords_g: Vec<Point> = (0..n)
+            .map(|u| Point { x: all[4 * u], y: all[4 * u + 1], z: all[4 * u + 2], dim: ctx.dim })
+            .collect();
+        let weights_g: Vec<f64> = (0..n).map(|u| all[4 * u + 3]).collect();
+        let weight_of = |u: usize| weights_g[u];
+        ops += n as f64 * 4.0;
+
+        // Hilbert-prefix seeding: the root computes the centers (the
+        // sequential `seed_centers` on the gathered view, so they are
+        // identical to the sequential run's) and broadcasts the exact
+        // f64 coordinates — only rank 0 pays the sort, the rest pay the
+        // transfer.
+        let mut cbuf: Vec<f64> = if ctx.rank == 0 {
+            ops += 8.0 * n as f64 * (n.max(2) as f64).log2() + 4.0 * n as f64;
+            seed_centers_weighted(&coords_g, &weight_of, ctx.targets)
+                .iter()
+                .flat_map(|p| [p.x, p.y, p.z])
+                .collect()
+        } else {
+            Vec::new()
+        };
+        comm.broadcast(ctx.rank, 0, &mut cbuf);
+        ensure!(cbuf.len() == 3 * k, "broadcast seed block has wrong size");
+        let mut centers: Vec<Point> = (0..k)
+            .map(|i| Point { x: cbuf[3 * i], y: cbuf[3 * i + 1], z: cbuf[3 * i + 2], dim: ctx.dim })
+            .collect();
+        ops += 3.0 * k as f64;
+
+        // Lloyd rounds: local assignment, one allgatherv of canonical
+        // segment partials, replicated center/influence update.
+        let mut influence = vec![1.0f64; k];
+        let mut local_assign = vec![0u32; nloc];
+        let strip_weight = |u: usize| strip.vertex_weight(u);
+        for _iter in 0..self.max_iters {
+            for (u, a) in local_assign.iter_mut().enumerate() {
+                *a = nearest_center(&strip.coords[u], &centers, &influence);
+            }
+            ops += nloc as f64 * k as f64 * 8.0;
+            // Canonical segment partials for the owned segments only;
+            // allgatherv concatenates rank contributions in rank order,
+            // which *is* segment order, so every rank folds the same 64
+            // blocks the sequential loop folds.
+            let mut my_blocks = Vec::with_capacity((strip.seg_hi - strip.seg_lo) * 4 * k);
+            for s in strip.seg_lo..strip.seg_hi {
+                let (glo, ghi) = acc_seg_range(n, s);
+                segment_stats(
+                    &strip.coords,
+                    &strip_weight,
+                    &local_assign,
+                    glo - strip.row_lo,
+                    ghi - strip.row_lo,
+                    k,
+                    &mut my_blocks,
+                );
+            }
+            ops += nloc as f64 * 4.0;
+            let blocks = comm.allgatherv(ctx.rank, &my_blocks);
+            debug_assert_eq!(blocks.len(), ACC_SEGMENTS * 4 * k);
+            let (weights, sums) = fold_stats(&blocks, k, ctx.dim);
+            for i in 0..k {
+                if weights[i] > 0.0 {
+                    centers[i] = sums[i].scale(1.0 / weights[i]);
+                }
+            }
+            let mut max_over = 0.0f64;
+            for i in 0..k {
+                let ratio = (weights[i] / ctx.targets[i]).max(1e-12);
+                influence[i] = (influence[i] * ratio.powf(self.gamma)).clamp(1e-3, 1e3);
+                max_over = max_over.max(weights[i] / ctx.targets[i] - 1.0);
+            }
+            ops += (ACC_SEGMENTS * 4 * k + 10 * k) as f64;
+            // Replicated decision: every rank breaks in the same round.
+            if max_over <= ctx.epsilon * 0.5 {
+                break;
+            }
+        }
+
+        // Gather the full assignment (u32 rides exactly in f64) and run
+        // the strict ε rebalance replicated — identical move sequence on
+        // every rank, identical to the sequential tail.
+        let local_f: Vec<f64> = local_assign.iter().map(|&b| b as f64).collect();
+        let assign_f = comm.allgatherv(ctx.rank, &local_f);
+        ensure!(assign_f.len() == n, "gathered assignment has wrong size");
+        let mut assignment: Vec<u32> = assign_f.iter().map(|&b| b as u32).collect();
+        ops += rebalance_weighted(
+            &coords_g,
+            &weight_of,
+            &centers,
+            ctx.targets,
+            ctx.epsilon,
+            &mut assignment,
+        ) as f64
+            * 4.0;
+
+        Ok(RankOutcome {
+            assignment: assignment[strip.row_lo..strip.row_hi].to_vec(),
+            modeled_ops: ops,
+        })
+    }
+}

@@ -1,0 +1,138 @@
+//! Distributed `zMJ` — MultiJagged-style multi-sectioning over
+//! row-distributed strips, bit-identical to the sequential
+//! [`MultiJagged`](crate::partitioners::multijagged::MultiJagged).
+//!
+//! Each recursion level cuts the active set into up to `fanout` parts
+//! along one axis. The sequential algorithm sorts and walks the array
+//! consuming chunk after chunk; here every chunk boundary is one exact
+//! [`select_split`](super::select::select_split) whose threshold is the
+//! chunk target *offset by the exact weight below the previous
+//! boundary* — the running `acc` of the sequential walk, reconstructed
+//! without the sort. Axes follow the sequential rule: widest dimension
+//! at the root (global bounding box), then rotation.
+
+use super::rcb::{global_longest_axis, keys_along};
+use super::select::{select_split, KEY_END};
+use super::{DistCtx, DistPartitioner, RankOutcome};
+use crate::exec::Comm;
+use anyhow::Result;
+
+/// Distributed multi-jagged coordinate partitioner (`zMJ` on the
+/// cluster). `fanout` must match the sequential run being reproduced
+/// (sequential default: 4).
+pub struct DistMultiJagged {
+    /// Parts per multi-section level (the "jagged" fan-out).
+    pub fanout: usize,
+}
+
+impl Default for DistMultiJagged {
+    fn default() -> Self {
+        DistMultiJagged { fanout: 4 }
+    }
+}
+
+impl DistPartitioner for DistMultiJagged {
+    fn name(&self) -> &'static str {
+        "zMJ"
+    }
+
+    fn partition_rank(&self, ctx: &DistCtx, comm: &dyn Comm) -> Result<RankOutcome> {
+        let nloc = ctx.strip.n_local();
+        let mut assignment = vec![0u32; nloc];
+        let mut ops = 0.0f64;
+        let verts: Vec<u32> = (0..nloc as u32).collect();
+        self.multisect_node(
+            ctx,
+            comm,
+            verts,
+            0,
+            ctx.k(),
+            None,
+            ctx.n_global,
+            &mut assignment,
+            &mut ops,
+        );
+        Ok(RankOutcome { assignment, modeled_ops: ops })
+    }
+}
+
+impl DistMultiJagged {
+    /// One multi-section node; all ranks enter with replicated state and
+    /// issue the same collective sequence (one selection per interior
+    /// chunk boundary).
+    #[allow(clippy::too_many_arguments)]
+    fn multisect_node(
+        &self,
+        ctx: &DistCtx,
+        comm: &dyn Comm,
+        verts: Vec<u32>,
+        lo: usize,
+        hi: usize,
+        prev_axis: Option<usize>,
+        global_count: usize,
+        assignment: &mut [u32],
+        ops: &mut f64,
+    ) {
+        if global_count == 0 {
+            return;
+        }
+        if hi - lo == 1 {
+            for &u in &verts {
+                assignment[u as usize] = lo as u32;
+            }
+            *ops += verts.len() as f64;
+            return;
+        }
+        let dim = ctx.dim as usize;
+        let axis = match prev_axis {
+            None => global_longest_axis(ctx, comm, &verts, ops),
+            Some(a) => (a + 1) % dim,
+        };
+        let (keys, weights) = keys_along(ctx, &verts, axis, ops);
+        let parts = self.fanout.min(hi - lo);
+        let chunk = (hi - lo).div_ceil(parts);
+        // Walk the chunks left to right, carrying the exact weight and
+        // count below the previous boundary (the sequential walk's
+        // consumed prefix).
+        let mut start_key = 0u128;
+        let mut base_w = 0.0f64;
+        let mut base_c = 0usize;
+        let mut pu = lo;
+        while pu < hi {
+            let pu_end = (pu + chunk).min(hi);
+            let (end_key, end_c, end_w) = if pu_end == hi {
+                // Last chunk takes the rest.
+                (KEY_END, global_count, f64::NAN)
+            } else {
+                // The chunk-local accumulator of the sequential walk is
+                // `W(<e) − base_w` (exact half-integer subtraction), so
+                // the base rides into the predicate, not the threshold.
+                let target: f64 = ctx.targets[pu..pu_end].iter().sum();
+                let sel = select_split(comm, ctx.rank, &keys, &weights, base_w, target, ops);
+                (sel.split_key, sel.n_left, sel.w_left)
+            };
+            let sub: Vec<u32> = verts
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| keys[*i] >= start_key && keys[*i] < end_key)
+                .map(|(_, &u)| u)
+                .collect();
+            *ops += verts.len() as f64;
+            self.multisect_node(
+                ctx,
+                comm,
+                sub,
+                pu,
+                pu_end,
+                Some(axis),
+                end_c - base_c,
+                assignment,
+                ops,
+            );
+            start_key = end_key;
+            base_c = end_c;
+            base_w = end_w;
+            pu = pu_end;
+        }
+    }
+}

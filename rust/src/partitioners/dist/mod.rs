@@ -1,0 +1,271 @@
+//! Distributed partitioners: the paper-central algorithm families
+//! executed *on* the virtual cluster through the `exec::Comm` seam.
+//!
+//! The study's headline tradeoff — "While Parmetis is faster, Geographer
+//! yields better quality" — is a statement about **parallel**
+//! partitioners, yet the sequential zoo behind
+//! [`Partitioner`](super::Partitioner) can only reproduce the quality
+//! axis. This module closes the partitioning-*time* axis: a
+//! [`DistPartitioner`] runs one rank's share of the algorithm over a
+//! row-distributed [`GraphStrip`], communicating exclusively through the
+//! generic collectives of [`Comm`] (`allreduce_vec`, `allgatherv`,
+//! `broadcast`), so the `sim` transport can price the run α-β and the
+//! `threads` transport can measure it.
+//!
+//! # The bit-identity contract
+//!
+//! Every distributed algorithm here is a *transcript-faithful* parallel
+//! execution of its sequential counterpart: for the same seed, the
+//! assembled partition is **bit-identical** to the sequential
+//! algorithm's at every admissible rank count and on both transports
+//! (pinned by `tests/dist_partition.rs`). Three mechanisms make that
+//! hold without exact-summation machinery:
+//!
+//! - **Canonical segmented accumulation** (geoKM): the sequential Lloyd
+//!   loop folds its per-round statistics over
+//!   [`ACC_SEGMENTS`](crate::partitioners::geokm::ACC_SEGMENTS) fixed
+//!   vertex segments; strips are whole segments, so an `allgatherv` of
+//!   segment partials reproduces the same fold bit for bit.
+//! - **Exact selection** (RCB, multijagged): the weighted-median cut is
+//!   found by histogram bisection over the *bit space* of the sort key
+//!   (projection bits ‖ vertex id), with integer-exact weight sums, so
+//!   the distributed split set equals the sequential sorted-prefix set
+//!   element for element. Vertex weights must be exactly summable in
+//!   f64 (integers — true for every built-in generator and METIS input);
+//!   arbitrary fractional weights may flip the boundary vertex.
+//! - **Root-computed / replicated tails**: O(n) one-shot phases whose
+//!   global-greedy structure resists decomposition run on gathered data
+//!   — the Hilbert seeding on rank 0 (its exact centers shipped by
+//!   `broadcast`), the strict ε rebalance replicated on every rank.
+//!   Identical inputs + identical code = identical result; the gather
+//!   and the broadcast are real communication, priced/measured like any
+//!   other.
+
+pub mod geokm;
+pub mod mj;
+pub mod rcb;
+pub mod select;
+
+pub use geokm::DistGeoKM;
+pub use mj::DistMultiJagged;
+pub use rcb::DistRcb;
+
+use crate::exec::Comm;
+use crate::geometry::Point;
+use crate::graph::Csr;
+use crate::partitioners::geokm::{acc_seg_range, ACC_SEGMENTS};
+use anyhow::{ensure, Result};
+
+/// One rank's row-distributed share of the input: a contiguous strip of
+/// CSR rows (column ids stay global, the standard row-distributed
+/// layout) with the matching coordinate and weight slices.
+///
+/// Strips are aligned to the canonical accumulation segments
+/// (`[seg_lo, seg_hi)` of [`ACC_SEGMENTS`]) so the distributed geoKM can
+/// reproduce the sequential Lloyd fold exactly.
+#[derive(Debug, Clone)]
+pub struct GraphStrip {
+    /// First owned global row.
+    pub row_lo: usize,
+    /// One past the last owned global row.
+    pub row_hi: usize,
+    /// First owned accumulation segment.
+    pub seg_lo: usize,
+    /// One past the last owned accumulation segment.
+    pub seg_hi: usize,
+    /// Local row pointers (length `row_hi - row_lo + 1`, rebased to 0).
+    pub xadj: Vec<usize>,
+    /// Column ids of the local rows (global vertex ids).
+    pub adjncy: Vec<u32>,
+    /// Local vertex weights; empty ⇒ unit weights (mirrors `Csr`).
+    pub vwgt: Vec<f64>,
+    /// Local vertex coordinates.
+    pub coords: Vec<Point>,
+}
+
+impl GraphStrip {
+    /// Number of locally owned rows.
+    pub fn n_local(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    /// Global id of local row `u`.
+    #[inline]
+    pub fn global_id(&self, u: usize) -> u32 {
+        (self.row_lo + u) as u32
+    }
+
+    /// Weight of local row `u` (1 if the graph is unweighted).
+    #[inline]
+    pub fn vertex_weight(&self, u: usize) -> f64 {
+        if self.vwgt.is_empty() {
+            1.0
+        } else {
+            self.vwgt[u]
+        }
+    }
+}
+
+/// Everything one rank of a distributed partitioner may use. Mirrors the
+/// sequential [`Ctx`](super::Ctx) with the graph replaced by the rank's
+/// [`GraphStrip`] plus the replicated problem description.
+pub struct DistCtx<'a> {
+    /// This rank.
+    pub rank: usize,
+    /// Total rank count.
+    pub ranks: usize,
+    /// The rank's row strip.
+    pub strip: GraphStrip,
+    /// Global vertex count.
+    pub n_global: usize,
+    /// Coordinate dimensionality (2 or 3), replicated.
+    pub dim: u8,
+    /// Target block weights from Algorithm 1 (`tw(b_i)`), length k.
+    pub targets: &'a [f64],
+    /// Imbalance tolerance ε.
+    pub epsilon: f64,
+    /// RNG seed (deterministic algorithms ignore it, like their
+    /// sequential counterparts).
+    pub seed: u64,
+}
+
+impl DistCtx<'_> {
+    /// Number of blocks (= number of targets).
+    pub fn k(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+/// One rank's result: its strip of the assignment plus the operation
+/// count the priced backend converts into modeled compute seconds.
+#[derive(Debug, Clone)]
+pub struct RankOutcome {
+    /// Block per locally owned row, `strip.n_local()` entries.
+    pub assignment: Vec<u32>,
+    /// Deterministic count of modeled operations this rank performed
+    /// (identical formulas at every rank count, so the priced speedup is
+    /// the honest work ratio).
+    pub modeled_ops: f64,
+}
+
+/// A partitioning algorithm executing one rank's share over the `Comm`
+/// seam.
+///
+/// `partition_rank` is called once per rank from `ranks` concurrent
+/// threads (the rendezvous-collective calling convention); every rank
+/// must issue the same sequence of collective calls. The assembled
+/// strips must be bit-identical to the sequential algorithm named by
+/// [`DistPartitioner::seq_name`].
+pub trait DistPartitioner: Sync {
+    /// Algorithm name as used by [`dist_by_name`] and the result tables.
+    fn name(&self) -> &'static str;
+    /// Name of the sequential algorithm this reproduces bit-identically
+    /// (resolvable via [`super::by_name`]).
+    fn seq_name(&self) -> &'static str {
+        self.name()
+    }
+    /// Compute this rank's strip of the partition.
+    fn partition_rank(&self, ctx: &DistCtx, comm: &dyn Comm) -> Result<RankOutcome>;
+}
+
+/// Look up a distributed partitioner by the sequential algorithm's name
+/// (case-insensitive, like [`super::by_name`]).
+pub fn dist_by_name(name: &str) -> Option<Box<dyn DistPartitioner>> {
+    Some(match name.to_ascii_lowercase().as_str() {
+        "geokm" => Box::new(DistGeoKM::default()),
+        "zrcb" => Box::new(DistRcb),
+        "zmj" => Box::new(DistMultiJagged::default()),
+        _ => return None,
+    })
+}
+
+/// The algorithms with a distributed implementation, in table order —
+/// the two paper-central parallel families: Geographer-style balanced
+/// k-means and the Zoltan coordinate family (RCB + multijagged).
+pub const DIST_NAMES: [&str; 3] = ["geoKM", "zRCB", "zMJ"];
+
+/// Admissible rank counts: divisors of [`ACC_SEGMENTS`], so strips are
+/// whole accumulation segments.
+pub fn ranks_valid(ranks: usize) -> bool {
+    ranks >= 1 && ranks <= ACC_SEGMENTS && ACC_SEGMENTS % ranks == 0
+}
+
+/// Cut the graph into `ranks` segment-aligned row strips (rank order).
+pub fn build_strips(g: &Csr, ranks: usize) -> Result<Vec<GraphStrip>> {
+    ensure!(
+        ranks_valid(ranks),
+        "rank count {ranks} must divide the {ACC_SEGMENTS} accumulation segments"
+    );
+    ensure!(g.has_coords(), "distributed partitioners require vertex coordinates");
+    let n = g.n();
+    let segs_per_rank = ACC_SEGMENTS / ranks;
+    let mut out = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let seg_lo = r * segs_per_rank;
+        let seg_hi = (r + 1) * segs_per_rank;
+        let row_lo = acc_seg_range(n, seg_lo).0;
+        let row_hi = if seg_hi == ACC_SEGMENTS { n } else { acc_seg_range(n, seg_hi).0 };
+        let lo_arc = g.xadj[row_lo];
+        let xadj: Vec<usize> = g.xadj[row_lo..=row_hi].iter().map(|&x| x - lo_arc).collect();
+        let adjncy = g.adjncy[g.xadj[row_lo]..g.xadj[row_hi]].to_vec();
+        let vwgt = if g.vwgt.is_empty() { Vec::new() } else { g.vwgt[row_lo..row_hi].to_vec() };
+        let coords = g.coords[row_lo..row_hi].to_vec();
+        out.push(GraphStrip { row_lo, row_hi, seg_lo, seg_hi, xadj, adjncy, vwgt, coords });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+
+    #[test]
+    fn strips_tile_the_vertex_range() {
+        let g = mesh_2d_tri(30, 30, 1);
+        for ranks in [1, 2, 4, 8] {
+            let strips = build_strips(&g, ranks).unwrap();
+            assert_eq!(strips.len(), ranks);
+            assert_eq!(strips[0].row_lo, 0);
+            assert_eq!(strips[ranks - 1].row_hi, g.n());
+            for w in strips.windows(2) {
+                assert_eq!(w[0].row_hi, w[1].row_lo, "strips must tile contiguously");
+                assert_eq!(w[0].seg_hi, w[1].seg_lo);
+            }
+            for s in &strips {
+                assert_eq!(s.coords.len(), s.n_local());
+                assert_eq!(s.xadj.len(), s.n_local() + 1);
+                assert_eq!(*s.xadj.last().unwrap(), s.adjncy.len());
+                // Local rows carry the same adjacency as the global graph.
+                for u in 0..s.n_local() {
+                    let gu = s.row_lo + u;
+                    assert_eq!(&s.adjncy[s.xadj[u]..s.xadj[u + 1]], g.neighbors(gu));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_rank_counts_are_rejected() {
+        let g = mesh_2d_tri(10, 10, 1);
+        assert!(build_strips(&g, 0).is_err());
+        assert!(build_strips(&g, 3).is_err());
+        assert!(build_strips(&g, 128).is_err());
+        assert!(build_strips(&g, 64).is_ok());
+    }
+
+    #[test]
+    fn registry_resolves_dist_names() {
+        for name in DIST_NAMES {
+            let p = dist_by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(p.name(), name);
+            assert_eq!(p.seq_name(), name);
+            assert!(
+                crate::partitioners::by_name(p.seq_name()).is_some(),
+                "{name}: sequential counterpart missing"
+            );
+        }
+        assert!(dist_by_name("geokm").is_some(), "case-insensitive lookup");
+        assert!(dist_by_name("pmGraph").is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Distributed `zRCB` — recursive coordinate bisection over
+//! row-distributed strips, bit-identical to the sequential
+//! [`Rcb`](crate::partitioners::rcb::Rcb).
+//!
+//! Every rank walks the same recursion tree over its local share of the
+//! active set. Per tree node: the split axis comes from a global
+//! bounding box (`allreduce_vec` min/max — exact, order-independent),
+//! and the weighted-median cut from the exact histogram bisection of
+//! [`select_split`](super::select::select_split), so each rank can
+//! classify its local vertices without ever materializing the global
+//! sort the sequential algorithm performs.
+
+use super::select::select_split;
+use super::{DistCtx, DistPartitioner, RankOutcome};
+use crate::exec::{Comm, ReduceOp};
+use anyhow::Result;
+
+/// Distributed recursive coordinate bisection (`zRCB` on the cluster).
+pub struct DistRcb;
+
+impl DistPartitioner for DistRcb {
+    fn name(&self) -> &'static str {
+        "zRCB"
+    }
+
+    fn partition_rank(&self, ctx: &DistCtx, comm: &dyn Comm) -> Result<RankOutcome> {
+        let nloc = ctx.strip.n_local();
+        let mut assignment = vec![0u32; nloc];
+        let mut ops = 0.0f64;
+        let verts: Vec<u32> = (0..nloc as u32).collect();
+        bisect_node(ctx, comm, verts, 0, ctx.k(), ctx.n_global, &mut assignment, &mut ops);
+        Ok(RankOutcome { assignment, modeled_ops: ops })
+    }
+}
+
+/// Global bounding box of the node's active set, reduced exactly across
+/// ranks, then the sequential `Aabb::longest_axis` rule (ties keep the
+/// later axis, mirroring `max_by`).
+pub(super) fn global_longest_axis(
+    ctx: &DistCtx,
+    comm: &dyn Comm,
+    verts: &[u32],
+    ops: &mut f64,
+) -> usize {
+    let mut mins = [f64::INFINITY; 3];
+    let mut maxs = [f64::NEG_INFINITY; 3];
+    for &u in verts {
+        let p = ctx.strip.coords[u as usize];
+        mins[0] = mins[0].min(p.x);
+        mins[1] = mins[1].min(p.y);
+        mins[2] = mins[2].min(p.z);
+        maxs[0] = maxs[0].max(p.x);
+        maxs[1] = maxs[1].max(p.y);
+        maxs[2] = maxs[2].max(p.z);
+    }
+    *ops += verts.len() as f64 * 6.0;
+    comm.allreduce_vec(ctx.rank, &mut mins, ReduceOp::Min);
+    comm.allreduce_vec(ctx.rank, &mut maxs, ReduceOp::Max);
+    let mut best = 0usize;
+    let mut best_e = maxs[0] - mins[0];
+    for a in 1..ctx.dim as usize {
+        let e = maxs[a] - mins[a];
+        if e >= best_e {
+            best = a;
+            best_e = e;
+        }
+    }
+    best
+}
+
+/// Sort keys and weights of the node's local active set along `axis`.
+pub(super) fn keys_along(
+    ctx: &DistCtx,
+    verts: &[u32],
+    axis: usize,
+    ops: &mut f64,
+) -> (Vec<u128>, Vec<f64>) {
+    let keys = verts
+        .iter()
+        .map(|&u| {
+            super::select::sort_key(
+                ctx.strip.coords[u as usize].coord(axis),
+                ctx.strip.global_id(u as usize),
+            )
+        })
+        .collect();
+    let weights = verts.iter().map(|&u| ctx.strip.vertex_weight(u as usize)).collect();
+    *ops += verts.len() as f64 * 4.0;
+    (keys, weights)
+}
+
+/// One recursion node: all ranks enter with replicated `(lo, hi,
+/// global_count)` and issue the identical collective sequence, so the
+/// recursion stays in lockstep even where a rank's local share is empty.
+#[allow(clippy::too_many_arguments)]
+fn bisect_node(
+    ctx: &DistCtx,
+    comm: &dyn Comm,
+    verts: Vec<u32>,
+    lo: usize,
+    hi: usize,
+    global_count: usize,
+    assignment: &mut [u32],
+    ops: &mut f64,
+) {
+    if global_count == 0 {
+        return;
+    }
+    if hi - lo == 1 {
+        for &u in &verts {
+            assignment[u as usize] = lo as u32;
+        }
+        *ops += verts.len() as f64;
+        return;
+    }
+    let axis = global_longest_axis(ctx, comm, &verts, ops);
+    let (keys, weights) = keys_along(ctx, &verts, axis, ops);
+    let mid = lo + (hi - lo) / 2;
+    let t_left: f64 = ctx.targets[lo..mid].iter().sum();
+    let sel = select_split(comm, ctx.rank, &keys, &weights, 0.0, t_left, ops);
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for (i, &u) in verts.iter().enumerate() {
+        if keys[i] < sel.split_key {
+            left.push(u);
+        } else {
+            right.push(u);
+        }
+    }
+    *ops += verts.len() as f64 * 2.0;
+    drop((keys, weights, verts));
+    bisect_node(ctx, comm, left, lo, mid, sel.n_left, assignment, ops);
+    bisect_node(ctx, comm, right, mid, hi, global_count - sel.n_left, assignment, ops);
+}

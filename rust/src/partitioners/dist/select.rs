@@ -1,0 +1,393 @@
+//! Exact distributed weighted-median selection by collective histogram
+//! bisection — the communication core of the distributed coordinate
+//! partitioners ([`DistRcb`](super::DistRcb),
+//! [`DistMultiJagged`](super::DistMultiJagged)).
+//!
+//! The sequential partitioners sort the active vertices by
+//! `(projection, vertex id)` and split the sorted sequence at the first
+//! element whose running half-open weight crosses the target: element
+//! `e` goes *right* as soon as `W(<e) + 0.5·w(e) ≥ T` (see
+//! `partitioners::rcb::split_weighted`). Because weights are positive,
+//! `g(e) = W(<e) + 0.5·w(e)` is strictly increasing along the sort
+//! order, so the split is equivalently the *set* `{e : g(e) < T}` — a
+//! characterization that needs no global sort, only the ability to
+//! evaluate weight sums below a threshold.
+//!
+//! [`select_split`] finds the exact boundary by bisecting the **bit
+//! space of the sort key** ([`sort_key`]: monotone projection bits ‖
+//! vertex id, 96 bits): each round probes a batch of edge values with
+//! one `allreduce_vec` of per-bucket weight/count histograms, narrows
+//! the bracket to the bucket containing the boundary, and terminates
+//! exactly — when the bracket empties of candidates, or narrows to a
+//! single key. With integer vertex weights (every built-in generator;
+//! METIS inputs) all sums are exact in f64, so the returned split set is
+//! bit-identical to the sequential sorted prefix at every rank count.
+
+use crate::exec::{Comm, ReduceOp};
+
+/// Probe edges per bisection round (payload `4·EDGES + 2` f64 per
+/// round). 31 edges shrink the bracket 32× per round, so even the
+/// adversarial 96-bit worst case converges in ≤ 20 rounds; real
+/// coordinate distributions empty the bracket in a handful.
+const EDGES: usize = 31;
+
+/// Monotone 96-bit sort key: ordered projection bits (high) ‖ vertex id
+/// (low). Ordering keys as unsigned integers equals ordering
+/// `(projection, id)` lexicographically with `partial_cmp` semantics —
+/// `-0.0` is collapsed onto `+0.0` so the two compare equal, exactly as
+/// the sequential sort treats them. Projections must be finite
+/// (coordinates never produce NaN/inf; the sequential sort would panic
+/// on them first).
+#[inline]
+pub fn sort_key(proj: f64, gid: u32) -> u128 {
+    let v = if proj == 0.0 { 0.0 } else { proj };
+    let b = v.to_bits();
+    let ordered = if b >> 63 == 1 { !b } else { b | (1u64 << 63) };
+    ((ordered as u128) << 32) | gid as u128
+}
+
+/// One past the largest representable sort key: a split at this value
+/// sends every element left.
+pub const KEY_END: u128 = 1u128 << 96;
+
+/// Result of one exact distributed selection.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectOutcome {
+    /// Exclusive upper key bound of the left set: element `e` goes left
+    /// iff `key(e) < split_key` ([`KEY_END`] ⇒ everything left).
+    pub split_key: u128,
+    /// Global number of elements in the left set.
+    pub n_left: usize,
+    /// Global weight of the left set (exact for integer weights).
+    pub w_left: f64,
+}
+
+/// Find the exact split of the global `(keys, weights)` multiset,
+/// communicating only via `comm` collectives: element `e` goes right as
+/// soon as `(W(<e) + 0.5·w(e)) − base ≥ threshold`.
+///
+/// The subtraction mirrors the sequential walk *exactly*: RCB walks the
+/// whole set (`base = 0`), multijagged restarts its accumulator at each
+/// chunk (`base` = the exact weight below the previous boundary).
+/// Subtracting two half-integer-valued f64s is exact, so the predicate
+/// equals the sequential `acc + 0.5·w ≥ threshold` bit for bit — folding
+/// `base` into the threshold instead could round and flip a boundary
+/// vertex.
+///
+/// Every rank passes its local share (possibly empty) and receives the
+/// identical outcome. Adds the deterministic modeled-operation count of
+/// the local histogram passes to `ops`.
+pub fn select_split(
+    comm: &dyn Comm,
+    rank: usize,
+    keys: &[u128],
+    weights: &[f64],
+    base: f64,
+    threshold: f64,
+    ops: &mut f64,
+) -> SelectOutcome {
+    debug_assert_eq!(keys.len(), weights.len());
+    // Invariants: split_key ∈ [lo, hi]; w_base/c_base are the exact
+    // weight/count of keys < lo; F(hi) ≥ threshold is already
+    // established (virtually +inf for hi = KEY_END).
+    let mut lo: u128 = 0;
+    let mut hi: u128 = KEY_END;
+    let mut w_base = 0.0f64;
+    let mut c_base = 0usize;
+    loop {
+        if lo == hi {
+            return SelectOutcome { split_key: lo, n_left: c_base, w_left: w_base };
+        }
+        let width = hi - lo;
+        if width == 1 {
+            // Bracket is the single candidate `lo`:
+            // F(lo) = w_base + 0.5·W(=lo) decides between lo and hi.
+            let mut eq = [0.0f64; 2];
+            for (&key, &w) in keys.iter().zip(weights) {
+                if key == lo {
+                    eq[0] += w;
+                    eq[1] += 1.0;
+                }
+            }
+            *ops += keys.len() as f64 * 2.0;
+            comm.allreduce_vec(rank, &mut eq, ReduceOp::Sum);
+            return if w_base + 0.5 * eq[0] - base >= threshold {
+                SelectOutcome { split_key: lo, n_left: c_base, w_left: w_base }
+            } else {
+                SelectOutcome {
+                    split_key: hi,
+                    n_left: c_base + eq[1] as usize,
+                    w_left: w_base + eq[0],
+                }
+            };
+        }
+        // Probe edges strictly inside (lo, hi): equally spaced when the
+        // bracket is wide, every interior value when it is narrow.
+        let edges: Vec<u128> = if width <= (EDGES + 1) as u128 {
+            ((lo + 1)..hi).collect()
+        } else {
+            (1..=EDGES as u128).map(|j| lo + width * j / (EDGES as u128 + 1)).collect()
+        };
+        let m = edges.len();
+        // Histogram: bucket j = keys in [edges[j-1], edges[j]) with the
+        // virtual edges[-1] = lo, edges[m] = hi; eq[i] = mass exactly on
+        // edges[i]. One flat payload: [bucket_w | bucket_c | eq_w | eq_c].
+        let mut payload = vec![0.0f64; 4 * m + 2];
+        {
+            let (bucket_w, rest) = payload.split_at_mut(m + 1);
+            let (bucket_c, rest) = rest.split_at_mut(m + 1);
+            let (eq_w, eq_c) = rest.split_at_mut(m);
+            for (&key, &w) in keys.iter().zip(weights) {
+                if key < lo || key >= hi {
+                    continue;
+                }
+                let j = edges.partition_point(|&edge| edge <= key);
+                bucket_w[j] += w;
+                bucket_c[j] += 1.0;
+                if j > 0 && edges[j - 1] == key {
+                    eq_w[j - 1] += w;
+                    eq_c[j - 1] += 1.0;
+                }
+            }
+        }
+        *ops += keys.len() as f64 * 8.0;
+        comm.allreduce_vec(rank, &mut payload, ReduceOp::Sum);
+        let bucket_w = &payload[..m + 1];
+        let bucket_c = &payload[m + 1..2 * m + 2];
+        let eq_w = &payload[2 * m + 2..3 * m + 2];
+        let eq_c = &payload[3 * m + 2..];
+        // Smallest edge whose F = W(<edge) + 0.5·W(=edge) crosses the
+        // threshold. prefix_w accumulates the buckets below the edge
+        // under test (exact integer sums).
+        let mut prefix_w = 0.0f64;
+        let mut prefix_c = 0usize;
+        let mut crossing = None;
+        for i in 0..m {
+            prefix_w += bucket_w[i];
+            prefix_c += bucket_c[i] as usize;
+            if w_base + prefix_w + 0.5 * eq_w[i] - base >= threshold {
+                crossing = Some((i, prefix_w - bucket_w[i], prefix_c - bucket_c[i] as usize));
+                break;
+            }
+        }
+        // Narrow to [new_lo, new_hi]; candidates = keys in [new_lo, new_hi).
+        let (new_lo, new_hi, candidates) = match crossing {
+            // F(edges[0]) ≥ T: the split is at or before the first edge;
+            // nothing below it is ruled out yet.
+            Some((0, _, _)) => (lo, edges[0], bucket_c[0] as usize),
+            // F(edges[i-1]) < T < ... ≤ F(edges[i]): fold everything up
+            // to and including edges[i-1] into the exact base.
+            Some((i, below_w, below_c)) => {
+                w_base += below_w + eq_w[i - 1];
+                c_base += below_c + eq_c[i - 1] as usize;
+                (
+                    edges[i - 1] + 1,
+                    edges[i],
+                    bucket_c[i] as usize - eq_c[i - 1] as usize,
+                )
+            }
+            // Even the last edge passes: the split is past it.
+            None => {
+                w_base += prefix_w + eq_w[m - 1];
+                c_base += prefix_c + eq_c[m - 1] as usize;
+                (
+                    edges[m - 1] + 1,
+                    hi,
+                    bucket_c[m] as usize - eq_c[m - 1] as usize,
+                )
+            }
+        };
+        if candidates == 0 {
+            // No key lies in [new_lo, new_hi): F is the constant w_base
+            // on the whole bracket, so the split is one of its ends.
+            return if w_base - base >= threshold {
+                SelectOutcome { split_key: new_lo, n_left: c_base, w_left: w_base }
+            } else {
+                SelectOutcome { split_key: new_hi, n_left: c_base, w_left: w_base }
+            };
+        }
+        lo = new_lo;
+        hi = new_hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{CostModel, ExchangePlan, SimComm};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+    use std::sync::Mutex;
+
+    /// Sequential reference: sort by key, walk the prefix rule exactly as
+    /// `partitioners::rcb::split_weighted` does.
+    fn reference(keys: &[u128], weights: &[f64], t: f64) -> (usize, f64, Vec<u128>) {
+        let mut order: Vec<usize> = (0..keys.len()).collect();
+        order.sort_unstable_by_key(|&i| keys[i]);
+        let mut acc = 0.0;
+        let mut left = Vec::new();
+        for &i in &order {
+            if acc + 0.5 * weights[i] >= t {
+                break;
+            }
+            acc += weights[i];
+            left.push(keys[i]);
+        }
+        (left.len(), acc, left)
+    }
+
+    fn run_select(
+        keys: &[u128],
+        weights: &[f64],
+        base: f64,
+        t: f64,
+        ranks: usize,
+    ) -> SelectOutcome {
+        let plan = Arc::new(ExchangePlan::collectives_only(ranks));
+        let comm = SimComm::new(plan, CostModel::default());
+        let chunk = keys.len().div_ceil(ranks).max(1);
+        let outs: Vec<Mutex<Option<SelectOutcome>>> =
+            (0..ranks).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for (rank, slot) in outs.iter().enumerate() {
+                let comm = &comm;
+                scope.spawn(move || {
+                    let lo = (rank * chunk).min(keys.len());
+                    let hi = ((rank + 1) * chunk).min(keys.len());
+                    let mut ops = 0.0;
+                    let out = select_split(
+                        comm,
+                        rank,
+                        &keys[lo..hi],
+                        &weights[lo..hi],
+                        base,
+                        t,
+                        &mut ops,
+                    );
+                    *slot.lock().unwrap() = Some(out);
+                });
+            }
+        });
+        let all: Vec<SelectOutcome> =
+            outs.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect();
+        for o in &all {
+            assert_eq!(o.split_key, all[0].split_key, "ranks disagree on the split");
+            assert_eq!(o.n_left, all[0].n_left);
+        }
+        all[0]
+    }
+
+    #[test]
+    fn matches_sequential_prefix_rule_at_every_rank_count() {
+        let mut rng = Rng::new(7);
+        for case in 0..6 {
+            let n = 400 + case * 57;
+            // Clustered projections with deliberate duplicates (ties
+            // resolved by gid) and unit or small-integer weights.
+            let keys: Vec<u128> = (0..n)
+                .map(|i| {
+                    let p = (rng.next_u64() % 37) as f64 * 0.25 - 3.0;
+                    sort_key(p, i as u32)
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..n).map(|_| 1.0 + (rng.next_u64() % 3) as f64).collect();
+            let total: f64 = weights.iter().sum();
+            for frac in [0.0, 0.1, 0.5, 0.9, 1.5] {
+                let t = total * frac;
+                let (n_ref, w_ref, left_ref) = reference(&keys, &weights, t);
+                for ranks in [1, 2, 4] {
+                    let out = run_select(&keys, &weights, 0.0, t, ranks);
+                    assert_eq!(out.n_left, n_ref, "ranks={ranks} frac={frac}");
+                    assert_eq!(out.w_left, w_ref, "ranks={ranks} frac={frac}");
+                    // The split *set* matches, not just its size.
+                    let mut left: Vec<u128> = keys
+                        .iter()
+                        .copied()
+                        .filter(|&k| k < out.split_key)
+                        .collect();
+                    left.sort_unstable();
+                    let mut want = left_ref.clone();
+                    want.sort_unstable();
+                    assert_eq!(left, want, "ranks={ranks} frac={frac}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        // Empty input: threshold > 0 sends "everything" (nothing) left.
+        let out = run_select(&[], &[], 0.0, 5.0, 2);
+        assert_eq!(out.n_left, 0);
+        // Threshold beyond the total weight: all elements go left.
+        let keys: Vec<u128> = (0..10).map(|i| sort_key(i as f64, i)).collect();
+        let w = vec![1.0; 10];
+        let out = run_select(&keys, &w, 0.0, 100.0, 2);
+        assert_eq!(out.n_left, 10);
+        assert_eq!(out.w_left, 10.0);
+        // All-identical projections: ties broken by vertex id.
+        let keys: Vec<u128> = (0..10).map(|i| sort_key(2.5, i)).collect();
+        let out = run_select(&keys, &w, 0.0, 4.0, 4);
+        let (n_ref, _, _) = reference(&keys, &w, 4.0);
+        assert_eq!(out.n_left, n_ref);
+    }
+
+    #[test]
+    fn nonzero_base_matches_chunk_restarted_walk() {
+        // Multijagged restarts its accumulator at every chunk boundary;
+        // the distributed call carries the exact weight below the
+        // previous boundary as `base`. Reference: walk the sorted order
+        // from the previous boundary with a fresh accumulator and a
+        // deliberately non-representable fractional target.
+        let mut rng = Rng::new(21);
+        let n = 300usize;
+        let keys: Vec<u128> = (0..n)
+            .map(|i| sort_key((rng.next_u64() % 23) as f64 * 0.5, i as u32))
+            .collect();
+        let weights: Vec<f64> = (0..n).map(|_| 1.0 + (rng.next_u64() % 2) as f64).collect();
+        let t1 = 61.3;
+        let t2 = 104.7;
+        let first = run_select(&keys, &weights, 0.0, t1, 2);
+        let second = run_select(&keys, &weights, first.w_left, t2, 2);
+        // Sequential chunk walk from the first boundary.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by_key(|&i| keys[i]);
+        let mut acc = 0.0;
+        let mut end = first.n_left;
+        while end < n {
+            let w = weights[order[end]];
+            if acc + 0.5 * w >= t2 {
+                break;
+            }
+            acc += w;
+            end += 1;
+        }
+        assert_eq!(second.n_left, end, "chunk boundary diverged from the sequential walk");
+        assert_eq!(second.w_left - first.w_left, acc, "chunk weight diverged");
+        for ranks in [1, 4] {
+            let again = run_select(&keys, &weights, first.w_left, t2, ranks);
+            assert_eq!(again.n_left, second.n_left);
+            assert_eq!(again.split_key, second.split_key);
+        }
+    }
+
+    #[test]
+    fn sort_key_is_monotone() {
+        let vals = [-1e30, -2.5, -0.0, 0.0, 1e-300, 0.5, 2.5, 1e30];
+        for w in vals.windows(2) {
+            if w[0] == w[1] {
+                // -0.0 and +0.0 compare equal: ties fall to the gid.
+                assert!(sort_key(w[0], 1) < sort_key(w[1], 2));
+                assert_eq!(sort_key(w[0], 3), sort_key(w[1], 3));
+            } else {
+                assert!(
+                    sort_key(w[0], u32::MAX) < sort_key(w[1], 0),
+                    "{} !< {}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}

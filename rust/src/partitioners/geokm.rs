@@ -74,12 +74,81 @@ impl Partitioner for GeoKMeans {
     }
 }
 
+/// Number of fixed accumulation segments the Lloyd statistics fold over.
+///
+/// Each round's cluster weights and centroid sums are accumulated
+/// *per segment* (vertex order inside a segment) and the segment
+/// partials are then folded in segment order. Because the decomposition
+/// is fixed — independent of worker or rank counts — a row-distributed
+/// execution whose strips are whole segments (`partitioners::dist`)
+/// reproduces exactly the same floating-point results through an
+/// `allgatherv` of segment partials. Rank counts must divide this
+/// constant.
+pub const ACC_SEGMENTS: usize = 64;
+
+/// Vertex range `[lo, hi)` of accumulation segment `s` for `n` vertices.
+pub fn acc_seg_range(n: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < ACC_SEGMENTS);
+    (s * n / ACC_SEGMENTS, (s + 1) * n / ACC_SEGMENTS)
+}
+
+/// Append one segment's Lloyd partials to `out` as a flat block of `4k`
+/// values `[k weights | k x-sums | k y-sums | k z-sums]`. `coords`,
+/// `weight_of` and `assignment` are indexed locally; the segment spans
+/// local indices `[lo, hi)`. The per-vertex fold order inside the block
+/// is exactly the sequential loop's, so local strips reproduce it.
+pub(crate) fn segment_stats(
+    coords: &[Point],
+    weight_of: &dyn Fn(usize) -> f64,
+    assignment: &[u32],
+    lo: usize,
+    hi: usize,
+    k: usize,
+    out: &mut Vec<f64>,
+) {
+    let dim = if coords.is_empty() { 2 } else { coords[0].dim };
+    let mut weights = vec![0.0f64; k];
+    let mut sums = vec![Point::zero(dim); k];
+    for u in lo..hi {
+        let b = assignment[u] as usize;
+        let w = weight_of(u);
+        weights[b] += w;
+        sums[b] = sums[b].add(&coords[u].scale(w));
+    }
+    out.extend_from_slice(&weights);
+    out.extend(sums.iter().map(|p| p.x));
+    out.extend(sums.iter().map(|p| p.y));
+    out.extend(sums.iter().map(|p| p.z));
+}
+
+/// Fold a sequence of `4k`-value segment blocks (in segment order) into
+/// the round's cluster weights and centroid sums. Shared verbatim by the
+/// sequential Lloyd loop and the distributed one, so both fold the same
+/// partials in the same order.
+pub(crate) fn fold_stats(blocks: &[f64], k: usize, dim: u8) -> (Vec<f64>, Vec<Point>) {
+    let stride = 4 * k;
+    debug_assert_eq!(blocks.len() % stride, 0, "ragged segment blocks");
+    let mut weights = vec![0.0f64; k];
+    let mut sums = vec![Point::zero(dim); k];
+    for blk in blocks.chunks_exact(stride) {
+        for b in 0..k {
+            weights[b] += blk[b];
+            let p = Point { x: blk[k + b], y: blk[2 * k + b], z: blk[3 * k + b], dim };
+            sums[b] = sums[b].add(&p);
+        }
+    }
+    (weights, sums)
+}
+
 /// The influence-k-means core of `geoKM`, warm-startable from arbitrary
 /// centers: Lloyd iterations with per-cluster influence factors steering
 /// weights toward the targets, followed by the strict ε rebalance. Used
-/// by [`GeoKMeans::partition`] (Hilbert-seeded centers) and by the
+/// by [`GeoKMeans::partition`] (Hilbert-seeded centers), by the
 /// incremental repartitioner (`repart::IncrementalGeoKM`, previous
-/// epoch's centers). Deterministic regardless of `workers`.
+/// epoch's centers), and — statistic by statistic, through the
+/// [`ACC_SEGMENTS`] canonical accumulation — by the distributed
+/// `partitioners::dist::DistGeoKM`, whose output is bit-identical to
+/// this loop. Deterministic regardless of `workers`.
 pub fn lloyd_from_centers(
     g: &crate::graph::Csr,
     mut centers: Vec<Point>,
@@ -92,32 +161,29 @@ pub fn lloyd_from_centers(
     let k = targets.len();
     let n = g.n();
     debug_assert_eq!(centers.len(), k);
+    let dim = g.coords[0].dim;
+    let weight_of = |u: usize| g.vertex_weight(u);
     let mut influence = vec![1.0f64; k];
     let mut assignment = vec![0u32; n];
-    let mut weights = vec![0.0f64; k];
     for _iter in 0..max_iters {
         // Assignment step (the hot loop) — chunked across the job
-        // queue. Each vertex's nearest center is independent, and
-        // the weights are re-accumulated sequentially in vertex
-        // order, so the result is bit-identical to the sequential
-        // loop regardless of worker count.
+        // queue. Each vertex's nearest center is independent, so the
+        // result is bit-identical to the sequential loop regardless of
+        // worker count.
         assign_step(g, &centers, &influence, &mut assignment, workers);
-        weights.iter_mut().for_each(|w| *w = 0.0);
-        for u in 0..n {
-            weights[assignment[u] as usize] += g.vertex_weight(u);
+        // Canonical segmented accumulation of the round's statistics
+        // (cluster weights double as the centroid weight sums — they are
+        // the same per-vertex folds).
+        let mut blocks = Vec::with_capacity(ACC_SEGMENTS * 4 * k);
+        for s in 0..ACC_SEGMENTS {
+            let (lo, hi) = acc_seg_range(n, s);
+            segment_stats(&g.coords, &weight_of, &assignment, lo, hi, k, &mut blocks);
         }
+        let (weights, sums) = fold_stats(&blocks, k, dim);
         // Center update.
-        let mut sums = vec![Point::zero(g.coords[0].dim); k];
-        let mut wsum = vec![0.0f64; k];
-        for u in 0..n {
-            let b = assignment[u] as usize;
-            let w = g.vertex_weight(u);
-            sums[b] = sums[b].add(&g.coords[u].scale(w));
-            wsum[b] += w;
-        }
         for i in 0..k {
-            if wsum[i] > 0.0 {
-                centers[i] = sums[i].scale(1.0 / wsum[i]);
+            if weights[i] > 0.0 {
+                centers[i] = sums[i].scale(1.0 / weights[i]);
             }
         }
         // Influence update toward targets.
@@ -137,9 +203,10 @@ pub fn lloyd_from_centers(
 }
 
 /// Index of the center minimizing `dist²(p, c_i) · f_i` (ties go to the
-/// lower index, as in the original sequential loop).
+/// lower index, as in the original sequential loop). Shared with the
+/// distributed geoKM so both run the identical loop body.
 #[inline]
-fn nearest_center(p: &Point, centers: &[Point], influence: &[f64]) -> u32 {
+pub(crate) fn nearest_center(p: &Point, centers: &[Point], influence: &[f64]) -> u32 {
     let mut best = 0usize;
     let mut best_d = f64::INFINITY;
     for (i, c) in centers.iter().enumerate() {
@@ -189,18 +256,30 @@ fn assign_step(
 /// Hilbert-prefix seeding: cut the curve at the target weights and take
 /// each piece's weighted centroid.
 pub fn seed_centers(g: &crate::graph::Csr, targets: &[f64]) -> Vec<Point> {
-    let bb = Aabb::of(&g.coords);
-    let mut order: Vec<u32> = (0..g.n() as u32).collect();
-    let keys: Vec<u64> = g.coords.iter().map(|p| hilbert_index(p, &bb)).collect();
+    seed_centers_weighted(&g.coords, &|u| g.vertex_weight(u), targets)
+}
+
+/// Slice-based core of [`seed_centers`], shared with the distributed
+/// geoKM (which runs it replicated on gathered coordinates so every rank
+/// seeds from identical centers).
+pub fn seed_centers_weighted(
+    coords: &[Point],
+    weight_of: &dyn Fn(usize) -> f64,
+    targets: &[f64],
+) -> Vec<Point> {
+    let n = coords.len();
+    let bb = Aabb::of(coords);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let keys: Vec<u64> = coords.iter().map(|p| hilbert_index(p, &bb)).collect();
     order.sort_unstable_by_key(|&u| keys[u as usize]);
-    let assign = fill_by_order(&order, |u| g.vertex_weight(u), targets);
+    let assign = fill_by_order(&order, |u| weight_of(u), targets);
     let k = targets.len();
-    let mut sums = vec![Point::zero(g.coords[0].dim); k];
+    let mut sums = vec![Point::zero(coords[0].dim); k];
     let mut wsum = vec![0.0f64; k];
-    for u in 0..g.n() {
+    for u in 0..n {
         let b = assign[u] as usize;
-        let w = g.vertex_weight(u);
-        sums[b] = sums[b].add(&g.coords[u].scale(w));
+        let w = weight_of(u);
+        sums[b] = sums[b].add(&coords[u].scale(w));
         wsum[b] += w;
     }
     (0..k)
@@ -208,7 +287,7 @@ pub fn seed_centers(g: &crate::graph::Csr, targets: &[f64]) -> Vec<Point> {
             if wsum[i] > 0.0 {
                 sums[i].scale(1.0 / wsum[i])
             } else {
-                g.coords[i % g.n()]
+                coords[i % n]
             }
         })
         .collect()
@@ -224,11 +303,28 @@ pub fn rebalance(
     epsilon: f64,
     assignment: &mut [u32],
 ) {
+    rebalance_weighted(&g.coords, &|u| g.vertex_weight(u), centers, targets, epsilon, assignment);
+}
+
+/// Slice-based core of [`rebalance`], shared with the distributed geoKM
+/// (which runs it replicated on gathered data, so every rank applies the
+/// identical move sequence). Returns a deterministic operation count
+/// (candidate evaluations) that the priced execution backend uses as its
+/// compute model for this phase.
+pub fn rebalance_weighted(
+    coords: &[Point],
+    weight_of: &dyn Fn(usize) -> f64,
+    centers: &[Point],
+    targets: &[f64],
+    epsilon: f64,
+    assignment: &mut [u32],
+) -> u64 {
     let k = targets.len();
-    let n = g.n();
+    let n = coords.len();
+    let mut ops: u64 = 0;
     let mut weights = vec![0.0f64; k];
     for u in 0..n {
-        weights[assignment[u] as usize] += g.vertex_weight(u);
+        weights[assignment[u] as usize] += weight_of(u);
     }
     let cap: Vec<f64> = targets.iter().map(|t| t * (1.0 + epsilon)).collect();
     // Vertices of overweight blocks, with their cheapest admissible move.
@@ -241,15 +337,17 @@ pub fn rebalance(
         for &b in &over {
             // Collect candidate moves for block b.
             let mut cands: Vec<(f64, u32, u32)> = Vec::new(); // (regret, u, to)
+            ops += n as u64;
             for u in 0..n {
                 if assignment[u] != b as u32 {
                     continue;
                 }
-                let p = g.coords[u];
+                let p = coords[u];
                 let d_own = p.dist2(&centers[b]);
+                ops += k as u64;
                 let mut best: Option<(f64, u32)> = None;
                 for (j, c) in centers.iter().enumerate() {
-                    if j == b || weights[j] + g.vertex_weight(u) > cap[j] {
+                    if j == b || weights[j] + weight_of(u) > cap[j] {
                         continue;
                     }
                     let regret = p.dist2(c) - d_own;
@@ -267,7 +365,8 @@ pub fn rebalance(
                 if need <= 0.0 {
                     break;
                 }
-                let w = g.vertex_weight(u as usize);
+                ops += 1;
+                let w = weight_of(u as usize);
                 if weights[j as usize] + w > cap[j as usize] {
                     continue;
                 }
@@ -282,6 +381,7 @@ pub fn rebalance(
             break; // no admissible move (pathological caps) — give up
         }
     }
+    ops
 }
 
 #[cfg(test)]

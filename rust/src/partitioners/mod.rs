@@ -1,6 +1,8 @@
-//! The eight partitioning algorithms of the paper's study (§VI-b), behind
-//! one [`Partitioner`] trait that accepts heterogeneous per-block target
-//! weights (the Algorithm-1 output).
+//! The eleven partitioning algorithms behind one [`Partitioner`] trait
+//! that accepts heterogeneous per-block target weights (the Algorithm-1
+//! output): the paper's eight study algorithms (§VI-b), the
+//! hierarchical k-means variant, and the two tools the study excluded —
+//! reimplemented so the exclusion itself is measurable.
 //!
 //! | name       | class         | paper tool                          |
 //! |------------|---------------|-------------------------------------|
@@ -13,8 +15,22 @@
 //! | `zSFC`     | geometric     | Zoltan space-filling curve          |
 //! | `zRCB`     | geometric     | Zoltan recursive coordinate bisection |
 //! | `zRIB`     | geometric     | Zoltan recursive inertial bisection |
+//! | `lpPulp`   | combinatorial | xtraPulp-style label propagation (excluded §VI-b) |
+//! | `zMJ`      | geometric     | Zoltan MultiJagged multi-sectioning (excluded §VI-b) |
+//!
+//! This table is the registry's documentation of record: a unit test
+//! (`module_table_matches_registry`) parses it out of the source and
+//! asserts it lists exactly the names [`by_name`] resolves
+//! ([`REGISTERED_NAMES`]), so the two can no longer drift apart.
+//!
+//! The paper-central *parallel* families — Geographer's balanced
+//! k-means and the Zoltan coordinate pair (`zRCB`, `zMJ`) — additionally
+//! have distributed implementations in [`dist`] that execute on the
+//! virtual cluster through the `exec::Comm` collectives, bit-identical
+//! to the sequential algorithms above.
 
 pub mod coloring;
+pub mod dist;
 pub mod geokm;
 pub mod georef;
 pub mod hierkm;
@@ -91,6 +107,15 @@ pub const ALL_NAMES: [&str; 8] = [
 /// support) — implemented here so the exclusion itself is measurable.
 pub const EXT_NAMES: [&str; 2] = ["lpPulp", "zMJ"];
 
+/// Every name [`by_name`] resolves, in the module table's order: the
+/// eight study algorithms, `hierKM`, and the two paper-excluded tools.
+/// Kept in lockstep with the module-level table by
+/// `module_table_matches_registry`.
+pub const REGISTERED_NAMES: [&str; 11] = [
+    "geoKM", "hierKM", "geoRef", "geoPMRef", "pmGraph", "pmGeom", "zSFC", "zRCB", "zRIB",
+    "lpPulp", "zMJ",
+];
+
 /// Greedily fill blocks along an ordered vertex sequence so block i gets
 /// ≈ `targets[i]` weight — shared by the SFC partitioner, k-means seeding
 /// and the coarse initial partitioners.
@@ -130,6 +155,49 @@ mod tests {
         }
         assert!(by_name("hierKM").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    /// The module-level table is the registry's documentation of record:
+    /// parse it out of this very file and pin it against
+    /// [`REGISTERED_NAMES`] (names and order), and pin every registered
+    /// name against [`by_name`] — so neither the doc table nor the
+    /// constant can drift from the actual registry again.
+    #[test]
+    fn module_table_matches_registry() {
+        let src = include_str!("mod.rs");
+        let table_names: Vec<&str> = src
+            .lines()
+            .filter_map(|l| l.strip_prefix("//! | `"))
+            .filter_map(|l| l.split('`').next())
+            .collect();
+        assert_eq!(
+            table_names,
+            REGISTERED_NAMES.to_vec(),
+            "module doc table disagrees with REGISTERED_NAMES"
+        );
+        for name in REGISTERED_NAMES {
+            let p = by_name(name)
+                .unwrap_or_else(|| panic!("{name} in the table but not in by_name"));
+            assert_eq!(p.name(), name, "{name} resolves to a different algorithm");
+        }
+        // The registry is exactly the union of the study set, hierKM,
+        // and the excluded-tool extensions.
+        let mut union: Vec<&str> = ALL_NAMES.to_vec();
+        union.push("hierKM");
+        union.extend(EXT_NAMES);
+        let mut sorted_union = union.clone();
+        sorted_union.sort_unstable();
+        let mut sorted_reg = REGISTERED_NAMES.to_vec();
+        sorted_reg.sort_unstable();
+        assert_eq!(sorted_reg, sorted_union);
+        // Distributed implementations cover a subset of the registry.
+        for name in dist::DIST_NAMES {
+            assert!(
+                REGISTERED_NAMES.contains(&name),
+                "dist algorithm {name} lacks a sequential counterpart"
+            );
+            assert!(dist::dist_by_name(name).is_some());
+        }
     }
 
     #[test]

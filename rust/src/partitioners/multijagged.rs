@@ -7,6 +7,11 @@
 //! "does not accept sufficiently imbalanced block weights" (§VI-b); our
 //! reimplementation *does* accept arbitrary target weights, so the
 //! ablation bench can measure what the study had to leave out.
+//!
+//! `super::dist::DistMultiJagged` executes this algorithm on the
+//! virtual cluster (one exact distributed selection per chunk boundary
+//! instead of the sort-and-walk below) with bit-identical output;
+//! changes to the chunk rule here must be mirrored there.
 
 use super::{Ctx, Partitioner};
 use crate::geometry::Aabb;

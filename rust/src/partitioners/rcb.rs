@@ -5,6 +5,11 @@
 //! into halves and cutting the vertex set at the proportional weight —
 //! each recursion level therefore respects the aggregate targets of the
 //! PU groups on either side.
+//!
+//! `super::dist::DistRcb` executes this algorithm on the virtual
+//! cluster (exact distributed weighted-median selection instead of the
+//! global sort below) with bit-identical output; changes to the split
+//! rule here must be mirrored there.
 
 use super::{Ctx, Partitioner};
 use crate::geometry::Aabb;

@@ -1,0 +1,193 @@
+//! Property suite for the generic `Comm` collectives (ISSUE 5 satellite):
+//! cross-backend bitwise agreement of `allreduce_vec` / `allgatherv` /
+//! `alltoallv` / `broadcast` on pseudo-random payloads, and SimComm cost
+//! monotonicity in message size and rank count.
+
+use hetpart::exec::{Comm, CostModel, ExchangePlan, ReduceOp, SimComm, ThreadComm};
+use hetpart::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(rank)` on `k` concurrent rank threads (the rendezvous
+/// calling convention), collecting results in rank order.
+fn on_ranks<R: Send>(k: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let slots: Vec<Mutex<Option<R>>> = (0..k).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for (rank, slot) in slots.iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                *slot.lock().unwrap() = Some(f(rank));
+            });
+        }
+    });
+    slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+fn sim(k: usize) -> SimComm {
+    SimComm::new(Arc::new(ExchangePlan::collectives_only(k)), CostModel::default())
+}
+
+fn threads(k: usize) -> ThreadComm {
+    ThreadComm::new(Arc::new(ExchangePlan::collectives_only(k)))
+}
+
+/// Deterministic pseudo-random payload for (seed, rank).
+fn payload(seed: u64, rank: usize, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed.wrapping_mul(31).wrapping_add(rank as u64));
+    (0..len).map(|_| rng.f64() * 200.0 - 100.0).collect()
+}
+
+#[test]
+fn allreduce_agrees_bitwise_across_backends_and_ops() {
+    for k in [1usize, 2, 4, 8] {
+        for (seed, len) in [(1u64, 1usize), (2, 17), (3, 256)] {
+            for op in [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max] {
+                let run = |comm: &dyn Comm| -> Vec<Vec<f64>> {
+                    on_ranks(k, |rank| {
+                        let mut v = payload(seed, rank, len);
+                        comm.allreduce_vec(rank, &mut v, op);
+                        v
+                    })
+                };
+                let s = run(&sim(k));
+                let t = run(&threads(k));
+                // Rank-order fold reference (Sum) / exact min-max.
+                let mut want = payload(seed, 0, len);
+                for r in 1..k {
+                    for (w, v) in want.iter_mut().zip(payload(seed, r, len)) {
+                        match op {
+                            ReduceOp::Sum => *w += v,
+                            ReduceOp::Min => *w = w.min(v),
+                            ReduceOp::Max => *w = w.max(v),
+                        }
+                    }
+                }
+                for rank in 0..k {
+                    assert_eq!(s[rank], want, "sim k={k} len={len} {op:?} rank={rank}");
+                    assert_eq!(t[rank], want, "threads k={k} len={len} {op:?} rank={rank}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn allgatherv_and_broadcast_agree_across_backends() {
+    for k in [1usize, 2, 4] {
+        // Ragged contributions: rank r contributes r+1 values.
+        let run_gather = |comm: &dyn Comm| -> Vec<Vec<f64>> {
+            on_ranks(k, |rank| {
+                let local = payload(11, rank, rank + 1);
+                comm.allgatherv(rank, &local)
+            })
+        };
+        let s = run_gather(&sim(k));
+        let t = run_gather(&threads(k));
+        let mut want = Vec::new();
+        for r in 0..k {
+            want.extend(payload(11, r, r + 1));
+        }
+        for rank in 0..k {
+            assert_eq!(s[rank], want, "sim k={k} rank={rank}");
+            assert_eq!(t[rank], want, "threads k={k} rank={rank}");
+        }
+        // Broadcast from a non-zero root.
+        let root = k - 1;
+        let run_bcast = |comm: &dyn Comm| -> Vec<Vec<f64>> {
+            on_ranks(k, |rank| {
+                let mut v = if rank == root { payload(13, root, 9) } else { Vec::new() };
+                comm.broadcast(rank, root, &mut v);
+                v
+            })
+        };
+        let s = run_bcast(&sim(k));
+        let t = run_bcast(&threads(k));
+        for rank in 0..k {
+            assert_eq!(s[rank], payload(13, root, 9), "sim k={k} rank={rank}");
+            assert_eq!(t[rank], payload(13, root, 9), "threads k={k} rank={rank}");
+        }
+    }
+}
+
+#[test]
+fn alltoallv_transposes_identically_on_both_backends() {
+    for k in [1usize, 2, 4] {
+        let part = |from: usize, to: usize| payload(17, from * 64 + to, (from + 2 * to) % 4);
+        let run = |comm: &dyn Comm| -> Vec<Vec<Vec<f64>>> {
+            on_ranks(k, |rank| {
+                let parts: Vec<Vec<f64>> = (0..k).map(|d| part(rank, d)).collect();
+                comm.alltoallv(rank, &parts)
+            })
+        };
+        let s = run(&sim(k));
+        let t = run(&threads(k));
+        for to in 0..k {
+            for from in 0..k {
+                assert_eq!(s[to][from], part(from, to), "sim {from}->{to} k={k}");
+                assert_eq!(t[to][from], part(from, to), "threads {from}->{to} k={k}");
+            }
+        }
+    }
+}
+
+/// Per-rank priced seconds of one collective call on a fresh SimComm.
+fn priced(k: usize, call: impl Fn(&SimComm, usize) + Sync) -> f64 {
+    let comm = sim(k);
+    on_ranks(k, |rank| call(&comm, rank));
+    let secs = comm.comm_secs();
+    // Symmetric collectives charge every rank identically.
+    for &s in &secs {
+        assert_eq!(s, secs[0], "asymmetric charge");
+    }
+    secs[0]
+}
+
+#[test]
+fn sim_cost_is_monotone_in_message_size() {
+    for k in [2usize, 4, 8] {
+        let cost_of = |len: usize| {
+            priced(k, |comm, rank| {
+                let mut v = vec![1.0; len];
+                comm.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+            })
+        };
+        assert!(cost_of(64) < cost_of(1024), "k={k}: allreduce β share not growing");
+        assert!(cost_of(1024) < cost_of(65536), "k={k}");
+        let gather_of = |len: usize| {
+            priced(k, |comm, rank| {
+                comm.allgatherv(rank, &vec![0.5; len]);
+            })
+        };
+        assert!(gather_of(16) < gather_of(4096), "k={k}: allgatherv β share not growing");
+        let a2a_of = |len: usize| {
+            priced(k, |comm, rank| {
+                comm.alltoallv(rank, &vec![vec![0.5; len]; k]);
+            })
+        };
+        assert!(a2a_of(16) < a2a_of(4096), "k={k}: alltoallv β share not growing");
+    }
+}
+
+#[test]
+fn sim_cost_is_monotone_in_rank_count() {
+    // Fixed payload, growing cluster: per-rank latency (tree depth) and
+    // received volume both grow.
+    let reduce_at = |k: usize| {
+        priced(k, |comm, rank| {
+            let mut v = vec![1.0; 512];
+            comm.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+        })
+    };
+    assert!(reduce_at(2) < reduce_at(4));
+    assert!(reduce_at(4) < reduce_at(8));
+    assert!(reduce_at(8) < reduce_at(32));
+    let gather_at = |k: usize| {
+        priced(k, |comm, rank| {
+            comm.allgatherv(rank, &vec![0.5; 512]);
+        })
+    };
+    assert!(gather_at(2) < gather_at(4));
+    assert!(gather_at(4) < gather_at(16));
+    // A single rank talks to nobody: every collective is free.
+    assert_eq!(reduce_at(1), 0.0);
+    assert_eq!(gather_at(1), 0.0);
+}

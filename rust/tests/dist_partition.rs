@@ -1,0 +1,103 @@
+//! Acceptance pins for distributed partitioning through the `Comm` seam
+//! (ISSUE 5): for every dist-capable algorithm, the partition computed
+//! on the virtual cluster is **bit-identical** to the sequential
+//! algorithm's at ranks {1, 2, 4} on both transports, and the α-β
+//! priced partitioning time (`partSecs`) at 4 ranks is strictly below 1
+//! rank on a paper-small instance — the speed axis of the paper's
+//! "ParMetis is faster, Geographer is better" tradeoff, finally
+//! measurable.
+
+use hetpart::coordinator::{instance, run_one, run_one_dist};
+use hetpart::exec::ExecBackend;
+use hetpart::gen::Family;
+use hetpart::harness::TopoPreset;
+use hetpart::partitioners::dist::DIST_NAMES;
+
+/// Paper-small instance: the PaperSmall matrix's 2-D scale.
+fn paper_small() -> (String, hetpart::graph::Csr) {
+    instance(Family::Tri2d, 2500, 42)
+}
+
+#[test]
+fn distributed_partitions_are_bit_identical_to_sequential() {
+    let (name, g) = paper_small();
+    let topo = TopoPreset::Uniform.build(8);
+    for algo in DIST_NAMES {
+        let (_, seq) = run_one(&name, &g, &topo, algo, 0.03, 42).unwrap();
+        for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+            for ranks in [1usize, 2, 4] {
+                let (_, dist, rep) =
+                    run_one_dist(&name, &g, &topo, algo, 0.03, 42, backend, ranks)
+                        .unwrap_or_else(|e| {
+                            panic!("{algo} on {} ranks={ranks}: {e:#}", backend.name())
+                        });
+                assert_eq!(
+                    dist.assignment,
+                    seq.assignment,
+                    "{algo}: distributed ({}, {ranks} ranks) diverged from sequential",
+                    backend.name()
+                );
+                assert_eq!(rep.ranks, ranks);
+                assert_eq!(rep.backend, backend.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_targets_stay_bit_identical() {
+    // The two-speed preset gives strongly unequal Algorithm-1 targets —
+    // the regime the paper's heterogeneity study lives in.
+    let (name, g) = instance(Family::Rdg2d, 2000, 7);
+    let topo = TopoPreset::TwoSpeed.build(8);
+    for algo in DIST_NAMES {
+        let (_, seq) = run_one(&name, &g, &topo, algo, 0.05, 7).unwrap();
+        let (_, dist, _) =
+            run_one_dist(&name, &g, &topo, algo, 0.05, 7, ExecBackend::Threads, 2).unwrap();
+        assert_eq!(dist.assignment, seq.assignment, "{algo} diverged on twospeed targets");
+    }
+}
+
+#[test]
+fn sim_priced_part_secs_scale_down_with_ranks() {
+    let (name, g) = paper_small();
+    let topo = TopoPreset::Uniform.build(8);
+    for algo in DIST_NAMES {
+        let (_, _, rep1) =
+            run_one_dist(&name, &g, &topo, algo, 0.03, 42, ExecBackend::Sim, 1).unwrap();
+        let (_, _, rep4) =
+            run_one_dist(&name, &g, &topo, algo, 0.03, 42, ExecBackend::Sim, 4).unwrap();
+        // One rank = the sequential work at zero communication cost.
+        assert_eq!(rep1.comm_secs, vec![0.0], "{algo}: self-collectives must be free");
+        assert!(rep1.part_secs() > 0.0, "{algo}: zero modeled time");
+        assert!(
+            rep4.part_secs() < rep1.part_secs(),
+            "{algo}: 4-rank priced partitioning ({:.3e}s) not below 1-rank ({:.3e}s)",
+            rep4.part_secs(),
+            rep1.part_secs()
+        );
+        // Communication is priced (nonzero) once there is more than one
+        // rank — the speedup above survives paying for it.
+        assert!(rep4.comm_secs.iter().all(|&c| c > 0.0), "{algo}: free communication at 4 ranks");
+        // Priced numbers are deterministic: same run, same bill.
+        let (_, _, rep4b) =
+            run_one_dist(&name, &g, &topo, algo, 0.03, 42, ExecBackend::Sim, 4).unwrap();
+        assert_eq!(rep4.part_secs(), rep4b.part_secs(), "{algo}: nondeterministic pricing");
+        assert_eq!(rep4.compute_secs, rep4b.compute_secs);
+        assert_eq!(rep4.comm_secs, rep4b.comm_secs);
+    }
+}
+
+#[test]
+fn threads_backend_measures_real_time() {
+    let (name, g) = instance(Family::Tri2d, 900, 1);
+    let topo = TopoPreset::Uniform.build(4);
+    let (_, _, rep) =
+        run_one_dist(&name, &g, &topo, "geoKM", 0.03, 1, ExecBackend::Threads, 4).unwrap();
+    assert_eq!(rep.backend, "threads");
+    assert!(rep.wall_secs > 0.0);
+    assert!(rep.part_secs() > 0.0);
+    // Measured comm includes the rendezvous waits, so it is nonzero on
+    // every rank that participated in a collective.
+    assert!(rep.comm_secs.iter().all(|&c| c > 0.0));
+}
