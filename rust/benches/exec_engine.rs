@@ -9,7 +9,20 @@
 //! overlap table's `speedup` column shows the sim-priced win of hiding
 //! the halo exchange behind the interior SpMV, and `identical` confirms
 //! the numerics are untouched.
+//!
+//! The SpMV-layout section times the same distributed CG through the ELL
+//! and SELL-C-σ kernels (`SolveOpts::layout`). The sim backend's *priced*
+//! time/iteration is layout-independent by design, so the comparison
+//! reads wall-clock — the engine really executes the kernels — and the
+//! results are written to `BENCH_cg.json` when a baseline save is
+//! requested (`--save-baseline` / `HETPART_BENCH_SAVE=dir`).
+use hetpart::exec::{ExecBackend, SolveOpts, SpmvLayout};
+use hetpart::gen::Family;
+use hetpart::harness::bench_snapshot::{save_requested, BenchSnapshot};
 use hetpart::harness::{emit, experiments, BenchScale};
+use hetpart::util::stats::median;
+use hetpart::util::table::Table;
+use hetpart::util::timer::Timer;
 
 fn main() {
     let scale = BenchScale::from_env();
@@ -28,4 +41,55 @@ fn main() {
         "nonblocking Comm: overlap off vs on, classic vs pipelined CG",
         &experiments::exec_overlap(scale),
     );
+    cg_layouts(scale);
+}
+
+/// Distributed CG wall-clock per SpMV layout, plus the BENCH_cg.json
+/// snapshot.
+fn cg_layouts(scale: BenchScale) {
+    let iters = 30;
+    let (gname, g) = hetpart::coordinator::instance(Family::Rdg2d, scale.n2d, 7);
+    let topo = hetpart::topology::Topology::homogeneous(8, 1.0, 2.0);
+    let (_r, part) = hetpart::coordinator::run_one(&gname, &g, &topo, "geoKM", 0.03, 7)
+        .expect("geoKM partition for the layout bench");
+    let ell_w = hetpart::solver::EllMatrix::from_graph(&g, 0.05).w;
+    let mut t = Table::new(vec!["layout", "median_wall(s)", "t/iter(ms)", "residual"]);
+    let mut snap = BenchSnapshot::new("cg");
+    for layout in [SpmvLayout::Ell, SpmvLayout::SellCs] {
+        let opts = SolveOpts { layout, ..SolveOpts::default() };
+        let mut residual = 0.0f32;
+        let run = || {
+            hetpart::coordinator::run_solve_opts(
+                &g, &part, &topo, ExecBackend::Sim, 0.05, iters, 0.0, opts,
+            )
+            .expect("layout-bench solve")
+            .0
+        };
+        run(); // warmup (also builds any SELL kernels once, cold)
+        let times: Vec<f64> = (0..3)
+            .map(|_| {
+                let timer = Timer::start();
+                residual = run().final_residual;
+                timer.secs()
+            })
+            .collect();
+        let med = median(&times);
+        t.row(vec![
+            layout.name().to_string(),
+            format!("{:.4}", med),
+            format!("{:.4}", med / iters as f64 * 1e3),
+            format!("{residual:.3e}"),
+        ]);
+        // Matrix bytes streamed per iteration (value+col per slot, diag/
+        // x/y per row) — the SpMV dominates a CG iteration's traffic.
+        let bytes = iters as f64 * ((g.n() * ell_w) as f64 * 8.0 + g.n() as f64 * 12.0);
+        snap.push(&format!("cg_{}", layout.name()), g.n(), med, bytes);
+    }
+    emit("exec_cg_layout", "distributed CG: ELL vs SELL-C-σ layout", &t);
+    if let Some(dir) = save_requested() {
+        match snap.save(&dir) {
+            Ok(p) => println!("[saved {}]", p.display()),
+            Err(e) => eprintln!("[snapshot save failed: {e}]"),
+        }
+    }
 }

@@ -10,11 +10,12 @@
 //! The offline image has no criterion; measurement is warmup + N samples
 //! with median/min reporting (same methodology, fewer features).
 
+use hetpart::harness::bench_snapshot::{save_requested, BenchSnapshot};
 use hetpart::harness::{emit, BenchScale};
 use hetpart::gen::Family;
 use hetpart::partitioners::ALL_NAMES;
 use hetpart::solver::spmv::spmv_ell_native;
-use hetpart::solver::EllMatrix;
+use hetpart::solver::{EllMatrix, SellMatrix};
 use hetpart::util::stats::median;
 use hetpart::util::table::Table;
 use hetpart::util::timer::Timer;
@@ -73,6 +74,38 @@ fn main() {
         ell.n.to_string(),
         ell.w.to_string(),
     ]);
+    // Machine-readable side: BENCH_spmv.json (see harness::bench_snapshot).
+    // Streamed bytes per invocation: 8 B per stored slot (value + col) plus
+    // 12 B per row (diag, x gather, y write) — an effective-bandwidth
+    // denominator, not a cache-exact count.
+    let mut snap = BenchSnapshot::new("spmv");
+    let ell_bytes = (ell.n * ell.w) as f64 * 8.0 + ell.n as f64 * 12.0;
+    snap.push("native_ell", ell.n, med, ell_bytes);
+
+    // SELL-C-σ fast path at the tested (C, σ) corners; effective width
+    // (stored slots / rows) replaces w in the table since padding varies
+    // per chunk.
+    let mut y = vec![0.0f32; ell.n];
+    let sell_variants: [(&str, usize, usize); 3] =
+        [("sell_c4_s64", 4, 64), ("sell_c8_s64", 8, 64), ("sell_c32_sn", 32, ell.n)];
+    for (label, c, sigma) in sell_variants {
+        let s = SellMatrix::from_ell(&ell, c, sigma);
+        let times = sample(
+            || s.spmv_into(std::hint::black_box(&x), std::hint::black_box(&mut y)),
+            3,
+            10,
+        );
+        let med_s = median(&times);
+        let flops_s = 2.0 * (s.values.len() + s.n) as f64;
+        t.row(vec![
+            label.to_string(),
+            format!("{:.4}", med_s * 1e3),
+            format!("{:.3}", flops_s / med_s / 1e9),
+            s.n.to_string(),
+            format!("{:.2}", s.values.len() as f64 / s.n.max(1) as f64),
+        ]);
+        snap.push(label, s.n, med_s, s.values.len() as f64 * 8.0 + s.n as f64 * 12.0);
+    }
 
     // --- L1/L2 via PJRT ---------------------------------------------------
     match (|| -> anyhow::Result<(f64, f64, usize, usize)> {
@@ -124,7 +157,13 @@ fn main() {
         }
         Err(e) => eprintln!("[pjrt micro skipped: {e}]"),
     }
-    emit("micro_spmv", "SpMV hot path: native vs PJRT artifact", &t);
+    emit("micro_spmv", "SpMV hot path: native ELL vs SELL-C-σ vs PJRT artifact", &t);
+    if let Some(dir) = save_requested() {
+        match snap.save(&dir) {
+            Ok(p) => println!("[saved {}]", p.display()),
+            Err(e) => eprintln!("[snapshot save failed: {e}]"),
+        }
+    }
 
     // --- CG end to end ----------------------------------------------------
     use hetpart::solver::cg::{cg_solve, NativeBackend};

@@ -7,8 +7,10 @@
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
+//!                    [--layout ell|sellcs]
 //! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist
-//!                    [--overlap on|off] [--out results/harness] [--workers N] [--verbose]
+//!                    [--overlap on|off] [--layout ell|sellcs]
+//!                    [--out results/harness] [--workers N] [--verbose]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
@@ -67,7 +69,8 @@ SUBCOMMANDS
                 sequential α-β-priced supersteps or thread-per-PU;
                 --overlap on hides the halo exchange behind the interior
                 SpMV through the nonblocking Comm path; --cg pipelined
-                runs the single-reduction CG variant)
+                runs the single-reduction CG variant; --layout sellcs
+                runs the SELL-C-σ SpMV fast path, bit-identical to ELL)
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
@@ -75,7 +78,8 @@ SUBCOMMANDS
                |dynamic|partdist — partdist sweeps the distributed
                partitioners over backend/rank axes for the quality-vs-
                partition-time scatter; --overlap on flips every
-               scenario's overlap axis, --out DIR, --workers N,
+               scenario's overlap axis, --layout sellcs flips the
+               SpMV-layout axis, --out DIR, --workers N,
                --verbose prints every run)
   repart       replay an adaptive multi-epoch workload and repartition it
                (--dynamic refine-front|speed-drift, --epochs E,
@@ -111,6 +115,12 @@ fn overlap_from_args(args: &Args) -> Option<bool> {
         "off" | "false" | "0" => Some(false),
         _ => None,
     }
+}
+
+/// Parse the `--layout ell|sellcs` axis. `None` means an unrecognized
+/// value was passed (defaults to ELL when the flag is absent).
+fn layout_from_args(args: &Args) -> Option<crate::exec::SpmvLayout> {
+    crate::exec::SpmvLayout::parse(&args.get("layout", "ell".to_string()))
 }
 
 /// Build the topology from CLI options.
@@ -251,26 +261,43 @@ fn cmd_harness(args: &Args) -> i32 {
         eprintln!("unknown --overlap value (expected on|off)");
         return 2;
     };
+    let Some(layout) = layout_from_args(args) else {
+        eprintln!("unknown --layout value (expected ell|sellcs)");
+        return 2;
+    };
     let mut scenarios = kind.scenarios();
     if overlap {
         for s in &mut scenarios {
             s.overlap = true;
         }
     }
-    // Overlapped runs get their own artifact directory (<matrix>-ov), so
-    // the on/off comparison EXPERIMENTS.md §4 describes never overwrites
-    // the blocking run's runs.csv / summary.* it is compared against.
-    let matrix_label = if overlap {
-        format!("{}-ov", kind.name())
-    } else {
-        kind.name().to_string()
-    };
+    if layout != crate::exec::SpmvLayout::default() {
+        for s in &mut scenarios {
+            s.layout = layout;
+        }
+    }
+    // Axis-flipped runs get their own artifact directory (<matrix>-ov /
+    // <matrix>-l<layout>), so the comparison EXPERIMENTS.md §4 describes
+    // never overwrites the baseline run's runs.csv / summary.* it is
+    // compared against.
+    let mut matrix_label = kind.name().to_string();
+    if overlap {
+        matrix_label.push_str("-ov");
+    }
+    if layout != crate::exec::SpmvLayout::default() {
+        matrix_label.push_str(&format!("-l{}", layout.name()));
+    }
     println!(
-        "harness matrix '{}': {} scenarios over {} workers{}",
+        "harness matrix '{}': {} scenarios over {} workers{}{}",
         kind.name(),
         scenarios.len(),
         workers,
-        if overlap { " (overlap on)" } else { "" }
+        if overlap { " (overlap on)" } else { "" },
+        if layout != crate::exec::SpmvLayout::default() {
+            format!(" (layout {})", layout.name())
+        } else {
+            String::new()
+        }
     );
     let (ok, failed) = run_matrix(&scenarios, workers);
     if args.flag("verbose") {
@@ -526,6 +553,10 @@ fn cmd_solve(args: &Args) -> i32 {
         eprintln!("unknown --cg {cg_name} (expected classic|pipelined)");
         return 2;
     };
+    let Some(layout) = layout_from_args(args) else {
+        eprintln!("unknown --layout value (expected ell|sellcs)");
+        return 2;
+    };
     // Virtual-cluster engine path: thread-per-PU or sequential-sim
     // distributed CG behind the Comm seam, optionally with nonblocking
     // compute/communication overlap and the pipelined CG variant.
@@ -534,7 +565,7 @@ fn cmd_solve(args: &Args) -> i32 {
             eprintln!("unknown --backend {bs} (expected sim|threads)");
             return 2;
         };
-        let opts = crate::exec::SolveOpts { overlap, variant };
+        let opts = crate::exec::SolveOpts { overlap, variant, layout };
         let (s, cg) = match crate::coordinator::run_solve_opts(
             &g, &part, &topo, backend, shift, iters, 1e-6, opts,
         ) {
@@ -545,14 +576,15 @@ fn cmd_solve(args: &Args) -> i32 {
             }
         };
         let mut t = Table::new(vec![
-            "algo", "backend", "cg", "overlap", "cut", "maxCommVol", "iters", "residual",
-            "t/iter(s)", "commHidden(s)", "ovEff", "wall(s)",
+            "algo", "backend", "cg", "overlap", "layout", "cut", "maxCommVol", "iters",
+            "residual", "t/iter(s)", "commHidden(s)", "ovEff", "wall(s)",
         ]);
         t.row(vec![
             r.algo.clone(),
             s.backend.to_string(),
             variant.name().to_string(),
             if s.overlap { "on" } else { "off" }.to_string(),
+            s.layout.to_string(),
             fmt_f64(r.cut),
             fmt_f64(r.max_comm_volume),
             cg.iterations.to_string(),
@@ -566,13 +598,18 @@ fn cmd_solve(args: &Args) -> i32 {
         println!("bottleneck PU {}", s.bottleneck_rank);
         return 0;
     }
-    // The legacy ClusterSim path below knows nothing about overlap or CG
-    // variants — refuse rather than silently run a blocking classic
-    // solve the user did not ask for.
-    if overlap || variant != crate::exec::CgVariant::Classic {
+    // The legacy ClusterSim path below knows nothing about overlap, CG
+    // variants, or SpMV layouts — refuse rather than silently run a
+    // blocking classic ELL solve the user did not ask for.
+    if overlap
+        || variant != crate::exec::CgVariant::Classic
+        || layout != crate::exec::SpmvLayout::default()
+    {
         eprintln!(
-            "--overlap on / --cg {} require the virtual-cluster engine: add --backend sim|threads",
-            variant.name()
+            "--overlap on / --cg {} / --layout {} require the virtual-cluster engine: \
+             add --backend sim|threads",
+            variant.name(),
+            layout.name()
         );
         return 2;
     }

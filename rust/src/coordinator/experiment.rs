@@ -172,6 +172,9 @@ pub struct SolveResult {
     /// Hidden / (hidden + exposed) priced communication — the harness's
     /// overlap-efficiency column (0 when nothing was hidden).
     pub overlap_efficiency: f64,
+    /// Which SpMV storage layout the rank kernels ran on (`"ell"` /
+    /// `"sellcs"`, see `solver::sell`).
+    pub layout: &'static str,
 }
 
 /// The right-hand side every solve driver uses, so `hetpart solve` with
@@ -230,6 +233,7 @@ pub fn run_solve_opts(
             overlap: opts.overlap,
             comm_hidden_secs: rep.comm_hidden_total(),
             overlap_efficiency: rep.overlap_efficiency(),
+            layout: opts.layout.name(),
         },
         cg,
     ))
@@ -341,6 +345,7 @@ mod tests {
             run_solve(&g, &p, &topo, ExecBackend::Threads, 0.05, 60, 1e-5).unwrap();
         assert_eq!(s_sim.backend, "sim");
         assert_eq!(s_thr.backend, "threads");
+        assert_eq!(s_sim.layout, "ell");
         assert_eq!(cg_sim.residual_norms, cg_thr.residual_norms);
         assert!(s_sim.final_residual < 1e-2);
         assert!(s_sim.time_per_iter > 0.0);

@@ -24,7 +24,8 @@ use super::comm::{Comm, CostModel, ExchangePlan, SimComm, ThreadComm};
 use crate::partition::Partition;
 use crate::solver::cg::{CgResult, SpmvBackend};
 use crate::solver::halo::HaloMatrix;
-use crate::solver::EllMatrix;
+use crate::solver::sell::{SellMatrix, DEFAULT_CHUNK, DEFAULT_SIGMA};
+use crate::solver::{EllMatrix, SpmvLayout};
 use crate::topology::Topology;
 use crate::util::timer::Timer;
 use anyhow::{ensure, Result};
@@ -104,13 +105,30 @@ pub struct SolveOpts {
     pub overlap: bool,
     /// Which CG iteration to run (see [`CgVariant`]).
     pub variant: CgVariant,
+    /// Which SpMV storage layout the rank kernels run on (see
+    /// `solver::sell`). Results are `==`-equal across layouts; modeled
+    /// `sim` compute cost is layout-independent by design (the simulator
+    /// prices the algorithm, the `threads` backend and the benches
+    /// measure the layout).
+    pub layout: SpmvLayout,
 }
 
 impl SolveOpts {
     /// Options for an overlapped classic-CG solve.
     pub fn overlapped() -> SolveOpts {
-        SolveOpts { overlap: true, variant: CgVariant::Classic }
+        SolveOpts { overlap: true, ..SolveOpts::default() }
     }
+}
+
+/// Per-solve kernel structures for the chosen [`SpmvLayout`], built once
+/// before the iteration loop (never inside it — the loop allocates
+/// nothing). The SELL pair covers interior and boundary rows separately
+/// so the overlap path hides exactly the same rows as on ELL.
+enum LayoutKernels {
+    /// Run the blocks' ELL kernels directly.
+    Ell,
+    /// Per-rank (interior, boundary) SELL-C-σ kernels.
+    Sell(Vec<(SellMatrix, SellMatrix)>),
 }
 
 /// Per-rank cost breakdown of one engine run.
@@ -425,24 +443,61 @@ impl VirtualCluster {
         comm.recv_halo(rank, &mut st.p[nb..]);
     }
 
+    /// Build the per-rank kernel structures for `layout`, once per solve.
+    fn layout_kernels(&self, layout: SpmvLayout) -> LayoutKernels {
+        match layout {
+            SpmvLayout::Ell => LayoutKernels::Ell,
+            SpmvLayout::SellCs => LayoutKernels::Sell(
+                self.halo
+                    .blocks
+                    .iter()
+                    .map(|blk| {
+                        (
+                            SellMatrix::from_ell_rows(
+                                &blk.ell, &blk.interior, DEFAULT_CHUNK, DEFAULT_SIGMA,
+                            ),
+                            SellMatrix::from_ell_rows(
+                                &blk.ell, &blk.boundary, DEFAULT_CHUNK, DEFAULT_SIGMA,
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
     /// Full local SpMV into the state's `ap` (no reduction deposit —
     /// [`VirtualCluster::deposit_partials`] handles that per variant).
-    fn local_spmv_into_state(&self, rank: usize, st: &mut RankState) {
-        self.local_spmv(rank, &st.p, &mut st.ap);
+    /// On SELL the interior and boundary kernels together cover every
+    /// owned row exactly once, so this is the fused full product.
+    fn local_spmv_into_state(&self, kernels: &LayoutKernels, rank: usize, st: &mut RankState) {
+        match kernels {
+            LayoutKernels::Ell => self.local_spmv(rank, &st.p, &mut st.ap),
+            LayoutKernels::Sell(pairs) => {
+                pairs[rank].0.spmv_into(&st.p, &mut st.ap);
+                pairs[rank].1.spmv_into(&st.p, &mut st.ap);
+            }
+        }
     }
 
     /// Apply only the interior rows (no ghost columns) — the compute the
     /// nonblocking halo exchange hides.
-    fn spmv_interior(&self, rank: usize, st: &mut RankState) {
+    fn spmv_interior(&self, kernels: &LayoutKernels, rank: usize, st: &mut RankState) {
         let blk = &self.halo.blocks[rank];
-        blk.spmv_rows(&st.p, &mut st.ap, &blk.interior);
+        match kernels {
+            LayoutKernels::Ell => blk.spmv_rows(&st.p, &mut st.ap, &blk.interior),
+            LayoutKernels::Sell(pairs) => pairs[rank].0.spmv_into(&st.p, &mut st.ap),
+        }
     }
 
     /// Apply the boundary rows (valid once the ghost segment of `p` is
     /// filled).
-    fn spmv_boundary(&self, rank: usize, st: &mut RankState) {
+    fn spmv_boundary(&self, kernels: &LayoutKernels, rank: usize, st: &mut RankState) {
         let blk = &self.halo.blocks[rank];
-        blk.spmv_rows(&st.p, &mut st.ap, &blk.boundary);
+        match kernels {
+            LayoutKernels::Ell => blk.spmv_rows(&st.p, &mut st.ap, &blk.boundary),
+            LayoutKernels::Sell(pairs) => pairs[rank].1.spmv_into(&st.p, &mut st.ap),
+        }
     }
 
     /// Deposit the iteration's reduction partial(s): p·Ap on channel 0
@@ -538,6 +593,7 @@ impl VirtualCluster {
         let wall = Timer::start();
         let k = self.k();
         let comm = SimComm::new(self.plan.clone(), self.cost);
+        let kernels = self.layout_kernels(opts.layout);
         let mut states: Vec<RankState> = (0..k).map(|r| self.init_state(r, b)).collect();
         let mut compute = vec![0.0f64; k];
         for (rank, st) in states.iter().enumerate() {
@@ -558,7 +614,7 @@ impl VirtualCluster {
                     comm.isend_halo(rank, &st.p[..self.plan.own_len[rank]]);
                 }
                 for (rank, st) in states.iter_mut().enumerate() {
-                    self.spmv_interior(rank, st);
+                    self.spmv_interior(&kernels, rank, st);
                     let secs = self.modeled_secs(rank, self.halo.blocks[rank].interior.len());
                     compute[rank] += secs;
                     comm.overlap_compute(rank, secs);
@@ -566,7 +622,7 @@ impl VirtualCluster {
                 for (rank, st) in states.iter_mut().enumerate() {
                     comm.wait_all(rank);
                     self.step_recv(&comm, rank, st);
-                    self.spmv_boundary(rank, st);
+                    self.spmv_boundary(&kernels, rank, st);
                     compute[rank] +=
                         self.modeled_secs(rank, self.halo.blocks[rank].boundary.len());
                     self.deposit_partials(&comm, rank, st, opts.variant);
@@ -577,7 +633,7 @@ impl VirtualCluster {
                 }
                 for (rank, st) in states.iter_mut().enumerate() {
                     self.step_recv(&comm, rank, st);
-                    self.local_spmv_into_state(rank, st);
+                    self.local_spmv_into_state(&kernels, rank, st);
                     self.deposit_partials(&comm, rank, st, opts.variant);
                     // Modeled compute: one fused op per ELL slot +
                     // diagonal, scaled by the PU's speed — the distsim
@@ -633,6 +689,7 @@ impl VirtualCluster {
         let wall = Timer::start();
         let k = self.k();
         let comm = ThreadComm::new(self.plan.clone());
+        let kernels = self.layout_kernels(opts.layout);
         let max_speed = self.speeds.iter().cloned().fold(f64::MIN, f64::max);
         let mut states: Vec<RankState> = (0..k).map(|r| self.init_state(r, b)).collect();
         let mut compute = vec![0.0f64; k];
@@ -644,6 +701,7 @@ impl VirtualCluster {
                 .enumerate()
                 .map(|(rank, st)| {
                     let comm = &comm;
+                    let kernels = &kernels;
                     scope.spawn(move || {
                         let throttle_factor = if self.throttle {
                             max_speed / self.speeds[rank]
@@ -684,14 +742,14 @@ impl VirtualCluster {
                                 let rq = comm.irecv_halo(rank);
                                 comm.isend_halo(rank, &st.p[..self.plan.own_len[rank]]);
                                 let t = Timer::start();
-                                self.spmv_interior(rank, st);
+                                self.spmv_interior(kernels, rank, st);
                                 let secs = throttle(t.secs());
                                 compute_secs += secs;
                                 comm.overlap_compute(rank, secs);
                                 comm.wait(rank, rq);
                                 self.step_recv(comm, rank, st);
                                 let t = Timer::start();
-                                self.spmv_boundary(rank, st);
+                                self.spmv_boundary(kernels, rank, st);
                                 self.deposit_partials(comm, rank, st, opts.variant);
                                 compute_secs += throttle(t.secs());
                             } else {
@@ -699,7 +757,7 @@ impl VirtualCluster {
                                 comm.sync(rank);
                                 self.step_recv(comm, rank, st);
                                 let t = Timer::start();
-                                self.local_spmv_into_state(rank, st);
+                                self.local_spmv_into_state(kernels, rank, st);
                                 self.deposit_partials(comm, rank, st, opts.variant);
                                 compute_secs += throttle(t.secs());
                             }
@@ -935,12 +993,38 @@ mod tests {
     }
 
     #[test]
+    fn sell_layout_reproduces_ell_solutions_everywhere() {
+        let (ell, part) = setup();
+        let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
+        let b: Vec<f32> = (0..ell.n).map(|i| ((i % 9) as f32 - 4.0) / 3.0).collect();
+        let ell_opts = SolveOpts::default();
+        let sell_opts = SolveOpts { layout: SpmvLayout::SellCs, ..SolveOpts::default() };
+        let (r_ell, _) = vc.solve_cg_opts(ExecBackend::Sim, &b, 50, 0.0, ell_opts).unwrap();
+        // Sim and threads, blocking and overlapped, classic and pipelined:
+        // the layout seam must never change a solution.
+        for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+            for overlap in [false, true] {
+                let opts = SolveOpts { overlap, ..sell_opts };
+                let (r, _) = vc.solve_cg_opts(backend, &b, 50, 0.0, opts).unwrap();
+                assert_eq!(r.x, r_ell.x, "{} overlap={overlap}", backend.name());
+                assert_eq!(r.residual_norms, r_ell.residual_norms);
+            }
+        }
+        let pipe_ell = SolveOpts { variant: CgVariant::Pipelined, ..SolveOpts::default() };
+        let pipe_sell = SolveOpts { variant: CgVariant::Pipelined, ..sell_opts };
+        let (p_ell, _) = vc.solve_cg_opts(ExecBackend::Sim, &b, 50, 0.0, pipe_ell).unwrap();
+        let (p_sell, _) = vc.solve_cg_opts(ExecBackend::Sim, &b, 50, 0.0, pipe_sell).unwrap();
+        assert_eq!(p_ell.x, p_sell.x);
+        assert_eq!(p_ell.residual_norms, p_sell.residual_norms);
+    }
+
+    #[test]
     fn pipelined_variant_converges_and_halves_reduction_latency() {
         let (ell, part) = setup();
         let vc = VirtualCluster::homogeneous(&ell, &part).unwrap();
         let b: Vec<f32> = (0..ell.n).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
         let classic = SolveOpts::default();
-        let pipe = SolveOpts { overlap: false, variant: CgVariant::Pipelined };
+        let pipe = SolveOpts { variant: CgVariant::Pipelined, ..SolveOpts::default() };
         let (r_c, rep_c) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, classic).unwrap();
         let (r_p, rep_p) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, pipe).unwrap();
         // Same solution within CG round-off (the ‖r‖² recurrence drifts
@@ -965,7 +1049,8 @@ mod tests {
         }
         // Overlap on/off is bit-identical for the pipelined variant too,
         // and the threads backend reproduces the trajectory exactly.
-        let pipe_ov = SolveOpts { overlap: true, variant: CgVariant::Pipelined };
+        let pipe_ov =
+            SolveOpts { overlap: true, variant: CgVariant::Pipelined, ..SolveOpts::default() };
         let (r_po, _) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, pipe_ov).unwrap();
         assert_eq!(r_p.x, r_po.x);
         assert_eq!(r_p.residual_norms, r_po.residual_norms);

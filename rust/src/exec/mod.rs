@@ -44,6 +44,9 @@ mod partition;
 pub use cluster::{
     CgVariant, ClusterBackend, ExecBackend, ExecReport, SolveOpts, VirtualCluster,
 };
+// Re-exported so engine consumers name the layout axis without reaching
+// into `solver::sell`.
+pub use crate::solver::SpmvLayout;
 pub use partition::{run_dist_partition, DistPartReport};
 pub use comm::{
     Comm, CommRequest, CostModel, ExchangePlan, ReduceOp, SendSegment, SimComm, ThreadComm,

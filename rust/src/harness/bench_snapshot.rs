@@ -1,0 +1,313 @@
+//! Machine-readable bench snapshots: the `BENCH_*.json` perf trajectory.
+//!
+//! The micro and exec-engine benches print human tables; this module adds
+//! the machine-readable side: a [`BenchSnapshot`] captures the machine
+//! fingerprint, the bench scale, and one [`KernelEntry`] per measured
+//! kernel (median ms, ns/row, effective GB/s). Snapshots are written as
+//! `BENCH_<bench>.json` and diffed against the committed copies at the
+//! repo root by `tools/bench_compare.py` (advisory in CI — perf deltas
+//! are reported, not build-breaking, because CI machines vary).
+//!
+//! A snapshot whose `bootstrap` flag is `true` carries *no* measurements:
+//! it marks a baseline that has never been recorded on real hardware
+//! (the offline seed of this repo). `bench_compare.py` treats bootstrap
+//! baselines as "unarmed" and passes loudly; the first run on a real
+//! machine with `--save-baseline` replaces them with measured data.
+
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One measured kernel inside a snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    /// Kernel label (e.g. `"native_ell"`, `"sell_c8_s64"`).
+    pub name: String,
+    /// Rows the kernel processed per invocation.
+    pub n: usize,
+    /// Median wall time per invocation, milliseconds.
+    pub median_ms: f64,
+    /// Median time divided by rows, nanoseconds (the pinned metric —
+    /// scale-independent enough to compare across quick/default runs of
+    /// the same machine).
+    pub ns_per_row: f64,
+    /// Effective bandwidth: bytes the kernel streams per invocation
+    /// divided by the median time, GB/s.
+    pub gbs: f64,
+}
+
+/// Identity of the machine a snapshot was recorded on. Comparisons
+/// across different fingerprints are advisory-only by definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fingerprint {
+    /// CPU model string from `/proc/cpuinfo` (or `"unknown"`).
+    pub cpu: String,
+    /// `std::thread::available_parallelism` at record time.
+    pub threads: usize,
+    /// `std::env::consts::OS` / `ARCH`, joined (`"linux/x86_64"`).
+    pub os: String,
+}
+
+impl Fingerprint {
+    /// Capture the current machine's fingerprint.
+    pub fn capture() -> Fingerprint {
+        let cpu = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|s| {
+                s.lines()
+                    .find(|l| l.starts_with("model name"))
+                    .and_then(|l| l.split(':').nth(1))
+                    .map(|v| v.trim().to_string())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Fingerprint {
+            cpu,
+            threads,
+            os: format!("{}/{}", std::env::consts::OS, std::env::consts::ARCH),
+        }
+    }
+}
+
+/// A full bench snapshot: what `BENCH_<bench>.json` holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchSnapshot {
+    /// Bench family (`"spmv"` / `"cg"`).
+    pub bench: String,
+    /// `true` for a seed baseline that carries no real measurements.
+    pub bootstrap: bool,
+    /// The `HETPART_BENCH_SCALE` the run used (`quick|default|full`).
+    pub scale: String,
+    /// Machine identity at record time.
+    pub fingerprint: Fingerprint,
+    /// Measured kernels (empty iff `bootstrap`).
+    pub kernels: Vec<KernelEntry>,
+}
+
+impl BenchSnapshot {
+    /// Fresh snapshot for a real measured run on this machine.
+    pub fn new(bench: &str) -> BenchSnapshot {
+        BenchSnapshot {
+            bench: bench.to_string(),
+            bootstrap: false,
+            scale: std::env::var("HETPART_BENCH_SCALE").unwrap_or_else(|_| "default".into()),
+            fingerprint: Fingerprint::capture(),
+            kernels: Vec::new(),
+        }
+    }
+
+    /// Append one kernel, deriving ns/row and GB/s from the median time
+    /// and the bytes the kernel streams per invocation.
+    pub fn push(&mut self, name: &str, n: usize, median_secs: f64, bytes: f64) {
+        let safe = median_secs.max(1e-12);
+        self.kernels.push(KernelEntry {
+            name: name.to_string(),
+            n,
+            median_ms: median_secs * 1e3,
+            ns_per_row: safe * 1e9 / n.max(1) as f64,
+            gbs: bytes / safe / 1e9,
+        });
+    }
+
+    /// Render as the on-disk JSON document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("bootstrap", Json::Bool(self.bootstrap)),
+            ("scale", Json::Str(self.scale.clone())),
+            (
+                "fingerprint",
+                obj(vec![
+                    ("cpu", Json::Str(self.fingerprint.cpu.clone())),
+                    ("threads", Json::Num(self.fingerprint.threads as f64)),
+                    ("os", Json::Str(self.fingerprint.os.clone())),
+                ]),
+            ),
+            (
+                "kernels",
+                Json::Arr(
+                    self.kernels
+                        .iter()
+                        .map(|k| {
+                            obj(vec![
+                                ("name", Json::Str(k.name.clone())),
+                                ("n", Json::Num(k.n as f64)),
+                                ("median_ms", Json::Num(k.median_ms)),
+                                ("ns_per_row", Json::Num(k.ns_per_row)),
+                                ("gbs", Json::Num(k.gbs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a snapshot back from its JSON document.
+    pub fn from_json(j: &Json) -> Result<BenchSnapshot> {
+        let str_of = |j: &Json, k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("snapshot missing string field '{k}'"))?
+                .to_string())
+        };
+        let num_of = |j: &Json, k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("snapshot missing number field '{k}'"))
+        };
+        let fp = j.get("fingerprint").ok_or_else(|| anyhow!("snapshot missing fingerprint"))?;
+        let kernels = match j.get("kernels") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|k| {
+                    Ok(KernelEntry {
+                        name: str_of(k, "name")?,
+                        n: num_of(k, "n")? as usize,
+                        median_ms: num_of(k, "median_ms")?,
+                        ns_per_row: num_of(k, "ns_per_row")?,
+                        gbs: num_of(k, "gbs")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => return Err(anyhow!("snapshot missing kernels array")),
+        };
+        Ok(BenchSnapshot {
+            bench: str_of(j, "bench")?,
+            bootstrap: j.get("bootstrap").and_then(Json::as_bool).unwrap_or(false),
+            scale: str_of(j, "scale")?,
+            fingerprint: Fingerprint {
+                cpu: str_of(fp, "cpu")?,
+                threads: num_of(fp, "threads")? as usize,
+                os: str_of(fp, "os")?,
+            },
+            kernels,
+        })
+    }
+
+    /// Write `BENCH_<bench>.json` under `dir` (created if absent);
+    /// returns the path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().render())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Read a snapshot from a `BENCH_*.json` file.
+    pub fn load(path: &Path) -> Result<BenchSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Where to save a fresh snapshot, given the process args and the
+/// `HETPART_BENCH_SAVE` environment value: the env names a directory,
+/// a bare `--save-baseline` arg means the current directory, anything
+/// else means "don't save". Pure so tests can exercise the policy.
+pub fn save_dir_from(args: &[String], env: Option<&str>) -> Option<PathBuf> {
+    if let Some(dir) = env {
+        if !dir.is_empty() {
+            return Some(PathBuf::from(dir));
+        }
+    }
+    if args.iter().any(|a| a == "--save-baseline") {
+        return Some(PathBuf::from("."));
+    }
+    None
+}
+
+/// [`save_dir_from`] on the real process arguments and environment.
+pub fn save_requested() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    let env = std::env::var("HETPART_BENCH_SAVE").ok();
+    save_dir_from(&args, env.as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_derives_per_row_and_bandwidth() {
+        let mut s = BenchSnapshot::new("spmv");
+        // 1000 rows in 1 ms moving 8 MB → 1000 ns/row and 8 GB/s.
+        s.push("k", 1000, 1e-3, 8e6);
+        let k = &s.kernels[0];
+        assert!((k.ns_per_row - 1000.0).abs() < 1e-9, "{}", k.ns_per_row);
+        assert!((k.gbs - 8.0).abs() < 1e-9, "{}", k.gbs);
+        assert!((k.median_ms - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut s = BenchSnapshot::new("cg");
+        s.push("native_cg", 2500, 2.5e-4, 1.2e6);
+        s.push("sell_c8_s64", 2500, 1.9e-4, 1.2e6);
+        let text = s.to_json().render();
+        let back = BenchSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn bootstrap_snapshot_round_trips_with_no_kernels() {
+        let s = BenchSnapshot {
+            bench: "spmv".to_string(),
+            bootstrap: true,
+            scale: "quick".to_string(),
+            fingerprint: Fingerprint {
+                cpu: "unknown".to_string(),
+                threads: 1,
+                os: "linux/x86_64".to_string(),
+            },
+            kernels: Vec::new(),
+        };
+        let back = BenchSnapshot::from_json(&Json::parse(&s.to_json().render()).unwrap()).unwrap();
+        assert!(back.bootstrap);
+        assert!(back.kernels.is_empty());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let dir = std::env::temp_dir().join("hetpart_bench_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = BenchSnapshot::new("spmv");
+        s.push("native_ell", 100, 1e-5, 1e5);
+        let path = s.save(&dir).unwrap();
+        assert!(path.ends_with("BENCH_spmv.json"));
+        let back = BenchSnapshot::load(&path).unwrap();
+        assert_eq!(back, s);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_policy() {
+        let args = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(save_dir_from(&args(&["bench"]), None), None);
+        assert_eq!(
+            save_dir_from(&args(&["bench", "--save-baseline"]), None),
+            Some(PathBuf::from("."))
+        );
+        assert_eq!(
+            save_dir_from(&args(&["bench"]), Some("/tmp/out")),
+            Some(PathBuf::from("/tmp/out"))
+        );
+        assert_eq!(save_dir_from(&args(&["bench"]), Some("")), None);
+        // Env wins over the flag (CI sets the env; the flag is for
+        // humans refreshing the committed baseline in-place).
+        assert_eq!(
+            save_dir_from(&args(&["bench", "--save-baseline"]), Some("/x")),
+            Some(PathBuf::from("/x"))
+        );
+    }
+
+    #[test]
+    fn fingerprint_is_sane() {
+        let f = Fingerprint::capture();
+        assert!(f.threads >= 1);
+        assert!(!f.cpu.is_empty());
+        assert!(f.os.contains('/'));
+    }
+}

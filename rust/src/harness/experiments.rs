@@ -423,8 +423,8 @@ pub fn exec_overlap(scale: BenchScale) -> Table {
             }
         };
         for variant in [CgVariant::Classic, CgVariant::Pipelined] {
-            let off = SolveOpts { overlap: false, variant };
-            let on = SolveOpts { overlap: true, variant };
+            let off = SolveOpts { overlap: false, variant, ..SolveOpts::default() };
+            let on = SolveOpts { overlap: true, variant, ..SolveOpts::default() };
             let run = |o| run_solve_opts(&g, &p, &topo, ExecBackend::Sim, 0.05, 40, 0.0, o);
             match (run(off), run(on)) {
                 (Ok((so, co)), Ok((sn, cn))) => {

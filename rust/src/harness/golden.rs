@@ -277,6 +277,7 @@ mod tests {
                 dynamic: crate::repart::DynamicKind::None,
                 epochs: 0,
                 overlap: false,
+                layout: crate::solver::SpmvLayout::Ell,
                 part_backend: None,
                 part_ranks: 0,
             },

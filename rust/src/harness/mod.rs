@@ -17,18 +17,23 @@
 //!
 //! The [`experiments`] drivers regenerate every table and figure of the
 //! paper's evaluation (shared by the `cargo bench` targets and
-//! `hetpart experiment <name>`).
+//! `hetpart experiment <name>`). [`bench_snapshot`] adds the
+//! machine-readable side of the benches: `BENCH_*.json` snapshots
+//! (fingerprint + per-kernel ns/row and GB/s) diffed by
+//! `tools/bench_compare.py`.
 //!
 //! Scaling: the paper's instances are 1M–578M vertices on up to 12288
 //! PUs; this testbed is one CPU core. [`BenchScale`] shrinks instance
 //! sizes and PU counts ~100× while preserving the comparisons (who wins,
 //! by what factor, where heterogeneity hurts).
 
+pub mod bench_snapshot;
 pub mod experiments;
 pub mod golden;
 pub mod runner;
 pub mod scenario;
 
+pub use bench_snapshot::{BenchSnapshot, Fingerprint, KernelEntry};
 pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
 pub use runner::{
     run_matrix, run_scenario, summarize, write_artifacts, DynamicSummary, ScenarioResult,

@@ -125,7 +125,8 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
     let (mut sim_time_per_iter, mut final_residual) = (None, None);
     let (mut comm_hidden_secs, mut overlap_efficiency) = (None, None);
     if s.solve_iters > 0 {
-        let opts = SolveOpts { overlap: s.overlap, ..SolveOpts::default() };
+        let opts =
+            SolveOpts { overlap: s.overlap, layout: s.layout, ..SolveOpts::default() };
         let (solve, _cg) =
             run_solve_opts(g, &part, &topo, ExecBackend::Sim, 0.05, s.solve_iters, 0.0, opts)
                 .with_context(|| format!("solve for scenario {}", s.id()))?;
@@ -328,7 +329,7 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
         "id", "family", "n", "m", "k", "preset", "algo", "epsilon", "seed", "cut",
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
         "partBackend", "partRanks", "partSecs(ms)", "simT/iter(ms)", "residual", "overlap",
-        "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
+        "layout", "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
         "objVsScratch",
     ]);
     for r in results {
@@ -390,6 +391,7 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 None => "-".to_string(),
             },
             if s.overlap { "on" } else { "off" }.to_string(),
+            s.layout.name().to_string(),
             fmt_opt(r.comm_hidden_secs, 1e3),
             match r.overlap_efficiency {
                 Some(x) => format!("{x:.4}"),
@@ -470,6 +472,7 @@ pub fn result_json(r: &ScenarioResult) -> Json {
             r.final_residual.map(Json::Num).unwrap_or(Json::Null),
         ),
         ("overlap", Json::Bool(s.overlap)),
+        ("layout", Json::Str(s.layout.name().to_string())),
         (
             "comm_hidden_secs",
             r.comm_hidden_secs.map(Json::Num).unwrap_or(Json::Null),
@@ -572,6 +575,7 @@ pub fn write_artifacts(
 mod tests {
     use super::*;
     use crate::harness::scenario::TopoPreset;
+    use crate::solver::SpmvLayout;
 
     fn tiny_scenarios() -> Vec<Scenario> {
         ["geoKM", "zSFC"]
@@ -588,6 +592,7 @@ mod tests {
                 dynamic: DynamicKind::None,
                 epochs: 0,
                 overlap: false,
+                layout: SpmvLayout::Ell,
                 part_backend: None,
                 part_ranks: 0,
             })
@@ -658,6 +663,28 @@ mod tests {
         let back = Json::parse(&result_json(&r_on[0]).render()).unwrap();
         assert_eq!(back.get("overlap").unwrap(), &Json::Bool(true));
         assert!(back.get("overlap_efficiency").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn layout_axis_is_bit_identical_and_renders_columns() {
+        let mut ell = tiny_scenarios();
+        ell.truncate(1);
+        ell[0].solve_iters = 5;
+        let mut sell = ell.clone();
+        sell[0].layout = SpmvLayout::SellCs;
+        assert_eq!(sell[0].id(), format!("{}-lsellcs", ell[0].id()), "layout id suffix");
+        let (r_ell, f1) = run_matrix(&ell, 1);
+        let (r_sell, f2) = run_matrix(&sell, 1);
+        assert!(f1.is_empty() && f2.is_empty(), "{f1:?} {f2:?}");
+        // The layout axis changes storage, never numerics: partition
+        // quality and the CG trajectory are bit-identical.
+        assert_eq!(r_ell[0].cut, r_sell[0].cut);
+        assert_eq!(r_ell[0].final_residual, r_sell[0].final_residual);
+        let table = runs_table(&r_sell);
+        let li = table.header.iter().position(|h| h == "layout").unwrap();
+        assert_eq!(table.rows[0][li], "sellcs");
+        let back = Json::parse(&result_json(&r_sell[0]).render()).unwrap();
+        assert_eq!(back.get("layout").unwrap().as_str().unwrap(), "sellcs");
     }
 
     #[test]
@@ -734,6 +761,7 @@ mod tests {
             dynamic: DynamicKind::RefineFront,
             epochs: 3,
             overlap: false,
+            layout: SpmvLayout::Ell,
             part_backend: None,
             part_ranks: 0,
         };

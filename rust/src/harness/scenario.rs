@@ -14,6 +14,7 @@ use crate::graph::Csr;
 use crate::partitioners::dist::DIST_NAMES;
 use crate::partitioners::ALL_NAMES;
 use crate::repart::{DynamicKind, REPART_NAMES};
+use crate::solver::SpmvLayout;
 use crate::topology::{topo1, Pu, Topo1Spec, Topology};
 use anyhow::{Context, Result};
 
@@ -134,6 +135,11 @@ pub struct Scenario {
     /// Rank count for the distributed partitioning axis (ignored when
     /// `part_backend` is `None`).
     pub part_ranks: usize,
+    /// The SpMV-layout axis: which storage layout the scenario's
+    /// distributed solve runs its rank kernels on (`solver::sell`).
+    /// Solutions are `==`-equal across layouts, so golden metrics are
+    /// layout-independent; only measured kernel time moves.
+    pub layout: SpmvLayout,
 }
 
 impl Scenario {
@@ -141,8 +147,9 @@ impl Scenario {
     /// file name. Static blocking scenarios keep their historical id (so
     /// golden baselines survive the dynamic, overlap, and partitioning
     /// axes); dynamic scenarios append `-dyn<kind>-E<epochs>`,
-    /// overlapped scenarios append `-ov`, distributed-partitioning
-    /// scenarios append `-pb<backend>R<ranks>`.
+    /// overlapped scenarios append `-ov`, non-default SpMV layouts append
+    /// `-l<layout>`, distributed-partitioning scenarios append
+    /// `-pb<backend>R<ranks>`.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
@@ -159,6 +166,9 @@ impl Scenario {
         }
         if self.overlap {
             id.push_str("-ov");
+        }
+        if self.layout != SpmvLayout::default() {
+            id.push_str(&format!("-l{}", self.layout.name()));
         }
         if let Some(backend) = self.part_backend {
             id.push_str(&format!("-pb{}R{}", backend.name(), self.part_ranks));
@@ -261,6 +271,7 @@ impl MatrixKind {
                                 overlap: false,
                                 part_backend: None,
                                 part_ranks: 0,
+                                layout: SpmvLayout::Ell,
                             });
                         }
                     }
@@ -283,6 +294,7 @@ impl MatrixKind {
                             overlap: false,
                             part_backend: None,
                             part_ranks: 0,
+                            layout: SpmvLayout::Ell,
                         });
                     }
                 }
@@ -334,6 +346,7 @@ impl MatrixKind {
                                 overlap: false,
                                 part_backend,
                                 part_ranks,
+                                layout: SpmvLayout::Ell,
                             });
                         }
                     }
@@ -380,6 +393,7 @@ fn push_paper_grid(
                     overlap: false,
                     part_backend: None,
                     part_ranks: 0,
+                    layout: SpmvLayout::Ell,
                 });
             }
         }
@@ -532,9 +546,15 @@ mod tests {
             overlap: false,
             part_backend: None,
             part_ranks: 0,
+            layout: SpmvLayout::Ell,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
+        // The non-default layout gets its own suffix; the default never
+        // perturbs golden keys.
+        s.layout = SpmvLayout::SellCs;
+        assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42-lsellcs");
+        s.layout = SpmvLayout::Ell;
         s.part_backend = Some(ExecBackend::Sim);
         s.part_ranks = 4;
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42-pbsimR4");

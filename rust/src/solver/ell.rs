@@ -1,6 +1,11 @@
 //! Padded ELL storage for the shifted Laplacian — the exact layout the
-//! L1 Pallas kernel consumes (`values[n, w]`, `cols[n, w]`, `diag[n]`,
-//! padding slots value 0 / column 0).
+//! L1 Pallas kernel consumes (`values[n, w]`, `cols[n, w]`, `diag[n]`).
+//!
+//! Padding slots carry value 0 and a *self-referential* column
+//! (`cols[pad of row u] = u`): the product is still exactly 0, but the
+//! x-load hits the row's own entry — already in cache for the diagonal —
+//! instead of hammering `x[0]` from every row (cache-hostile at large w,
+//! and wrong if `x[0]` ever goes non-finite, since `0·NaN = NaN`).
 
 use crate::graph::{Csr, Laplacian};
 use anyhow::{ensure, Result};
@@ -34,6 +39,11 @@ impl EllMatrix {
         let mut values = vec![0.0f32; n * w];
         let mut cols = vec![0i32; n * w];
         for u in 0..n {
+            // Self-referential padding (see module doc); real slots
+            // overwrite the prefix below.
+            for s in 0..w {
+                cols[u * w + s] = u as i32;
+            }
             for (slot, e) in (lap.xadj[u]..lap.xadj[u + 1]).enumerate() {
                 values[u * w + slot] = lap.vals[e] as f32;
                 cols[u * w + slot] = lap.cols[e] as i32;
@@ -59,7 +69,7 @@ impl EllMatrix {
     pub fn pad_to(&self, n2: usize, w2: usize) -> Result<EllMatrix> {
         ensure!(n2 >= self.n && w2 >= self.w, "pad_to must not shrink");
         let mut values = vec![0.0f32; n2 * w2];
-        let mut cols = vec![0i32; n2 * w2];
+        let mut cols: Vec<i32> = (0..n2 * w2).map(|i| (i / w2) as i32).collect();
         for u in 0..self.n {
             for s in 0..self.w {
                 values[u * w2 + s] = self.values[u * self.w + s];
@@ -118,7 +128,43 @@ mod tests {
         // Row 0: one entry (-1 at col 1), one padding slot.
         assert_eq!(e.values[0..2], [-1.0, 0.0]);
         assert_eq!(e.cols[0..2], [1, 0]);
+        // Row 2's padding slot points at row 2 itself, not column 0.
+        assert_eq!(e.values[4..6], [-1.0, 0.0]);
+        assert_eq!(e.cols[4..6], [1, 2]);
         assert_eq!(e.nnz(), 4);
+    }
+
+    #[test]
+    fn padding_columns_are_self_referential() {
+        let e = path3_ell();
+        for u in 0..e.n {
+            for s in 0..e.w {
+                if e.values[u * e.w + s] == 0.0 {
+                    assert_eq!(e.cols[u * e.w + s], u as i32, "row {u} slot {s}");
+                }
+            }
+        }
+        let p = e.pad_to(8, 4).unwrap();
+        for u in 0..p.n {
+            for s in 0..p.w {
+                if p.values[u * p.w + s] == 0.0 {
+                    assert_eq!(p.cols[u * p.w + s], u as i32, "padded row {u} slot {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pads_never_read_row_zero() {
+        // With column-0 pads, a non-finite x[0] would poison every padded
+        // row (`0 · NaN = NaN`). Self-referential pads keep the damage
+        // confined to row 0 itself.
+        use crate::solver::spmv::spmv_ell_native;
+        let e = path3_ell();
+        let x = [f32::NAN, 1.0, 2.0];
+        let y = spmv_ell_native(&e, &x);
+        assert!(y[0].is_nan()); // row 0 genuinely reads x[0]
+        assert!(y[2].is_finite(), "row 2's pad slot read x[0]: {}", y[2]);
     }
 
     #[test]

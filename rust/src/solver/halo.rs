@@ -10,6 +10,7 @@
 //! asserted by a test and exercised by the `micro` bench.
 
 use super::ell::EllMatrix;
+use super::sell::{SellMatrix, SpmvLayout, DEFAULT_CHUNK, DEFAULT_SIGMA};
 use crate::partition::Partition;
 
 /// One PU's share of the matrix plus its halo metadata.
@@ -36,14 +37,23 @@ pub struct HaloBlock {
 impl HaloBlock {
     /// Local vector `[owned x | ghost x]` gathered from the global `x`.
     pub fn gather_local(&self, x: &[f32]) -> Vec<f32> {
-        let mut xl = Vec::with_capacity(self.own.len() + self.ghosts.len());
-        for &g in &self.own {
-            xl.push(x[g as usize]);
-        }
-        for &g in &self.ghosts {
-            xl.push(x[g as usize]);
-        }
+        let mut xl = vec![0.0f32; self.own.len() + self.ghosts.len()];
+        self.gather_local_into(x, &mut xl);
         xl
+    }
+
+    /// [`HaloBlock::gather_local`] into a caller buffer of length
+    /// `own.len() + ghosts.len()` — the allocation-free form the
+    /// [`HaloSolver`] workspaces use every iteration.
+    pub fn gather_local_into(&self, x: &[f32], xl: &mut [f32]) {
+        debug_assert_eq!(xl.len(), self.own.len() + self.ghosts.len());
+        for (i, &g) in self.own.iter().enumerate() {
+            xl[i] = x[g as usize];
+        }
+        let nb = self.own.len();
+        for (i, &g) in self.ghosts.iter().enumerate() {
+            xl[nb + i] = x[g as usize];
+        }
     }
 
     /// One row of the block ELL kernel (diagonal + slots) — the single
@@ -123,7 +133,11 @@ impl HaloMatrix {
                     let c = ell.cols[gu * w + s] as usize;
                     values[li * w + s] = v;
                     if v == 0.0 {
-                        cols[li * w + s] = 0; // padding stays padding
+                        // Self-referential padding in *local* indexing
+                        // (mirrors the EllMatrix fix): the pad's x-load
+                        // stays on this row's own entry and can never
+                        // alias a ghost column.
+                        cols[li * w + s] = li as i32;
                         continue;
                     }
                     let cb = part.assignment[c] as usize;
@@ -243,6 +257,96 @@ impl super::cg::SpmvBackend for HaloMatrix {
     }
     fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> anyhow::Result<()> {
         HaloMatrix::spmv(self, x, y);
+        Ok(())
+    }
+}
+
+/// Zero-allocation CG backend over a [`HaloMatrix`]: all workspaces —
+/// per-block local vectors and (for the SELL layout) the kernel
+/// structures — are built once up front, so the solve loop performs
+/// **zero heap allocations per iteration** (`cg_solve` preallocates its
+/// side too; pinned by `tests/alloc_counter.rs`).
+///
+/// The SpMV is the *fused* interior/boundary path: each block gathers its
+/// `[own | ghost]` x into a reused workspace (the in-process halo
+/// exchange), runs the interior rows, then the boundary rows — the same
+/// split the nonblocking engine overlaps, here exploited purely for the
+/// allocation-free fast path. Results are bit-identical to
+/// [`HaloMatrix::spmv`] on the ELL layout (same `spmv_row` body, disjoint
+/// row sets) and `==`-equal on SELL-C-σ (see `solver::sell`).
+pub struct HaloSolver<'a> {
+    h: &'a HaloMatrix,
+    layout: SpmvLayout,
+    /// Per-block (interior, boundary) SELL kernels; empty on the ELL path.
+    sell: Vec<(SellMatrix, SellMatrix)>,
+    /// Per-block reused `[own | ghosts]` gather buffers.
+    xl: Vec<Vec<f32>>,
+    /// Per-block reused local results (SELL path scatters through these).
+    yl: Vec<Vec<f32>>,
+}
+
+impl<'a> HaloSolver<'a> {
+    /// Preallocate every workspace (and build the SELL kernels when
+    /// `layout` asks for them).
+    pub fn new(h: &'a HaloMatrix, layout: SpmvLayout) -> HaloSolver<'a> {
+        let sell = match layout {
+            SpmvLayout::Ell => Vec::new(),
+            SpmvLayout::SellCs => h
+                .blocks
+                .iter()
+                .map(|blk| {
+                    (
+                        SellMatrix::from_ell_rows(&blk.ell, &blk.interior, DEFAULT_CHUNK, DEFAULT_SIGMA),
+                        SellMatrix::from_ell_rows(&blk.ell, &blk.boundary, DEFAULT_CHUNK, DEFAULT_SIGMA),
+                    )
+                })
+                .collect(),
+        };
+        let xl = h.blocks.iter().map(|b| vec![0.0f32; b.own.len() + b.ghosts.len()]).collect();
+        let yl = h.blocks.iter().map(|b| vec![0.0f32; b.own.len()]).collect();
+        HaloSolver { h, layout, sell, xl, yl }
+    }
+
+    /// Which layout the kernels run on.
+    pub fn layout(&self) -> SpmvLayout {
+        self.layout
+    }
+}
+
+impl super::cg::SpmvBackend for HaloSolver<'_> {
+    fn n(&self) -> usize {
+        self.h.n
+    }
+
+    fn spmv(&mut self, x: &[f32], y: &mut [f32]) -> anyhow::Result<()> {
+        let h = self.h;
+        // Halo exchange: every block's gather is the in-process receive.
+        for (b, blk) in h.blocks.iter().enumerate() {
+            blk.gather_local_into(x, &mut self.xl[b]);
+        }
+        // Fused interior-then-boundary compute per block.
+        for (b, blk) in h.blocks.iter().enumerate() {
+            let xl = &self.xl[b];
+            match self.layout {
+                SpmvLayout::Ell => {
+                    for &li in &blk.interior {
+                        y[blk.own[li as usize] as usize] = blk.spmv_row(xl, li as usize);
+                    }
+                    for &li in &blk.boundary {
+                        y[blk.own[li as usize] as usize] = blk.spmv_row(xl, li as usize);
+                    }
+                }
+                SpmvLayout::SellCs => {
+                    let yl = &mut self.yl[b];
+                    let (interior, boundary) = &self.sell[b];
+                    interior.spmv_into(xl, yl);
+                    boundary.spmv_into(xl, yl);
+                    for (li, &g) in blk.own.iter().enumerate() {
+                        y[g as usize] = yl[li];
+                    }
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -381,6 +485,59 @@ mod tests {
         // A nontrivial partition must actually have both kinds of rows.
         assert!(h.blocks.iter().any(|b| !b.interior.is_empty()));
         assert!(h.blocks.iter().any(|b| !b.boundary.is_empty()));
+    }
+
+    #[test]
+    fn local_padding_is_self_referential() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        for blk in &h.blocks {
+            let w = blk.ell.w;
+            for li in 0..blk.own.len() {
+                for s in 0..w {
+                    if blk.ell.values[li * w + s] == 0.0 {
+                        assert_eq!(blk.ell.cols[li * w + s], li as i32, "row {li} slot {s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_solver_matches_halo_spmv_on_both_layouts() {
+        let (_g, ell, part) = setup();
+        let h = HaloMatrix::new(&ell, &part);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.41).sin()).collect();
+        let mut reference = vec![0.0f32; ell.n];
+        h.spmv(&x, &mut reference);
+        for layout in [SpmvLayout::Ell, SpmvLayout::SellCs] {
+            use crate::solver::cg::SpmvBackend;
+            let mut solver = HaloSolver::new(&h, layout);
+            assert_eq!(solver.layout(), layout);
+            let mut y = vec![0.0f32; ell.n];
+            solver.spmv(&x, &mut y).unwrap();
+            assert_eq!(y, reference, "layout {}", layout.name());
+            // Workspaces are reused, not regrown: a second call agrees.
+            let mut y2 = vec![0.0f32; ell.n];
+            solver.spmv(&x, &mut y2).unwrap();
+            assert_eq!(y2, reference);
+        }
+    }
+
+    #[test]
+    fn halo_solver_cg_trajectory_matches_reference_backend() {
+        use crate::solver::cg::cg_solve;
+        let (_g, ell, part) = setup();
+        let mut h = HaloMatrix::new(&ell, &part);
+        let b: Vec<f32> = (0..ell.n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let reference = cg_solve(&mut h, &b, 120, 1e-5).unwrap();
+        for layout in [SpmvLayout::Ell, SpmvLayout::SellCs] {
+            let mut solver = HaloSolver::new(&h, layout);
+            let res = cg_solve(&mut solver, &b, 120, 1e-5).unwrap();
+            assert_eq!(res.iterations, reference.iterations, "layout {}", layout.name());
+            assert_eq!(res.x, reference.x, "layout {}", layout.name());
+            assert_eq!(res.residual_norms, reference.residual_norms);
+        }
     }
 
     #[test]

@@ -14,11 +14,13 @@ pub mod distsim;
 pub mod ell;
 pub mod halo;
 pub mod precond;
+pub mod sell;
 pub mod spmv;
 
 pub use cg::{cg_solve, CgResult};
 pub use distcg::{pipelined_cg_solve, DistributedMatrix};
-pub use halo::HaloMatrix;
+pub use halo::{HaloMatrix, HaloSolver};
 pub use precond::pcg_solve;
 pub use distsim::{ClusterSim, SimReport};
 pub use ell::EllMatrix;
+pub use sell::{SellMatrix, SpmvLayout};

@@ -1,0 +1,402 @@
+//! SELL-C-σ (sliced ELLPACK) storage — the raw-speed SpMV fast path.
+//!
+//! Padded ELL spends `n·w` slots even when row sizes vary widely. SELL-C-σ
+//! (Kreutzer et al.) sorts rows by descending entry count within windows
+//! of σ rows, groups them into chunks of C rows, and pads each chunk only
+//! to its *own* widest row. Storage inside a chunk is column-major
+//! (slot s of all C rows, then slot s+1), the unit-stride access pattern
+//! a vectorizing compiler wants. The row permutation stays explicit
+//! ([`SellMatrix::perm`]) and results are scattered back through it, so
+//! callers always see original row order.
+//!
+//! Agreement with ELL is exact, not approximate: a stored row adds its
+//! real entries in the same slot order as the ELL kernel, and padding
+//! slots contribute a literal `0.0 · x[row]` in both layouts (pad columns
+//! are self-referential, see `solver::ell`), so per-row partial sums are
+//! identical and results compare `==` (pinned by `tests/sell_layout.rs`).
+
+use super::ell::EllMatrix;
+
+/// Which SpMV storage layout a solve runs on — the seam threaded through
+/// `exec::SolveOpts`, the harness scenario axis, and the CLI `--layout`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpmvLayout {
+    /// Padded ELL — the reference layout every other path is pinned to.
+    #[default]
+    Ell,
+    /// SELL-C-σ chunks at the default C/σ (see [`SellMatrix`]).
+    SellCs,
+}
+
+impl SpmvLayout {
+    /// Parse a CLI layout name (`ell` / `sellcs`), case-insensitive.
+    pub fn parse(s: &str) -> Option<SpmvLayout> {
+        match s.to_ascii_lowercase().as_str() {
+            "ell" => Some(SpmvLayout::Ell),
+            "sellcs" | "sell" | "sell-c-s" | "sell-c-sigma" => Some(SpmvLayout::SellCs),
+            _ => None,
+        }
+    }
+
+    /// Canonical layout name (`"ell"` / `"sellcs"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpmvLayout::Ell => "ell",
+            SpmvLayout::SellCs => "sellcs",
+        }
+    }
+}
+
+/// Chunk height used when no explicit C is requested: 8 rows fill a
+/// 256-bit f32 lane exactly and keep one long row's padding blast radius
+/// to 7 neighbors.
+pub const DEFAULT_CHUNK: usize = 8;
+
+/// Sort window used when no explicit σ is requested. Local sorting keeps
+/// rows near their neighbors (cache-friendly x access on mesh orderings)
+/// while still grouping similar-degree rows into the same chunk.
+pub const DEFAULT_SIGMA: usize = 64;
+
+/// Hard cap on C — the kernel accumulates one chunk in a stack buffer.
+pub const MAX_CHUNK: usize = 64;
+
+/// Rows below which chunking the kernel over the job queue costs more
+/// than it buys (mirrors `solver::spmv::PAR_MIN_ROWS`).
+const PAR_MIN_ROWS: usize = 4096;
+
+/// SELL-C-σ matrix over the same entry set as an [`EllMatrix`] (or a row
+/// subset of one). The diagonal stays split out, exactly as in ELL.
+#[derive(Debug, Clone)]
+pub struct SellMatrix {
+    /// Number of stored rows.
+    pub n: usize,
+    /// Chunk height C (1 ≤ C ≤ [`MAX_CHUNK`]).
+    pub c: usize,
+    /// Sort window σ (1 = keep input order, ≥ n = one global sort).
+    pub sigma: usize,
+    /// Slot-data offset of each chunk; `chunk_ptr[ch+1] - chunk_ptr[ch]
+    /// = chunk_w[ch] · rows_in_chunk`.
+    pub chunk_ptr: Vec<usize>,
+    /// Per-chunk width = max entry count over the chunk's rows.
+    pub chunk_w: Vec<usize>,
+    /// Chunk-local column-major slot values; padding slots are 0.0.
+    pub values: Vec<f32>,
+    /// Chunk-local column-major slot columns; padding slots are
+    /// self-referential (`perm` of their row), matching the ELL fix.
+    pub cols: Vec<i32>,
+    /// Diagonal in *stored* order: `diag[p]` pairs with `x[perm[p]]`.
+    pub diag: Vec<f32>,
+    /// Stored row `p` computes source row `perm[p]` — the index of that
+    /// row in the x/y vectors the kernel reads and writes.
+    pub perm: Vec<u32>,
+}
+
+impl SellMatrix {
+    /// Build over all rows of `ell` with explicit C and σ.
+    pub fn from_ell(ell: &EllMatrix, c: usize, sigma: usize) -> SellMatrix {
+        let all: Vec<u32> = (0..ell.n as u32).collect();
+        SellMatrix::from_ell_rows(ell, &all, c, sigma)
+    }
+
+    /// Build over all rows of `ell` at the default C/σ.
+    pub fn from_ell_default(ell: &EllMatrix) -> SellMatrix {
+        SellMatrix::from_ell(ell, DEFAULT_CHUNK, DEFAULT_SIGMA)
+    }
+
+    /// Build over a subset of `ell`'s rows (e.g. a halo block's interior
+    /// or boundary split). `rows` are row indices into `ell`, which are
+    /// also the x/y indices the kernel will use; the subset rows must be
+    /// distinct. σ windows are applied over the order of `rows`.
+    pub fn from_ell_rows(ell: &EllMatrix, rows: &[u32], c: usize, sigma: usize) -> SellMatrix {
+        assert!(c >= 1 && c <= MAX_CHUNK, "chunk height {c} outside 1..={MAX_CHUNK}");
+        let sigma = sigma.max(1);
+        let w = ell.w;
+        let entries_of = |u: usize| (0..w).filter(|&s| ell.values[u * w + s] != 0.0).count();
+        // Stable descending-entry-count sort within σ windows: stability
+        // keeps equal-degree rows in input order, so construction is
+        // deterministic and σ=1 is exactly the identity permutation.
+        let mut keyed: Vec<(u32, usize)> =
+            rows.iter().map(|&u| (u, entries_of(u as usize))).collect();
+        for window in keyed.chunks_mut(sigma) {
+            window.sort_by_key(|&(_, cnt)| std::cmp::Reverse(cnt));
+        }
+        let n = keyed.len();
+        let perm: Vec<u32> = keyed.iter().map(|&(u, _)| u).collect();
+        let nchunks = n.div_ceil(c);
+        let mut chunk_ptr = Vec::with_capacity(nchunks + 1);
+        let mut chunk_w = Vec::with_capacity(nchunks);
+        chunk_ptr.push(0usize);
+        let mut values = Vec::new();
+        let mut cols = Vec::new();
+        for ch in 0..nchunks {
+            let r0 = ch * c;
+            let rows_in = (n - r0).min(c);
+            let wc = keyed[r0..r0 + rows_in].iter().map(|&(_, cnt)| cnt).max().unwrap_or(0);
+            let base = values.len();
+            values.resize(base + wc * rows_in, 0.0f32);
+            cols.resize(base + wc * rows_in, 0i32);
+            for r in 0..rows_in {
+                let u = perm[r0 + r] as usize;
+                let mut slot = 0usize;
+                for s in 0..w {
+                    let v = ell.values[u * w + s];
+                    if v != 0.0 {
+                        values[base + slot * rows_in + r] = v;
+                        cols[base + slot * rows_in + r] = ell.cols[u * w + s];
+                        slot += 1;
+                    }
+                }
+                // Self-referential padding: x[u] is already hot for the
+                // diagonal, so pads never pull a foreign cache line.
+                for s in slot..wc {
+                    cols[base + s * rows_in + r] = u as i32;
+                }
+            }
+            chunk_w.push(wc);
+            chunk_ptr.push(values.len());
+        }
+        let diag: Vec<f32> = perm.iter().map(|&u| ell.diag[u as usize]).collect();
+        SellMatrix { n, c, sigma, chunk_ptr, chunk_w, values, cols, diag, perm }
+    }
+
+    /// Number of chunks.
+    pub fn chunks(&self) -> usize {
+        self.chunk_w.len()
+    }
+
+    /// Non-padding slots.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Stored slots / non-padding slots — the padding overhead SELL-C-σ
+    /// exists to shrink (padded ELL's ratio is `n·w / nnz`). 1.0 when the
+    /// matrix has no entries at all.
+    pub fn fill_ratio(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            1.0
+        } else {
+            self.values.len() as f64 / nnz as f64
+        }
+    }
+
+    /// `y[perm[p]] = diag·x + entries·x` for every stored row, sequential.
+    /// Rows *not* covered by `perm` are left untouched, which is what the
+    /// fused interior/boundary halo path relies on.
+    pub fn spmv_into(&self, x: &[f32], y: &mut [f32]) {
+        let mut acc = [0.0f32; MAX_CHUNK];
+        for ch in 0..self.chunks() {
+            self.chunk_kernel(ch, x, &mut acc);
+            let r0 = ch * self.c;
+            let rows_in = (self.n - r0).min(self.c);
+            for r in 0..rows_in {
+                y[self.perm[r0 + r] as usize] = acc[r];
+            }
+        }
+    }
+
+    /// One chunk's rows into `acc[0..rows_in]` (stored order, no scatter).
+    #[inline]
+    fn chunk_kernel(&self, ch: usize, x: &[f32], acc: &mut [f32; MAX_CHUNK]) {
+        let r0 = ch * self.c;
+        let rows_in = (self.n - r0).min(self.c);
+        let wc = self.chunk_w[ch];
+        let base = self.chunk_ptr[ch];
+        for r in 0..rows_in {
+            acc[r] = self.diag[r0 + r] * x[self.perm[r0 + r] as usize];
+        }
+        for s in 0..wc {
+            let off = base + s * rows_in;
+            for r in 0..rows_in {
+                acc[r] += self.values[off + r] * x[self.cols[off + r] as usize];
+            }
+        }
+    }
+
+    /// Chunks `ch_lo..ch_hi` into `out`, stored-row order (`out[0]` is
+    /// stored row `ch_lo·C`). Used by the parallel kernel's workers.
+    fn spmv_chunks_stored(&self, x: &[f32], ch_lo: usize, ch_hi: usize, out: &mut [f32]) {
+        let mut acc = [0.0f32; MAX_CHUNK];
+        let p0 = ch_lo * self.c;
+        for ch in ch_lo..ch_hi {
+            self.chunk_kernel(ch, x, &mut acc);
+            let r0 = ch * self.c;
+            let rows_in = (self.n - r0).min(self.c);
+            out[r0 - p0..r0 - p0 + rows_in].copy_from_slice(&acc[..rows_in]);
+        }
+    }
+
+    /// The kernel with chunk ranges spread across
+    /// `coordinator::jobqueue::run_jobs` workers. Bit-identical to
+    /// [`SellMatrix::spmv_into`] (each chunk is computed independently by
+    /// the same code); falls back to sequential on small inputs.
+    pub fn par_spmv_into(&self, x: &[f32], y: &mut [f32], workers: usize) {
+        let workers = workers.max(1);
+        if workers == 1 || self.n < 2 * PAR_MIN_ROWS {
+            self.spmv_into(x, y);
+            return;
+        }
+        let nchunks = self.chunks();
+        let per_job = self.n.div_ceil(workers).max(PAR_MIN_ROWS).div_ceil(self.c);
+        let jobs: Vec<(usize, usize)> = (0..nchunks)
+            .step_by(per_job)
+            .map(|lo| (lo, (lo + per_job).min(nchunks)))
+            .collect();
+        let parts = crate::coordinator::jobqueue::run_jobs(jobs.clone(), workers, |&(lo, hi)| {
+            let p0 = lo * self.c;
+            let p1 = (hi * self.c).min(self.n);
+            let mut out = vec![0.0f32; p1 - p0];
+            self.spmv_chunks_stored(x, lo, hi, &mut out);
+            out
+        });
+        for ((lo, _), part) in jobs.into_iter().zip(parts) {
+            let p0 = lo * self.c;
+            for (i, &v) in part.iter().enumerate() {
+                y[self.perm[p0 + i] as usize] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::mesh_2d_tri;
+    use crate::graph::GraphBuilder;
+    use crate::solver::spmv::spmv_ell_native;
+
+    fn star_ell() -> EllMatrix {
+        // Vertex 0 has degree 4, leaves degree 1 — wide degree variance.
+        let mut b = GraphBuilder::new(5);
+        for v in 1..5 {
+            b.add_edge(0, v);
+        }
+        EllMatrix::from_graph(&b.build(), 0.5)
+    }
+
+    #[test]
+    fn layout_parse_round_trip() {
+        assert_eq!(SpmvLayout::parse("ell"), Some(SpmvLayout::Ell));
+        assert_eq!(SpmvLayout::parse("SELLCS"), Some(SpmvLayout::SellCs));
+        assert_eq!(SpmvLayout::parse("sell-c-sigma"), Some(SpmvLayout::SellCs));
+        assert_eq!(SpmvLayout::parse("csr"), None);
+        assert_eq!(SpmvLayout::default(), SpmvLayout::Ell);
+        assert_eq!(SpmvLayout::SellCs.name(), "sellcs");
+    }
+
+    #[test]
+    fn construction_sorts_within_sigma_and_keeps_perm() {
+        let ell = star_ell();
+        // Global sort: the hub (4 entries) must come first.
+        let s = SellMatrix::from_ell(&ell, 2, ell.n);
+        assert_eq!(s.perm[0], 0);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.chunks(), 3);
+        // Chunk 0 holds the hub → width 4; the leaf-only chunks need 1.
+        assert_eq!(s.chunk_w[0], 4);
+        assert!(s.chunk_w[1] <= 1 && s.chunk_w[2] <= 1);
+        // σ=1 keeps input order.
+        let id = SellMatrix::from_ell(&ell, 2, 1);
+        assert_eq!(id.perm, vec![0, 1, 2, 3, 4]);
+        // A permutation either way.
+        let mut sorted: Vec<u32> = s.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sell_pads_less_than_ell() {
+        let ell = star_ell();
+        let s = SellMatrix::from_ell(&ell, 2, ell.n);
+        assert_eq!(s.nnz(), ell.nnz());
+        // ELL stores 5·4 = 20 slots for 8 entries; sorted SELL-2 stores
+        // 2·4 + 2·1 + 1·1 = 11.
+        assert!(s.values.len() < ell.n * ell.w, "{} slots", s.values.len());
+        assert!(s.fill_ratio() < (ell.n * ell.w) as f64 / ell.nnz() as f64);
+    }
+
+    #[test]
+    fn sell_pad_columns_are_self_referential() {
+        let ell = star_ell();
+        let s = SellMatrix::from_ell(&ell, 2, ell.n);
+        for ch in 0..s.chunks() {
+            let r0 = ch * s.c;
+            let rows_in = (s.n - r0).min(s.c);
+            let base = s.chunk_ptr[ch];
+            for sl in 0..s.chunk_w[ch] {
+                for r in 0..rows_in {
+                    let i = base + sl * rows_in + r;
+                    if s.values[i] == 0.0 {
+                        assert_eq!(s.cols[i], s.perm[r0 + r] as i32, "chunk {ch} slot {sl} row {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sell_spmv_matches_ell_exactly() {
+        let g = mesh_2d_tri(17, 13, 2);
+        let ell = EllMatrix::from_graph(&g, 0.2);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.19).sin()).collect();
+        let reference = spmv_ell_native(&ell, &x);
+        for (c, sigma) in [(4, 1), (8, 64), (8, ell.n), (32, 32)] {
+            let s = SellMatrix::from_ell(&ell, c, sigma);
+            let mut y = vec![0.0f32; ell.n];
+            s.spmv_into(&x, &mut y);
+            assert_eq!(y, reference, "C={c} σ={sigma}");
+        }
+    }
+
+    #[test]
+    fn par_spmv_matches_sequential() {
+        let g = mesh_2d_tri(100, 100, 4);
+        let ell = EllMatrix::from_graph(&g, 0.1);
+        let s = SellMatrix::from_ell_default(&ell);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut seq = vec![0.0f32; ell.n];
+        s.spmv_into(&x, &mut seq);
+        for workers in [1, 2, 5] {
+            let mut par = vec![0.0f32; ell.n];
+            s.par_spmv_into(&x, &mut par, workers);
+            assert_eq!(seq, par, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn row_subset_touches_only_its_rows() {
+        let g = mesh_2d_tri(10, 10, 1);
+        let ell = EllMatrix::from_graph(&g, 0.3);
+        let x: Vec<f32> = (0..ell.n).map(|i| (i as f32 * 0.07).sin()).collect();
+        let reference = spmv_ell_native(&ell, &x);
+        let evens: Vec<u32> = (0..ell.n as u32).filter(|u| u % 2 == 0).collect();
+        let s = SellMatrix::from_ell_rows(&ell, &evens, 4, 16);
+        let mut y = vec![f32::NAN; ell.n];
+        s.spmv_into(&x, &mut y);
+        for u in 0..ell.n {
+            if u % 2 == 0 {
+                assert_eq!(y[u], reference[u], "row {u}");
+            } else {
+                assert!(y[u].is_nan(), "row {u} written by a subset kernel");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let ell = star_ell();
+        let empty = SellMatrix::from_ell_rows(&ell, &[], 8, 64);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.chunks(), 0);
+        let mut y = vec![0.0f32; ell.n];
+        empty.spmv_into(&[0.0; 5], &mut y); // must not panic or write
+        assert_eq!(y, vec![0.0; 5]);
+        let single = SellMatrix::from_ell_rows(&ell, &[3], 8, 64);
+        assert_eq!(single.n, 1);
+        let x = vec![1.0f32; ell.n];
+        single.spmv_into(&x, &mut y);
+        let reference = spmv_ell_native(&ell, &x);
+        assert_eq!(y[3], reference[3]);
+    }
+}

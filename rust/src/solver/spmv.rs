@@ -25,8 +25,10 @@ fn spmv_rows_range(a: &EllMatrix, x: &[f32], lo: usize, hi: usize, out: &mut [f3
         let mut acc = a.diag[u] * x[u];
         let base = u * w;
         for s in 0..w {
-            // Padding entries are (0.0, col 0): they multiply to 0 and
-            // cost one fused multiply-add — branch-free by design.
+            // Padding entries are (0.0, self-referential col): they
+            // multiply to 0, cost one fused multiply-add, and their
+            // x-load stays on the row's own cache line — branch-free by
+            // design.
             acc += a.values[base + s] * x[a.cols[base + s] as usize];
         }
         out[j] = acc;

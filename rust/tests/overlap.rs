@@ -124,8 +124,10 @@ fn pipelined_variant_prices_below_classic_and_matches_reference() {
     let (ell, part, topo, cost) = setup();
     let vc = VirtualCluster::new(&ell, &part, &topo, cost).unwrap();
     let b = rhs(ell.n);
-    let classic_ov = SolveOpts { overlap: true, variant: CgVariant::Classic };
-    let pipe_ov = SolveOpts { overlap: true, variant: CgVariant::Pipelined };
+    let classic_ov =
+        SolveOpts { overlap: true, variant: CgVariant::Classic, ..SolveOpts::default() };
+    let pipe_ov =
+        SolveOpts { overlap: true, variant: CgVariant::Pipelined, ..SolveOpts::default() };
     let (r_c, rep_c) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, classic_ov).unwrap();
     let (r_p, rep_p) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, pipe_ov).unwrap();
     assert_eq!(rep_c.iterations, rep_p.iterations);
@@ -160,7 +162,8 @@ fn pipelined_variant_prices_below_classic_and_matches_reference() {
     assert!(max_ds < 2e-3, "engine pipelined vs sequential reference: {max_ds}");
     // Overlap on/off bit-identical for the pipelined variant on both
     // backends.
-    let pipe_off = SolveOpts { overlap: false, variant: CgVariant::Pipelined };
+    let pipe_off =
+        SolveOpts { variant: CgVariant::Pipelined, ..SolveOpts::default() };
     let (r_off, _) = vc.solve_cg_opts(ExecBackend::Sim, &b, 40, 0.0, pipe_off).unwrap();
     assert_eq!(r_off.x, r_p.x);
     assert_eq!(r_off.residual_norms, r_p.residual_norms);

@@ -1,0 +1,188 @@
+//! Property tests pinning the SELL-C-σ layout against ELL.
+//!
+//! The layout contract is exact equality, not approximate agreement:
+//! both kernels add the same real entries in the same slot order and
+//! pads contribute `0.0 * x[row]`, so every `y` component is the same
+//! f32 in both layouts (`==`, not within-epsilon). These tests sweep
+//! (C, σ) over the corners the ISSUE pins — C ∈ {4, 8, 32},
+//! σ ∈ {1, C, n} — on randomized graphs with adversarial degree
+//! distributions, plus the permutation and edge-case invariants.
+
+use hetpart::graph::{Csr, GraphBuilder};
+use hetpart::solver::spmv::spmv_ell_native;
+use hetpart::solver::{EllMatrix, SellMatrix};
+
+/// Deterministic xorshift for reproducible random graphs.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Random graph with a skewed degree distribution: mostly sparse random
+/// edges plus a few hubs, so chunks mix very short and very long rows —
+/// the case σ-sorting exists for.
+fn random_graph(n: usize, edges: usize, hubs: usize, seed: u64) -> Csr {
+    let mut rng = Rng(seed | 1);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..edges {
+        b.add_edge(rng.below(n), rng.below(n));
+    }
+    for _ in 0..hubs {
+        let hub = rng.below(n);
+        for _ in 0..n / 4 {
+            b.add_edge(hub, rng.below(n));
+        }
+    }
+    b.build()
+}
+
+fn random_x(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng(seed | 1);
+    (0..n).map(|_| (rng.next() % 2000) as f32 / 1000.0 - 1.0).collect()
+}
+
+#[test]
+fn sell_matches_ell_over_c_sigma_grid_on_random_graphs() {
+    for (gi, g) in [
+        random_graph(257, 700, 2, 11),
+        random_graph(64, 100, 1, 23),
+        random_graph(1000, 3000, 3, 47),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let ell = EllMatrix::from_graph(g, 0.05);
+        let x = random_x(ell.n, 5 + gi as u64);
+        let reference = spmv_ell_native(&ell, &x);
+        for c in [4usize, 8, 32] {
+            for sigma in [1usize, c, ell.n] {
+                let s = SellMatrix::from_ell(&ell, c, sigma);
+                assert_eq!(s.nnz(), ell.nnz(), "graph {gi} C={c} σ={sigma}");
+                let mut y = vec![0.0f32; ell.n];
+                s.spmv_into(&x, &mut y);
+                assert_eq!(y, reference, "graph {gi} C={c} σ={sigma}");
+                // The parallel kernel is the same math behind run_jobs.
+                let mut yp = vec![0.0f32; ell.n];
+                s.par_spmv_into(&x, &mut yp, 3);
+                assert_eq!(yp, reference, "par graph {gi} C={c} σ={sigma}");
+            }
+        }
+    }
+}
+
+#[test]
+fn permutation_is_a_bijection_and_sigma_one_is_identity() {
+    let g = random_graph(301, 900, 2, 3);
+    let ell = EllMatrix::from_graph(&g, 0.1);
+    for (c, sigma) in [(4, 1), (8, 64), (32, ell.n)] {
+        let s = SellMatrix::from_ell(&ell, c, sigma);
+        let mut sorted: Vec<u32> = s.perm.clone();
+        sorted.sort_unstable();
+        let identity: Vec<u32> = (0..ell.n as u32).collect();
+        assert_eq!(sorted, identity, "C={c} σ={sigma} perm is not a bijection");
+    }
+    // σ=1 sorts within windows of one row: no reordering at all.
+    let s = SellMatrix::from_ell(&ell, 8, 1);
+    assert_eq!(s.perm, (0..ell.n as u32).collect::<Vec<_>>());
+}
+
+#[test]
+fn sigma_windows_never_mix_distant_rows() {
+    let g = random_graph(200, 600, 2, 9);
+    let ell = EllMatrix::from_graph(&g, 0.1);
+    let sigma = 16;
+    let s = SellMatrix::from_ell(&ell, 4, sigma);
+    // Sorting is scoped to σ-windows: position p's row must come from
+    // p's own window.
+    for (p, &u) in s.perm.iter().enumerate() {
+        assert_eq!(
+            p / sigma,
+            u as usize / sigma,
+            "perm[{p}]={u} escaped its σ-window"
+        );
+    }
+}
+
+#[test]
+fn row_subsets_cover_disjoint_rows_exactly() {
+    let g = random_graph(150, 400, 1, 17);
+    let ell = EllMatrix::from_graph(&g, 0.2);
+    let x = random_x(ell.n, 29);
+    let reference = spmv_ell_native(&ell, &x);
+    // Split rows by parity — the same shape as the halo interior/
+    // boundary split — and check the union reconstructs the full
+    // product with no row written twice.
+    let evens: Vec<u32> = (0..ell.n as u32).filter(|u| u % 2 == 0).collect();
+    let odds: Vec<u32> = (0..ell.n as u32).filter(|u| u % 2 == 1).collect();
+    let a = SellMatrix::from_ell_rows(&ell, &evens, 8, 64);
+    let b = SellMatrix::from_ell_rows(&ell, &odds, 8, 64);
+    let mut y = vec![f32::NAN; ell.n];
+    a.spmv_into(&x, &mut y);
+    b.spmv_into(&x, &mut y);
+    assert_eq!(y, reference);
+}
+
+#[test]
+fn empty_and_singleton_subsets_are_safe() {
+    let g = random_graph(40, 80, 0, 31);
+    let ell = EllMatrix::from_graph(&g, 0.5);
+    let x = random_x(ell.n, 37);
+    let reference = spmv_ell_native(&ell, &x);
+    let empty = SellMatrix::from_ell_rows(&ell, &[], 8, 64);
+    let mut y = vec![7.0f32; ell.n];
+    empty.spmv_into(&x, &mut y);
+    assert_eq!(y, vec![7.0; ell.n], "empty subset wrote rows");
+    for u in [0u32, (ell.n / 2) as u32, (ell.n - 1) as u32] {
+        let single = SellMatrix::from_ell_rows(&ell, &[u], 8, 64);
+        let mut y = vec![f32::NAN; ell.n];
+        single.spmv_into(&x, &mut y);
+        assert_eq!(y[u as usize], reference[u as usize], "row {u}");
+        assert_eq!(
+            y.iter().filter(|v| !v.is_nan()).count(),
+            1,
+            "singleton subset wrote more than its row"
+        );
+    }
+}
+
+#[test]
+fn nan_in_unreferenced_rows_never_leaks_through_pads() {
+    // Pads are (0.0, self-referential col): a NaN planted in a row that
+    // no *real* entry references must stay confined to that row's own
+    // output. With non-self-referential pads (e.g. col 0) this test
+    // fails — 0.0 * NaN = NaN.
+    let g = random_graph(120, 300, 1, 41);
+    let ell = EllMatrix::from_graph(&g, 0.05);
+    // Restrict to rows NOT adjacent to the poisoned vertex.
+    let poison = 0usize;
+    let mut safe_rows: Vec<u32> = Vec::new();
+    for u in 0..ell.n {
+        let touches = (0..ell.w).any(|s| {
+            let c = ell.cols[u * ell.w + s] as usize;
+            ell.values[u * ell.w + s] != 0.0 && c == poison
+        });
+        if !touches && u != poison {
+            safe_rows.push(u as u32);
+        }
+    }
+    let mut x = random_x(ell.n, 43);
+    x[poison] = f32::NAN;
+    let s = SellMatrix::from_ell_rows(&ell, &safe_rows, 8, 64);
+    let mut y = vec![0.0f32; ell.n];
+    s.spmv_into(&x, &mut y);
+    for &u in &safe_rows {
+        assert!(y[u as usize].is_finite(), "NaN leaked into safe row {u}");
+    }
+}

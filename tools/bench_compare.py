@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Diff fresh BENCH_*.json snapshots against the committed baselines.
+
+The benches (``cargo bench --bench micro`` / ``--bench exec_engine``)
+write machine-readable snapshots when asked to (``--save-baseline`` or
+``HETPART_BENCH_SAVE=<dir>``); the committed copies at the repo root pin
+the perf trajectory. This script compares the pinned metric — ns/row per
+kernel — within a relative tolerance band:
+
+  python3 tools/bench_compare.py --fresh bench_out [--advisory]
+
+Exit codes: 0 ok (or --advisory), 1 regression beyond tolerance,
+2 usage/IO error. A committed baseline with ``"bootstrap": true`` has
+never been recorded on real hardware: the comparison is "unarmed" and
+passes loudly, whatever the fresh numbers say. Fingerprint mismatches
+(different CPU/threads) downgrade regressions to advisory notes —
+cross-machine deltas are not regressions.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def kernels_by_name(snap):
+    return {k["name"]: k for k in snap.get("kernels", [])}
+
+
+def compare_one(base, fresh, tolerance):
+    """Compare one snapshot pair; returns (regressions, notes)."""
+    regressions, notes = [], []
+    bk, fk = kernels_by_name(base), kernels_by_name(fresh)
+    for name in bk:
+        if name not in fk:
+            notes.append(f"kernel '{name}' in baseline but not in fresh run")
+    for name, k in fk.items():
+        if name not in bk:
+            notes.append(f"kernel '{name}' is new (no baseline); ns/row={k['ns_per_row']:.1f}")
+            continue
+        base_ns, fresh_ns = bk[name]["ns_per_row"], k["ns_per_row"]
+        if base_ns <= 0:
+            notes.append(f"kernel '{name}': baseline ns/row is {base_ns}, skipping")
+            continue
+        delta = (fresh_ns - base_ns) / base_ns
+        line = (
+            f"kernel '{name}': {base_ns:.1f} -> {fresh_ns:.1f} ns/row "
+            f"({delta:+.1%}, tolerance ±{tolerance:.0%})"
+        )
+        if delta > tolerance:
+            regressions.append("REGRESSION " + line)
+        elif delta < -tolerance:
+            notes.append("faster " + line + " — consider refreshing the baseline")
+        else:
+            notes.append("ok " + line)
+    return regressions, notes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--fresh",
+        required=True,
+        help="directory holding freshly written BENCH_*.json snapshots",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="directory holding the committed baselines (default: repo root)",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="relative ns/row band treated as noise (default 0.25 = ±25%%)",
+    )
+    ap.add_argument(
+        "--advisory",
+        action="store_true",
+        help="report regressions but always exit 0 (CI on shared runners)",
+    )
+    args = ap.parse_args()
+
+    fresh_files = sorted(
+        f
+        for f in os.listdir(args.fresh)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not fresh_files:
+        print(f"error: no BENCH_*.json under {args.fresh}", file=sys.stderr)
+        sys.exit(2)
+
+    failed = False
+    for fname in fresh_files:
+        fresh = load(os.path.join(args.fresh, fname))
+        base_path = os.path.join(args.baseline, fname)
+        print(f"== {fname} ==")
+        if not os.path.exists(base_path):
+            print(f"  no committed baseline at {base_path}; nothing to compare")
+            continue
+        base = load(base_path)
+        if base.get("bootstrap"):
+            print(
+                "  UNARMED: committed baseline is a bootstrap placeholder "
+                "(never measured on real hardware).\n"
+                "  Record one with: HETPART_BENCH_SCALE=quick cargo bench "
+                f"&& cp {os.path.join(args.fresh, fname)} {base_path}"
+            )
+            continue
+        cross_machine = base.get("fingerprint") != fresh.get("fingerprint")
+        if cross_machine:
+            print(
+                f"  note: fingerprints differ (baseline {base.get('fingerprint')}, "
+                f"fresh {fresh.get('fingerprint')}); regressions are advisory"
+            )
+        if base.get("scale") != fresh.get("scale"):
+            print(
+                f"  note: scales differ (baseline {base.get('scale')!r}, "
+                f"fresh {fresh.get('scale')!r}); ns/row comparison is approximate"
+            )
+        regressions, notes = compare_one(base, fresh, args.tolerance)
+        for n in notes:
+            print(f"  {n}")
+        for r in regressions:
+            print(f"  {r}")
+        if regressions and not cross_machine:
+            failed = True
+
+    if failed and not args.advisory:
+        sys.exit(1)
+    if failed:
+        print("(advisory mode: regressions reported above do not fail the job)")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()
