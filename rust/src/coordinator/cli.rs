@@ -8,9 +8,13 @@
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
 //!                    [--layout ell|sellcs]
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve
 //!                    [--overlap on|off] [--layout ell|sellcs]
 //!                    [--out results/harness] [--workers N] [--verbose]
+//! hetpart serve      --duration 5 --arrival-rate 50 --seed 1
+//!                    [--family tri2d --n 800 --k 8 --preset uniform --algo geoKM]
+//!                    [--backend threads|sim] [--workers N] [--queue-cap 64]
+//!                    [--out results/serve/summary.json]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
@@ -39,6 +43,7 @@ pub fn main() {
         "experiment" => cmd_experiment(&args),
         "harness" => cmd_harness(&args),
         "repart" => cmd_repart(&args),
+        "serve" => cmd_serve(&args),
         "version" => {
             println!("hetpart {}", super::version());
             0
@@ -75,18 +80,27 @@ SUBCOMMANDS
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic|partdist — partdist sweeps the distributed
+               |dynamic|partdist|serve — partdist sweeps the distributed
                partitioners over backend/rank axes for the quality-vs-
-               partition-time scatter; --overlap on flips every
-               scenario's overlap axis, --layout sellcs flips the
-               SpMV-layout axis, --out DIR, --workers N,
-               --verbose prints every run)
+               partition-time scatter; serve replays open-loop serving
+               traces through the resident partition service;
+               --overlap on flips every scenario's overlap axis,
+               --layout sellcs flips the SpMV-layout axis, --out DIR,
+               --workers N, --verbose prints every run)
   repart       replay an adaptive multi-epoch workload and repartition it
                (--dynamic refine-front|speed-drift, --epochs E,
                 --repart scratchRemap|diffusion|increKM, --preset
                 uniform|twospeed|hier2x2|memsat, --algo <static baseline>,
                 --backend sim|threads prices migration, --overlap on
                 migrates through the nonblocking path, --csv FILE)
+  serve        run the resident partition service against a synthetic
+               open-loop request trace and report throughput, latency
+               percentiles, and cache hit rate
+               (--duration S --arrival-rate λ --seed S, --backend
+                threads|sim — threads measures wall-clock latencies,
+                sim replays in deterministic virtual time; --workers N,
+                --queue-cap C bounds admission, --out FILE writes the
+                summary JSON)
   version      print version
 
 COMMON OPTIONS
@@ -251,7 +265,7 @@ fn cmd_harness(args: &Args) -> i32 {
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
         eprintln!(
-            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist)"
+            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve)"
         );
         return 2;
     };
@@ -423,6 +437,102 @@ fn cmd_repart(args: &Args) -> i32 {
                 eprintln!("csv write failed: {e}");
                 return 1;
             }
+        }
+    }
+    0
+}
+
+/// `hetpart serve`: run the resident partition service against a
+/// deterministic synthetic open-loop trace (see `coordinator::serve`)
+/// and report throughput, latency percentiles, and cache hit rate.
+fn cmd_serve(args: &Args) -> i32 {
+    use crate::coordinator::serve::{run_serve, ServeConfig, Tenant};
+    use crate::harness::TopoPreset;
+    let fam: String = args.get("family", "tri2d".to_string());
+    let Some(family) = Family::parse(&fam) else {
+        eprintln!("unknown --family {fam}");
+        return 2;
+    };
+    let k = args.get("k", 8usize);
+    let preset_name: String = args.get("preset", "uniform".to_string());
+    let Some(preset) = TopoPreset::parse(&preset_name) else {
+        eprintln!("unknown --preset {preset_name} (expected uniform|twospeed|hier2x2|memsat)");
+        return 2;
+    };
+    if preset == TopoPreset::Hier && (k % 4 != 0 || k < 4) {
+        eprintln!("--preset hier2x2 needs --k divisible by 4, got {k}");
+        return 2;
+    }
+    let backend_name: String = args.get("backend", "threads".to_string());
+    let Some(backend) = crate::exec::ExecBackend::parse(&backend_name) else {
+        eprintln!("unknown --backend {backend_name} (expected sim|threads)");
+        return 2;
+    };
+    let seed = args.get("seed", 1u64);
+    let primary = Tenant {
+        family,
+        n: args.get("n", 800usize),
+        graph_seed: seed,
+        preset,
+        k,
+        algo: args.get("algo", "geoKM".to_string()),
+        epsilon: args.get("epsilon", 0.03),
+    };
+    let mut cfg = ServeConfig::new(
+        primary,
+        args.get("duration", 5.0),
+        args.get("arrival-rate", 50.0),
+        seed,
+        backend,
+    );
+    cfg.servers = args.get("workers", cfg.servers);
+    cfg.queue_cap = args.get("queue-cap", cfg.queue_cap);
+    println!(
+        "serve: {} tenants over {}_{} preset {} k={} | λ={}/s for {}s (seed {}) | \
+         backend {} x{} workers, queue cap {}",
+        cfg.tenants.len(),
+        cfg.tenants[0].family.name(),
+        cfg.tenants[0].n,
+        cfg.tenants[0].preset.name(),
+        cfg.tenants[0].k,
+        cfg.arrival_rate,
+        cfg.duration_secs,
+        cfg.seed,
+        backend.name(),
+        cfg.servers,
+        cfg.queue_cap,
+    );
+    let rep = match run_serve(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    print!("{}", rep.table().to_text());
+    println!(
+        "throughput {:.1} req/s | p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms | cache hit rate {:.3} | \
+         {} warm starts (mean migrated frac {:.3})",
+        rep.req_per_sec,
+        rep.latency_p50_ms,
+        rep.latency_p95_ms,
+        rep.latency_p99_ms,
+        rep.cache_hit_rate,
+        rep.warm_starts,
+        rep.mean_migrated_frac,
+    );
+    let out: String = args.get("out", "results/serve/summary.json".to_string());
+    let p = std::path::PathBuf::from(&out);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    match std::fs::write(&p, rep.summary_json().render()) {
+        Ok(()) => println!("[saved {}]", p.display()),
+        Err(e) => {
+            eprintln!("summary write failed: {e}");
+            return 1;
         }
     }
     0

@@ -217,11 +217,28 @@ pub fn run_solve_opts(
     opts: SolveOpts,
 ) -> Result<(SolveResult, CgResult)> {
     let ell = EllMatrix::from_graph(g, shift);
+    run_solve_prepared(&ell, part, topo, backend, max_iters, tol, opts)
+}
+
+/// [`run_solve_opts`] for a matrix that is already assembled: the solve
+/// entry point for callers that hold many solves against the same
+/// instance (the serve loop caches one [`EllMatrix`] per graph and skips
+/// the O(m) assembly on every repeat solve).
+#[allow(clippy::too_many_arguments)]
+pub fn run_solve_prepared(
+    ell: &EllMatrix,
+    part: &Partition,
+    topo: &Topology,
+    backend: ExecBackend,
+    max_iters: usize,
+    tol: f32,
+    opts: SolveOpts,
+) -> Result<(SolveResult, CgResult)> {
     let mut sim = ClusterSim::default();
-    sim.calibrate(&ell);
-    let b = default_rhs(g.n());
+    sim.calibrate(ell);
+    let b = default_rhs(ell.n);
     let (cg, rep) =
-        sim.run_cg_virtual_opts(&ell, part, topo, backend, &b, max_iters, tol, opts)?;
+        sim.run_cg_virtual_opts(ell, part, topo, backend, &b, max_iters, tol, opts)?;
     Ok((
         SolveResult {
             backend: rep.backend,

@@ -6,12 +6,15 @@
 //! atomic cursor and write results into their slot — no locks on the
 //! result path, results come back in job order regardless of scheduling.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Run `jobs` through `f` on `workers` threads; results in job order.
 /// Panics in `f` are propagated to the caller (fail fast, like the tests
-/// that drive experiment grids want).
+/// that drive experiment grids want): the first panic poisons the queue,
+/// so the other workers stop pulling new jobs instead of draining the
+/// rest of the grid before the failure surfaces at scope join.
 pub fn run_jobs<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
 where
     J: Sync,
@@ -27,16 +30,25 @@ where
         return jobs.iter().map(|j| f(j)).collect();
     }
     let cursor = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                if poisoned.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let r = f(&jobs[i]);
-                *results[i].lock().unwrap() = Some(r);
+                match catch_unwind(AssertUnwindSafe(|| f(&jobs[i]))) {
+                    Ok(r) => *results[i].lock().unwrap() = Some(r),
+                    Err(payload) => {
+                        poisoned.store(true, Ordering::Relaxed);
+                        resume_unwind(payload);
+                    }
+                }
             });
         }
     });
@@ -47,10 +59,13 @@ where
 }
 
 /// Number of worker threads to use by default (leave one core for the
-/// leader when possible).
+/// leader when possible): `max(1, available_parallelism - 1)`. The serve
+/// loop's leader thread genuinely competes for a core — it paces the
+/// arrival schedule and runs admission — so the pool must not claim every
+/// core on multi-core machines.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
-        .map(|p| p.get())
+        .map(|p| p.get().saturating_sub(1).max(1))
         .unwrap_or(1)
 }
 
@@ -130,6 +145,42 @@ mod tests {
             run_jobs(vec![1], 1, |_| -> usize { panic!("boom") })
         }));
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn poisoned_queue_stops_pulling_jobs_after_a_panic() {
+        // Regression: before the poison flag, a panic only surfaced at
+        // scope join, so the surviving workers drained the entire grid
+        // (499 of 500 jobs here) before the caller saw the failure.
+        let executed = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_jobs((0..500).collect::<Vec<usize>>(), 4, |&j| {
+                if j == 8 {
+                    panic!("job 8 exploded");
+                }
+                executed.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            })
+        }));
+        assert!(result.is_err(), "panic in a worker must propagate");
+        let done = executed.load(Ordering::Relaxed);
+        assert!(
+            done < 450,
+            "workers drained {done} jobs after the panicking one instead of bailing early"
+        );
+    }
+
+    #[test]
+    fn default_workers_leaves_a_core_for_the_leader() {
+        let workers = default_workers();
+        assert!(workers >= 1);
+        if let Ok(p) = std::thread::available_parallelism() {
+            let p = p.get();
+            assert!(workers <= p);
+            if p >= 2 {
+                assert_eq!(workers, p - 1, "doc promises max(1, parallelism - 1)");
+            }
+        }
     }
 
     #[test]

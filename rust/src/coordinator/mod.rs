@@ -4,12 +4,17 @@
 pub mod cli;
 pub mod experiment;
 pub mod jobqueue;
+pub mod serve;
 
 pub use experiment::{
-    default_rhs, instance, relative_to, run_one, run_one_dist, run_solve, run_solve_opts, Grid,
-    RunResult, SolveResult,
+    default_rhs, instance, relative_to, run_one, run_one_dist, run_solve, run_solve_opts,
+    run_solve_prepared, Grid, RunResult, SolveResult,
 };
 pub use jobqueue::{default_workers, run_jobs};
+pub use serve::{
+    generate_trace, run_serve, PartitionService, Request, RequestKind, ServeConfig, ServeReport,
+    Tenant,
+};
 
 /// Crate version (used by the CLI banner).
 pub fn version() -> &'static str {

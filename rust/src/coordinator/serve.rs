@@ -1,0 +1,940 @@
+//! Resident partition-as-a-service loop.
+//!
+//! The batch pipeline answers "how good is partitioner X on instance Y";
+//! this module answers the *serving-system* question the north star asks:
+//! what happens when partition/solve/repartition requests arrive as an
+//! open-loop stream against a long-running coordinator. The pieces:
+//!
+//! - [`generate_trace`] — a deterministic synthetic traffic generator:
+//!   Poisson arrivals (exponential inter-arrival gaps from the seeded
+//!   [`Rng`]), a 3× burst phase mid-run, a zipf-lite tenant mix over the
+//!   configured [`Tenant`] pool, and a partition/repartition/solve
+//!   request mix. Same seed, same trace, bit for bit.
+//! - [`PartitionService`] — the resident state: an instance-fingerprint →
+//!   [`Partition`] cache (cached results are bit-identical to fresh
+//!   runs — the partitioners are deterministic, the cache just skips
+//!   recomputation), a per-instance [`EllMatrix`] cache so repeat solves
+//!   skip the O(m) assembly, and per-tenant *current* partitions so a
+//!   repeat tenant's repartition request warm-starts increKM
+//!   ([`warm_start`]) from its previous blocks instead of re-seeding
+//!   from scratch.
+//! - [`run_serve`] — the service loop on either engine backend:
+//!   `sim` executes requests in *virtual time* against an analytic
+//!   service-cost model (FCFS over `servers` virtual servers, bounded
+//!   admission queue), so the whole [`ServeReport`] is deterministic;
+//!   `threads` is the real resident loop — a leader thread paces the
+//!   arrival schedule, admission rejects when the bounded queue is full,
+//!   and worker threads measure wall-clock latencies. Both backends
+//!   execute the *real* partition/solve/repartition work, so cache
+//!   bit-identity holds everywhere; only the latency accounting differs.
+//!
+//! Throughput (req/s), latency percentiles (p50/p95/p99), and the cache
+//! hit rate are first-class outputs ([`ServeReport::summary_json`],
+//! [`ServeReport::table`]), surfaced by `hetpart serve` and the
+//! harness's `--matrix serve` scenarios.
+
+use crate::coordinator::experiment::{instance, run_one, run_solve_prepared};
+use crate::exec::{ExecBackend, SolveOpts};
+use crate::gen::refine::front_weights;
+use crate::gen::Family;
+use crate::graph::Csr;
+use crate::harness::scenario::{alg1_targets, TopoPreset};
+use crate::partition::{migration, Partition};
+use crate::repart::warm_start;
+use crate::solver::EllMatrix;
+use crate::topology::Topology;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::{mean, percentile};
+use crate::util::table::Table;
+use anyhow::{ensure, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Analytic service-cost model (virtual seconds) for the `sim` backend.
+/// Priced, not measured, so the simulated serving run is deterministic:
+/// a cache hit costs a lookup plus a response proportional to n; a cold
+/// partition is priced per nonzero; a warm repartition is cheaper per
+/// nonzero than a cold partition (the whole point of warm starts); a
+/// solve is priced per nonzero per iteration.
+const HIT_BASE_SECS: f64 = 50e-6;
+const HIT_PER_ROW_SECS: f64 = 1e-9;
+const PARTITION_PER_NNZ_SECS: f64 = 150e-9;
+const REPART_PER_NNZ_SECS: f64 = 50e-9;
+const SOLVE_PER_NNZ_ITER_SECS: f64 = 10e-9;
+
+/// Repartition requests drift the vertex weights with `gen::refine`'s
+/// moving front at this amplitude/band (the refinetrace shape).
+const DRIFT_AMP: f64 = 6.0;
+const DRIFT_BAND: f64 = 0.12;
+
+/// Lloyd rounds / influence exponent for serve-layer warm starts (same
+/// defaults as `repart::IncrementalGeoKM`).
+const WARM_MAX_ITERS: usize = 12;
+const WARM_GAMMA: f64 = 0.6;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over `bytes`, continuing from `h`. Hand-rolled rather than
+/// `DefaultHasher` because cache fingerprints must be stable across Rust
+/// versions and processes (they key artifacts and tests).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One tenant of the service: a fully-specified partitioning instance
+/// (graph family/size/seed × topology preset/k × algorithm/ε). Two
+/// requests from the same tenant are the same problem, which is what the
+/// fingerprint cache keys on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tenant {
+    /// Graph family to generate.
+    pub family: Family,
+    /// Approximate vertex count handed to the generator.
+    pub n: usize,
+    /// Generator seed (also the partitioning seed).
+    pub graph_seed: u64,
+    /// Topology preset.
+    pub preset: TopoPreset,
+    /// Number of PUs/blocks.
+    pub k: usize,
+    /// Partitioner name (see `partitioners::by_name`).
+    pub algo: String,
+    /// Imbalance tolerance ε.
+    pub epsilon: f64,
+}
+
+impl Tenant {
+    /// Stable instance fingerprint: the partition-cache key. Everything
+    /// that determines the partition bit-for-bit is hashed; nothing else.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, self.family.name().as_bytes());
+        h = fnv1a(h, &(self.n as u64).to_le_bytes());
+        h = fnv1a(h, &self.graph_seed.to_le_bytes());
+        h = fnv1a(h, self.preset.name().as_bytes());
+        h = fnv1a(h, &(self.k as u64).to_le_bytes());
+        h = fnv1a(h, self.algo.as_bytes());
+        h = fnv1a(h, &self.epsilon.to_bits().to_le_bytes());
+        h
+    }
+
+    /// Cache key for the generated graph (and its assembled matrix):
+    /// tenants sharing (family, n, seed) share the instance.
+    fn graph_key(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, self.family.name().as_bytes());
+        h = fnv1a(h, &(self.n as u64).to_le_bytes());
+        h = fnv1a(h, &self.graph_seed.to_le_bytes());
+        h
+    }
+
+    /// The concrete topology this tenant partitions for.
+    pub fn topology(&self) -> Topology {
+        self.preset.build(self.k)
+    }
+}
+
+/// What a request asks the service to do.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RequestKind {
+    /// Partition the tenant's instance (cache-served when warm).
+    Partition,
+    /// Repartition under drifted vertex weights, warm-starting from the
+    /// tenant's current blocks.
+    Repartition,
+    /// Run `iters` distributed-CG iterations on the (cached) partition.
+    Solve {
+        /// CG iterations to run.
+        iters: usize,
+    },
+}
+
+impl RequestKind {
+    /// Kind name for records and tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::Partition => "partition",
+            RequestKind::Repartition => "repartition",
+            RequestKind::Solve { .. } => "solve",
+        }
+    }
+}
+
+/// One request of the open-loop trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Sequence number (arrival order).
+    pub id: usize,
+    /// Arrival time in seconds from the start of the run.
+    pub arrival: f64,
+    /// Which tenant is asking.
+    pub tenant: Tenant,
+    /// What they ask for.
+    pub kind: RequestKind,
+    /// Front position t ∈ [0, 1) for repartition requests (0 otherwise);
+    /// advances per tenant so consecutive repartitions drift coherently.
+    pub drift: f64,
+}
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Trace length in (virtual or wall) seconds.
+    pub duration_secs: f64,
+    /// Mean arrival rate λ in requests/second (tripled during the burst).
+    pub arrival_rate: f64,
+    /// Trace seed (tenant mix, arrival gaps, request kinds).
+    pub seed: u64,
+    /// Worker threads (`threads`) / virtual servers (`sim`).
+    pub servers: usize,
+    /// Admission bound: arrivals finding this many requests waiting are
+    /// rejected, not enqueued — the loop must never build unbounded
+    /// backlog or deadlock under overload.
+    pub queue_cap: usize,
+    /// `sim` = virtual-time deterministic serving; `threads` = real
+    /// resident loop with measured latencies.
+    pub backend: ExecBackend,
+    /// Tenant pool; index 0 is the primary (picked with probability 0.4,
+    /// the rest uniformly).
+    pub tenants: Vec<Tenant>,
+}
+
+impl ServeConfig {
+    /// Config with the standard tenant pool: the primary tenant plus
+    /// same-shaped variants over sibling mesh families (the repeat-tenant
+    /// mix the cache and warm starts are measured on).
+    pub fn new(
+        primary: Tenant,
+        duration_secs: f64,
+        arrival_rate: f64,
+        seed: u64,
+        backend: ExecBackend,
+    ) -> ServeConfig {
+        let mut tenants = vec![primary.clone()];
+        for family in [Family::Tri2d, Family::Rdg2d, Family::Refined2d] {
+            if family != primary.family && tenants.len() < 3 {
+                tenants.push(Tenant { family, ..primary.clone() });
+            }
+        }
+        ServeConfig {
+            duration_secs,
+            arrival_rate,
+            seed,
+            servers: crate::coordinator::jobqueue::default_workers(),
+            queue_cap: 64,
+            backend,
+            tenants,
+        }
+    }
+}
+
+/// Arrival-rate multiplier at `frac` ∈ [0, 1] of the run: a 3× burst
+/// during the [40%, 55%) window, 1× elsewhere.
+pub fn burst_multiplier(frac: f64) -> f64 {
+    if (0.40..0.55).contains(&frac) {
+        3.0
+    } else {
+        1.0
+    }
+}
+
+/// Generate the open-loop request trace for a config. Deterministic:
+/// the same config yields the same `Vec<Request>` bit for bit.
+pub fn generate_trace(cfg: &ServeConfig) -> Vec<Request> {
+    assert!(!cfg.tenants.is_empty(), "serve config has no tenants");
+    let mut rng = Rng::new(cfg.seed);
+    let mut drift_step: Vec<u64> = vec![0; cfg.tenants.len()];
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Thinned Poisson process: the burst window triples the rate.
+        let rate = cfg.arrival_rate * burst_multiplier(t / cfg.duration_secs);
+        let u = rng.f64();
+        t += -(1.0 - u).ln() / rate;
+        if t >= cfg.duration_secs {
+            break;
+        }
+        let ti = if cfg.tenants.len() == 1 || rng.bool(0.4) {
+            0
+        } else {
+            1 + rng.usize(cfg.tenants.len() - 1)
+        };
+        let r = rng.f64();
+        let kind = if r < 0.55 {
+            RequestKind::Partition
+        } else if r < 0.80 {
+            RequestKind::Repartition
+        } else {
+            RequestKind::Solve { iters: 4 + rng.usize(8) }
+        };
+        let drift = if kind == RequestKind::Repartition {
+            drift_step[ti] += 1;
+            (0.1 * drift_step[ti] as f64) % 1.0
+        } else {
+            0.0
+        };
+        out.push(Request {
+            id: out.len(),
+            arrival: t,
+            tenant: cfg.tenants[ti].clone(),
+            kind,
+            drift,
+        });
+    }
+    out
+}
+
+/// What happened to one handled request.
+#[derive(Debug, Clone, Copy)]
+pub struct Outcome {
+    /// The tenant's partition was already cached.
+    pub hit: bool,
+    /// A warm-started repartition ran.
+    pub warm: bool,
+    /// Fraction of vertex weight the repartition migrated (0 otherwise).
+    pub migrated_frac: f64,
+    /// Virtual service seconds under the analytic cost model.
+    pub service_secs: f64,
+}
+
+struct ServiceState {
+    /// graph_key → (instance name, generated graph).
+    graphs: HashMap<u64, (String, Arc<Csr>)>,
+    /// graph_key → assembled shifted-Laplacian ELL matrix (solve reuse).
+    ells: HashMap<u64, Arc<EllMatrix>>,
+    /// fingerprint → cached partition (bit-identical to a fresh run).
+    cache: HashMap<u64, Arc<Partition>>,
+    /// fingerprint → the tenant's *current* partition after repartitions
+    /// (warm-start seed for the next repartition; starts at the cached
+    /// base).
+    current: HashMap<u64, Arc<Partition>>,
+}
+
+/// The resident service: owns every cache and handles one request at a
+/// time per calling worker. All state sits behind one mutex; the heavy
+/// work (generation, partitioning, solving) runs *outside* the lock, so
+/// workers only serialize on lookups and inserts. Two workers racing on
+/// the same cold key may both compute — they produce identical results
+/// (everything is deterministic), so first-insert-wins is safe.
+pub struct PartitionService {
+    state: Mutex<ServiceState>,
+    /// Worker threads for the warm-start assignment step (1 under the
+    /// threads backend — the serve workers already own the cores).
+    warm_workers: usize,
+}
+
+impl PartitionService {
+    /// Fresh service with empty caches.
+    pub fn new(warm_workers: usize) -> PartitionService {
+        PartitionService {
+            state: Mutex::new(ServiceState {
+                graphs: HashMap::new(),
+                ells: HashMap::new(),
+                cache: HashMap::new(),
+                current: HashMap::new(),
+            }),
+            warm_workers: warm_workers.max(1),
+        }
+    }
+
+    fn graph(&self, t: &Tenant) -> (String, Arc<Csr>) {
+        let key = t.graph_key();
+        if let Some(g) = self.state.lock().unwrap().graphs.get(&key) {
+            return g.clone();
+        }
+        let (name, g) = instance(t.family, t.n, t.graph_seed);
+        let entry = (name, Arc::new(g));
+        let mut st = self.state.lock().unwrap();
+        st.graphs.entry(key).or_insert(entry).clone()
+    }
+
+    fn ell(&self, key: u64, g: &Csr) -> Arc<EllMatrix> {
+        if let Some(e) = self.state.lock().unwrap().ells.get(&key) {
+            return e.clone();
+        }
+        let e = Arc::new(EllMatrix::from_graph(g, 0.05));
+        let mut st = self.state.lock().unwrap();
+        st.ells.entry(key).or_insert(e).clone()
+    }
+
+    /// The tenant's base partition: cached (hit) or computed through the
+    /// exact same path a standalone run takes (`run_one`), then cached.
+    fn base_partition(
+        &self,
+        t: &Tenant,
+        name: &str,
+        g: &Csr,
+    ) -> Result<(Arc<Partition>, bool)> {
+        let fp = t.fingerprint();
+        if let Some(p) = self.state.lock().unwrap().cache.get(&fp) {
+            return Ok((p.clone(), true));
+        }
+        let topo = t.topology();
+        let (_r, part) = run_one(name, g, &topo, &t.algo, t.epsilon, t.graph_seed)?;
+        let part = Arc::new(part);
+        let mut st = self.state.lock().unwrap();
+        let p = st.cache.entry(fp).or_insert(part).clone();
+        Ok((p, false))
+    }
+
+    /// The cached partition for a tenant, if any (test seam for the
+    /// bit-identity pin).
+    pub fn cached_partition(&self, t: &Tenant) -> Option<Arc<Partition>> {
+        self.state.lock().unwrap().cache.get(&t.fingerprint()).cloned()
+    }
+
+    /// Handle one request (synchronously, on the calling thread).
+    pub fn handle(&self, req: &Request) -> Result<Outcome> {
+        let t = &req.tenant;
+        let (name, g) = self.graph(t);
+        match req.kind {
+            RequestKind::Partition => {
+                let (_p, hit) = self.base_partition(t, &name, &g)?;
+                let service_secs = if hit {
+                    HIT_BASE_SECS + g.n() as f64 * HIT_PER_ROW_SECS
+                } else {
+                    g.m() as f64 * PARTITION_PER_NNZ_SECS
+                };
+                Ok(Outcome { hit, warm: false, migrated_frac: 0.0, service_secs })
+            }
+            RequestKind::Solve { iters } => {
+                let (p, hit) = self.base_partition(t, &name, &g)?;
+                let ell = self.ell(t.graph_key(), &g);
+                let topo = t.topology();
+                run_solve_prepared(
+                    &ell,
+                    &p,
+                    &topo,
+                    ExecBackend::Sim,
+                    iters,
+                    0.0,
+                    SolveOpts::default(),
+                )?;
+                let service_secs = iters as f64 * g.m() as f64 * SOLVE_PER_NNZ_ITER_SECS;
+                Ok(Outcome { hit, warm: false, migrated_frac: 0.0, service_secs })
+            }
+            RequestKind::Repartition => {
+                let (base, hit) = self.base_partition(t, &name, &g)?;
+                if !g.has_coords() {
+                    // No geometry, no front drift: serve the base.
+                    let service_secs = HIT_BASE_SECS + g.n() as f64 * HIT_PER_ROW_SECS;
+                    return Ok(Outcome { hit, warm: false, migrated_frac: 0.0, service_secs });
+                }
+                // Warm-start from the tenant's current blocks (cross-
+                // request state — the lifted increKM seam), falling back
+                // to the cached base on the tenant's first repartition.
+                let prev = self
+                    .state
+                    .lock()
+                    .unwrap()
+                    .current
+                    .get(&t.fingerprint())
+                    .cloned()
+                    .unwrap_or_else(|| base.clone());
+                let mut drifted = (*g).clone();
+                drifted.vwgt = front_weights(&drifted.coords, req.drift, DRIFT_AMP, DRIFT_BAND);
+                let topo = t.topology();
+                let (tw, _opt) = alg1_targets(&drifted, &topo)?;
+                let next = Arc::new(warm_start(
+                    &drifted,
+                    &prev,
+                    &tw,
+                    t.epsilon,
+                    WARM_MAX_ITERS,
+                    WARM_GAMMA,
+                    self.warm_workers,
+                )?);
+                let migrated_frac = migration(&drifted, &prev, &next).frac_weight();
+                self.state.lock().unwrap().current.insert(t.fingerprint(), next);
+                let service_secs = g.m() as f64 * REPART_PER_NNZ_SECS;
+                Ok(Outcome { hit, warm: true, migrated_frac, service_secs })
+            }
+        }
+    }
+}
+
+/// Per-request record of a serving run (one per offered request).
+#[derive(Debug, Clone)]
+pub struct ReqRecord {
+    /// Request sequence number.
+    pub id: usize,
+    /// Request kind name.
+    pub kind: &'static str,
+    /// Tenant fingerprint.
+    pub fingerprint: u64,
+    /// Arrival-to-completion latency (virtual on `sim`, measured
+    /// queue-to-completion on `threads`; 0 for rejected requests).
+    pub latency_secs: f64,
+    /// Cache hit.
+    pub hit: bool,
+    /// Warm-started repartition.
+    pub warm: bool,
+    /// Migrated weight fraction (repartitions only).
+    pub migrated_frac: f64,
+    /// Rejected at admission (queue full) — never executed.
+    pub rejected: bool,
+}
+
+/// Aggregated results of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Backend that served the trace.
+    pub backend: &'static str,
+    /// Requests the generator offered.
+    pub offered: usize,
+    /// Requests executed to completion.
+    pub completed: usize,
+    /// Requests rejected at admission.
+    pub rejected: usize,
+    /// Completed requests whose partition was cache-served.
+    pub hits: usize,
+    /// Completed requests that computed a partition cold.
+    pub misses: usize,
+    /// Warm-started repartitions executed.
+    pub warm_starts: usize,
+    /// hits / completed (0 when nothing completed).
+    pub cache_hit_rate: f64,
+    /// completed / makespan.
+    pub req_per_sec: f64,
+    /// Median completion latency (ms).
+    pub latency_p50_ms: f64,
+    /// 95th-percentile completion latency (ms).
+    pub latency_p95_ms: f64,
+    /// 99th-percentile completion latency (ms).
+    pub latency_p99_ms: f64,
+    /// Mean completion latency (ms).
+    pub latency_mean_ms: f64,
+    /// Mean migrated-weight fraction over warm repartitions (0 if none).
+    pub mean_migrated_frac: f64,
+    /// End of the last completion (virtual or wall seconds).
+    pub makespan_secs: f64,
+    /// Per-request records, in arrival order.
+    pub records: Vec<ReqRecord>,
+}
+
+fn assemble_report(
+    backend: &'static str,
+    offered: usize,
+    records: Vec<ReqRecord>,
+    makespan_secs: f64,
+) -> ServeReport {
+    let rejected = records.iter().filter(|r| r.rejected).count();
+    let completed = records.len() - rejected;
+    let hits = records.iter().filter(|r| !r.rejected && r.hit).count();
+    let warm_starts = records.iter().filter(|r| r.warm).count();
+    let lat: Vec<f64> =
+        records.iter().filter(|r| !r.rejected).map(|r| r.latency_secs).collect();
+    let pct = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) * 1e3 };
+    let migs: Vec<f64> =
+        records.iter().filter(|r| r.warm).map(|r| r.migrated_frac).collect();
+    ServeReport {
+        backend,
+        offered,
+        completed,
+        rejected,
+        hits,
+        misses: completed - hits,
+        warm_starts,
+        cache_hit_rate: if completed > 0 { hits as f64 / completed as f64 } else { 0.0 },
+        req_per_sec: if makespan_secs > 0.0 { completed as f64 / makespan_secs } else { 0.0 },
+        latency_p50_ms: pct(50.0),
+        latency_p95_ms: pct(95.0),
+        latency_p99_ms: pct(99.0),
+        latency_mean_ms: if lat.is_empty() { 0.0 } else { mean(&lat) * 1e3 },
+        mean_migrated_frac: if migs.is_empty() { 0.0 } else { mean(&migs) },
+        makespan_secs,
+        records,
+    }
+}
+
+impl ServeReport {
+    /// Summary JSON (aggregates only — per-request records stay in
+    /// memory). On the `sim` backend this document is bit-identical
+    /// across runs of the same config.
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("backend", Json::Str(self.backend.to_string())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("warm_starts", Json::Num(self.warm_starts as f64)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate)),
+            ("req_per_sec", Json::Num(self.req_per_sec)),
+            ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
+            ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
+            ("latency_p99_ms", Json::Num(self.latency_p99_ms)),
+            ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
+            ("mean_migrated_frac", Json::Num(self.mean_migrated_frac)),
+            ("makespan_secs", Json::Num(self.makespan_secs)),
+        ])
+    }
+
+    /// One-row summary table for the CLI.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "backend", "offered", "completed", "rejected", "hits", "cacheHit", "warm",
+            "reqPerSec", "p50(ms)", "p95(ms)", "p99(ms)", "mean(ms)", "makespan(s)",
+        ]);
+        t.row(vec![
+            self.backend.to_string(),
+            self.offered.to_string(),
+            self.completed.to_string(),
+            self.rejected.to_string(),
+            self.hits.to_string(),
+            format!("{:.3}", self.cache_hit_rate),
+            self.warm_starts.to_string(),
+            format!("{:.1}", self.req_per_sec),
+            format!("{:.3}", self.latency_p50_ms),
+            format!("{:.3}", self.latency_p95_ms),
+            format!("{:.3}", self.latency_p99_ms),
+            format!("{:.3}", self.latency_mean_ms),
+            format!("{:.3}", self.makespan_secs),
+        ]);
+        t
+    }
+}
+
+/// Run a full serving trace on the configured backend.
+pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    ensure!(cfg.duration_secs > 0.0, "serve duration must be positive");
+    ensure!(cfg.arrival_rate > 0.0, "serve arrival rate must be positive");
+    ensure!(!cfg.tenants.is_empty(), "serve config has no tenants");
+    ensure!(cfg.queue_cap >= 1, "serve queue capacity must be at least 1");
+    let trace = generate_trace(cfg);
+    match cfg.backend {
+        ExecBackend::Sim => {
+            let service =
+                PartitionService::new(crate::coordinator::jobqueue::default_workers());
+            run_serve_sim(cfg, &service, &trace)
+        }
+        ExecBackend::Threads => {
+            // Serve workers own the cores; warm starts stay single-
+            // threaded inside each worker (deterministic either way).
+            let service = PartitionService::new(1);
+            run_serve_threads(cfg, &service, &trace)
+        }
+    }
+}
+
+/// Virtual-time serving: FCFS over `servers` virtual servers, priced by
+/// the analytic cost model. The real partition/solve work still executes
+/// (so caches fill exactly as on `threads`); only the clock is virtual,
+/// which makes the whole report deterministic.
+fn run_serve_sim(
+    cfg: &ServeConfig,
+    service: &PartitionService,
+    trace: &[Request],
+) -> Result<ServeReport> {
+    let servers = cfg.servers.max(1);
+    let mut free_at = vec![0.0f64; servers];
+    // Start times of admitted requests; entries > the current arrival are
+    // still waiting (FCFS start times are nondecreasing, so a deque
+    // drained from the front is exact).
+    let mut started: VecDeque<f64> = VecDeque::new();
+    let mut records = Vec::with_capacity(trace.len());
+    let mut makespan = cfg.duration_secs;
+    for req in trace {
+        while started.front().is_some_and(|&s| s <= req.arrival) {
+            started.pop_front();
+        }
+        if started.len() >= cfg.queue_cap {
+            records.push(ReqRecord {
+                id: req.id,
+                kind: req.kind.name(),
+                fingerprint: req.tenant.fingerprint(),
+                latency_secs: 0.0,
+                hit: false,
+                warm: false,
+                migrated_frac: 0.0,
+                rejected: true,
+            });
+            continue;
+        }
+        let (si, soonest) = free_at
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let start = req.arrival.max(soonest);
+        let out = service.handle(req)?;
+        let finish = start + out.service_secs;
+        free_at[si] = finish;
+        started.push_back(start);
+        makespan = makespan.max(finish);
+        records.push(ReqRecord {
+            id: req.id,
+            kind: req.kind.name(),
+            fingerprint: req.tenant.fingerprint(),
+            latency_secs: finish - req.arrival,
+            hit: out.hit,
+            warm: out.warm,
+            migrated_frac: out.migrated_frac,
+            rejected: false,
+        });
+    }
+    Ok(assemble_report("sim", trace.len(), records, makespan))
+}
+
+/// Real-time serving: the leader paces the arrival schedule and runs
+/// admission over a bounded condvar queue; `servers` workers pull,
+/// execute, and measure wall-clock latencies.
+fn run_serve_threads(
+    cfg: &ServeConfig,
+    service: &PartitionService,
+    trace: &[Request],
+) -> Result<ServeReport> {
+    struct Queue {
+        items: VecDeque<(usize, Instant)>,
+        closed: bool,
+    }
+    let queue = Mutex::new(Queue { items: VecDeque::new(), closed: false });
+    let ready = Condvar::new();
+    let records: Mutex<Vec<ReqRecord>> = Mutex::new(Vec::with_capacity(trace.len()));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.servers.max(1) {
+            scope.spawn(|| loop {
+                let item = {
+                    let mut q = queue.lock().unwrap();
+                    loop {
+                        if let Some(x) = q.items.pop_front() {
+                            break Some(x);
+                        }
+                        if q.closed {
+                            break None;
+                        }
+                        q = ready.wait(q).unwrap();
+                    }
+                };
+                let Some((i, enqueued)) = item else { break };
+                let req = &trace[i];
+                match service.handle(req) {
+                    Ok(out) => records.lock().unwrap().push(ReqRecord {
+                        id: req.id,
+                        kind: req.kind.name(),
+                        fingerprint: req.tenant.fingerprint(),
+                        latency_secs: enqueued.elapsed().as_secs_f64(),
+                        hit: out.hit,
+                        warm: out.warm,
+                        migrated_frac: out.migrated_frac,
+                        rejected: false,
+                    }),
+                    Err(e) => errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("request {}: {e:#}", req.id)),
+                }
+            });
+        }
+        // Leader: pace the arrival schedule against the wall clock.
+        for (i, req) in trace.iter().enumerate() {
+            let target = Duration::from_secs_f64(req.arrival);
+            let now = t0.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let admitted = {
+                let mut q = queue.lock().unwrap();
+                if q.items.len() >= cfg.queue_cap {
+                    false
+                } else {
+                    q.items.push_back((i, Instant::now()));
+                    true
+                }
+            };
+            if admitted {
+                ready.notify_one();
+            } else {
+                records.lock().unwrap().push(ReqRecord {
+                    id: req.id,
+                    kind: req.kind.name(),
+                    fingerprint: req.tenant.fingerprint(),
+                    latency_secs: 0.0,
+                    hit: false,
+                    warm: false,
+                    migrated_frac: 0.0,
+                    rejected: true,
+                });
+            }
+        }
+        queue.lock().unwrap().closed = true;
+        ready.notify_all();
+    });
+    let makespan = t0.elapsed().as_secs_f64();
+    let errors = errors.into_inner().unwrap();
+    ensure!(errors.is_empty(), "serve loop failures: {}", errors.join("; "));
+    let mut records = records.into_inner().unwrap();
+    records.sort_by_key(|r| r.id);
+    Ok(assemble_report("threads", trace.len(), records, makespan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_tenant() -> Tenant {
+        Tenant {
+            family: Family::Tri2d,
+            n: 400,
+            graph_seed: 7,
+            preset: TopoPreset::Uniform,
+            k: 4,
+            algo: "geoKM".to_string(),
+            epsilon: 0.05,
+        }
+    }
+
+    fn tiny_config() -> ServeConfig {
+        let mut cfg =
+            ServeConfig::new(tiny_tenant(), 1.0, 40.0, 11, ExecBackend::Sim);
+        cfg.servers = 2;
+        cfg.queue_cap = 16;
+        cfg
+    }
+
+    #[test]
+    fn fingerprints_separate_tenants() {
+        let a = tiny_tenant();
+        assert_eq!(a.fingerprint(), tiny_tenant().fingerprint());
+        let mut b = a.clone();
+        b.algo = "zSFC".to_string();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.epsilon = 0.03;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = a.clone();
+        d.n = 401;
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        let mut e = a.clone();
+        e.preset = TopoPreset::TwoSpeed;
+        assert_ne!(a.fingerprint(), e.fingerprint());
+        // Graph key ignores the partitioning knobs: b shares a's instance.
+        assert_eq!(a.graph_key(), b.graph_key());
+        assert_ne!(a.graph_key(), d.graph_key());
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_well_formed() {
+        let cfg = tiny_config();
+        let t1 = generate_trace(&cfg);
+        let t2 = generate_trace(&cfg);
+        assert_eq!(t1, t2, "same config must yield the same trace");
+        assert!(!t1.is_empty());
+        for (i, r) in t1.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.arrival < cfg.duration_secs);
+            if i > 0 {
+                assert!(r.arrival >= t1[i - 1].arrival, "arrivals out of order");
+            }
+            match r.kind {
+                RequestKind::Repartition => assert!(r.drift > 0.0),
+                _ => assert_eq!(r.drift, 0.0),
+            }
+        }
+        // A different seed moves the trace.
+        let mut other = cfg.clone();
+        other.seed = 12;
+        assert_ne!(generate_trace(&other), t1);
+    }
+
+    #[test]
+    fn burst_phase_raises_the_arrival_density() {
+        let mut cfg = tiny_config();
+        cfg.duration_secs = 20.0;
+        cfg.arrival_rate = 30.0;
+        let trace = generate_trace(&cfg);
+        let frac = |r: &Request| r.arrival / cfg.duration_secs;
+        let in_burst =
+            trace.iter().filter(|r| (0.40..0.55).contains(&frac(r))).count() as f64;
+        let before_burst =
+            trace.iter().filter(|r| (0.25..0.40).contains(&frac(r))).count() as f64;
+        // Same-width windows; the burst triples λ, so even with Poisson
+        // noise the burst window must clearly dominate.
+        assert!(
+            in_burst > 1.5 * before_burst,
+            "burst {in_burst} vs before {before_burst}"
+        );
+        assert_eq!(burst_multiplier(0.45), 3.0);
+        assert_eq!(burst_multiplier(0.2), 1.0);
+        assert_eq!(burst_multiplier(0.60), 1.0);
+    }
+
+    #[test]
+    fn sim_serving_fills_the_cache_and_reports() {
+        let cfg = tiny_config();
+        let rep = run_serve(&cfg).unwrap();
+        assert_eq!(rep.backend, "sim");
+        assert_eq!(rep.offered, generate_trace(&cfg).len());
+        assert_eq!(rep.completed + rep.rejected, rep.offered);
+        assert_eq!(rep.hits + rep.misses, rep.completed);
+        assert!(rep.cache_hit_rate > 0.0, "repeat tenants must hit the cache");
+        assert!(rep.req_per_sec > 0.0);
+        assert!(rep.latency_p50_ms <= rep.latency_p95_ms);
+        assert!(rep.latency_p95_ms <= rep.latency_p99_ms);
+        assert_eq!(rep.records.len(), rep.offered);
+        // The summary renders to valid JSON with the first-class columns.
+        let back = Json::parse(&rep.summary_json().render()).unwrap();
+        assert!(back.get("req_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(back.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(back.get("latency_p99_ms").is_some());
+        assert_eq!(rep.table().rows.len(), 1);
+    }
+
+    #[test]
+    fn report_percentiles_come_from_completed_requests_only() {
+        let records = vec![
+            ReqRecord {
+                id: 0,
+                kind: "partition",
+                fingerprint: 1,
+                latency_secs: 0.010,
+                hit: false,
+                warm: false,
+                migrated_frac: 0.0,
+                rejected: false,
+            },
+            ReqRecord {
+                id: 1,
+                kind: "partition",
+                fingerprint: 1,
+                latency_secs: 0.0,
+                hit: false,
+                warm: false,
+                migrated_frac: 0.0,
+                rejected: true,
+            },
+            ReqRecord {
+                id: 2,
+                kind: "partition",
+                fingerprint: 1,
+                latency_secs: 0.030,
+                hit: true,
+                warm: false,
+                migrated_frac: 0.0,
+                rejected: false,
+            },
+        ];
+        let rep = assemble_report("sim", 3, records, 2.0);
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.hits, 1);
+        assert_eq!(rep.misses, 1);
+        assert_eq!(rep.cache_hit_rate, 0.5);
+        assert_eq!(rep.req_per_sec, 1.0);
+        // p50 of {10ms, 30ms} interpolates to 20ms — the rejected 0 never
+        // drags the percentiles down.
+        assert!((rep.latency_p50_ms - 20.0).abs() < 1e-9, "{}", rep.latency_p50_ms);
+        assert!((rep.latency_mean_ms - 20.0).abs() < 1e-9);
+    }
+}

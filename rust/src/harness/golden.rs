@@ -280,6 +280,7 @@ mod tests {
                 layout: crate::solver::SpmvLayout::Ell,
                 part_backend: None,
                 part_ranks: 0,
+                serve: None,
             },
             n: 100,
             m: 180,
@@ -296,6 +297,7 @@ mod tests {
             overlap_efficiency: None,
             part_secs: None,
             dynamic: None,
+            serve: None,
         }
     }
 

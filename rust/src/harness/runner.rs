@@ -9,7 +9,8 @@
 //!   Algorithm-1 optimum), plus cut and volume relative to geoKM on the
 //!   same (graph, topology) cell, as the paper reports (Figs. 2–4).
 
-use super::scenario::Scenario;
+use super::scenario::{Scenario, ServeSpec};
+use crate::coordinator::serve::{run_serve, ServeConfig, Tenant};
 use crate::coordinator::{instance, run_jobs, run_one, run_solve_opts};
 use crate::exec::{ExecBackend, SolveOpts};
 use crate::gen::Family;
@@ -65,6 +66,36 @@ pub struct ScenarioResult {
     pub part_secs: Option<f64>,
     /// Multi-epoch aggregates for dynamic scenarios (None for static).
     pub dynamic: Option<DynamicSummary>,
+    /// Serving-trace aggregates for scenarios on the serve axis (None
+    /// otherwise). Deterministic: the axis runs on the virtual-time
+    /// backend.
+    pub serve: Option<ServeSummary>,
+}
+
+/// Aggregates of one serving trace (`coordinator::serve`) — the columns
+/// the harness surfaces for `--matrix serve` scenarios.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    /// Requests the trace generator offered.
+    pub offered: usize,
+    /// Requests served to completion.
+    pub completed: usize,
+    /// Requests rejected at admission (bounded queue full).
+    pub rejected: usize,
+    /// Completed requests per (virtual) second.
+    pub req_per_sec: f64,
+    /// Median completion latency (ms).
+    pub latency_p50_ms: f64,
+    /// 95th-percentile completion latency (ms).
+    pub latency_p95_ms: f64,
+    /// 99th-percentile completion latency (ms).
+    pub latency_p99_ms: f64,
+    /// Fraction of completed requests whose partition was cache-served.
+    pub cache_hit_rate: f64,
+    /// Warm-started repartitions executed.
+    pub warm_starts: usize,
+    /// Mean migrated-weight fraction over warm repartitions.
+    pub mean_migrated_frac: f64,
 }
 
 /// Aggregates of a dynamic (multi-epoch) scenario. The per-epoch quality
@@ -89,6 +120,11 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         anyhow::ensure!(
             s.part_backend.is_none(),
             "scenario {}: the part_backend axis applies to static scenarios only",
+            s.id()
+        );
+        anyhow::ensure!(
+            s.serve.is_none(),
+            "scenario {}: the serve axis applies to static scenarios only",
             s.id()
         );
         return run_dynamic_scenario(s, g);
@@ -135,6 +171,12 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         comm_hidden_secs = Some(solve.comm_hidden_secs);
         overlap_efficiency = Some(solve.overlap_efficiency);
     }
+    let serve = match &s.serve {
+        None => None,
+        Some(spec) => Some(
+            run_serve_axis(s, spec).with_context(|| format!("serve axis for {}", s.id()))?,
+        ),
+    };
     Ok(ScenarioResult {
         scenario: s.clone(),
         n: g.n(),
@@ -152,6 +194,44 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         overlap_efficiency,
         part_secs,
         dynamic: None,
+        serve,
+    })
+}
+
+/// Replay the scenario's serving trace through the resident service on
+/// the deterministic virtual-time backend, reducing the report to the
+/// harness's serve columns.
+fn run_serve_axis(s: &Scenario, spec: &ServeSpec) -> Result<ServeSummary> {
+    let primary = Tenant {
+        family: s.family,
+        n: s.n,
+        graph_seed: s.seed,
+        preset: s.topo,
+        k: s.k,
+        algo: s.algo.clone(),
+        epsilon: s.epsilon,
+    };
+    let mut cfg = ServeConfig::new(
+        primary,
+        spec.duration_secs,
+        spec.arrival_rate,
+        s.seed,
+        ExecBackend::Sim,
+    );
+    cfg.servers = spec.servers;
+    cfg.queue_cap = spec.queue_cap;
+    let rep = run_serve(&cfg)?;
+    Ok(ServeSummary {
+        offered: rep.offered,
+        completed: rep.completed,
+        rejected: rep.rejected,
+        req_per_sec: rep.req_per_sec,
+        latency_p50_ms: rep.latency_p50_ms,
+        latency_p95_ms: rep.latency_p95_ms,
+        latency_p99_ms: rep.latency_p99_ms,
+        cache_hit_rate: rep.cache_hit_rate,
+        warm_starts: rep.warm_starts,
+        mean_migrated_frac: rep.mean_migrated_frac,
     })
 }
 
@@ -201,6 +281,7 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
             naive_migrated_weight: res.total_naive_migrated_weight(),
             worst_obj_vs_scratch: res.worst_obj_vs_scratch(),
         }),
+        serve: None,
     })
 }
 
@@ -330,7 +411,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
         "partBackend", "partRanks", "partSecs(ms)", "simT/iter(ms)", "residual", "overlap",
         "layout", "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
-        "objVsScratch",
+        "objVsScratch", "reqs", "reqPerSec", "latP50(ms)", "latP95(ms)", "latP99(ms)",
+        "cacheHit", "rejected",
     ]);
     for r in results {
         let s = &r.scenario;
@@ -358,6 +440,27 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 },
             ),
         };
+        let (reqs, req_per_sec, lat_p50, lat_p95, lat_p99, cache_hit, rejected) =
+            match &r.serve {
+                None => (
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ),
+                Some(v) => (
+                    v.offered.to_string(),
+                    format!("{:.1}", v.req_per_sec),
+                    format!("{:.3}", v.latency_p50_ms),
+                    format!("{:.3}", v.latency_p95_ms),
+                    format!("{:.3}", v.latency_p99_ms),
+                    format!("{:.3}", v.cache_hit_rate),
+                    v.rejected.to_string(),
+                ),
+            };
         t.row(vec![
             s.id(),
             s.family.name().to_string(),
@@ -402,6 +505,13 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             mig_w,
             mig_vs_naive,
             obj_vs,
+            reqs,
+            req_per_sec,
+            lat_p50,
+            lat_p95,
+            lat_p99,
+            cache_hit,
+            rejected,
         ]);
     }
     t
@@ -501,6 +611,24 @@ pub fn result_json(r: &ScenarioResult) -> Json {
                 ]),
             },
         ),
+        (
+            "serve",
+            match &r.serve {
+                None => Json::Null,
+                Some(v) => obj(vec![
+                    ("offered", Json::Num(v.offered as f64)),
+                    ("completed", Json::Num(v.completed as f64)),
+                    ("rejected", Json::Num(v.rejected as f64)),
+                    ("req_per_sec", Json::Num(v.req_per_sec)),
+                    ("latency_p50_ms", Json::Num(v.latency_p50_ms)),
+                    ("latency_p95_ms", Json::Num(v.latency_p95_ms)),
+                    ("latency_p99_ms", Json::Num(v.latency_p99_ms)),
+                    ("cache_hit_rate", Json::Num(v.cache_hit_rate)),
+                    ("warm_starts", Json::Num(v.warm_starts as f64)),
+                    ("mean_migrated_frac", Json::Num(v.mean_migrated_frac)),
+                ]),
+            },
+        ),
     ])
 }
 
@@ -595,6 +723,7 @@ mod tests {
                 layout: SpmvLayout::Ell,
                 part_backend: None,
                 part_ranks: 0,
+                serve: None,
             })
             .collect()
     }
@@ -717,6 +846,44 @@ mod tests {
     }
 
     #[test]
+    fn serve_axis_populates_columns_and_round_trips() {
+        let mut s = tiny_scenarios();
+        s.truncate(1);
+        s[0].serve = Some(ServeSpec {
+            duration_secs: 1.0,
+            arrival_rate: 40.0,
+            queue_cap: 32,
+            servers: 2,
+        });
+        assert!(s[0].id().ends_with("-serveD1R40"), "{}", s[0].id());
+        let (ok, failed) = run_matrix(&s, 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        let v = ok[0].serve.as_ref().expect("serve summary missing");
+        assert!(v.offered > 0);
+        assert_eq!(v.completed + v.rejected, v.offered);
+        assert!(v.req_per_sec > 0.0);
+        assert!(v.cache_hit_rate > 0.0, "repeat tenants must hit the cache");
+        assert!(v.latency_p50_ms <= v.latency_p99_ms);
+        // Quality columns still come from the one-shot pipeline.
+        assert!(ok[0].cut > 0.0);
+        // The table renders the serve columns...
+        let table = runs_table(&ok);
+        let ci = table.header.iter().position(|h| h == "cacheHit").unwrap();
+        assert_ne!(table.rows[0][ci], "-");
+        // ...and the JSON carries the serve block.
+        let back = Json::parse(&result_json(&ok[0]).render()).unwrap();
+        let sj = back.get("serve").unwrap();
+        assert!(sj.get("req_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sj.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        // Static results leave the column empty.
+        let plain = tiny_scenarios();
+        let (ok2, _) = run_matrix(&plain[..1].to_vec(), 1);
+        assert!(ok2[0].serve.is_none());
+        let back2 = Json::parse(&result_json(&ok2[0]).render()).unwrap();
+        assert_eq!(back2.get("serve").unwrap(), &Json::Null);
+    }
+
+    #[test]
     fn summary_geomeans() {
         let (ok, _) = run_matrix(&tiny_scenarios(), 1);
         let sums = summarize(&ok);
@@ -764,6 +931,7 @@ mod tests {
             layout: SpmvLayout::Ell,
             part_backend: None,
             part_ranks: 0,
+            serve: None,
         };
         let (ok, failed) = run_matrix(&[s], 1);
         assert!(failed.is_empty(), "{failed:?}");

@@ -140,6 +140,26 @@ pub struct Scenario {
     /// Solutions are `==`-equal across layouts, so golden metrics are
     /// layout-independent; only measured kernel time moves.
     pub layout: SpmvLayout,
+    /// The serving axis: `Some(spec)` additionally runs a deterministic
+    /// virtual-time serving trace (`coordinator::serve`, `sim` backend)
+    /// against this scenario's instance and records throughput/latency/
+    /// cache columns. `None` (all historical scenarios) is the one-shot
+    /// pipeline only.
+    pub serve: Option<ServeSpec>,
+}
+
+/// Parameters of the serving axis: the open-loop trace the scenario
+/// replays through `coordinator::serve` on the virtual-time backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSpec {
+    /// Virtual trace length in seconds.
+    pub duration_secs: f64,
+    /// Mean arrival rate λ (req/s; 3× during the burst window).
+    pub arrival_rate: f64,
+    /// Admission bound (arrivals beyond it are rejected).
+    pub queue_cap: usize,
+    /// Virtual FCFS servers.
+    pub servers: usize,
 }
 
 impl Scenario {
@@ -149,7 +169,8 @@ impl Scenario {
     /// axes); dynamic scenarios append `-dyn<kind>-E<epochs>`,
     /// overlapped scenarios append `-ov`, non-default SpMV layouts append
     /// `-l<layout>`, distributed-partitioning scenarios append
-    /// `-pb<backend>R<ranks>`.
+    /// `-pb<backend>R<ranks>`, serving scenarios append
+    /// `-serveD<duration>R<rate>`.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
@@ -172,6 +193,9 @@ impl Scenario {
         }
         if let Some(backend) = self.part_backend {
             id.push_str(&format!("-pb{}R{}", backend.name(), self.part_ranks));
+        }
+        if let Some(spec) = &self.serve {
+            id.push_str(&format!("-serveD{}R{}", spec.duration_secs, spec.arrival_rate));
         }
         id
     }
@@ -217,6 +241,11 @@ pub enum MatrixKind {
     /// reproduces the paper's quality-vs-partitioning-time scatter
     /// (`partSecs` against cut/LDHT).
     PartDist,
+    /// The serving matrix: 2 graph families × 2 arrival rates replayed
+    /// through the resident partition service (`coordinator::serve`) on
+    /// the deterministic virtual-time backend — throughput, latency
+    /// percentiles, and cache hit rate become harness columns.
+    Serve,
 }
 
 impl MatrixKind {
@@ -228,6 +257,7 @@ impl MatrixKind {
             MatrixKind::PaperFull => "paper-full",
             MatrixKind::Dynamic => "dynamic",
             MatrixKind::PartDist => "partdist",
+            MatrixKind::Serve => "serve",
         }
     }
 
@@ -239,6 +269,7 @@ impl MatrixKind {
             "paper-full" | "paper_full" | "full" => MatrixKind::PaperFull,
             "dynamic" | "dyn" | "repart" => MatrixKind::Dynamic,
             "partdist" | "part-dist" | "part_dist" => MatrixKind::PartDist,
+            "serve" | "serving" => MatrixKind::Serve,
             _ => return None,
         })
     }
@@ -272,6 +303,7 @@ impl MatrixKind {
                                 part_backend: None,
                                 part_ranks: 0,
                                 layout: SpmvLayout::Ell,
+                                serve: None,
                             });
                         }
                     }
@@ -295,6 +327,7 @@ impl MatrixKind {
                             part_backend: None,
                             part_ranks: 0,
                             layout: SpmvLayout::Ell,
+                            serve: None,
                         });
                     }
                 }
@@ -347,8 +380,41 @@ impl MatrixKind {
                                 part_backend,
                                 part_ranks,
                                 layout: SpmvLayout::Ell,
+                                serve: None,
                             });
                         }
+                    }
+                }
+            }
+            MatrixKind::Serve => {
+                // Serving runs reuse the virtual-time backend, so the
+                // matrix is deterministic end to end: the same trace and
+                // the same summary bits every run.
+                let graphs = [(Family::Tri2d, 800usize), (Family::Rdg2d, 800)];
+                for (family, n) in graphs {
+                    for rate in [40.0f64, 80.0] {
+                        out.push(Scenario {
+                            family,
+                            n,
+                            k: 8,
+                            topo: TopoPreset::Uniform,
+                            algo: "geoKM".to_string(),
+                            epsilon: EPS,
+                            seed: SEED,
+                            solve_iters: 0,
+                            dynamic: DynamicKind::None,
+                            epochs: 0,
+                            overlap: false,
+                            part_backend: None,
+                            part_ranks: 0,
+                            layout: SpmvLayout::Ell,
+                            serve: Some(ServeSpec {
+                                duration_secs: 2.0,
+                                arrival_rate: rate,
+                                queue_cap: 32,
+                                servers: 2,
+                            }),
+                        });
                     }
                 }
             }
@@ -394,6 +460,7 @@ fn push_paper_grid(
                     part_backend: None,
                     part_ranks: 0,
                     layout: SpmvLayout::Ell,
+                    serve: None,
                 });
             }
         }
@@ -447,6 +514,7 @@ mod tests {
             MatrixKind::PaperFull,
             MatrixKind::Dynamic,
             MatrixKind::PartDist,
+            MatrixKind::Serve,
         ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
@@ -547,9 +615,19 @@ mod tests {
             part_backend: None,
             part_ranks: 0,
             layout: SpmvLayout::Ell,
+            serve: None,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
+        // The serving axis gets its own suffix.
+        s.serve = Some(ServeSpec {
+            duration_secs: 2.0,
+            arrival_rate: 40.0,
+            queue_cap: 32,
+            servers: 2,
+        });
+        assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42-serveD2R40");
+        s.serve = None;
         // The non-default layout gets its own suffix; the default never
         // perturbs golden keys.
         s.layout = SpmvLayout::SellCs;
@@ -566,6 +644,27 @@ mod tests {
             s.id(),
             "tri_2d-n900-k8-uniform-diffusion-e0.03-s42-dynrefine-front-E5"
         );
+    }
+
+    #[test]
+    fn serve_matrix_shape() {
+        let s = MatrixKind::Serve.scenarios();
+        // 2 graphs × 2 arrival rates.
+        assert_eq!(s.len(), 4);
+        for x in &s {
+            let spec = x.serve.expect("serve scenario without a spec");
+            assert!(spec.duration_secs > 0.0);
+            assert!(spec.arrival_rate > 0.0);
+            assert!(spec.queue_cap >= 1);
+            assert!(spec.servers >= 1);
+            assert_eq!(x.dynamic, DynamicKind::None);
+            assert_eq!(x.part_backend, None);
+        }
+        // IDs unique (the -serve suffix carries the rate axis).
+        let mut ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), s.len());
     }
 
     #[test]

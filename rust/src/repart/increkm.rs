@@ -11,6 +11,7 @@
 
 use super::{EpochCtx, Repartitioner};
 use crate::geometry::Point;
+use crate::graph::Csr;
 use crate::partition::Partition;
 use crate::partitioners::geokm::lloyd_from_centers;
 use anyhow::{ensure, Result};
@@ -37,48 +38,87 @@ impl Repartitioner for IncrementalGeoKM {
     }
 
     fn repartition(&self, ctx: &EpochCtx) -> Result<Partition> {
-        let g = ctx.graph;
-        let k = ctx.k();
-        ensure!(g.has_coords(), "increKM requires vertex coordinates");
-        ensure!(ctx.prev.k == k, "prev partition k={} vs targets {}", ctx.prev.k, k);
-        ensure!(ctx.prev.n() == g.n(), "prev partition size != graph size");
-        if k == 1 {
-            return Ok(Partition::trivial(g.n()));
-        }
-        // Previous blocks' centroids under the *current* weights.
-        let dim = g.coords[0].dim;
-        let mut sums = vec![Point::zero(dim); k];
-        let mut wsum = vec![0.0f64; k];
-        for u in 0..g.n() {
-            let b = ctx.prev.assignment[u] as usize;
-            let w = g.vertex_weight(u);
-            sums[b] = sums[b].add(&g.coords[u].scale(w));
-            wsum[b] += w;
-        }
-        let centers: Vec<Point> = (0..k)
-            .map(|i| {
-                if wsum[i] > 0.0 {
-                    sums[i].scale(1.0 / wsum[i])
-                } else {
-                    // Empty previous block: park its center on a vertex so
-                    // it can win territory again.
-                    g.coords[i % g.n()]
-                }
-            })
-            .collect();
-        // The extracted core is bit-identical for any worker count, so
-        // use the same parallel assignment step GeoKMeans does.
-        let assignment = lloyd_from_centers(
-            g,
-            centers,
+        warm_start(
+            ctx.graph,
+            ctx.prev,
             ctx.targets,
             ctx.epsilon,
             self.max_iters,
             self.gamma,
             crate::coordinator::jobqueue::default_workers(),
-        );
-        Ok(Partition::new(assignment, k))
+        )
     }
+}
+
+/// Previous blocks' weighted centroids under the *current* weights.
+///
+/// An empty previous block has no centroid; it is re-seeded
+/// deterministically on the vertex farthest (squared Euclidean) from all
+/// surviving centers and earlier re-seeds — a farthest-point sweep in
+/// block-id order, ties broken toward the lower vertex id. Re-seeded
+/// centers are therefore pairwise distinct whenever the graph has enough
+/// distinct coordinates, so Lloyd assignment ties can never decide block
+/// identity between two resurrected blocks (the old `coords[i % n]`
+/// parking collided on duplicate points).
+pub fn warm_start_centers(g: &Csr, prev: &Partition, k: usize) -> Vec<Point> {
+    let dim = g.coords[0].dim;
+    let mut sums = vec![Point::zero(dim); k];
+    let mut wsum = vec![0.0f64; k];
+    for u in 0..g.n() {
+        let b = prev.assignment[u] as usize;
+        let w = g.vertex_weight(u);
+        sums[b] = sums[b].add(&g.coords[u].scale(w));
+        wsum[b] += w;
+    }
+    let mut centers: Vec<Option<Point>> = (0..k)
+        .map(|i| (wsum[i] > 0.0).then(|| sums[i].scale(1.0 / wsum[i])))
+        .collect();
+    for b in 0..k {
+        if centers[b].is_some() {
+            continue;
+        }
+        let placed: Vec<Point> = centers.iter().flatten().copied().collect();
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for u in 0..g.n() {
+            let d = placed
+                .iter()
+                .map(|c| c.dist2(&g.coords[u]))
+                .fold(f64::INFINITY, f64::min);
+            if d > best.0 {
+                best = (d, u);
+            }
+        }
+        centers[b] = Some(g.coords[best.1]);
+    }
+    centers.into_iter().map(|c| c.expect("all centers placed")).collect()
+}
+
+/// Warm-start balanced k-means from a previous partition: the seam shared
+/// by the per-trace [`IncrementalGeoKM`] and the serve-layer cache
+/// (`coordinator::serve`), so a repeat tenant with drifted weights
+/// warm-starts from its cached blocks instead of re-seeding from scratch.
+/// Deterministic for a given `(graph, prev)` pair at any worker count.
+pub fn warm_start(
+    g: &Csr,
+    prev: &Partition,
+    targets: &[f64],
+    epsilon: f64,
+    max_iters: usize,
+    gamma: f64,
+    workers: usize,
+) -> Result<Partition> {
+    let k = targets.len();
+    ensure!(g.has_coords(), "increKM requires vertex coordinates");
+    ensure!(prev.k == k, "prev partition k={} vs targets {}", prev.k, k);
+    ensure!(prev.n() == g.n(), "prev partition size != graph size");
+    if k == 1 {
+        return Ok(Partition::trivial(g.n()));
+    }
+    let centers = warm_start_centers(g, prev, k);
+    // The extracted core is bit-identical for any worker count, so use
+    // the same parallel assignment step GeoKMeans does.
+    let assignment = lloyd_from_centers(g, centers, targets, epsilon, max_iters, gamma, workers);
+    Ok(Partition::new(assignment, k))
 }
 
 #[cfg(test)]
@@ -124,5 +164,80 @@ mod tests {
         // Migration is recorded sanely.
         let mig = migration(&g1, &prev, &ours);
         assert!(mig.frac_weight() < 0.9, "warm start moved almost everything");
+    }
+
+    #[test]
+    fn empty_blocks_reseed_on_distinct_vertices() {
+        // Regression: the old code parked an empty block i's center on
+        // g.coords[i % n], so two empty blocks whose parking vertices
+        // share coordinates collided on the same point and Lloyd ties
+        // then decided block identity. Build exactly that instance: a
+        // graph whose vertices 2 and 3 are coincident, with blocks 2 and
+        // 3 both emptied in the previous partition.
+        let mut g = refined_mesh_2d(600, 5);
+        g.coords[3] = g.coords[2];
+        let k = 4;
+        // Previous partition uses blocks 0 and 1 only (split by vertex
+        // index); blocks 2 and 3 are empty.
+        let assignment: Vec<u32> =
+            (0..g.n()).map(|u| if u < g.n() / 2 { 0 } else { 1 }).collect();
+        let prev = crate::partition::Partition::new(assignment, k);
+        let centers = warm_start_centers(&g, &prev, k);
+        assert_eq!(centers.len(), k);
+        for i in 0..k {
+            for j in (i + 1)..k {
+                assert!(
+                    centers[i].dist2(&centers[j]) > 0.0,
+                    "centers {i} and {j} collided at {:?}",
+                    centers[i]
+                );
+            }
+        }
+        // The full warm start stays valid and deterministic on this
+        // instance (both resurrected blocks compete from distinct seeds).
+        let targets: Vec<f64> = vec![g.total_vertex_weight() / k as f64; k];
+        let p1 = warm_start(&g, &prev, &targets, 0.05, 12, 0.6, 2).unwrap();
+        p1.validate(&g).unwrap();
+        let p2 = warm_start(&g, &prev, &targets, 0.05, 12, 0.6, 4).unwrap();
+        assert_eq!(p1.assignment, p2.assignment, "worker count changed the result");
+    }
+
+    #[test]
+    fn warm_start_seam_matches_the_repartitioner() {
+        // The lifted seam must produce exactly what IncrementalGeoKM
+        // produces through EpochCtx — the serve cache layer relies on it.
+        let mut g = refined_mesh_2d(900, 3);
+        g.vwgt = front_weights(&g.coords, 0.3, 6.0, 0.12);
+        let k = 5;
+        let topo = Topology::homogeneous(k, 1.0, 1e9);
+        let targets: Vec<f64> = vec![g.total_vertex_weight() / k as f64; k];
+        let prev = by_name("geoKM")
+            .unwrap()
+            .partition(&Ctx { graph: &g, targets: &targets, topo: &topo, epsilon: 0.03, seed: 2 })
+            .unwrap();
+        let mut g2 = g.clone();
+        g2.vwgt = front_weights(&g2.coords, 0.6, 6.0, 0.12);
+        let ectx = EpochCtx {
+            graph: &g2,
+            prev: &prev,
+            targets: &targets,
+            topo: &topo,
+            epsilon: 0.03,
+            seed: 2,
+            scratch: None,
+        };
+        let rp = IncrementalGeoKM::default();
+        let via_trait = rp.repartition(&ectx).unwrap();
+        let via_seam = warm_start(
+            &g2,
+            &prev,
+            &targets,
+            0.03,
+            rp.max_iters,
+            rp.gamma,
+            crate::coordinator::jobqueue::default_workers(),
+        )
+        .unwrap();
+        assert_eq!(via_trait.assignment, via_seam.assignment);
     }
 }

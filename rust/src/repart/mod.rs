@@ -42,7 +42,7 @@ pub mod trace;
 
 pub use diffusion::Diffusion;
 pub use driver::{epoch_table, run_trace, EpochRecord, TraceOptions, TraceResult};
-pub use increkm::IncrementalGeoKM;
+pub use increkm::{warm_start, warm_start_centers, IncrementalGeoKM};
 pub use migrate::{
     execute_migration, execute_migration_opts, migration_plan, MigrationPlan, MigrationReport,
 };

@@ -1,0 +1,150 @@
+//! Acceptance tests for the resident partition service (ISSUE 7):
+//!
+//! Cached partitions are bit-identical to fresh standalone runs; repeat
+//! tenants warm-start their repartitions and migrate less than a cold
+//! re-partition would; admission control rejects under overload without
+//! deadlocking; the virtual-time backend is deterministic down to the
+//! rendered summary JSON; and the real threads backend serves a short
+//! trace end to end with a positive throughput and cache hit rate.
+
+use hetpart::coordinator::serve::{
+    generate_trace, run_serve, PartitionService, Request, RequestKind, ServeConfig, Tenant,
+};
+use hetpart::coordinator::run_one;
+use hetpart::exec::ExecBackend;
+use hetpart::gen::Family;
+use hetpart::harness::TopoPreset;
+use hetpart::partition::migration;
+use hetpart::partitioners::{by_name, Ctx};
+
+fn tenant() -> Tenant {
+    Tenant {
+        family: Family::Tri2d,
+        n: 800,
+        graph_seed: 42,
+        preset: TopoPreset::Uniform,
+        k: 8,
+        algo: "geoKM".to_string(),
+        epsilon: 0.03,
+    }
+}
+
+fn sim_config(duration: f64, rate: f64) -> ServeConfig {
+    let mut cfg = ServeConfig::new(tenant(), duration, rate, 42, ExecBackend::Sim);
+    cfg.servers = 2;
+    cfg.queue_cap = 32;
+    cfg
+}
+
+fn request(id: usize, t: &Tenant, kind: RequestKind, drift: f64) -> Request {
+    Request { id, arrival: 0.0, tenant: t.clone(), kind, drift }
+}
+
+#[test]
+fn cached_partition_is_bit_identical_to_a_fresh_run() {
+    let t = tenant();
+    let service = PartitionService::new(1);
+    // First handle is a miss and fills the cache...
+    let out = service.handle(&request(0, &t, RequestKind::Partition, 0.0)).unwrap();
+    assert!(!out.hit, "first request cannot be a cache hit");
+    let cached = service.cached_partition(&t).expect("cache not filled");
+    // ...the second is a hit.
+    let out2 = service.handle(&request(1, &t, RequestKind::Partition, 0.0)).unwrap();
+    assert!(out2.hit, "repeat request must be cache-served");
+    assert!(out2.service_secs < out.service_secs, "a hit must be priced cheaper");
+    // The cached partition is bit-identical to a fresh standalone run
+    // through the exact same pipeline.
+    let (name, g) = hetpart::coordinator::instance(t.family, t.n, t.graph_seed);
+    let topo = t.topology();
+    let (_r, fresh) = run_one(&name, &g, &topo, &t.algo, t.epsilon, t.graph_seed).unwrap();
+    assert_eq!(cached.assignment, fresh.assignment, "cache broke bit-identity");
+    assert_eq!(cached.k, fresh.k);
+}
+
+#[test]
+fn warm_repartition_migrates_less_than_a_cold_repartition() {
+    let t = tenant();
+    let service = PartitionService::new(1);
+    service.handle(&request(0, &t, RequestKind::Partition, 0.0)).unwrap();
+    let base = service.cached_partition(&t).unwrap();
+    // A drifted repartition through the service warm-starts from the
+    // tenant's current blocks.
+    let drift = 0.3;
+    let out = service.handle(&request(1, &t, RequestKind::Repartition, drift)).unwrap();
+    assert!(out.warm, "repartition must warm-start");
+    assert!(out.migrated_frac >= 0.0 && out.migrated_frac < 1.0);
+    // Cold comparison: re-run geoKM from scratch on the same drifted
+    // weights and measure migration against the same base. From-scratch
+    // re-seeding churns block labels, so it moves strictly more weight.
+    let (_name, g) = hetpart::coordinator::instance(t.family, t.n, t.graph_seed);
+    let mut drifted = g.clone();
+    drifted.vwgt =
+        hetpart::gen::refine::front_weights(&drifted.coords, drift, 6.0, 0.12);
+    let topo = t.topology();
+    let (tw, _) = hetpart::harness::alg1_targets(&drifted, &topo).unwrap();
+    let cold = by_name(&t.algo)
+        .unwrap()
+        .partition(&Ctx {
+            graph: &drifted,
+            targets: &tw,
+            topo: &topo,
+            epsilon: t.epsilon,
+            seed: t.graph_seed,
+        })
+        .unwrap();
+    let cold_frac = migration(&drifted, &base, &cold).frac_weight();
+    assert!(
+        out.migrated_frac < cold_frac,
+        "warm start moved {} of the weight, cold re-partition {}",
+        out.migrated_frac,
+        cold_frac
+    );
+}
+
+#[test]
+fn admission_control_rejects_under_overload_without_losing_requests() {
+    // Tiny queue, huge arrival rate: the bounded queue must reject, and
+    // offered requests must all be accounted for (no hangs, no loss).
+    let mut cfg = sim_config(0.5, 2000.0);
+    cfg.servers = 1;
+    cfg.queue_cap = 4;
+    let rep = run_serve(&cfg).unwrap();
+    assert!(rep.rejected > 0, "overload never tripped admission control");
+    assert!(rep.completed > 0, "admission starved the service entirely");
+    assert_eq!(rep.completed + rep.rejected, rep.offered);
+    assert_eq!(rep.records.len(), rep.offered);
+}
+
+#[test]
+fn sim_backend_is_deterministic_down_to_the_summary_bits() {
+    let cfg = sim_config(1.5, 60.0);
+    assert_eq!(generate_trace(&cfg), generate_trace(&cfg));
+    let a = run_serve(&cfg).unwrap();
+    let b = run_serve(&cfg).unwrap();
+    assert_eq!(
+        a.summary_json().render(),
+        b.summary_json().render(),
+        "virtual-time serving must be bit-identical across runs"
+    );
+    // And the summary carries the first-class columns.
+    assert!(a.req_per_sec > 0.0);
+    assert!(a.cache_hit_rate > 0.0);
+    assert!(a.warm_starts > 0, "trace mixed in no repartitions");
+    assert!(a.latency_p50_ms <= a.latency_p95_ms);
+    assert!(a.latency_p95_ms <= a.latency_p99_ms);
+}
+
+#[test]
+fn threads_backend_serves_a_short_trace_end_to_end() {
+    let t = tenant();
+    let mut cfg = ServeConfig::new(t, 0.3, 50.0, 1, ExecBackend::Threads);
+    cfg.servers = 2;
+    let rep = run_serve(&cfg).unwrap();
+    assert_eq!(rep.backend, "threads");
+    assert_eq!(rep.completed + rep.rejected, rep.offered);
+    assert!(rep.req_per_sec > 0.0, "no throughput measured");
+    assert!(rep.cache_hit_rate > 0.0, "repeat tenants never hit the cache");
+    // Measured latencies are real and positive for completed requests.
+    assert!(rep.latency_p50_ms > 0.0);
+    assert!(rep.makespan_secs >= 0.3, "leader finished before the trace ended");
+}

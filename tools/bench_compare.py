@@ -33,7 +33,20 @@ def load(path):
 
 
 def kernels_by_name(snap):
-    return {k["name"]: k for k in snap.get("kernels", [])}
+    return {k["name"]: k for k in snap.get("kernels", []) if "name" in k}
+
+
+def ns_per_row(entry):
+    """The entry's ns/row as a float, or None if absent/non-numeric.
+
+    Snapshots are hand-refreshable JSON: a missing key, a null, or a
+    string must downgrade to a reported note, never crash the comparison
+    (KeyError/TypeError/ZeroDivisionError are all reachable otherwise).
+    """
+    v = entry.get("ns_per_row")
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None
+    return float(v)
 
 
 def compare_one(base, fresh, tolerance):
@@ -44,12 +57,23 @@ def compare_one(base, fresh, tolerance):
         if name not in fk:
             notes.append(f"kernel '{name}' in baseline but not in fresh run")
     for name, k in fk.items():
+        fresh_ns = ns_per_row(k)
         if name not in bk:
-            notes.append(f"kernel '{name}' is new (no baseline); ns/row={k['ns_per_row']:.1f}")
+            shown = "?" if fresh_ns is None else f"{fresh_ns:.1f}"
+            notes.append(f"kernel '{name}' is new (no baseline); ns/row={shown}")
             continue
-        base_ns, fresh_ns = bk[name]["ns_per_row"], k["ns_per_row"]
-        if base_ns <= 0:
-            notes.append(f"kernel '{name}': baseline ns/row is {base_ns}, skipping")
+        base_ns = ns_per_row(bk[name])
+        if base_ns is None or base_ns <= 0:
+            notes.append(
+                f"kernel '{name}': baseline ns/row is "
+                f"{bk[name].get('ns_per_row')!r}, skipping"
+            )
+            continue
+        if fresh_ns is None:
+            notes.append(
+                f"kernel '{name}': fresh ns/row is "
+                f"{k.get('ns_per_row')!r}, skipping"
+            )
             continue
         delta = (fresh_ns - base_ns) / base_ns
         line = (

@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Smoke tests for tools/bench_compare.py.
+
+Run directly (``python3 tools/test_bench_compare.py``) or via
+``python3 -m unittest discover tools`` — stdlib only, no toolchain
+needed. Pins the guard paths the comparison must report instead of
+crashing on: zero/missing/None ``ns_per_row`` entries and kernels
+present on only one side, plus the end-to-end exit codes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_compare  # noqa: E402
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_compare.py")
+
+
+def snap(kernels, fingerprint="fp", scale="quick", **extra):
+    s = {"fingerprint": fingerprint, "scale": scale, "kernels": kernels}
+    s.update(extra)
+    return s
+
+
+class CompareOneGuards(unittest.TestCase):
+    def test_clean_comparison_within_tolerance(self):
+        base = snap([{"name": "spmv", "ns_per_row": 100.0}])
+        fresh = snap([{"name": "spmv", "ns_per_row": 110.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any(n.startswith("ok ") for n in notes), notes)
+
+    def test_regression_beyond_tolerance(self):
+        base = snap([{"name": "spmv", "ns_per_row": 100.0}])
+        fresh = snap([{"name": "spmv", "ns_per_row": 200.0}])
+        regressions, _ = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("REGRESSION", regressions[0])
+
+    def test_zero_baseline_ns_per_row_is_a_note_not_a_crash(self):
+        base = snap([{"name": "spmv", "ns_per_row": 0}])
+        fresh = snap([{"name": "spmv", "ns_per_row": 50.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("skipping" in n for n in notes), notes)
+
+    def test_none_baseline_ns_per_row_is_a_note_not_a_crash(self):
+        # Pre-guard code raised TypeError on `None <= 0`.
+        base = snap([{"name": "spmv", "ns_per_row": None}])
+        fresh = snap([{"name": "spmv", "ns_per_row": 50.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("skipping" in n for n in notes), notes)
+
+    def test_missing_baseline_ns_per_row_key_is_a_note_not_a_crash(self):
+        # Pre-guard code raised KeyError on bk[name]["ns_per_row"].
+        base = snap([{"name": "spmv"}])
+        fresh = snap([{"name": "spmv", "ns_per_row": 50.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("skipping" in n for n in notes), notes)
+
+    def test_missing_fresh_ns_per_row_key_is_a_note_not_a_crash(self):
+        base = snap([{"name": "spmv", "ns_per_row": 50.0}])
+        fresh = snap([{"name": "spmv"}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("skipping" in n for n in notes), notes)
+
+    def test_fresh_only_kernel_is_reported(self):
+        base = snap([])
+        fresh = snap([{"name": "brand_new", "ns_per_row": 9.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("new (no baseline)" in n for n in notes), notes)
+
+    def test_fresh_only_kernel_without_ns_per_row_is_reported(self):
+        # Pre-guard code raised KeyError formatting k['ns_per_row'].
+        base = snap([])
+        fresh = snap([{"name": "brand_new"}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("ns/row=?" in n for n in notes), notes)
+
+    def test_baseline_only_kernel_is_reported(self):
+        base = snap([{"name": "retired", "ns_per_row": 5.0}])
+        fresh = snap([])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("not in fresh run" in n for n in notes), notes)
+
+    def test_unnamed_kernel_entries_are_ignored(self):
+        base = snap([{"ns_per_row": 5.0}])
+        fresh = snap([{"ns_per_row": 6.0}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertEqual(notes, [])
+
+
+class EndToEndExitCodes(unittest.TestCase):
+    def run_script(self, args):
+        return subprocess.run(
+            [sys.executable, SCRIPT] + args, capture_output=True, text=True
+        )
+
+    def write(self, d, name, doc):
+        with open(os.path.join(d, name), "w") as f:
+            json.dump(doc, f)
+
+    def test_ok_exit_zero(self):
+        with tempfile.TemporaryDirectory() as fresh, tempfile.TemporaryDirectory() as base:
+            self.write(base, "BENCH_x.json", snap([{"name": "k", "ns_per_row": 10.0}]))
+            self.write(fresh, "BENCH_x.json", snap([{"name": "k", "ns_per_row": 10.5}]))
+            p = self.run_script(["--fresh", fresh, "--baseline", base])
+            self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
+    def test_regression_exit_one_and_advisory_exit_zero(self):
+        with tempfile.TemporaryDirectory() as fresh, tempfile.TemporaryDirectory() as base:
+            self.write(base, "BENCH_x.json", snap([{"name": "k", "ns_per_row": 10.0}]))
+            self.write(fresh, "BENCH_x.json", snap([{"name": "k", "ns_per_row": 99.0}]))
+            p = self.run_script(["--fresh", fresh, "--baseline", base])
+            self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+            p = self.run_script(["--fresh", fresh, "--baseline", base, "--advisory"])
+            self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
+    def test_guarded_entries_do_not_crash_end_to_end(self):
+        # A degenerate committed baseline (zero + missing ns/row) and a
+        # fresh-only kernel must produce a report and exit 0.
+        with tempfile.TemporaryDirectory() as fresh, tempfile.TemporaryDirectory() as base:
+            self.write(
+                base,
+                "BENCH_x.json",
+                snap([{"name": "z", "ns_per_row": 0}, {"name": "gone"}]),
+            )
+            self.write(
+                fresh,
+                "BENCH_x.json",
+                snap([{"name": "z", "ns_per_row": 4.0}, {"name": "new_k", "ns_per_row": 1.0}]),
+            )
+            p = self.run_script(["--fresh", fresh, "--baseline", base])
+            self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+            self.assertIn("skipping", p.stdout)
+            self.assertIn("new (no baseline)", p.stdout)
+
+    def test_bootstrap_baseline_reports_unarmed(self):
+        with tempfile.TemporaryDirectory() as fresh, tempfile.TemporaryDirectory() as base:
+            self.write(base, "BENCH_x.json", snap([], bootstrap=True))
+            self.write(fresh, "BENCH_x.json", snap([{"name": "k", "ns_per_row": 1.0}]))
+            p = self.run_script(["--fresh", fresh, "--baseline", base])
+            self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+            self.assertIn("UNARMED", p.stdout)
+
+    def test_no_fresh_snapshots_is_a_usage_error(self):
+        with tempfile.TemporaryDirectory() as fresh:
+            p = self.run_script(["--fresh", fresh])
+            self.assertEqual(p.returncode, 2, p.stdout + p.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()
