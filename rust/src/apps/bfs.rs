@@ -1,0 +1,112 @@
+//! Frontier (level-synchronous) BFS over row strips.
+//!
+//! Each superstep expands the current frontier: every frontier vertex
+//! pushes a `[dest_gid, parent_gid]` record per neighbor through the
+//! aggregation layer, and owners fold the candidates with a **min-parent
+//! rule** — a newly reached vertex adopts the smallest candidate parent
+//! id, which makes the BFS tree independent of rank count, backend, and
+//! delivery order. Termination is a global sum of newly-reached counts
+//! (exact in f64: the summands are small integers).
+
+use super::{AppCtx, AppKernel, AppOutput, RankRun};
+use crate::exec::{AggComm, Comm, ReduceOp};
+use crate::graph::Csr;
+use anyhow::{ensure, Result};
+
+/// Level-synchronous breadth-first search (levels + min-parent tree).
+pub struct Bfs;
+
+impl AppKernel for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn rec_words(&self) -> usize {
+        2
+    }
+
+    fn run_rank(&self, ctx: &AppCtx, comm: &dyn Comm, agg: &mut AggComm) -> Result<RankRun> {
+        let n_local = ctx.strip.n_local();
+        let mut dist = vec![f64::INFINITY; n_local];
+        let mut parent = vec![-1.0f64; n_local];
+        let mut frontier: Vec<usize> = Vec::new();
+        if ctx.source >= ctx.strip.row_lo && ctx.source < ctx.strip.row_hi {
+            let s = ctx.local(ctx.source);
+            dist[s] = 0.0;
+            parent[s] = ctx.source as f64;
+            frontier.push(s);
+        }
+        let mut ops = 0.0f64;
+        let mut level = 0usize;
+        // A connected path has at most n_global levels; the cap is a
+        // replicated decision (level counts are globally synchronized),
+        // so every rank errors together if it ever bites.
+        while level <= ctx.n_global {
+            for &u in &frontier {
+                let u_gid = (ctx.strip.row_lo + u) as f64;
+                let lo = ctx.strip.xadj[u];
+                let hi = ctx.strip.xadj[u + 1];
+                ops += (hi - lo) as f64;
+                for &v in &ctx.strip.adjncy[lo..hi] {
+                    agg.push(ctx.owner(v as usize), &[v as f64, u_gid]);
+                }
+            }
+            let recv = agg.drain();
+            // Min-fold candidate parents for vertices not yet reached.
+            let mut cand = vec![f64::INFINITY; n_local];
+            for part in &recv {
+                for rec in part.chunks_exact(2) {
+                    let lv = ctx.local(rec[0] as usize);
+                    ops += 1.0;
+                    if dist[lv].is_infinite() {
+                        cand[lv] = cand[lv].min(rec[1]);
+                    }
+                }
+            }
+            frontier.clear();
+            for (lv, &p) in cand.iter().enumerate() {
+                if p.is_finite() {
+                    dist[lv] = (level + 1) as f64;
+                    parent[lv] = p;
+                    frontier.push(lv);
+                }
+            }
+            let mut newly = [frontier.len() as f64];
+            comm.allreduce_vec(ctx.rank, &mut newly, ReduceOp::Sum);
+            level += 1;
+            if newly[0] == 0.0 {
+                break;
+            }
+        }
+        Ok(RankRun { primary: dist, aux: parent, modeled_ops: ops, iterations: level })
+    }
+
+    fn check(&self, g: &Csr, source: usize, out: &AppOutput) -> Result<()> {
+        ensure!(out.primary.len() == g.n() && out.aux.len() == g.n());
+        let reference = g.bfs(source);
+        for v in 0..g.n() {
+            let d = out.primary[v];
+            if reference[v] == usize::MAX {
+                ensure!(d.is_infinite(), "vertex {v} unreachable but level {d}");
+                ensure!(out.aux[v] == -1.0, "unreachable vertex {v} has a parent");
+                continue;
+            }
+            ensure!(d == reference[v] as f64, "vertex {v}: level {d} != {}", reference[v]);
+            let p = out.aux[v] as usize;
+            if v == source {
+                ensure!(p == source, "source parent must be itself");
+                continue;
+            }
+            ensure!(
+                g.neighbors(v).contains(&(p as u32)),
+                "vertex {v}: parent {p} is not a neighbor"
+            );
+            ensure!(
+                out.primary[p] + 1.0 == d,
+                "vertex {v}: parent {p} at level {} not one above {d}",
+                out.primary[p]
+            );
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,110 @@
+//! Push-style PageRank over row strips.
+//!
+//! A fixed 20 damped power iterations (`d = 0.85`): each vertex pushes
+//! `d·rank(u)/deg(u)` along every out-edge as a
+//! `[dest_gid, src_gid, contribution]` record. Floating-point addition
+//! is not associative, so the receiver does NOT fold records in arrival
+//! order — it sorts every iteration's records by `(dest, src)` and folds
+//! in that canonical order, which makes the scores bit-identical to a
+//! sequential sweep that visits sources in ascending id order (the
+//! checker exploits exactly this: it recomputes the reference and
+//! demands `|Δrank|₁ = 0`). Dangling mass is deliberately **not**
+//! redistributed: doing so would need a rank-order `Sum` allreduce whose
+//! association varies with the rank count. Scores therefore sum to
+//! `≤ 1`, short by the leaked dangling/damping mass.
+
+use super::{AppCtx, AppKernel, AppOutput, RankRun};
+use crate::exec::{AggComm, Comm};
+use crate::graph::Csr;
+use anyhow::{ensure, Result};
+
+/// Damping factor.
+pub const DAMPING: f64 = 0.85;
+/// Fixed iteration count (no convergence test: identical schedule on
+/// every rank count by construction).
+pub const ITERS: usize = 20;
+
+/// Push-style damped PageRank with canonical-order folding.
+pub struct PageRank;
+
+impl AppKernel for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn rec_words(&self) -> usize {
+        3
+    }
+
+    fn run_rank(&self, ctx: &AppCtx, _comm: &dyn Comm, agg: &mut AggComm) -> Result<RankRun> {
+        let n_local = ctx.strip.n_local();
+        let n = ctx.n_global as f64;
+        let base = (1.0 - DAMPING) / n;
+        let mut rank = vec![1.0 / n; n_local];
+        let mut ops = 0.0f64;
+        let mut incoming: Vec<(usize, u32, f64)> = Vec::new();
+        for _ in 0..ITERS {
+            for u in 0..n_local {
+                let lo = ctx.strip.xadj[u];
+                let hi = ctx.strip.xadj[u + 1];
+                if hi == lo {
+                    continue; // dangling: its mass leaks (see module docs)
+                }
+                let u_gid = (ctx.strip.row_lo + u) as f64;
+                let c = DAMPING * rank[u] / (hi - lo) as f64;
+                ops += (hi - lo) as f64;
+                for &v in &ctx.strip.adjncy[lo..hi] {
+                    agg.push(ctx.owner(v as usize), &[v as f64, u_gid, c]);
+                }
+            }
+            incoming.clear();
+            for part in &agg.drain() {
+                for rec in part.chunks_exact(3) {
+                    incoming.push((ctx.local(rec[0] as usize), rec[1] as u32, rec[2]));
+                }
+            }
+            // Canonical fold order: by (dest, source id) — per dest this
+            // is ascending global source order, matching the sequential
+            // reference bit for bit.
+            incoming.sort_by_key(|&(lv, src, _)| (lv, src));
+            ops += incoming.len() as f64;
+            for r in rank.iter_mut() {
+                *r = base;
+            }
+            for &(lv, _, c) in &incoming {
+                rank[lv] += c;
+            }
+        }
+        Ok(RankRun { primary: rank, aux: Vec::new(), modeled_ops: ops, iterations: ITERS })
+    }
+
+    fn check(&self, g: &Csr, _source: usize, out: &AppOutput) -> Result<()> {
+        ensure!(out.primary.len() == g.n() && out.aux.is_empty());
+        let n = g.n() as f64;
+        let base = (1.0 - DAMPING) / n;
+        // Sequential reference with the same canonical fold order:
+        // sources visited in ascending id, so each target accumulates
+        // its contributions in ascending source order.
+        let mut rank = vec![1.0 / n; g.n()];
+        for _ in 0..ITERS {
+            let mut next = vec![base; g.n()];
+            for u in 0..g.n() {
+                let deg = g.degree(u);
+                if deg == 0 {
+                    continue;
+                }
+                let c = DAMPING * rank[u] / deg as f64;
+                for &v in g.neighbors(u) {
+                    next[v as usize] += c;
+                }
+            }
+            rank = next;
+        }
+        let l1: f64 = out.primary.iter().zip(&rank).map(|(a, b)| (a - b).abs()).sum();
+        ensure!(l1 == 0.0, "|Δrank|₁ = {l1:e} against the sequential reference");
+        let total: f64 = out.primary.iter().sum();
+        ensure!(total <= 1.0 + 1e-9, "scores sum to {total} > 1");
+        ensure!(out.primary.iter().all(|&r| r > 0.0), "scores must stay positive");
+        Ok(())
+    }
+}

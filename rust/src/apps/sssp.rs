@@ -1,0 +1,180 @@
+//! Delta-stepping single-source shortest paths over row strips.
+//!
+//! Weights come from [`edge_weight`](super::edge_weight) (deterministic,
+//! symmetric, in `[1, 2)`), and `Δ = 1.5` splits edges into light
+//! (`w ≤ Δ`) and heavy. The classic schedule: settle buckets of width Δ
+//! in order; within a bucket, relax light edges to a fixed point
+//! (re-relaxing vertices whose tentative distance drops back into the
+//! bucket), then relax heavy edges once from everything the bucket
+//! touched. Relaxation records `[dest_gid, candidate]` batch through the
+//! aggregation layer and apply as a min-fold, so delivery order never
+//! matters; bucket selection and inner-round continuation are global
+//! allreduces, so every rank walks the identical superstep schedule.
+//!
+//! Because all weights are ≥ 1 > 0 and candidates from bucket `i` land
+//! at `≥ i·Δ + 1`, no relaxation re-opens a settled bucket — the
+//! settle-on-close rule is exact, and the checker proves it: triangle
+//! inequality over every edge bounds the result from above, a tight
+//! predecessor per reached vertex bounds it from below, so together they
+//! pin the true distances.
+
+use super::{edge_weight, AppCtx, AppKernel, AppOutput, RankRun};
+use crate::exec::{AggComm, Comm, ReduceOp};
+use crate::graph::Csr;
+use anyhow::{bail, ensure, Result};
+
+/// Bucket width; also the light/heavy edge split (weights span `[1, 2)`).
+pub const DELTA: f64 = 1.5;
+
+/// Delta-stepping SSSP (bucketed relaxations, light/heavy phases).
+pub struct DeltaSssp;
+
+impl AppKernel for DeltaSssp {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn rec_words(&self) -> usize {
+        2
+    }
+
+    fn run_rank(&self, ctx: &AppCtx, comm: &dyn Comm, agg: &mut AggComm) -> Result<RankRun> {
+        let n_local = ctx.strip.n_local();
+        let mut tent = vec![f64::INFINITY; n_local];
+        let mut settled = vec![false; n_local];
+        let mut done_light = vec![false; n_local];
+        if ctx.source >= ctx.strip.row_lo && ctx.source < ctx.strip.row_hi {
+            tent[ctx.local(ctx.source)] = 0.0;
+        }
+        let mut ops = 0.0f64;
+        let mut supersteps = 0usize;
+        // Distances are < 2·n (weights < 2), so < ⌈2n/Δ⌉ + 1 buckets can
+        // ever open; the caps are replicated decisions (every loop is
+        // steered by collectives), so all ranks error together.
+        let max_buckets = 2 * ctx.n_global + 2;
+        for _ in 0..=max_buckets {
+            // Next nonempty bucket = global min unsettled tentative.
+            let mut gmin = [tent
+                .iter()
+                .zip(&settled)
+                .filter(|(_, &s)| !s)
+                .map(|(&t, _)| t)
+                .fold(f64::INFINITY, f64::min)];
+            comm.allreduce_vec(ctx.rank, &mut gmin, ReduceOp::Min);
+            supersteps += 1;
+            if gmin[0].is_infinite() {
+                return Ok(RankRun {
+                    primary: tent,
+                    aux: Vec::new(),
+                    modeled_ops: ops,
+                    iterations: supersteps,
+                });
+            }
+            let bucket = (gmin[0] / DELTA).floor();
+            for d in done_light.iter_mut() {
+                *d = false;
+            }
+            let mut touched = vec![false; n_local];
+            let in_bucket = |t: f64, s: bool| !s && t.is_finite() && (t / DELTA).floor() == bucket;
+            // Light-edge fixed point within the bucket.
+            for _round in 0..=ctx.n_global {
+                let members: Vec<usize> = (0..n_local)
+                    .filter(|&u| in_bucket(tent[u], settled[u]) && !done_light[u])
+                    .collect();
+                let mut cnt = [members.len() as f64];
+                comm.allreduce_vec(ctx.rank, &mut cnt, ReduceOp::Sum);
+                supersteps += 1;
+                if cnt[0] == 0.0 {
+                    break;
+                }
+                for &u in &members {
+                    let u_gid = (ctx.strip.row_lo + u) as u32;
+                    let lo = ctx.strip.xadj[u];
+                    let hi = ctx.strip.xadj[u + 1];
+                    ops += (hi - lo) as f64;
+                    for &v in &ctx.strip.adjncy[lo..hi] {
+                        let w = edge_weight(u_gid, v);
+                        if w <= DELTA {
+                            agg.push(ctx.owner(v as usize), &[v as f64, tent[u] + w]);
+                        }
+                    }
+                    done_light[u] = true;
+                    touched[u] = true;
+                }
+                for part in &agg.drain() {
+                    for rec in part.chunks_exact(2) {
+                        let lv = ctx.local(rec[0] as usize);
+                        ops += 1.0;
+                        if rec[1] < tent[lv] {
+                            tent[lv] = rec[1];
+                            // The drop may have pulled it (back) into the
+                            // bucket — give its light edges another round.
+                            done_light[lv] = false;
+                        }
+                    }
+                }
+            }
+            // One heavy round from everything the bucket touched, then
+            // settle those vertices: candidates land ≥ (bucket+1)·Δ, so
+            // the closed bucket can never re-open.
+            for u in 0..n_local {
+                if !touched[u] {
+                    continue;
+                }
+                let u_gid = (ctx.strip.row_lo + u) as u32;
+                let lo = ctx.strip.xadj[u];
+                let hi = ctx.strip.xadj[u + 1];
+                ops += (hi - lo) as f64;
+                for &v in &ctx.strip.adjncy[lo..hi] {
+                    let w = edge_weight(u_gid, v);
+                    if w > DELTA {
+                        agg.push(ctx.owner(v as usize), &[v as f64, tent[u] + w]);
+                    }
+                }
+                settled[u] = true;
+            }
+            for part in &agg.drain() {
+                for rec in part.chunks_exact(2) {
+                    let lv = ctx.local(rec[0] as usize);
+                    ops += 1.0;
+                    if rec[1] < tent[lv] {
+                        tent[lv] = rec[1];
+                    }
+                }
+            }
+            supersteps += 1;
+        }
+        bail!("delta-stepping exceeded the bucket cap (rank {})", ctx.rank)
+    }
+
+    fn check(&self, g: &Csr, source: usize, out: &AppOutput) -> Result<()> {
+        ensure!(out.primary.len() == g.n() && out.aux.is_empty());
+        let tent = &out.primary;
+        ensure!(tent[source] == 0.0, "source distance must be 0");
+        let reference = g.bfs(source);
+        for u in 0..g.n() {
+            if reference[u] == usize::MAX {
+                ensure!(tent[u].is_infinite(), "vertex {u} unreachable but finite distance");
+                continue;
+            }
+            ensure!(tent[u].is_finite(), "vertex {u} reachable but infinite distance");
+            // Upper bound: no edge can relax the result any further.
+            for &v in g.neighbors(u) {
+                let w = edge_weight(u as u32, v);
+                ensure!(
+                    tent[v as usize] <= tent[u] + w,
+                    "edge ({u},{v}) violates the triangle inequality"
+                );
+            }
+            // Lower bound: the distance is realized by some incoming edge.
+            if u != source {
+                let tight = g.neighbors(u).iter().any(|&v| {
+                    tent[v as usize].is_finite()
+                        && tent[v as usize] + edge_weight(u as u32, v) == tent[u]
+                });
+                ensure!(tight, "vertex {u} has no tight predecessor");
+            }
+        }
+        Ok(())
+    }
+}

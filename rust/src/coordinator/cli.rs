@@ -8,13 +8,16 @@
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
 //!                    [--layout ell|sellcs]
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve|apps
 //!                    [--overlap on|off] [--layout ell|sellcs]
 //!                    [--out results/harness] [--workers N] [--verbose]
+//! hetpart app        --app bfs|sssp|pagerank [--agg on|off] [--backend sim|threads]
+//!                    [--ranks 4] [--buffer-bytes 16384] [--source 0]
+//!                    [--family tri2d --n 900 --seed 42]
 //! hetpart serve      --duration 5 --arrival-rate 50 --seed 1
 //!                    [--family tri2d --n 800 --k 8 --preset uniform --algo geoKM]
 //!                    [--backend threads|sim] [--workers N] [--queue-cap 64]
-//!                    [--out results/serve/summary.json]
+//!                    [--cache-cap N] [--out results/serve/summary.json]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
@@ -44,6 +47,7 @@ pub fn main() {
         "harness" => cmd_harness(&args),
         "repart" => cmd_repart(&args),
         "serve" => cmd_serve(&args),
+        "app" => cmd_app(&args),
         "version" => {
             println!("hetpart {}", super::version());
             0
@@ -80,10 +84,11 @@ SUBCOMMANDS
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic|partdist|serve — partdist sweeps the distributed
-               partitioners over backend/rank axes for the quality-vs-
-               partition-time scatter; serve replays open-loop serving
-               traces through the resident partition service;
+               |dynamic|partdist|serve|apps — partdist sweeps the
+               distributed partitioners over backend/rank axes for the
+               quality-vs-partition-time scatter; serve replays open-loop
+               serving traces through the resident partition service;
+               apps sweeps the irregular kernels × aggregation × backend;
                --overlap on flips every scenario's overlap axis,
                --layout sellcs flips the SpMV-layout axis, --out DIR,
                --workers N, --verbose prints every run)
@@ -99,8 +104,16 @@ SUBCOMMANDS
                (--duration S --arrival-rate λ --seed S, --backend
                 threads|sim — threads measures wall-clock latencies,
                 sim replays in deterministic virtual time; --workers N,
-                --queue-cap C bounds admission, --out FILE writes the
+                --queue-cap C bounds admission, --cache-cap N bounds the
+                resident caches with LRU eviction, --out FILE writes the
                 summary JSON)
+  app          run one irregular graph kernel on the virtual cluster
+               through the aggregating message layer
+               (--app bfs|sssp|pagerank, --agg on|off switches bulk
+                aggregation vs one exchange per superstep — results are
+                bit-identical; --backend sim|threads, --ranks N,
+                --buffer-bytes B sizes the per-destination flush buffers,
+                --source V for the traversal kernels)
   version      print version
 
 COMMON OPTIONS
@@ -265,7 +278,7 @@ fn cmd_harness(args: &Args) -> i32 {
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
         eprintln!(
-            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve)"
+            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve|apps)"
         );
         return 2;
     };
@@ -487,6 +500,9 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     cfg.servers = args.get("workers", cfg.servers);
     cfg.queue_cap = args.get("queue-cap", cfg.queue_cap);
+    // 0 (or absent) keeps the historical unbounded caches.
+    let cache_cap = args.get("cache-cap", 0usize);
+    cfg.cache_cap = if cache_cap == 0 { None } else { Some(cache_cap) };
     println!(
         "serve: {} tenants over {}_{} preset {} k={} | λ={}/s for {}s (seed {}) | \
          backend {} x{} workers, queue cap {}",
@@ -535,6 +551,86 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     }
+    0
+}
+
+/// `hetpart app`: run one irregular graph kernel (`apps::by_name`) over
+/// the generated instance on the virtual cluster, through the
+/// aggregating (or direct) message layer, and print the cost/traffic
+/// table plus the result digest.
+fn cmd_app(args: &Args) -> i32 {
+    use crate::apps::{by_name, run_app, AppConfig};
+    use crate::exec::AggMode;
+    let app_name: String = args.get("app", "bfs".to_string());
+    let Some(kernel) = by_name(&app_name) else {
+        eprintln!("unknown --app {app_name} (expected {})", crate::apps::APP_NAMES.join("|"));
+        return 2;
+    };
+    let agg_name: String = args.get("agg", "on".to_string());
+    let Some(mode) = AggMode::parse(&agg_name) else {
+        eprintln!("unknown --agg {agg_name} (expected on|off)");
+        return 2;
+    };
+    let backend_name: String = args.get("backend", "sim".to_string());
+    let Some(backend) = crate::exec::ExecBackend::parse(&backend_name) else {
+        eprintln!("unknown --backend {backend_name} (expected sim|threads)");
+        return 2;
+    };
+    let (name, g) = load_graph(args);
+    let mut cfg = AppConfig {
+        backend,
+        ranks: args.get("ranks", 4usize),
+        mode,
+        source: args.get("source", 0usize),
+        seed: args.get("seed", 1u64),
+        ..AppConfig::default()
+    };
+    cfg.buffer_bytes = args.get("buffer-bytes", cfg.buffer_bytes);
+    println!(
+        "graph {name}: n={} m={} | app {} | {} messaging (buffer {} B) | backend {} x{} ranks",
+        g.n(),
+        g.m(),
+        kernel.name(),
+        cfg.mode.name(),
+        cfg.buffer_bytes,
+        backend.name(),
+        cfg.ranks,
+    );
+    let (_, rep) = match run_app(&g, kernel.as_ref(), &cfg) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(vec![
+        "app", "backend", "aggMode", "ranks", "iters", "flushes", "aggBytes", "maxLinkBytes",
+        "appSecs", "wall(s)",
+    ]);
+    t.row(vec![
+        rep.app.clone(),
+        rep.backend.to_string(),
+        rep.mode.name().to_string(),
+        rep.ranks.to_string(),
+        rep.iterations.to_string(),
+        rep.flushes.to_string(),
+        rep.agg_bytes.to_string(),
+        rep.max_link_bytes().to_string(),
+        format!("{:.3e}", rep.app_secs()),
+        format!("{:.3}", rep.wall_secs),
+    ]);
+    print!("{}", t.to_text());
+    let bottleneck = (0..rep.ranks)
+        .max_by(|&a, &b| {
+            let fa = rep.compute_secs[a] + rep.comm_secs[a];
+            let fb = rep.compute_secs[b] + rep.comm_secs[b];
+            fa.partial_cmp(&fb).unwrap()
+        })
+        .unwrap_or(0);
+    println!(
+        "result check passed | digest {:016x} | bottleneck rank {} (compute {:.3e}s comm {:.3e}s)",
+        rep.digest, bottleneck, rep.compute_secs[bottleneck], rep.comm_secs[bottleneck],
+    );
     0
 }
 

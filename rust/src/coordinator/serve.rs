@@ -17,7 +17,14 @@
 //!   skip the O(m) assembly, and per-tenant *current* partitions so a
 //!   repeat tenant's repartition request warm-starts increKM
 //!   ([`warm_start`]) from its previous blocks instead of re-seeding
-//!   from scratch.
+//!   from scratch. The graph/matrix/partition caches are optionally
+//!   *bounded* ([`ServeConfig::cache_cap`]) with least-recently-used
+//!   eviction, surfaced as the [`ServeReport::evictions`] counter; an
+//!   evicted entry is simply recomputed on the next request, so bounded
+//!   responses stay bit-identical to unbounded ones (only hit rates and
+//!   priced latencies move). Per-tenant *current* partitions are never
+//!   evicted — dropping them would reseed warm-start chains and change
+//!   repartition results.
 //! - [`run_serve`] — the service loop on either engine backend:
 //!   `sim` executes requests in *virtual time* against an analytic
 //!   service-cost model (FCFS over `servers` virtual servers, bounded
@@ -201,6 +208,11 @@ pub struct ServeConfig {
     /// `sim` = virtual-time deterministic serving; `threads` = real
     /// resident loop with measured latencies.
     pub backend: ExecBackend,
+    /// Bound on each resident cache (graphs, matrices, partitions):
+    /// `None` (the historical default) never evicts; `Some(cap)` evicts
+    /// the least-recently-used entry past `cap`. Responses are
+    /// bit-identical either way.
+    pub cache_cap: Option<usize>,
     /// Tenant pool; index 0 is the primary (picked with probability 0.4,
     /// the rest uniformly).
     pub tenants: Vec<Tenant>,
@@ -230,6 +242,7 @@ impl ServeConfig {
             servers: crate::coordinator::jobqueue::default_workers(),
             queue_cap: 64,
             backend,
+            cache_cap: None,
             tenants,
         }
     }
@@ -304,17 +317,84 @@ pub struct Outcome {
     pub service_secs: f64,
 }
 
+/// A tiny bounded map with least-recently-used eviction. Entries are
+/// tagged with the service-wide access tick; inserting past the cap
+/// drops the smallest-tick (stalest) entry. An unbounded map (`cap ==
+/// None`) never evicts, matching the historical behaviour.
+struct LruMap<V: Clone> {
+    cap: Option<usize>,
+    map: HashMap<u64, (u64, V)>,
+}
+
+impl<V: Clone> LruMap<V> {
+    fn new(cap: Option<usize>) -> LruMap<V> {
+        LruMap { cap, map: HashMap::new() }
+    }
+
+    /// Look up `key`, marking it most-recently used on a hit.
+    fn touch(&mut self, key: u64, now: u64) -> Option<V> {
+        self.map.get_mut(&key).map(|e| {
+            e.0 = now;
+            e.1.clone()
+        })
+    }
+
+    /// Read without refreshing recency (test seam).
+    fn peek(&self, key: u64) -> Option<&V> {
+        self.map.get(&key).map(|e| &e.1)
+    }
+
+    /// First-insert-wins insert (racing workers compute identical
+    /// values), then evict least-recently-used entries past the cap.
+    /// Returns the surviving value and how many entries were evicted.
+    /// The fresh entry carries the newest tick, so it is never the one
+    /// evicted.
+    fn insert(&mut self, key: u64, value: V, now: u64) -> (V, usize) {
+        let e = self.map.entry(key).or_insert((now, value));
+        e.0 = now;
+        let v = e.1.clone();
+        let mut evicted = 0;
+        if let Some(cap) = self.cap {
+            let cap = cap.max(1);
+            while self.map.len() > cap {
+                // O(len) scan: capped maps are small by construction.
+                let oldest = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, (tick, _))| *tick)
+                    .map(|(k, _)| *k)
+                    .expect("len > cap >= 1 implies non-empty");
+                self.map.remove(&oldest);
+                evicted += 1;
+            }
+        }
+        (v, evicted)
+    }
+}
+
 struct ServiceState {
+    /// Monotone access counter driving LRU recency.
+    tick: u64,
+    /// Entries dropped across all bounded caches.
+    evictions: usize,
     /// graph_key → (instance name, generated graph).
-    graphs: HashMap<u64, (String, Arc<Csr>)>,
+    graphs: LruMap<(String, Arc<Csr>)>,
     /// graph_key → assembled shifted-Laplacian ELL matrix (solve reuse).
-    ells: HashMap<u64, Arc<EllMatrix>>,
+    ells: LruMap<Arc<EllMatrix>>,
     /// fingerprint → cached partition (bit-identical to a fresh run).
-    cache: HashMap<u64, Arc<Partition>>,
+    cache: LruMap<Arc<Partition>>,
     /// fingerprint → the tenant's *current* partition after repartitions
     /// (warm-start seed for the next repartition; starts at the cached
-    /// base).
+    /// base). Never bounded: evicting it would reseed warm-start chains
+    /// and change repartition bits under a cap.
     current: HashMap<u64, Arc<Partition>>,
+}
+
+impl ServiceState {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
 }
 
 /// The resident service: owns every cache and handles one request at a
@@ -331,37 +411,69 @@ pub struct PartitionService {
 }
 
 impl PartitionService {
-    /// Fresh service with empty caches.
+    /// Fresh service with empty, unbounded caches.
     pub fn new(warm_workers: usize) -> PartitionService {
+        PartitionService::with_cache_cap(warm_workers, None)
+    }
+
+    /// Fresh service whose graph/matrix/partition caches are each
+    /// bounded to `cache_cap` entries with LRU eviction (`None` never
+    /// evicts). The per-tenant `current` partitions are always
+    /// unbounded.
+    pub fn with_cache_cap(
+        warm_workers: usize,
+        cache_cap: Option<usize>,
+    ) -> PartitionService {
         PartitionService {
             state: Mutex::new(ServiceState {
-                graphs: HashMap::new(),
-                ells: HashMap::new(),
-                cache: HashMap::new(),
+                tick: 0,
+                evictions: 0,
+                graphs: LruMap::new(cache_cap),
+                ells: LruMap::new(cache_cap),
+                cache: LruMap::new(cache_cap),
                 current: HashMap::new(),
             }),
             warm_workers: warm_workers.max(1),
         }
     }
 
+    /// Entries dropped from the bounded caches so far (0 when unbounded).
+    pub fn evictions(&self) -> usize {
+        self.state.lock().unwrap().evictions
+    }
+
     fn graph(&self, t: &Tenant) -> (String, Arc<Csr>) {
         let key = t.graph_key();
-        if let Some(g) = self.state.lock().unwrap().graphs.get(&key) {
-            return g.clone();
+        {
+            let mut st = self.state.lock().unwrap();
+            let now = st.next_tick();
+            if let Some(g) = st.graphs.touch(key, now) {
+                return g;
+            }
         }
         let (name, g) = instance(t.family, t.n, t.graph_seed);
         let entry = (name, Arc::new(g));
         let mut st = self.state.lock().unwrap();
-        st.graphs.entry(key).or_insert(entry).clone()
+        let now = st.next_tick();
+        let (v, evicted) = st.graphs.insert(key, entry, now);
+        st.evictions += evicted;
+        v
     }
 
     fn ell(&self, key: u64, g: &Csr) -> Arc<EllMatrix> {
-        if let Some(e) = self.state.lock().unwrap().ells.get(&key) {
-            return e.clone();
+        {
+            let mut st = self.state.lock().unwrap();
+            let now = st.next_tick();
+            if let Some(e) = st.ells.touch(key, now) {
+                return e;
+            }
         }
         let e = Arc::new(EllMatrix::from_graph(g, 0.05));
         let mut st = self.state.lock().unwrap();
-        st.ells.entry(key).or_insert(e).clone()
+        let now = st.next_tick();
+        let (v, evicted) = st.ells.insert(key, e, now);
+        st.evictions += evicted;
+        v
     }
 
     /// The tenant's base partition: cached (hit) or computed through the
@@ -373,21 +485,27 @@ impl PartitionService {
         g: &Csr,
     ) -> Result<(Arc<Partition>, bool)> {
         let fp = t.fingerprint();
-        if let Some(p) = self.state.lock().unwrap().cache.get(&fp) {
-            return Ok((p.clone(), true));
+        {
+            let mut st = self.state.lock().unwrap();
+            let now = st.next_tick();
+            if let Some(p) = st.cache.touch(fp, now) {
+                return Ok((p, true));
+            }
         }
         let topo = t.topology();
         let (_r, part) = run_one(name, g, &topo, &t.algo, t.epsilon, t.graph_seed)?;
         let part = Arc::new(part);
         let mut st = self.state.lock().unwrap();
-        let p = st.cache.entry(fp).or_insert(part).clone();
+        let now = st.next_tick();
+        let (p, evicted) = st.cache.insert(fp, part, now);
+        st.evictions += evicted;
         Ok((p, false))
     }
 
     /// The cached partition for a tenant, if any (test seam for the
-    /// bit-identity pin).
+    /// bit-identity pin). Does not refresh LRU recency.
     pub fn cached_partition(&self, t: &Tenant) -> Option<Arc<Partition>> {
-        self.state.lock().unwrap().cache.get(&t.fingerprint()).cloned()
+        self.state.lock().unwrap().cache.peek(t.fingerprint()).cloned()
     }
 
     /// Handle one request (synchronously, on the calling thread).
@@ -515,6 +633,8 @@ pub struct ServeReport {
     pub mean_migrated_frac: f64,
     /// End of the last completion (virtual or wall seconds).
     pub makespan_secs: f64,
+    /// Cache entries the service evicted (0 when caches are unbounded).
+    pub evictions: usize,
     /// Per-request records, in arrival order.
     pub records: Vec<ReqRecord>,
 }
@@ -524,6 +644,7 @@ fn assemble_report(
     offered: usize,
     records: Vec<ReqRecord>,
     makespan_secs: f64,
+    evictions: usize,
 ) -> ServeReport {
     let rejected = records.iter().filter(|r| r.rejected).count();
     let completed = records.len() - rejected;
@@ -550,6 +671,7 @@ fn assemble_report(
         latency_mean_ms: if lat.is_empty() { 0.0 } else { mean(&lat) * 1e3 },
         mean_migrated_frac: if migs.is_empty() { 0.0 } else { mean(&migs) },
         makespan_secs,
+        evictions,
         records,
     }
 }
@@ -575,6 +697,7 @@ impl ServeReport {
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
             ("mean_migrated_frac", Json::Num(self.mean_migrated_frac)),
             ("makespan_secs", Json::Num(self.makespan_secs)),
+            ("evictions", Json::Num(self.evictions as f64)),
         ])
     }
 
@@ -582,7 +705,8 @@ impl ServeReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(vec![
             "backend", "offered", "completed", "rejected", "hits", "cacheHit", "warm",
-            "reqPerSec", "p50(ms)", "p95(ms)", "p99(ms)", "mean(ms)", "makespan(s)",
+            "evictions", "reqPerSec", "p50(ms)", "p95(ms)", "p99(ms)", "mean(ms)",
+            "makespan(s)",
         ]);
         t.row(vec![
             self.backend.to_string(),
@@ -592,6 +716,7 @@ impl ServeReport {
             self.hits.to_string(),
             format!("{:.3}", self.cache_hit_rate),
             self.warm_starts.to_string(),
+            self.evictions.to_string(),
             format!("{:.1}", self.req_per_sec),
             format!("{:.3}", self.latency_p50_ms),
             format!("{:.3}", self.latency_p95_ms),
@@ -612,14 +737,16 @@ pub fn run_serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let trace = generate_trace(cfg);
     match cfg.backend {
         ExecBackend::Sim => {
-            let service =
-                PartitionService::new(crate::coordinator::jobqueue::default_workers());
+            let service = PartitionService::with_cache_cap(
+                crate::coordinator::jobqueue::default_workers(),
+                cfg.cache_cap,
+            );
             run_serve_sim(cfg, &service, &trace)
         }
         ExecBackend::Threads => {
             // Serve workers own the cores; warm starts stay single-
             // threaded inside each worker (deterministic either way).
-            let service = PartitionService::new(1);
+            let service = PartitionService::with_cache_cap(1, cfg.cache_cap);
             run_serve_threads(cfg, &service, &trace)
         }
     }
@@ -682,7 +809,7 @@ fn run_serve_sim(
             rejected: false,
         });
     }
-    Ok(assemble_report("sim", trace.len(), records, makespan))
+    Ok(assemble_report("sim", trace.len(), records, makespan, service.evictions()))
 }
 
 /// Real-time serving: the leader paces the arrival schedule and runs
@@ -776,7 +903,7 @@ fn run_serve_threads(
     ensure!(errors.is_empty(), "serve loop failures: {}", errors.join("; "));
     let mut records = records.into_inner().unwrap();
     records.sort_by_key(|r| r.id);
-    Ok(assemble_report("threads", trace.len(), records, makespan))
+    Ok(assemble_report("threads", trace.len(), records, makespan, service.evictions()))
 }
 
 #[cfg(test)]
@@ -925,7 +1052,7 @@ mod tests {
                 rejected: false,
             },
         ];
-        let rep = assemble_report("sim", 3, records, 2.0);
+        let rep = assemble_report("sim", 3, records, 2.0, 0);
         assert_eq!(rep.completed, 2);
         assert_eq!(rep.rejected, 1);
         assert_eq!(rep.hits, 1);
@@ -936,5 +1063,61 @@ mod tests {
         // drags the percentiles down.
         assert!((rep.latency_p50_ms - 20.0).abs() < 1e-9, "{}", rep.latency_p50_ms);
         assert!((rep.latency_mean_ms - 20.0).abs() < 1e-9);
+        assert_eq!(rep.evictions, 0);
+    }
+
+    #[test]
+    fn lru_cap_of_one_keeps_responses_bit_identical() {
+        let a = tiny_tenant();
+        let mut b = tiny_tenant();
+        b.algo = "zSFC".to_string(); // shares a's graph, separate partition
+        let req = |id: usize, tenant: &Tenant| Request {
+            id,
+            arrival: id as f64 * 0.01,
+            tenant: tenant.clone(),
+            kind: RequestKind::Partition,
+            drift: 0.0,
+        };
+        let unbounded = PartitionService::new(1);
+        let capped = PartitionService::with_cache_cap(1, Some(1));
+        for svc in [&unbounded, &capped] {
+            // A, B, A: under cap 1 the second A is recomputed after B
+            // evicted it; under no cap it is a hit.
+            svc.handle(&req(0, &a)).unwrap();
+            svc.handle(&req(1, &b)).unwrap();
+            let out = svc.handle(&req(2, &a)).unwrap();
+            assert_eq!(out.hit, std::ptr::eq(svc, &unbounded));
+        }
+        assert_eq!(unbounded.evictions(), 0);
+        // B evicted A's partition, then A's recompute evicted B's.
+        assert!(capped.evictions() >= 2, "evictions {}", capped.evictions());
+        // The recomputed partition carries exactly the bits the unbounded
+        // cache held all along.
+        let fresh = capped.cached_partition(&a).expect("a recomputed and cached");
+        let kept = unbounded.cached_partition(&a).expect("a cached");
+        assert_eq!(fresh.assignment, kept.assignment);
+    }
+
+    #[test]
+    fn serving_under_a_cache_cap_changes_hits_not_results() {
+        let base = tiny_config();
+        let mut capped = tiny_config();
+        capped.cache_cap = Some(1);
+        let r1 = run_serve(&base).unwrap();
+        let r2 = run_serve(&capped).unwrap();
+        assert_eq!(r1.evictions, 0);
+        assert!(r2.evictions > 0, "cap 1 with 3 tenants must evict");
+        assert!(r2.hits < r1.hits, "evictions must cost cache hits");
+        // Same offered trace, and every request resolves to the same
+        // answer: only latency/hit bookkeeping may move.
+        assert_eq!(r1.offered, r2.offered);
+        assert_eq!(r1.rejected, 0);
+        assert_eq!(r2.rejected, 0);
+        for (x, y) in r1.records.iter().zip(&r2.records) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.warm, y.warm);
+            assert_eq!(x.migrated_frac.to_bits(), y.migrated_frac.to_bits());
+        }
     }
 }

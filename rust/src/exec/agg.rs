@@ -1,0 +1,325 @@
+//! Aggregating message layer over the [`Comm`] seam (Bale's convey
+//! protocol).
+//!
+//! Irregular graph kernels generate torrents of tiny records — a BFS
+//! frontier expansion, a delta-stepping relaxation, a PageRank
+//! contribution — each a handful of words addressed to whichever rank
+//! owns the target vertex. Shipping them one at a time pays the α
+//! latency per message; the whole point of Bale/Conveyor-style
+//! aggregation is to pay α once per *buffer* instead. [`AggComm`] is
+//! that layer: callers [`AggComm::push`] fixed-size records into
+//! per-destination buffers, and [`AggComm::drain`] flushes them as bulk
+//! `alltoallv` exchanges at the epoch boundary.
+//!
+//! # Flush protocol
+//!
+//! A flush is a collective (`alltoallv` needs every rank), so a rank
+//! whose buffer fills cannot flush unilaterally. Instead [`drain`]
+//! agrees on a global round count — one `allreduce` max of
+//! `ceil(buffered records / capacity)` — and every rank then performs
+//! exactly that many `alltoallv` flushes, each carrying at most
+//! `buffer_bytes` per destination (ranks whose buffers ran dry
+//! contribute empty parts). [`AggMode::Direct`] is the degenerate
+//! capacity of **one record per destination per flush**: every record
+//! becomes its own exchange round, which is exactly the unaggregated
+//! message-per-edge baseline the aggregation win is measured against.
+//!
+//! # Pricing and bit-identity
+//!
+//! The transports price/measure flushes with no new seams: on `SimComm`
+//! each flush is one `alltoallv` charge — α per peer plus β for every
+//! byte — so a buffer of B records costs `(k−1)·α + β·bytes` where the
+//! direct mode pays `B·(k−1)·α + β·bytes`; on `ThreadComm` each flush
+//! is a real rendezvous, so direct mode's extra rounds are measured
+//! wall-clock waits. Delivered data is **bit-identical across modes and
+//! backends**: a receiver always sees, per source rank, that source's
+//! records in push order (chunking only splits the concatenation,
+//! `alltoallv` preserves both the per-source grouping and the order
+//! within each part).
+//!
+//! [`drain`]: AggComm::drain
+
+use super::comm::{Comm, ReduceOp};
+
+/// Aggregation mode of an [`AggComm`]: the only knob that separates the
+/// amortized transport from the message-per-record baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggMode {
+    /// Buffer records and flush at most `buffer_bytes` per destination
+    /// per exchange round (the aggregating default).
+    #[default]
+    Agg,
+    /// One record per destination per exchange round — the unaggregated
+    /// baseline (`--agg off`).
+    Direct,
+}
+
+impl AggMode {
+    /// Parse a CLI mode (`on`/`agg` aggregate, `off`/`direct` do not).
+    pub fn parse(s: &str) -> Option<AggMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" | "agg" | "true" | "1" => Some(AggMode::Agg),
+            "off" | "direct" | "false" | "0" => Some(AggMode::Direct),
+            _ => None,
+        }
+    }
+
+    /// Canonical mode name (`"agg"` / `"direct"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggMode::Agg => "agg",
+            AggMode::Direct => "direct",
+        }
+    }
+}
+
+/// Traffic counters of one rank's [`AggComm`] (all counters exclude
+/// self-destined records, which never touch the wire).
+#[derive(Debug, Clone, Default)]
+pub struct AggStats {
+    /// Exchange rounds (`alltoallv` calls) performed by [`AggComm::drain`].
+    pub flushes: usize,
+    /// Records pushed to other ranks.
+    pub records: usize,
+    /// Bytes shipped to other ranks (8 per word).
+    pub bytes_sent: usize,
+    /// Bytes shipped per destination rank (the rank's row of the link
+    /// matrix behind the `maxLinkBytes` bottleneck metric).
+    pub bytes_to: Vec<usize>,
+}
+
+/// Per-rank aggregating endpoint: buffers fixed-size records per
+/// destination and flushes them through the wrapped transport's
+/// `alltoallv`. One instance per rank thread; [`AggComm::drain`] is a
+/// collective and must be called by every rank in the same sequence
+/// (the rendezvous contract of the underlying [`Comm`]).
+pub struct AggComm<'a> {
+    comm: &'a dyn Comm,
+    rank: usize,
+    /// Words per record (fixed per kernel; pushes are length-checked).
+    rec_words: usize,
+    /// Records per destination per flush (1 in direct mode).
+    cap_records: usize,
+    /// Per-destination outgoing buffers (encoded records, back to back).
+    bufs: Vec<Vec<f64>>,
+    /// Traffic counters.
+    stats: AggStats,
+}
+
+impl<'a> AggComm<'a> {
+    /// New endpoint for `rank` pushing `rec_words`-word records. In
+    /// [`AggMode::Agg`], each destination flushes up to `buffer_bytes`
+    /// per round (at least one record); [`AggMode::Direct`] ignores
+    /// `buffer_bytes` and flushes one record per destination per round.
+    pub fn new(
+        comm: &'a dyn Comm,
+        rank: usize,
+        mode: AggMode,
+        rec_words: usize,
+        buffer_bytes: usize,
+    ) -> AggComm<'a> {
+        assert!(rec_words >= 1, "records must carry at least one word");
+        let cap_records = match mode {
+            AggMode::Agg => (buffer_bytes / (8 * rec_words)).max(1),
+            AggMode::Direct => 1,
+        };
+        let k = comm.k();
+        AggComm {
+            comm,
+            rank,
+            rec_words,
+            cap_records,
+            bufs: vec![Vec::new(); k],
+            stats: AggStats { bytes_to: vec![0; k], ..AggStats::default() },
+        }
+    }
+
+    /// Rank count of the wrapped transport.
+    pub fn k(&self) -> usize {
+        self.comm.k()
+    }
+
+    /// Buffer one record for `dest`. Purely local: nothing moves until
+    /// the next [`AggComm::drain`]. `rec` must be exactly the record
+    /// width this endpoint was built with.
+    pub fn push(&mut self, dest: usize, rec: &[f64]) {
+        assert_eq!(rec.len(), self.rec_words, "record width mismatch");
+        self.bufs[dest].extend_from_slice(rec);
+        if dest != self.rank {
+            self.stats.records += 1;
+        }
+    }
+
+    /// Records currently buffered (all destinations).
+    pub fn buffered_records(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum::<usize>() / self.rec_words
+    }
+
+    /// Collective epoch boundary: agree on the global round count, flush
+    /// every buffered record, and return the received words grouped by
+    /// source rank (each source's records in its push order — the order
+    /// is independent of mode, backend, and buffer size).
+    pub fn drain(&mut self) -> Vec<Vec<f64>> {
+        let k = self.comm.k();
+        let chunk_words = self.cap_records * self.rec_words;
+        let local_rounds = self
+            .bufs
+            .iter()
+            .map(|b| b.len().div_ceil(chunk_words))
+            .max()
+            .unwrap_or(0);
+        let mut v = [local_rounds as f64];
+        self.comm.allreduce_vec(self.rank, &mut v, ReduceOp::Max);
+        let rounds = v[0] as usize;
+        let mut recv: Vec<Vec<f64>> = vec![Vec::new(); k];
+        for round in 0..rounds {
+            let parts: Vec<Vec<f64>> = self
+                .bufs
+                .iter()
+                .map(|b| {
+                    let lo = (round * chunk_words).min(b.len());
+                    let hi = ((round + 1) * chunk_words).min(b.len());
+                    b[lo..hi].to_vec()
+                })
+                .collect();
+            for (d, p) in parts.iter().enumerate() {
+                if d != self.rank {
+                    self.stats.bytes_sent += 8 * p.len();
+                    self.stats.bytes_to[d] += 8 * p.len();
+                }
+            }
+            let out = self.comm.alltoallv(self.rank, &parts);
+            for (src, part) in out.into_iter().enumerate() {
+                recv[src].extend(part);
+            }
+            self.stats.flushes += 1;
+        }
+        for b in &mut self.bufs {
+            b.clear();
+        }
+        recv
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> &AggStats {
+        &self.stats
+    }
+
+    /// Words per record.
+    pub fn rec_words(&self) -> usize {
+        self.rec_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{CostModel, ExchangePlan, SimComm, ThreadComm};
+    use std::sync::{Arc, Mutex};
+
+    fn on_ranks<R: Send>(k: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        let slots: Vec<Mutex<Option<R>>> = (0..k).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for (rank, slot) in slots.iter().enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    *slot.lock().unwrap() = Some(f(rank));
+                });
+            }
+        });
+        slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+    }
+
+    /// Each rank pushes (rank·16 + i) records round-robin; receivers must
+    /// see per-source push order regardless of mode/backend/buffer size.
+    fn exchange(comm: &dyn Comm, k: usize, mode: AggMode, buffer_bytes: usize) -> Vec<Vec<Vec<f64>>> {
+        on_ranks(k, |rank| {
+            let mut agg = AggComm::new(comm, rank, mode, 2, buffer_bytes);
+            for i in 0..(rank + 2) * 3 {
+                let dest = i % k;
+                agg.push(dest, &[(rank * 100 + i) as f64, i as f64]);
+            }
+            agg.drain()
+        })
+    }
+
+    #[test]
+    fn modes_and_buffer_sizes_deliver_identically() {
+        for k in [1usize, 2, 4] {
+            let plan = Arc::new(ExchangePlan::collectives_only(k));
+            let sim = SimComm::new(plan.clone(), CostModel::default());
+            let want = exchange(&sim, k, AggMode::Agg, 1 << 16);
+            for (mode, bytes) in
+                [(AggMode::Agg, 64), (AggMode::Agg, 16), (AggMode::Direct, 1 << 16)]
+            {
+                let sim2 = SimComm::new(plan.clone(), CostModel::default());
+                assert_eq!(exchange(&sim2, k, mode, bytes), want, "k={k} {mode:?} {bytes}");
+                let thr = ThreadComm::new(plan.clone());
+                assert_eq!(exchange(&thr, k, mode, bytes), want, "threads k={k} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_mode_pays_more_alpha_than_agg() {
+        let k = 4;
+        let run = |mode: AggMode| {
+            let plan = Arc::new(ExchangePlan::collectives_only(k));
+            let sim = SimComm::new(plan, CostModel::default());
+            exchange(&sim, k, mode, 1 << 16);
+            sim.comm_secs().iter().sum::<f64>()
+        };
+        let agg = run(AggMode::Agg);
+        let direct = run(AggMode::Direct);
+        assert!(
+            direct > agg,
+            "direct priced comm {direct} must exceed aggregated {agg}"
+        );
+    }
+
+    #[test]
+    fn stats_count_off_rank_traffic_only() {
+        let k = 2;
+        let plan = Arc::new(ExchangePlan::collectives_only(k));
+        let sim = SimComm::new(plan, CostModel::default());
+        let stats = on_ranks(k, |rank| {
+            let mut agg = AggComm::new(&sim, rank, AggMode::Agg, 3, 1 << 16);
+            agg.push(rank, &[1.0, 2.0, 3.0]); // self: free
+            agg.push(1 - rank, &[4.0, 5.0, 6.0]);
+            agg.drain();
+            agg.stats().clone()
+        });
+        for (rank, s) in stats.iter().enumerate() {
+            assert_eq!(s.records, 1, "rank {rank}");
+            assert_eq!(s.bytes_sent, 24, "rank {rank}");
+            assert_eq!(s.bytes_to[rank], 0, "self link must stay empty");
+            assert_eq!(s.bytes_to[1 - rank], 24);
+            assert_eq!(s.flushes, 1);
+        }
+    }
+
+    #[test]
+    fn empty_drain_performs_no_flush() {
+        let k = 2;
+        let plan = Arc::new(ExchangePlan::collectives_only(k));
+        let sim = SimComm::new(plan, CostModel::default());
+        let stats = on_ranks(k, |rank| {
+            let mut agg = AggComm::new(&sim, rank, AggMode::Agg, 2, 1 << 16);
+            let recv = agg.drain();
+            assert!(recv.iter().all(|p| p.is_empty()));
+            agg.stats().flushes
+        });
+        assert_eq!(stats, vec![0, 0]);
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        assert_eq!(AggMode::parse("on"), Some(AggMode::Agg));
+        assert_eq!(AggMode::parse("agg"), Some(AggMode::Agg));
+        assert_eq!(AggMode::parse("off"), Some(AggMode::Direct));
+        assert_eq!(AggMode::parse("direct"), Some(AggMode::Direct));
+        assert_eq!(AggMode::parse("nope"), None);
+        assert_eq!(AggMode::Agg.name(), "agg");
+        assert_eq!(AggMode::Direct.name(), "direct");
+    }
+}

@@ -36,7 +36,15 @@
 //! partitioning time per rank ([`DistPartReport`]) — the paper's
 //! quality-vs-partitioning-time axis. Distributed partitions are
 //! bit-identical to their sequential counterparts at every rank count.
+//!
+//! On top of the collectives sits the aggregating message layer
+//! ([`AggComm`], Bale's convey protocol): irregular kernels push tiny
+//! fixed-size records per destination rank and the layer flushes them
+//! as bulk `alltoallv` exchanges, amortizing the α latency across the
+//! whole buffer — with a `direct` baseline mode ([`AggMode`]) so the
+//! aggregation win is measurable on both transports.
 
+mod agg;
 mod cluster;
 mod comm;
 mod partition;
@@ -47,6 +55,7 @@ pub use cluster::{
 // Re-exported so engine consumers name the layout axis without reaching
 // into `solver::sell`.
 pub use crate::solver::SpmvLayout;
+pub use agg::{AggComm, AggMode, AggStats};
 pub use partition::{run_dist_partition, DistPartReport};
 pub use comm::{
     Comm, CommRequest, CostModel, ExchangePlan, ReduceOp, SendSegment, SimComm, ThreadComm,

@@ -281,6 +281,7 @@ mod tests {
                 part_backend: None,
                 part_ranks: 0,
                 serve: None,
+                app: None,
             },
             n: 100,
             m: 180,
@@ -298,6 +299,7 @@ mod tests {
             part_secs: None,
             dynamic: None,
             serve: None,
+            app: None,
         }
     }
 

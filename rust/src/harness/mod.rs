@@ -8,7 +8,7 @@
 //!   plus a `dynamic` axis for multi-epoch repartitioning traces);
 //!   [`MatrixKind`](scenario::MatrixKind) registers the named sweeps
 //!   (`smoke`, `paper-small`, `paper-full`, `dynamic`, `partdist`,
-//!   `serve`) reachable via `hetpart harness --matrix <name>`;
+//!   `serve`, `apps`) reachable via `hetpart harness --matrix <name>`;
 //! - [`runner`] — executes a matrix in parallel and writes structured
 //!   artifacts (CSV + JSON per run, per-partitioner geomean summaries);
 //! - [`golden`] — compares a deterministic matrix against checked-in
@@ -36,10 +36,12 @@ pub mod scenario;
 pub use bench_snapshot::{BenchSnapshot, Fingerprint, KernelEntry};
 pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
 pub use runner::{
-    run_matrix, run_scenario, summarize, write_artifacts, DynamicSummary, ScenarioResult,
-    ServeSummary,
+    run_matrix, run_scenario, summarize, write_artifacts, AppSummary, DynamicSummary,
+    ScenarioResult, ServeSummary,
 };
-pub use scenario::{alg1_targets, MatrixKind, Scenario, ServeSpec, TopoPreset, ALL_PRESETS};
+pub use scenario::{
+    alg1_targets, AppSpec, MatrixKind, Scenario, ServeSpec, TopoPreset, ALL_PRESETS,
+};
 
 use crate::util::table::Table;
 

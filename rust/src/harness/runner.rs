@@ -9,7 +9,8 @@
 //!   Algorithm-1 optimum), plus cut and volume relative to geoKM on the
 //!   same (graph, topology) cell, as the paper reports (Figs. 2–4).
 
-use super::scenario::{Scenario, ServeSpec};
+use super::scenario::{AppSpec, Scenario, ServeSpec};
+use crate::apps::{by_name as app_by_name, run_app, AppConfig};
 use crate::coordinator::serve::{run_serve, ServeConfig, Tenant};
 use crate::coordinator::{instance, run_jobs, run_one, run_solve_opts};
 use crate::exec::{ExecBackend, SolveOpts};
@@ -70,6 +71,37 @@ pub struct ScenarioResult {
     /// otherwise). Deterministic: the axis runs on the virtual-time
     /// backend.
     pub serve: Option<ServeSummary>,
+    /// Application-kernel aggregates for scenarios on the app axis (None
+    /// otherwise — the historical CG-only pipeline).
+    pub app: Option<AppSummary>,
+}
+
+/// Aggregates of one irregular-kernel run (`apps::run_app`) — the
+/// columns the harness surfaces for `--matrix apps` scenarios.
+#[derive(Debug, Clone)]
+pub struct AppSummary {
+    /// Kernel name (`bfs`/`sssp`/`pagerank`).
+    pub app: String,
+    /// Message-layer mode (`agg`/`direct`).
+    pub agg_mode: &'static str,
+    /// Engine backend the kernel ran on (`sim`/`threads`).
+    pub backend: &'static str,
+    /// Virtual-cluster rank count.
+    pub ranks: usize,
+    /// Supersteps the kernel executed.
+    pub iterations: usize,
+    /// `alltoallv` exchange rounds through the aggregation layer.
+    pub flushes: usize,
+    /// Total off-rank bytes shipped through the aggregation layer.
+    pub agg_bytes: usize,
+    /// Bytes over the most-congested ordered rank pair (the
+    /// bottleneck-link metric).
+    pub max_link_bytes: usize,
+    /// Kernel makespan: slowest rank's compute + comm seconds (priced on
+    /// `sim`, measured on `threads`).
+    pub app_secs: f64,
+    /// Result digest — bit-identical across modes/backends/rank counts.
+    pub digest: u64,
 }
 
 /// Aggregates of one serving trace (`coordinator::serve`) — the columns
@@ -127,6 +159,11 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
             "scenario {}: the serve axis applies to static scenarios only",
             s.id()
         );
+        anyhow::ensure!(
+            s.app.is_none(),
+            "scenario {}: the app axis applies to static scenarios only",
+            s.id()
+        );
         return run_dynamic_scenario(s, g);
     }
     let topo = s.topology();
@@ -177,6 +214,12 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
             run_serve_axis(s, spec).with_context(|| format!("serve axis for {}", s.id()))?,
         ),
     };
+    let app = match &s.app {
+        None => None,
+        Some(spec) => Some(
+            run_app_axis(spec, g).with_context(|| format!("app axis for {}", s.id()))?,
+        ),
+    };
     Ok(ScenarioResult {
         scenario: s.clone(),
         n: g.n(),
@@ -195,6 +238,36 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         part_secs,
         dynamic: None,
         serve,
+        app,
+    })
+}
+
+/// Run the scenario's irregular kernel over the generated instance on
+/// the virtual cluster, reducing the report to the harness's app
+/// columns. The kernel runs over plain row strips of the instance (the
+/// partition under study is orthogonal: this axis measures the
+/// *transport*, aggregated vs direct).
+fn run_app_axis(spec: &AppSpec, g: &Csr) -> Result<AppSummary> {
+    let kernel =
+        app_by_name(&spec.kernel).ok_or_else(|| anyhow!("unknown app kernel {}", spec.kernel))?;
+    let cfg = AppConfig {
+        backend: spec.backend,
+        ranks: spec.ranks,
+        mode: spec.agg,
+        ..AppConfig::default()
+    };
+    let (_, rep) = run_app(g, kernel.as_ref(), &cfg)?;
+    Ok(AppSummary {
+        app: rep.app.clone(),
+        agg_mode: rep.mode.name(),
+        backend: rep.backend,
+        ranks: rep.ranks,
+        iterations: rep.iterations,
+        flushes: rep.flushes,
+        agg_bytes: rep.agg_bytes,
+        max_link_bytes: rep.max_link_bytes(),
+        app_secs: rep.app_secs(),
+        digest: rep.digest,
     })
 }
 
@@ -282,6 +355,7 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
             worst_obj_vs_scratch: res.worst_obj_vs_scratch(),
         }),
         serve: None,
+        app: None,
     })
 }
 
@@ -412,7 +486,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
         "partBackend", "partRanks", "partSecs(ms)", "simT/iter(ms)", "residual", "overlap",
         "layout", "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
         "objVsScratch", "reqs", "reqPerSec", "latP50(ms)", "latP95(ms)", "latP99(ms)",
-        "cacheHit", "rejected",
+        "cacheHit", "rejected", "app", "aggMode", "flushes", "aggBytes", "maxLinkBytes",
+        "appSecs(ms)",
     ]);
     for r in results {
         let s = &r.scenario;
@@ -461,6 +536,26 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                     v.rejected.to_string(),
                 ),
             };
+        // The app column defaults to "cg": every historical scenario
+        // exercises the partition through the CG/solve pipeline.
+        let (app, agg_mode, flushes, agg_bytes, max_link, app_secs) = match &r.app {
+            None => (
+                "cg".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ),
+            Some(a) => (
+                a.app.clone(),
+                a.agg_mode.to_string(),
+                a.flushes.to_string(),
+                a.agg_bytes.to_string(),
+                a.max_link_bytes.to_string(),
+                format!("{:.6}", a.app_secs * 1e3),
+            ),
+        };
         t.row(vec![
             s.id(),
             s.family.name().to_string(),
@@ -512,6 +607,12 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             lat_p99,
             cache_hit,
             rejected,
+            app,
+            agg_mode,
+            flushes,
+            agg_bytes,
+            max_link,
+            app_secs,
         ]);
     }
     t
@@ -629,6 +730,25 @@ pub fn result_json(r: &ScenarioResult) -> Json {
                 ]),
             },
         ),
+        (
+            "app",
+            match &r.app {
+                None => Json::Null,
+                Some(a) => obj(vec![
+                    ("kernel", Json::Str(a.app.clone())),
+                    ("agg_mode", Json::Str(a.agg_mode.to_string())),
+                    ("backend", Json::Str(a.backend.to_string())),
+                    ("ranks", Json::Num(a.ranks as f64)),
+                    ("iterations", Json::Num(a.iterations as f64)),
+                    ("flushes", Json::Num(a.flushes as f64)),
+                    ("agg_bytes", Json::Num(a.agg_bytes as f64)),
+                    ("max_link_bytes", Json::Num(a.max_link_bytes as f64)),
+                    ("app_secs", Json::Num(a.app_secs)),
+                    // u64 digests don't fit f64 exactly; hex keeps bits.
+                    ("digest", Json::Str(format!("{:016x}", a.digest))),
+                ]),
+            },
+        ),
     ])
 }
 
@@ -724,6 +844,7 @@ mod tests {
                 part_backend: None,
                 part_ranks: 0,
                 serve: None,
+                app: None,
             })
             .collect()
     }
@@ -884,6 +1005,56 @@ mod tests {
     }
 
     #[test]
+    fn app_axis_populates_columns_and_round_trips() {
+        use crate::exec::AggMode;
+        let mut s = tiny_scenarios();
+        s.truncate(1);
+        s[0].app = Some(AppSpec {
+            kernel: "bfs".into(),
+            agg: AggMode::Agg,
+            backend: ExecBackend::Sim,
+            ranks: 2,
+        });
+        assert!(s[0].id().ends_with("-appbfs-aggsimR2"), "{}", s[0].id());
+        let (ok, failed) = run_matrix(&s, 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        let a = ok[0].app.as_ref().expect("app summary missing");
+        assert_eq!(a.app, "bfs");
+        assert_eq!(a.agg_mode, "agg");
+        assert_eq!(a.ranks, 2);
+        assert!(a.iterations > 0);
+        assert!(a.flushes > 0);
+        assert!(a.agg_bytes > 0, "a 2-rank BFS must cross the strip boundary");
+        assert!(a.max_link_bytes > 0 && a.max_link_bytes <= a.agg_bytes);
+        assert!(a.app_secs > 0.0);
+        // Quality columns still come from the one-shot pipeline.
+        assert!(ok[0].cut > 0.0);
+        // The table renders the app columns...
+        let table = runs_table(&ok);
+        let ai = table.header.iter().position(|h| h == "app").unwrap();
+        assert_eq!(table.rows[0][ai], "bfs");
+        let mi = table.header.iter().position(|h| h == "maxLinkBytes").unwrap();
+        assert_ne!(table.rows[0][mi], "-");
+        // ...and the JSON carries the app block.
+        let back = Json::parse(&result_json(&ok[0]).render()).unwrap();
+        let aj = back.get("app").unwrap();
+        assert_eq!(aj.get("kernel").unwrap().as_str().unwrap(), "bfs");
+        assert!(aj.get("max_link_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            aj.get("digest").unwrap().as_str().unwrap(),
+            format!("{:016x}", a.digest)
+        );
+        // Static results default the app column to "cg" and null JSON.
+        let plain = tiny_scenarios();
+        let (ok2, _) = run_matrix(&plain[..1].to_vec(), 1);
+        assert!(ok2[0].app.is_none());
+        let t2 = runs_table(&ok2);
+        assert_eq!(t2.rows[0][ai], "cg");
+        let back2 = Json::parse(&result_json(&ok2[0]).render()).unwrap();
+        assert_eq!(back2.get("app").unwrap(), &Json::Null);
+    }
+
+    #[test]
     fn summary_geomeans() {
         let (ok, _) = run_matrix(&tiny_scenarios(), 1);
         let sums = summarize(&ok);
@@ -932,6 +1103,7 @@ mod tests {
             part_backend: None,
             part_ranks: 0,
             serve: None,
+            app: None,
         };
         let (ok, failed) = run_matrix(&[s], 1);
         assert!(failed.is_empty(), "{failed:?}");

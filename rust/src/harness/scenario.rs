@@ -8,7 +8,7 @@
 //! golden gate ([`super::golden`]) keys baselines by [`Scenario::id`].
 
 use crate::blocksizes::{block_sizes, TABLE3_FILL};
-use crate::exec::ExecBackend;
+use crate::exec::{AggMode, ExecBackend};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partitioners::dist::DIST_NAMES;
@@ -146,6 +146,26 @@ pub struct Scenario {
     /// cache columns. `None` (all historical scenarios) is the one-shot
     /// pipeline only.
     pub serve: Option<ServeSpec>,
+    /// The application axis: `None` (every historical scenario) is the
+    /// CG/solve pipeline; `Some(spec)` additionally runs one irregular
+    /// graph kernel (`apps::by_name`) over the scenario's instance on
+    /// the virtual cluster and records `app`/`aggMode`/`flushes`/
+    /// `aggBytes`/`maxLinkBytes` columns.
+    pub app: Option<AppSpec>,
+}
+
+/// Parameters of the application axis: which irregular kernel runs, and
+/// how its messages travel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppSpec {
+    /// Kernel name (`apps::APP_NAMES`: `bfs`, `sssp`, `pagerank`).
+    pub kernel: String,
+    /// Aggregated or direct message layer.
+    pub agg: AggMode,
+    /// Engine backend the kernel runs on.
+    pub backend: ExecBackend,
+    /// Rank count of the virtual cluster.
+    pub ranks: usize,
 }
 
 /// Parameters of the serving axis: the open-loop trace the scenario
@@ -170,7 +190,8 @@ impl Scenario {
     /// overlapped scenarios append `-ov`, non-default SpMV layouts append
     /// `-l<layout>`, distributed-partitioning scenarios append
     /// `-pb<backend>R<ranks>`, serving scenarios append
-    /// `-serveD<duration>R<rate>`.
+    /// `-serveD<duration>R<rate>`, application scenarios append
+    /// `-app<kernel>-<aggmode><backend>R<ranks>`.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
@@ -196,6 +217,15 @@ impl Scenario {
         }
         if let Some(spec) = &self.serve {
             id.push_str(&format!("-serveD{}R{}", spec.duration_secs, spec.arrival_rate));
+        }
+        if let Some(spec) = &self.app {
+            id.push_str(&format!(
+                "-app{}-{}{}R{}",
+                spec.kernel,
+                spec.agg.name(),
+                spec.backend.name(),
+                spec.ranks
+            ));
         }
         id
     }
@@ -246,6 +276,11 @@ pub enum MatrixKind {
     /// the deterministic virtual-time backend — throughput, latency
     /// percentiles, and cache hit rate become harness columns.
     Serve,
+    /// The application matrix: 2 graph families × the three irregular
+    /// kernels (`apps::APP_NAMES`) × aggregation mode × engine backend at
+    /// 4 ranks — one run reproduces the aggregation-win table (`flushes`,
+    /// `aggBytes`, and the bottleneck-link `maxLinkBytes` columns).
+    Apps,
 }
 
 impl MatrixKind {
@@ -258,6 +293,7 @@ impl MatrixKind {
             MatrixKind::Dynamic => "dynamic",
             MatrixKind::PartDist => "partdist",
             MatrixKind::Serve => "serve",
+            MatrixKind::Apps => "apps",
         }
     }
 
@@ -270,6 +306,7 @@ impl MatrixKind {
             "dynamic" | "dyn" | "repart" => MatrixKind::Dynamic,
             "partdist" | "part-dist" | "part_dist" => MatrixKind::PartDist,
             "serve" | "serving" => MatrixKind::Serve,
+            "apps" | "app" => MatrixKind::Apps,
             _ => return None,
         })
     }
@@ -304,6 +341,7 @@ impl MatrixKind {
                                 part_ranks: 0,
                                 layout: SpmvLayout::Ell,
                                 serve: None,
+                                app: None,
                             });
                         }
                     }
@@ -328,6 +366,7 @@ impl MatrixKind {
                             part_ranks: 0,
                             layout: SpmvLayout::Ell,
                             serve: None,
+                            app: None,
                         });
                     }
                 }
@@ -381,6 +420,7 @@ impl MatrixKind {
                                 part_ranks,
                                 layout: SpmvLayout::Ell,
                                 serve: None,
+                                app: None,
                             });
                         }
                     }
@@ -414,7 +454,45 @@ impl MatrixKind {
                                 queue_cap: 32,
                                 servers: 2,
                             }),
+                            app: None,
                         });
+                    }
+                }
+            }
+            MatrixKind::Apps => {
+                // App × aggregation × backend at a fixed rank count: the
+                // sim rows carry the priced aggregation win, the threads
+                // rows confirm it (and bit-identity) on real threads.
+                let graphs = [(Family::Tri2d, 900usize), (Family::Rdg2d, 800)];
+                for (family, n) in graphs {
+                    for kernel in crate::apps::APP_NAMES {
+                        for agg in [AggMode::Agg, AggMode::Direct] {
+                            for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+                                out.push(Scenario {
+                                    family,
+                                    n,
+                                    k: 8,
+                                    topo: TopoPreset::Uniform,
+                                    algo: "geoKM".to_string(),
+                                    epsilon: EPS,
+                                    seed: SEED,
+                                    solve_iters: 0,
+                                    dynamic: DynamicKind::None,
+                                    epochs: 0,
+                                    overlap: false,
+                                    part_backend: None,
+                                    part_ranks: 0,
+                                    layout: SpmvLayout::Ell,
+                                    serve: None,
+                                    app: Some(AppSpec {
+                                        kernel: kernel.to_string(),
+                                        agg,
+                                        backend,
+                                        ranks: 4,
+                                    }),
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -461,6 +539,7 @@ fn push_paper_grid(
                     part_ranks: 0,
                     layout: SpmvLayout::Ell,
                     serve: None,
+                    app: None,
                 });
             }
         }
@@ -515,6 +594,7 @@ mod tests {
             MatrixKind::Dynamic,
             MatrixKind::PartDist,
             MatrixKind::Serve,
+            MatrixKind::Apps,
         ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
@@ -616,6 +696,7 @@ mod tests {
             part_ranks: 0,
             layout: SpmvLayout::Ell,
             serve: None,
+            app: None,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
@@ -665,6 +746,63 @@ mod tests {
         ids.sort();
         ids.dedup();
         assert_eq!(ids.len(), s.len());
+    }
+
+    #[test]
+    fn apps_matrix_shape() {
+        let s = MatrixKind::Apps.scenarios();
+        // 2 graphs × 3 kernels × 2 agg modes × 2 backends.
+        assert_eq!(s.len(), 2 * crate::apps::APP_NAMES.len() * 2 * 2);
+        for x in &s {
+            let spec = x.app.as_ref().expect("apps scenario without a spec");
+            assert!(crate::apps::APP_NAMES.contains(&spec.kernel.as_str()));
+            assert_eq!(spec.ranks, 4);
+            assert_eq!(x.solve_iters, 0);
+            assert_eq!(x.dynamic, DynamicKind::None);
+            assert!(x.serve.is_none());
+        }
+        // Both modes and both backends present for every kernel.
+        for kernel in crate::apps::APP_NAMES {
+            for agg in [AggMode::Agg, AggMode::Direct] {
+                for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+                    assert!(
+                        s.iter().any(|x| {
+                            let a = x.app.as_ref().unwrap();
+                            a.kernel == kernel && a.agg == agg && a.backend == backend
+                        }),
+                        "missing {kernel} cell"
+                    );
+                }
+            }
+        }
+        // IDs unique (the -app suffix carries all three sub-axes).
+        let mut ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), s.len());
+    }
+
+    #[test]
+    fn app_axis_id_suffix() {
+        let mut s = MatrixKind::Smoke.scenarios().remove(0);
+        let base = s.id();
+        s.app = Some(AppSpec {
+            kernel: "sssp".into(),
+            agg: AggMode::Agg,
+            backend: ExecBackend::Sim,
+            ranks: 4,
+        });
+        assert_eq!(s.id(), format!("{base}-appsssp-aggsimR4"));
+        s.app = Some(AppSpec {
+            kernel: "bfs".into(),
+            agg: AggMode::Direct,
+            backend: ExecBackend::Threads,
+            ranks: 2,
+        });
+        assert_eq!(s.id(), format!("{base}-appbfs-directthreadsR2"));
+        // The default (None) never perturbs the historical golden key.
+        s.app = None;
+        assert_eq!(s.id(), base);
     }
 
     #[test]

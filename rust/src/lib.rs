@@ -29,6 +29,13 @@
 //!   request handles) so the halo exchange overlaps the interior SpMV —
 //!   priced at `max(compute, comm)` by the simulator — and a pipelined
 //!   single-reduction CG variant;
+//! - **irregular graph-application kernels** ([`apps`]): frontier BFS,
+//!   delta-stepping SSSP and push-style PageRank over distributed row
+//!   strips, batching their per-edge messages through the aggregating
+//!   transport ([`exec::AggComm`], Bale's convey protocol) with a
+//!   `direct` baseline mode, bit-identical results across modes,
+//!   backends and rank counts, and the bottleneck-link byte metric
+//!   reported per run;
 //! - the **dynamic repartitioning subsystem** ([`repart`]): epoch traces
 //!   replaying adaptive workloads (moving refinement front, PU speed
 //!   drift), three repartitioners behind one `Repartitioner` trait
@@ -49,6 +56,7 @@
 // CI with RUSTDOCFLAGS="-D warnings", so a missing doc is a CI failure.
 #![warn(missing_docs)]
 
+pub mod apps;
 pub mod blocksizes;
 pub mod coordinator;
 pub mod exec;

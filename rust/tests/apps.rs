@@ -1,0 +1,164 @@
+//! Acceptance tests for the irregular application kernels over the
+//! aggregating transport (ISSUE 8):
+//!
+//! Every kernel's assembled output is bit-identical across aggregation
+//! modes (`agg`/`direct`), backends (`sim`/`threads`), rank counts
+//! {1, 2, 4}, and buffer sizes; on a skewed-degree graph the aggregated
+//! transport prices strictly below the message-per-edge baseline; the
+//! reported link matrix is dimensioned per ordered rank pair, zero on
+//! the diagonal, and consistent with the aggregate traffic counters
+//! behind `maxLinkBytes`; and the harness `app` axis only ever appends
+//! an id suffix — no existing matrix scenario id moves.
+
+use hetpart::apps::{by_name, run_app, AppConfig, APP_NAMES};
+use hetpart::exec::{AggMode, ExecBackend};
+use hetpart::gen::Family;
+use hetpart::graph::GraphBuilder;
+use hetpart::harness::{AppSpec, MatrixKind};
+
+fn config(
+    backend: ExecBackend,
+    ranks: usize,
+    mode: AggMode,
+    buffer_bytes: usize,
+) -> AppConfig {
+    AppConfig { backend, ranks, mode, buffer_bytes, ..AppConfig::default() }
+}
+
+#[test]
+fn kernels_are_bit_identical_across_modes_backends_and_rank_counts() {
+    let g = Family::Tri2d.generate(240, 5);
+    for name in APP_NAMES {
+        let kernel = by_name(name).unwrap();
+        let reference = {
+            let cfg = config(ExecBackend::Sim, 1, AggMode::Agg, 1 << 14);
+            let (out, rep) = run_app(&g, kernel.as_ref(), &cfg).unwrap();
+            assert_eq!(rep.digest, out.digest());
+            out
+        };
+        for ranks in [1usize, 2, 4] {
+            for backend in [ExecBackend::Sim, ExecBackend::Threads] {
+                // A 256-byte buffer forces mid-epoch chunking in agg
+                // mode; direct mode ignores the buffer size entirely.
+                for (mode, bytes) in
+                    [(AggMode::Agg, 256), (AggMode::Direct, 1 << 14)]
+                {
+                    let cfg = config(backend, ranks, mode, bytes);
+                    let (out, rep) =
+                        run_app(&g, kernel.as_ref(), &cfg).unwrap_or_else(|e| {
+                            panic!("{name} ranks={ranks} {mode:?}: {e:#}")
+                        });
+                    assert_eq!(
+                        out, reference,
+                        "{name} ranks={ranks} {backend:?} {mode:?} must be bitwise \
+                         identical to the 1-rank aggregated reference"
+                    );
+                    assert_eq!(rep.digest, reference.digest());
+                    assert_eq!(rep.ranks, ranks);
+                    assert_eq!(rep.app, name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn aggregation_prices_strictly_below_direct_on_a_skewed_graph() {
+    // Hub-and-path: vertex 0 touches everyone (degree n−1), so its owner
+    // rank showers the cluster with relaxations. The message-per-edge
+    // baseline pays α per record where aggregation pays α per buffer.
+    let n = 1000;
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge(0, v);
+    }
+    for v in 1..n - 1 {
+        b.add_edge(v, v + 1);
+    }
+    let g = b.build();
+    let kernel = by_name("sssp").unwrap();
+    let run = |mode: AggMode| {
+        let cfg = config(ExecBackend::Sim, 4, mode, 1 << 14);
+        let (out, rep) = run_app(&g, kernel.as_ref(), &cfg).unwrap();
+        (out.digest(), rep)
+    };
+    let (digest_agg, agg) = run(AggMode::Agg);
+    let (digest_direct, direct) = run(AggMode::Direct);
+    assert_eq!(digest_agg, digest_direct, "modes must agree bitwise");
+    assert_eq!(agg.agg_bytes, direct.agg_bytes, "same records either way");
+    assert!(
+        direct.flushes > agg.flushes,
+        "direct {} rounds vs aggregated {}",
+        direct.flushes,
+        agg.flushes
+    );
+    let agg_comm: f64 = agg.comm_secs.iter().sum();
+    let direct_comm: f64 = direct.comm_secs.iter().sum();
+    assert!(
+        agg_comm < direct_comm,
+        "aggregated priced comm {agg_comm} must undercut direct {direct_comm}"
+    );
+}
+
+#[test]
+fn link_matrix_is_consistent_with_traffic_totals() {
+    let g = Family::Rdg2d.generate(500, 9);
+    let kernel = by_name("bfs").unwrap();
+    let cfg = config(ExecBackend::Sim, 4, AggMode::Agg, 1 << 12);
+    let (_, rep) = run_app(&g, kernel.as_ref(), &cfg).unwrap();
+    assert_eq!(rep.link_bytes.len(), 4);
+    for (r, row) in rep.link_bytes.iter().enumerate() {
+        assert_eq!(row.len(), 4);
+        assert_eq!(row[r], 0, "rank {r}: self link must stay empty");
+    }
+    let total: usize = rep.link_bytes.iter().flatten().sum();
+    assert_eq!(total, rep.agg_bytes, "link matrix must sum to aggBytes");
+    let max = rep.link_bytes.iter().flatten().copied().max().unwrap();
+    assert_eq!(rep.max_link_bytes(), max);
+    assert!(max > 0 && max <= rep.agg_bytes);
+    assert!(rep.flushes > 0);
+    assert!(rep.iterations > 0);
+    assert!(rep.app_secs() > 0.0);
+    assert_eq!(rep.exposed_secs(), rep.comm_secs);
+}
+
+#[test]
+fn app_axis_suffixes_ids_without_perturbing_existing_matrices() {
+    // Every pre-existing matrix stays app-free: the golden-baseline ids
+    // cannot move.
+    for kind in [
+        MatrixKind::Smoke,
+        MatrixKind::Dynamic,
+        MatrixKind::PartDist,
+        MatrixKind::Serve,
+    ] {
+        for s in kind.scenarios() {
+            assert!(s.app.is_none(), "{}: unexpected app axis", s.id());
+            assert!(!s.id().contains("-app"), "{}", s.id());
+        }
+    }
+    // The app axis is purely additive on the id.
+    let mut s = MatrixKind::Smoke.scenarios().into_iter().next().unwrap();
+    let base = s.id();
+    s.app = Some(AppSpec {
+        kernel: "bfs".to_string(),
+        agg: AggMode::Agg,
+        backend: ExecBackend::Sim,
+        ranks: 4,
+    });
+    assert_eq!(s.id(), format!("{base}-appbfs-aggsimR4"));
+    // The apps matrix covers kernels × modes × backends with unique ids.
+    let cells = MatrixKind::Apps.scenarios();
+    assert_eq!(cells.len(), 2 * APP_NAMES.len() * 2 * 2);
+    let ids: std::collections::BTreeSet<String> =
+        cells.iter().map(|s| s.id()).collect();
+    assert_eq!(ids.len(), cells.len(), "apps matrix ids must be unique");
+    for name in APP_NAMES {
+        assert!(
+            cells.iter().any(|s| {
+                s.app.as_ref().is_some_and(|a| a.kernel == *name)
+            }),
+            "{name} missing from the apps matrix"
+        );
+    }
+}

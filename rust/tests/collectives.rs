@@ -167,6 +167,83 @@ fn sim_cost_is_monotone_in_message_size() {
     }
 }
 
+/// Hub-and-spokes alltoallv parts (ISSUE 8 satellite): rank 0 ships a
+/// fat part to every peer, peers ship a sliver back to rank 0 and
+/// nothing to each other — heavily skewed per-destination byte counts
+/// with genuinely empty destinations.
+fn skewed_part(from: usize, to: usize, hub_len: usize) -> Vec<f64> {
+    if from == to {
+        Vec::new()
+    } else if from == 0 {
+        payload(23, to, hub_len)
+    } else if to == 0 {
+        payload(29, from, 3)
+    } else {
+        Vec::new()
+    }
+}
+
+#[test]
+fn skewed_alltoallv_agrees_bitwise_with_empty_destinations() {
+    for k in [2usize, 4, 8] {
+        let run = |comm: &dyn Comm| -> Vec<Vec<Vec<f64>>> {
+            on_ranks(k, |rank| {
+                let parts: Vec<Vec<f64>> =
+                    (0..k).map(|d| skewed_part(rank, d, 777)).collect();
+                comm.alltoallv(rank, &parts)
+            })
+        };
+        let s = run(&sim(k));
+        let t = run(&threads(k));
+        for to in 0..k {
+            for from in 0..k {
+                assert_eq!(s[to][from], skewed_part(from, to, 777), "sim {from}->{to} k={k}");
+                assert_eq!(t[to][from], s[to][from], "threads {from}->{to} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_alltoallv_charges_follow_per_rank_volumes() {
+    let k = 4;
+    let secs_with_hub = |hub_len: usize| -> Vec<f64> {
+        let comm = sim(k);
+        on_ranks(k, |rank| {
+            let parts: Vec<Vec<f64>> =
+                (0..k).map(|d| skewed_part(rank, d, hub_len)).collect();
+            comm.alltoallv(rank, &parts);
+        });
+        comm.comm_secs()
+    };
+    let small = secs_with_hub(64);
+    let big = secs_with_hub(4096);
+    // The hub moves the most bytes (sends (k−1)·len, receives the
+    // slivers), so its charge must dominate every spoke's.
+    for r in 1..k {
+        assert!(small[0] > small[r], "hub {} vs spoke {r} {}", small[0], small[r]);
+        assert!(big[0] > big[r]);
+    }
+    // Growing the hub part grows every rank's charge: the hub sends
+    // more, each spoke receives more.
+    for r in 0..k {
+        assert!(small[r] < big[r], "rank {r}: {} !< {}", small[r], big[r]);
+    }
+    // An all-empty exchange still pays α per peer — exactly and on
+    // every rank (message-count latency survives zero volume).
+    let empty = {
+        let comm = sim(k);
+        on_ranks(k, |rank| {
+            comm.alltoallv(rank, &vec![Vec::new(); k]);
+        });
+        comm.comm_secs()
+    };
+    let alpha_only = CostModel::default().alpha * (k - 1) as f64;
+    for (r, &s) in empty.iter().enumerate() {
+        assert_eq!(s, alpha_only, "rank {r}");
+    }
+}
+
 #[test]
 fn sim_cost_is_monotone_in_rank_count() {
     // Fixed payload, growing cluster: per-rank latency (tree depth) and
