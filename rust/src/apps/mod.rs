@@ -39,7 +39,9 @@ pub use bfs::Bfs;
 pub use pagerank::PageRank;
 pub use sssp::DeltaSssp;
 
-use crate::exec::{AggComm, AggMode, Comm, CostModel, ExchangePlan, ExecBackend, SimComm, ThreadComm};
+use crate::exec::{
+    AggComm, AggMode, Comm, CostModel, ExchangePlan, ExecBackend, NetModel, SimComm, ThreadComm,
+};
 use crate::graph::Csr;
 use crate::partitioners::dist::GraphStrip;
 use crate::util::timer::Timer;
@@ -217,6 +219,10 @@ pub struct AppConfig {
     pub buffer_bytes: usize,
     /// α-β cost model for the priced backend.
     pub cost: CostModel,
+    /// Network model the priced backend charges messages with (the
+    /// `--net` axis); `FlatAlphaBeta` keeps the legacy charges
+    /// bit-exact, and the measured backend ignores it.
+    pub net: NetModel,
     /// Source vertex for traversal kernels.
     pub source: usize,
     /// Seed handed to the kernel context.
@@ -231,6 +237,7 @@ impl Default for AppConfig {
             mode: AggMode::Agg,
             buffer_bytes: 16 * 1024,
             cost: CostModel::default(),
+            net: NetModel::FlatAlphaBeta,
             source: 0,
             seed: 1,
         }
@@ -314,7 +321,7 @@ pub fn run_app(g: &Csr, kernel: &dyn AppKernel, cfg: &AppConfig) -> Result<(AppO
         strips.iter().map(|s| s.row_lo).chain([g.n()]).collect();
     let plan = Arc::new(ExchangePlan::collectives_only(ranks));
     let comm: Box<dyn Comm> = match cfg.backend {
-        ExecBackend::Sim => Box::new(SimComm::new(plan, cfg.cost)),
+        ExecBackend::Sim => Box::new(SimComm::with_net(plan, cfg.cost, cfg.net, None)),
         ExecBackend::Threads => Box::new(ThreadComm::new(plan)),
     };
     let comm = &*comm;

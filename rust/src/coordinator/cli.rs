@@ -3,17 +3,17 @@
 //! ```text
 //! hetpart blocksizes --k 96 --topo topo1 --num-fast 8 --fast-speed 16 --fast-mem 13.8
 //! hetpart partition  --family rdg2d --n 16384 --algo geoKM --k 24 [--topo topo1 ...]
-//!                    [--backend sim|threads --ranks N]   (distributed partitioning)
+//!                    [--backend sim|threads --ranks N [--net flat|fattree|torus]]
 //! hetpart compare    --family tri2d --n 10000 --k 24 [--topo ...]
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
-//!                    [--layout ell|sellcs]
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve|apps
-//!                    [--overlap on|off] [--layout ell|sellcs]
-//!                    [--out results/harness] [--workers N] [--verbose]
+//!                    [--layout ell|sellcs] [--net flat|fattree|torus]
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale
+//!                    [--overlap on|off] [--layout ell|sellcs] [--net flat|fattree|torus]
+//!                    [--max-ranks N] [--out results/harness] [--workers N] [--verbose]
 //! hetpart app        --app bfs|sssp|pagerank [--agg on|off] [--backend sim|threads]
-//!                    [--ranks 4] [--buffer-bytes 16384] [--source 0]
-//!                    [--family tri2d --n 900 --seed 42]
+//!                    [--ranks 4] [--net flat|fattree|torus] [--buffer-bytes 16384]
+//!                    [--source 0] [--family tri2d --n 900 --seed 42]
 //! hetpart serve      --duration 5 --arrival-rate 50 --seed 1
 //!                    [--family tri2d --n 800 --k 8 --preset uniform --algo geoKM]
 //!                    [--backend threads|sim] [--workers N] [--queue-cap 64]
@@ -79,18 +79,25 @@ SUBCOMMANDS
                 --overlap on hides the halo exchange behind the interior
                 SpMV through the nonblocking Comm path; --cg pipelined
                 runs the single-reduction CG variant; --layout sellcs
-                runs the SELL-C-σ SpMV fast path, bit-identical to ELL)
+                runs the SELL-C-σ SpMV fast path, bit-identical to ELL;
+                --net fattree|torus prices messages by hop count instead
+                of the flat α-β model — numerics are unchanged)
   experiment   run a paper experiment grid by name
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic|partdist|serve|apps — partdist sweeps the
+               |dynamic|partdist|serve|apps|scale — partdist sweeps the
                distributed partitioners over backend/rank axes for the
                quality-vs-partition-time scatter; serve replays open-loop
                serving traces through the resident partition service;
                apps sweeps the irregular kernels × aggregation × backend;
+               scale prices 64–16384-rank virtual clusters, flat vs
+               hierarchical collectives on fat-tree/torus networks,
+               through the analytic collective model (--max-ranks N
+               truncates the rank axis for smoke runs);
                --overlap on flips every scenario's overlap axis,
-               --layout sellcs flips the SpMV-layout axis, --out DIR,
+               --layout sellcs flips the SpMV-layout axis, --net flips
+               every scenario's network model, --out DIR,
                --workers N, --verbose prints every run)
   repart       replay an adaptive multi-epoch workload and repartition it
                (--dynamic refine-front|speed-drift, --epochs E,
@@ -148,6 +155,14 @@ fn overlap_from_args(args: &Args) -> Option<bool> {
 /// value was passed (defaults to ELL when the flag is absent).
 fn layout_from_args(args: &Args) -> Option<crate::exec::SpmvLayout> {
     crate::exec::SpmvLayout::parse(&args.get("layout", "ell".to_string()))
+}
+
+/// Parse the `--net flat|fattree|torus` axis — the network model the
+/// simulated backend prices point-to-point messages and collective
+/// rounds with. `None` means an unrecognized value was passed (defaults
+/// to the flat α-β model when the flag is absent).
+fn net_from_args(args: &Args) -> Option<crate::exec::NetKind> {
+    crate::exec::NetKind::parse(&args.get("net", "flat".to_string()))
 }
 
 /// Build the topology from CLI options.
@@ -278,7 +293,7 @@ fn cmd_harness(args: &Args) -> i32 {
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
         eprintln!(
-            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve|apps)"
+            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale)"
         );
         return 2;
     };
@@ -292,6 +307,18 @@ fn cmd_harness(args: &Args) -> i32 {
         eprintln!("unknown --layout value (expected ell|sellcs)");
         return 2;
     };
+    // --net overrides every scenario's network model; absent, scenarios
+    // keep their own (the scale matrix carries per-cell nets).
+    let net_override = match args.opt::<String>("net") {
+        None => None,
+        Some(v) => match crate::exec::NetKind::parse(&v) {
+            Some(nk) => Some(nk),
+            None => {
+                eprintln!("unknown --net {v} (expected flat|fattree|torus)");
+                return 2;
+            }
+        },
+    };
     let mut scenarios = kind.scenarios();
     if overlap {
         for s in &mut scenarios {
@@ -303,6 +330,17 @@ fn cmd_harness(args: &Args) -> i32 {
             s.layout = layout;
         }
     }
+    if let Some(nk) = net_override {
+        for s in &mut scenarios {
+            s.net = nk;
+        }
+    }
+    // --max-ranks truncates the scale axis (CI smoke runs cap the
+    // virtual rank count); scenarios off the axis are unaffected.
+    let max_ranks = args.opt::<usize>("max-ranks");
+    if let Some(mr) = max_ranks {
+        scenarios.retain(|s| s.scale.map_or(true, |sp| sp.ranks <= mr));
+    }
     // Axis-flipped runs get their own artifact directory (<matrix>-ov /
     // <matrix>-l<layout>), so the comparison EXPERIMENTS.md §4 describes
     // never overwrites the baseline run's runs.csv / summary.* it is
@@ -313,6 +351,12 @@ fn cmd_harness(args: &Args) -> i32 {
     }
     if layout != crate::exec::SpmvLayout::default() {
         matrix_label.push_str(&format!("-l{}", layout.name()));
+    }
+    if let Some(nk) = net_override {
+        matrix_label.push_str(&format!("-net{}", nk.name()));
+    }
+    if let Some(mr) = max_ranks {
+        matrix_label.push_str(&format!("-r{mr}"));
     }
     println!(
         "harness matrix '{}': {} scenarios over {} workers{}{}",
@@ -576,11 +620,17 @@ fn cmd_app(args: &Args) -> i32 {
         eprintln!("unknown --backend {backend_name} (expected sim|threads)");
         return 2;
     };
+    let Some(net) = net_from_args(args) else {
+        eprintln!("unknown --net value (expected flat|fattree|torus)");
+        return 2;
+    };
     let (name, g) = load_graph(args);
+    let ranks = args.get("ranks", 4usize);
     let mut cfg = AppConfig {
         backend,
-        ranks: args.get("ranks", 4usize),
+        ranks,
         mode,
+        net: net.model(ranks),
         source: args.get("source", 0usize),
         seed: args.get("seed", 1u64),
         ..AppConfig::default()
@@ -652,6 +702,10 @@ fn cmd_partition(args: &Args) -> i32 {
     let algo: String = args.get("algo", "geoKM".to_string());
     let epsilon = args.get("epsilon", 0.03);
     let seed = args.get("seed", 1u64);
+    let Some(net) = net_from_args(args) else {
+        eprintln!("unknown --net value (expected flat|fattree|torus)");
+        return 2;
+    };
     println!("graph {name}: n={} m={} | topo {}", g.n(), g.m(), topo.label);
     // Distributed path: run the partitioner itself on the virtual
     // cluster (`--backend sim|threads --ranks N`) and report partSecs —
@@ -663,8 +717,8 @@ fn cmd_partition(args: &Args) -> i32 {
             return 2;
         };
         let ranks = args.get("ranks", 4usize);
-        return match crate::coordinator::run_one_dist(
-            &name, &g, &topo, &algo, epsilon, seed, backend, ranks,
+        return match crate::coordinator::run_one_dist_net(
+            &name, &g, &topo, &algo, epsilon, seed, backend, ranks, net.model(ranks),
         ) {
             Ok((r, _p, rep)) => {
                 let mut t = Table::new(vec![
@@ -696,6 +750,15 @@ fn cmd_partition(args: &Args) -> i32 {
                 1
             }
         };
+    }
+    // The sequential path prices no communication, so a non-flat network
+    // would silently do nothing — refuse instead.
+    if net != crate::exec::NetKind::Flat {
+        eprintln!(
+            "--net {} prices the distributed path: add --backend sim|threads --ranks N",
+            net.name()
+        );
+        return 2;
     }
     match run_one(&name, &g, &topo, &algo, epsilon, seed) {
         Ok((r, _p)) => {
@@ -763,6 +826,10 @@ fn cmd_solve(args: &Args) -> i32 {
         eprintln!("unknown --layout value (expected ell|sellcs)");
         return 2;
     };
+    let Some(net) = net_from_args(args) else {
+        eprintln!("unknown --net value (expected flat|fattree|torus)");
+        return 2;
+    };
     // Virtual-cluster engine path: thread-per-PU or sequential-sim
     // distributed CG behind the Comm seam, optionally with nonblocking
     // compute/communication overlap and the pipelined CG variant.
@@ -771,7 +838,8 @@ fn cmd_solve(args: &Args) -> i32 {
             eprintln!("unknown --backend {bs} (expected sim|threads)");
             return 2;
         };
-        let opts = crate::exec::SolveOpts { overlap, variant, layout };
+        let opts =
+            crate::exec::SolveOpts { overlap, variant, layout, net: net.model(k) };
         let (s, cg) = match crate::coordinator::run_solve_opts(
             &g, &part, &topo, backend, shift, iters, 1e-6, opts,
         ) {
@@ -810,12 +878,14 @@ fn cmd_solve(args: &Args) -> i32 {
     if overlap
         || variant != crate::exec::CgVariant::Classic
         || layout != crate::exec::SpmvLayout::default()
+        || net != crate::exec::NetKind::Flat
     {
         eprintln!(
-            "--overlap on / --cg {} / --layout {} require the virtual-cluster engine: \
-             add --backend sim|threads",
+            "--overlap on / --cg {} / --layout {} / --net {} require the \
+             virtual-cluster engine: add --backend sim|threads",
             variant.name(),
-            layout.name()
+            layout.name(),
+            net.name()
         );
         return 2;
     }

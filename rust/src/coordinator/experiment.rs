@@ -3,7 +3,7 @@
 //! quality metrics and timings.
 
 use crate::blocksizes::block_sizes;
-use crate::exec::{CostModel, DistPartReport, ExecBackend, SolveOpts, VirtualCluster};
+use crate::exec::{CostModel, DistPartReport, ExecBackend, NetModel, SolveOpts, VirtualCluster};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partition::{metrics, Metrics, Partition};
@@ -124,12 +124,30 @@ pub fn run_one_dist(
     backend: ExecBackend,
     ranks: usize,
 ) -> Result<(RunResult, Partition, DistPartReport)> {
+    run_one_dist_net(graph_name, g, topo, algo, epsilon, seed, backend, ranks, NetModel::FlatAlphaBeta)
+}
+
+/// [`run_one_dist`] with an explicit network model for the priced
+/// backend (the `--net` CLI/harness axis). `FlatAlphaBeta` reproduces
+/// the legacy charges exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn run_one_dist_net(
+    graph_name: &str,
+    g: &Csr,
+    topo: &Topology,
+    algo: &str,
+    epsilon: f64,
+    seed: u64,
+    backend: ExecBackend,
+    ranks: usize,
+    net: NetModel,
+) -> Result<(RunResult, Partition, DistPartReport)> {
     let load = g.total_vertex_weight();
     let scaled = topo.scaled_for_load(load, crate::blocksizes::TABLE3_FILL);
     let bs = block_sizes(load, &scaled)
         .with_context(|| format!("block sizes for {}", topo.label))?;
     let (out, secs) = timed(|| {
-        VirtualCluster::partition_dist(
+        VirtualCluster::partition_dist_net(
             g,
             &bs.tw,
             epsilon,
@@ -138,6 +156,7 @@ pub fn run_one_dist(
             backend,
             ranks,
             CostModel::default(),
+            net,
         )
     });
     let (part, report) = out.with_context(|| format!("distributed {algo} on {graph_name}"))?;

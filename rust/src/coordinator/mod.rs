@@ -7,8 +7,8 @@ pub mod jobqueue;
 pub mod serve;
 
 pub use experiment::{
-    default_rhs, instance, relative_to, run_one, run_one_dist, run_solve, run_solve_opts,
-    run_solve_prepared, Grid, RunResult, SolveResult,
+    default_rhs, instance, relative_to, run_one, run_one_dist, run_one_dist_net, run_solve,
+    run_solve_opts, run_solve_prepared, Grid, RunResult, SolveResult,
 };
 pub use jobqueue::{default_workers, run_jobs};
 pub use serve::{

@@ -20,7 +20,7 @@
 //! rank-ordered reductions, so their residual trajectories agree to the
 //! last bit — which is exactly the property the integration tests pin.
 
-use super::comm::{Comm, CostModel, ExchangePlan, SimComm, ThreadComm};
+use super::comm::{Comm, CostModel, ExchangePlan, NetModel, SimComm, ThreadComm};
 use crate::partition::Partition;
 use crate::solver::cg::{CgResult, SpmvBackend};
 use crate::solver::halo::HaloMatrix;
@@ -111,6 +111,10 @@ pub struct SolveOpts {
     /// prices the algorithm, the `threads` backend and the benches
     /// measure the layout).
     pub layout: SpmvLayout,
+    /// Network model the priced (`sim`) backend charges halo messages
+    /// and collective rounds with. The default `FlatAlphaBeta` keeps the
+    /// legacy charges bit-exact; the measured backend ignores it.
+    pub net: NetModel,
 }
 
 impl SolveOpts {
@@ -295,6 +299,33 @@ impl VirtualCluster {
         ranks: usize,
         cost: CostModel,
     ) -> Result<(Partition, super::partition::DistPartReport)> {
+        Self::partition_dist_net(
+            g,
+            targets,
+            epsilon,
+            seed,
+            algo,
+            backend,
+            ranks,
+            cost,
+            NetModel::FlatAlphaBeta,
+        )
+    }
+
+    /// [`VirtualCluster::partition_dist`] with an explicit network model
+    /// for the priced backend (the `--net` axis).
+    #[allow(clippy::too_many_arguments)]
+    pub fn partition_dist_net(
+        g: &crate::graph::Csr,
+        targets: &[f64],
+        epsilon: f64,
+        seed: u64,
+        algo: &str,
+        backend: ExecBackend,
+        ranks: usize,
+        cost: CostModel,
+        net: NetModel,
+    ) -> Result<(Partition, super::partition::DistPartReport)> {
         use crate::partitioners::dist::{dist_by_name, DIST_NAMES};
         let p = dist_by_name(algo).ok_or_else(|| {
             anyhow::anyhow!(
@@ -302,8 +333,8 @@ impl VirtualCluster {
                 DIST_NAMES.join(", ")
             )
         })?;
-        super::partition::run_dist_partition(
-            g, targets, epsilon, seed, p.as_ref(), backend, ranks, cost,
+        super::partition::run_dist_partition_net(
+            g, targets, epsilon, seed, p.as_ref(), backend, ranks, cost, net,
         )
     }
 
@@ -592,7 +623,7 @@ impl VirtualCluster {
     ) -> Result<(CgResult, ExecReport)> {
         let wall = Timer::start();
         let k = self.k();
-        let comm = SimComm::new(self.plan.clone(), self.cost);
+        let comm = SimComm::with_net(self.plan.clone(), self.cost, opts.net, None);
         let kernels = self.layout_kernels(opts.layout);
         let mut states: Vec<RankState> = (0..k).map(|r| self.init_state(r, b)).collect();
         let mut compute = vec![0.0f64; k];

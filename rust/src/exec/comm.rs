@@ -65,6 +65,37 @@
 //! α-β tree model (`ceil(log2 k)` latency rounds + β per byte moved);
 //! [`ThreadComm`] charges measured wall-clock including the rendezvous
 //! wait.
+//!
+//! # Hierarchical (two-level) collectives and non-flat networks
+//!
+//! Real clusters are not flat: ranks share nodes, and the fabric between
+//! nodes has hop structure. Two orthogonal seams model this:
+//!
+//! - A [`HierSchedule`] turns the collectives into a *two-level
+//!   schedule*: an intra-node phase (each node's leader stages its
+//!   group's contributions) followed by an inter-node phase over node
+//!   aggregates. Crucially the staging moves data but performs **no
+//!   arithmetic** — the global `Sum` fold still reads the contributions
+//!   in flat rank order (node order × rank order within node, which for
+//!   the contiguous groups the schedule requires *is* rank order) — so
+//!   results are bit-identical to the flat path on both transports. A
+//!   genuinely nested fold would re-associate f64 addition and break
+//!   every bit-identity contract in the repo; only `Min`/`Max` could
+//!   fold per node exactly. [`SimComm`] prices the two phases
+//!   separately (intra traffic [`INTRA_SPEEDUP`]× cheaper, inter
+//!   traffic over `nodes` participants instead of `k`), which is where
+//!   the hierarchical schedule wins. [`ThreadComm`] executes the same
+//!   staged phases for real.
+//! - A [`NetModel`] prices point-to-point messages by hop count and
+//!   collective rounds by network diameter: `FlatAlphaBeta` is the
+//!   legacy single-hop model (bit-exact with the PR 5 charges),
+//!   `FatTree` counts up-down switch hops, `Torus` counts wraparound
+//!   Manhattan hops.
+//!
+//! [`CollectiveModel`] exposes the same pricing as closed-form functions
+//! of (k, bytes) so the `--matrix scale` sweep can price 16384-rank
+//! collectives without constructing a transport (the rendezvous
+//! collectives need k live threads — a non-starter at that scale).
 
 use crate::partition::Partition;
 use crate::solver::halo::HaloMatrix;
@@ -187,6 +218,482 @@ pub struct CostModel {
 impl Default for CostModel {
     fn default() -> Self {
         CostModel { alpha: 2e-6, beta: 1e-9, t_flop: 2e-9, allreduce_base: 1e-6 }
+    }
+}
+
+/// Network topology model for the priced transport: how many links a
+/// message crosses between two ranks, and how far one collective round
+/// reaches. `FlatAlphaBeta` (the default) is the legacy single-hop
+/// model — its charges are bit-exact with the pre-seam pricing, pinned
+/// by `tests/scale.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetModel {
+    /// Every rank pair one hop apart; collective rounds cost one unit
+    /// of latency. The legacy α-β model.
+    FlatAlphaBeta,
+    /// Fat tree of `radix`-port switches with ranks at the leaves:
+    /// ranks in the same radix-block share an edge switch (2 hops),
+    /// each further level adds an up-down pair.
+    FatTree {
+        /// Ports per switch (≥ 2); ranks per edge switch.
+        radix: usize,
+    },
+    /// 2-D torus of `dims = [x, y]` with rank `r` at `(r % x, r / x)`;
+    /// hops are wraparound Manhattan distance.
+    Torus {
+        /// Grid extents; must satisfy `x * y ≥ k`.
+        dims: [usize; 2],
+    },
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel::FlatAlphaBeta
+    }
+}
+
+impl NetModel {
+    /// The default fat tree (16-port switches, a common data-center
+    /// radix).
+    pub fn fat_tree() -> NetModel {
+        NetModel::FatTree { radix: 16 }
+    }
+
+    /// A near-square torus just large enough for `k` ranks.
+    pub fn torus_for(k: usize) -> NetModel {
+        let mut x = 1usize;
+        while x * x < k {
+            x += 1;
+        }
+        let y = if x == 0 { 1 } else { k.max(1).div_ceil(x) };
+        NetModel::Torus { dims: [x.max(1), y.max(1)] }
+    }
+
+    /// Stable display name (`flat` / `fattree16` / `torus8x8`).
+    pub fn name(&self) -> String {
+        match self {
+            NetModel::FlatAlphaBeta => "flat".to_string(),
+            NetModel::FatTree { radix } => format!("fattree{radix}"),
+            NetModel::Torus { dims: [x, y] } => format!("torus{x}x{y}"),
+        }
+    }
+
+    /// Whether this is the legacy single-hop model.
+    pub fn is_flat(&self) -> bool {
+        matches!(self, NetModel::FlatAlphaBeta)
+    }
+
+    /// Links a point-to-point message from rank `a` to rank `b`
+    /// crosses (0 for `a == b`, ≥ 1 otherwise).
+    pub fn hops(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        match *self {
+            NetModel::FlatAlphaBeta => 1.0,
+            NetModel::FatTree { radix } => {
+                let r = radix.max(2);
+                let (mut ca, mut cb) = (a, b);
+                let mut level = 0u32;
+                while ca != cb {
+                    ca /= r;
+                    cb /= r;
+                    level += 1;
+                }
+                2.0 * level as f64
+            }
+            NetModel::Torus { dims: [x, y] } => {
+                let x = x.max(1);
+                let y = y.max(1);
+                let (ax, ay) = (a % x, (a / x) % y);
+                let (bx, by) = (b % x, (b / x) % y);
+                let dx = ax.abs_diff(bx).min(x - ax.abs_diff(bx));
+                let dy = ay.abs_diff(by).min(y - ay.abs_diff(by));
+                ((dx + dy) as f64).max(1.0)
+            }
+        }
+    }
+
+    /// Latency multiplier for one collective round spanning `n`
+    /// participants: the diameter of the sub-network they occupy
+    /// (worst-case routing — conservative by design). `1.0` for the
+    /// flat model and for `n ≤ 1`; monotone non-decreasing in `n`.
+    pub fn round_factor(&self, n: usize) -> f64 {
+        if n <= 1 {
+            return 1.0;
+        }
+        match *self {
+            NetModel::FlatAlphaBeta => 1.0,
+            NetModel::FatTree { radix } => {
+                let r = radix.max(2);
+                let mut levels = 0u32;
+                let mut reach = 1usize;
+                while reach < n {
+                    reach = reach.saturating_mul(r);
+                    levels += 1;
+                }
+                (2 * levels.max(1)) as f64
+            }
+            NetModel::Torus { .. } => {
+                // Diameter of the near-square sub-grid the n
+                // participants occupy.
+                let mut x = 1usize;
+                while x * x < n {
+                    x += 1;
+                }
+                let y = n.div_ceil(x);
+                ((x / 2 + y / 2) as f64).max(1.0)
+            }
+        }
+    }
+}
+
+/// CLI- and scenario-facing network-model axis. Unlike [`NetModel`]
+/// (whose torus extents depend on the rank count), a `NetKind` is
+/// rank-count-independent, so one `--net` flag can apply to a whole
+/// scenario matrix; [`NetKind::model`] materializes the concrete model
+/// per k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetKind {
+    /// Legacy single-hop α-β pricing (the default).
+    Flat,
+    /// [`NetModel::fat_tree`].
+    FatTree,
+    /// [`NetModel::torus_for`] the scenario's rank count.
+    Torus,
+}
+
+impl Default for NetKind {
+    fn default() -> Self {
+        NetKind::Flat
+    }
+}
+
+impl NetKind {
+    /// Every axis value, in sweep order.
+    pub const ALL: [NetKind; 3] = [NetKind::Flat, NetKind::FatTree, NetKind::Torus];
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetKind::Flat => "flat",
+            NetKind::FatTree => "fattree",
+            NetKind::Torus => "torus",
+        }
+    }
+
+    /// Parse a CLI name (`flat` / `fattree` / `torus`).
+    pub fn parse(s: &str) -> Option<NetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" | "alphabeta" | "alpha-beta" => Some(NetKind::Flat),
+            "fattree" | "fat-tree" | "fat" => Some(NetKind::FatTree),
+            "torus" => Some(NetKind::Torus),
+            _ => None,
+        }
+    }
+
+    /// The concrete [`NetModel`] for a `k`-rank transport.
+    pub fn model(&self, k: usize) -> NetModel {
+        match self {
+            NetKind::Flat => NetModel::FlatAlphaBeta,
+            NetKind::FatTree => NetModel::fat_tree(),
+            NetKind::Torus => NetModel::torus_for(k),
+        }
+    }
+}
+
+/// How much cheaper an intra-node hop is than an inter-node network hop
+/// in the two-level pricing (latency and bandwidth alike): shared
+/// memory / NVLink-class links vs the node-to-node fabric.
+pub const INTRA_SPEEDUP: f64 = 4.0;
+
+/// Node grouping of the two-level ("hierarchical") collective schedule:
+/// ranks partitioned into contiguous ascending groups, one per physical
+/// node (`Topology::node_groups` produces exactly this shape from a
+/// preset).
+///
+/// Contiguity is asserted because it is what makes the staged two-level
+/// data movement *bit-identical* to the flat path: the global fold
+/// reads the node stages in node order, which for contiguous ascending
+/// groups is exactly the flat rank order (see `Collectives`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierSchedule {
+    groups: Vec<Vec<usize>>,
+    node_of: Vec<usize>,
+    intra_speedup: f64,
+}
+
+impl HierSchedule {
+    /// Schedule from explicit groups; panics unless the groups partition
+    /// `0..k` contiguously in ascending order.
+    pub fn new(groups: Vec<Vec<usize>>) -> HierSchedule {
+        let mut node_of = Vec::new();
+        for (node, g) in groups.iter().enumerate() {
+            assert!(!g.is_empty(), "empty node group {node}");
+            for &r in g {
+                assert_eq!(
+                    r,
+                    node_of.len(),
+                    "node groups must partition the ranks contiguously in ascending order"
+                );
+                node_of.push(node);
+            }
+        }
+        HierSchedule { groups, node_of, intra_speedup: INTRA_SPEEDUP }
+    }
+
+    /// Contiguous groups of (at most) `node_ranks` ranks each.
+    pub fn uniform(k: usize, node_ranks: usize) -> HierSchedule {
+        assert!(node_ranks >= 1, "node_ranks must be >= 1");
+        let ranks: Vec<usize> = (0..k).collect();
+        HierSchedule::new(ranks.chunks(node_ranks).map(|c| c.to_vec()).collect())
+    }
+
+    /// Total ranks covered.
+    pub fn k(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Number of nodes (groups).
+    pub fn nodes(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Which node `rank` lives on.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// The ranks of one node, ascending.
+    pub fn group(&self, node: usize) -> &[usize] {
+        &self.groups[node]
+    }
+
+    /// All groups, node order.
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    /// Whether `rank` is its node's leader (lowest rank of the group).
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.groups[self.node_of[rank]][0] == rank
+    }
+
+    /// Largest group size.
+    pub fn max_group(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).max().unwrap_or(1)
+    }
+
+    /// Whether two ranks share a node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// Intra-node link advantage (see [`INTRA_SPEEDUP`]).
+    pub fn intra_speedup(&self) -> f64 {
+        self.intra_speedup
+    }
+
+    /// The analytic shape of this schedule.
+    pub fn shape(&self) -> HierShape {
+        HierShape {
+            max_group: self.max_group(),
+            nodes: self.nodes(),
+            intra_speedup: self.intra_speedup,
+        }
+    }
+}
+
+/// Shape of a two-level schedule for *analytic* pricing: enough to
+/// price collectives without materializing per-rank groups (a
+/// 16384-rank sweep never allocates 16384 of anything).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierShape {
+    /// Ranks on the largest node.
+    pub max_group: usize,
+    /// Node count.
+    pub nodes: usize,
+    /// Intra-node link advantage (see [`INTRA_SPEEDUP`]).
+    pub intra_speedup: f64,
+}
+
+/// Closed-form α-β collective pricing at arbitrary rank counts: the
+/// model the `--matrix scale` sweep evaluates at up to 16384 virtual
+/// ranks. No transport (threads, barriers, mailboxes) is constructed —
+/// every method is a pure function of the cost constants, the
+/// [`NetModel`], and the optional two-level [`HierShape`] — so pricing
+/// 16384 ranks costs microseconds. [`SimComm`] prices its *executed*
+/// non-flat collectives with the same formulas (exact per-destination
+/// hop counts where it knows them); with `FlatAlphaBeta` and no
+/// schedule the formulas reduce to the legacy charges exactly (pinned
+/// by `tests/scale.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveModel {
+    /// α-β constants.
+    pub cost: CostModel,
+    /// Network hop model.
+    pub net: NetModel,
+    /// Two-level schedule shape; `None` = flat schedule.
+    pub hier: Option<HierShape>,
+}
+
+impl CollectiveModel {
+    /// Flat-schedule model.
+    pub fn flat_schedule(cost: CostModel, net: NetModel) -> CollectiveModel {
+        CollectiveModel { cost, net, hier: None }
+    }
+
+    /// Two-level model for `k` ranks packed `node_ranks` per node.
+    pub fn two_level(cost: CostModel, net: NetModel, k: usize, node_ranks: usize) -> CollectiveModel {
+        assert!(node_ranks >= 1, "node_ranks must be >= 1");
+        let shape = HierShape {
+            max_group: node_ranks.min(k.max(1)),
+            nodes: k.max(1).div_ceil(node_ranks),
+            intra_speedup: INTRA_SPEEDUP,
+        };
+        CollectiveModel { cost, net, hier: Some(shape) }
+    }
+
+    /// `ceil(log2 n)` tree rounds; 0 for `n ≤ 1`.
+    fn depth(n: usize) -> f64 {
+        if n <= 1 {
+            0.0
+        } else {
+            (n as f64).log2().ceil()
+        }
+    }
+
+    /// The (intra-group size, node count) the schedule yields at `k`
+    /// ranks — clamped so one-node configurations price no inter level.
+    fn levels(&self, k: usize) -> Option<(usize, usize, f64)> {
+        self.hier.map(|h| (h.max_group.min(k), h.nodes.min(k), h.intra_speedup))
+    }
+
+    /// Per-rank price of one `len`-word f64 allreduce over `k` ranks.
+    /// Flat schedule moves the vector once per `ceil(log2 k)` round;
+    /// two-level runs `ceil(log2 g)` intra rounds at [`INTRA_SPEEDUP`]×
+    /// cheaper links plus `ceil(log2 nodes)` inter rounds over the
+    /// (smaller, nearer) node set — strictly cheaper than flat whenever
+    /// ranks span more than one node and every node holds ≥ 2 ranks.
+    pub fn allreduce_secs(&self, k: usize, len: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let ab = self.cost.allreduce_base;
+        let beta = self.cost.beta;
+        let bytes = 8.0 * len as f64;
+        match self.levels(k) {
+            None => {
+                let d = Self::depth(k);
+                (ab * d + beta * (bytes * d)) * self.net.round_factor(k)
+            }
+            Some((g, nodes, sp)) => {
+                let dg = Self::depth(g);
+                let dn = Self::depth(nodes);
+                let intra = if dg > 0.0 { (ab * dg + beta * (bytes * dg)) / sp } else { 0.0 };
+                let inter = if dn > 0.0 {
+                    (ab * dn + beta * (bytes * dn)) * self.net.round_factor(nodes)
+                } else {
+                    0.0
+                };
+                intra + inter
+            }
+        }
+    }
+
+    /// Per-rank price of one allgatherv over `k` ranks in which the
+    /// rank contributes `local_words` of the `total_words` result
+    /// (receive-dominated, like the executed pricing). The two-level
+    /// schedule receives the on-node share over cheap links and only
+    /// the off-node remainder over the fabric.
+    pub fn allgather_secs(&self, k: usize, total_words: usize, local_words: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let ab = self.cost.allreduce_base;
+        let beta = self.cost.beta;
+        let recv = 8.0 * total_words.saturating_sub(local_words) as f64;
+        match self.levels(k) {
+            None => (ab * Self::depth(k) + beta * recv) * self.net.round_factor(k),
+            Some((g, nodes, sp)) => {
+                let dg = Self::depth(g);
+                let dn = Self::depth(nodes);
+                // Uniform-share estimate of the on-node slice.
+                let node_share = 8.0 * total_words as f64 * g as f64 / k as f64;
+                let intra_recv = (node_share - 8.0 * local_words as f64).max(0.0).min(recv);
+                let inter_recv = (recv - intra_recv).max(0.0);
+                let intra = if dg > 0.0 { (ab * dg + beta * intra_recv) / sp } else { 0.0 };
+                let inter = if dn > 0.0 {
+                    (ab * dn + beta * inter_recv) * self.net.round_factor(nodes)
+                } else {
+                    0.0
+                };
+                intra + inter
+            }
+        }
+    }
+
+    /// Per-rank price of one `len`-word broadcast over `k` ranks (the
+    /// vector crosses each level once).
+    pub fn broadcast_secs(&self, k: usize, len: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let ab = self.cost.allreduce_base;
+        let bytes = 8.0 * len as f64;
+        match self.levels(k) {
+            None => (ab * Self::depth(k) + self.cost.beta * bytes) * self.net.round_factor(k),
+            Some((g, nodes, sp)) => {
+                let dg = Self::depth(g);
+                let dn = Self::depth(nodes);
+                let intra =
+                    if dg > 0.0 { (ab * dg + self.cost.beta * bytes) / sp } else { 0.0 };
+                let inter = if dn > 0.0 {
+                    (ab * dn + self.cost.beta * bytes) * self.net.round_factor(nodes)
+                } else {
+                    0.0
+                };
+                intra + inter
+            }
+        }
+    }
+
+    /// Latency of one scalar reduction (the CG dot products). Mirrors
+    /// the legacy floor of one `allreduce_base` even at `k = 1`.
+    pub fn scalar_reduce_secs(&self, k: usize) -> f64 {
+        let rounds = match self.levels(k) {
+            None => Self::depth(k) * self.net.round_factor(k),
+            Some((g, nodes, sp)) => {
+                Self::depth(g) / sp + Self::depth(nodes) * self.net.round_factor(nodes)
+            }
+        };
+        self.cost.allreduce_base * rounds.max(1.0)
+    }
+
+    /// Per-rank price of one halo exchange: `neighbors` messages of
+    /// `words` f32 each. Flat schedule routes every message over the
+    /// fabric at worst-case diameter; the two-level schedule keeps all
+    /// but one neighbor on-node (the mesh-surface assumption the scale
+    /// sweep encodes) when ranks span multiple nodes.
+    pub fn halo_exchange_secs(&self, k: usize, neighbors: usize, words: usize) -> f64 {
+        if k <= 1 || neighbors == 0 {
+            return 0.0;
+        }
+        let msg = self.cost.alpha + self.cost.beta * 4.0 * words as f64;
+        match self.levels(k) {
+            None => neighbors as f64 * msg * self.net.round_factor(k),
+            Some((_, nodes, sp)) if nodes > 1 => {
+                (neighbors - 1) as f64 * msg / sp + msg * self.net.round_factor(nodes)
+            }
+            Some((_, _, sp)) => neighbors as f64 * msg / sp,
+        }
+    }
+
+    /// Modeled per-rank seconds of one CG iteration's communication at
+    /// `k` ranks: one halo exchange plus the two dot-product
+    /// reductions. The number the `--matrix scale` sweep reports.
+    pub fn cg_iteration_secs(&self, k: usize, neighbors: usize, halo_words: usize) -> f64 {
+        self.halo_exchange_secs(k, neighbors, halo_words) + 2.0 * self.allreduce_secs(k, 1)
     }
 }
 
@@ -323,17 +830,40 @@ struct Collectives {
     reduced: Mutex<Vec<f64>>,
     /// Per *sender* rank: parts-by-destination for alltoallv.
     a2a: Vec<Mutex<Vec<Vec<f64>>>>,
+    /// Two-level schedule (`None` = flat). With a schedule, the
+    /// vector-valued collectives run staged: node leaders concatenate
+    /// their group's contributions into `stage[node]` first, and the
+    /// global step reads the stages instead of the raw slots. The
+    /// staging moves data but performs **no arithmetic**, and contiguous
+    /// ascending groups make (node order × within-node order) identical
+    /// to flat rank order — so the results are bit-identical to the
+    /// flat path (pinned by `tests/scale.rs`).
+    sched: Option<HierSchedule>,
+    /// Per-node staged concatenation (empty when `sched` is `None`).
+    stage: Vec<Mutex<Vec<f64>>>,
 }
 
 impl Collectives {
-    fn new(k: usize) -> Collectives {
+    fn new(k: usize, sched: Option<HierSchedule>) -> Collectives {
+        if let Some(s) = &sched {
+            assert_eq!(s.k(), k, "hierarchical schedule covers {} ranks, transport has {k}", s.k());
+        }
+        let nodes = sched.as_ref().map_or(0, |s| s.nodes());
         Collectives {
             k,
             barrier: Barrier::new(k),
             parts: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
             reduced: Mutex::new(Vec::new()),
             a2a: (0..k).map(|_| Mutex::new(Vec::new())).collect(),
+            sched,
+            stage: (0..nodes).map(|_| Mutex::new(Vec::new())).collect(),
         }
+    }
+
+    /// The schedule, when it actually changes the execution (more than
+    /// one node — a one-node schedule degenerates to the flat path).
+    fn staging(&self) -> Option<&HierSchedule> {
+        self.sched.as_ref().filter(|s| s.nodes() > 1)
     }
 
     /// Combine `data` element-wise across ranks (`Sum` in rank order).
@@ -345,6 +875,10 @@ impl Collectives {
     /// redoing the fold, so the measured transport's comm time reflects
     /// a real reduction, not k replicated ones.
     fn allreduce(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
+        if self.staging().is_some() {
+            self.allreduce_staged(rank, data, op);
+            return;
+        }
         *self.parts[rank].lock().unwrap() = data.to_vec();
         if self.barrier.wait().is_leader() {
             let mut acc = self.parts[0].lock().unwrap().clone();
@@ -367,15 +901,88 @@ impl Collectives {
         self.barrier.wait();
     }
 
+    /// The two-level allreduce: deposit → node leaders *concatenate*
+    /// their group's slots into the node stage (data movement only, no
+    /// arithmetic) → one rank folds the stages, reading them in node
+    /// order and each stage in within-node rank order — which for the
+    /// contiguous ascending groups [`HierSchedule`] requires is exactly
+    /// the flat fold's rank order, hence bit-identical results → copy
+    /// out. A genuinely nested per-node `Sum` fold would re-associate
+    /// f64 addition and break the bit-identity contract.
+    fn allreduce_staged(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
+        let s = self.sched.as_ref().unwrap();
+        let len = data.len();
+        *self.parts[rank].lock().unwrap() = data.to_vec();
+        self.barrier.wait();
+        if s.is_leader(rank) {
+            let node = s.node_of(rank);
+            let mut st = Vec::with_capacity(s.group(node).len() * len);
+            for &r in s.group(node) {
+                let part = self.parts[r].lock().unwrap();
+                debug_assert_eq!(part.len(), len, "allreduce_vec length mismatch");
+                st.extend_from_slice(&part);
+            }
+            *self.stage[node].lock().unwrap() = st;
+        }
+        if self.barrier.wait().is_leader() {
+            let mut acc: Vec<f64> = Vec::new();
+            if len > 0 {
+                let mut first = true;
+                for node in 0..s.nodes() {
+                    let st = self.stage[node].lock().unwrap();
+                    for part in st.chunks(len) {
+                        if first {
+                            acc = part.to_vec();
+                            first = false;
+                        } else {
+                            for (a, &v) in acc.iter_mut().zip(part.iter()) {
+                                match op {
+                                    ReduceOp::Sum => *a += v,
+                                    ReduceOp::Min => *a = a.min(v),
+                                    ReduceOp::Max => *a = a.max(v),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            *self.reduced.lock().unwrap() = acc;
+        }
+        self.barrier.wait();
+        data.copy_from_slice(&self.reduced.lock().unwrap());
+        self.barrier.wait();
+    }
+
     /// Concatenate the per-rank contributions in rank order. Returns the
     /// full concatenation (every rank gets the same vector).
     fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64> {
         *self.parts[rank].lock().unwrap() = local.to_vec();
         self.barrier.wait();
-        let mut out = Vec::new();
-        for r in 0..self.k {
-            out.extend_from_slice(&self.parts[r].lock().unwrap());
-        }
+        let out = if let Some(s) = self.staging() {
+            // Leaders stage their node's concatenation; everyone then
+            // concatenates the stages in node order — which is rank
+            // order, so the result is bit-identical to the flat path.
+            if s.is_leader(rank) {
+                let node = s.node_of(rank);
+                let mut st = Vec::new();
+                for &r in s.group(node) {
+                    st.extend_from_slice(&self.parts[r].lock().unwrap());
+                }
+                *self.stage[node].lock().unwrap() = st;
+            }
+            self.barrier.wait();
+            let mut out = Vec::new();
+            for node in 0..s.nodes() {
+                out.extend_from_slice(&self.stage[node].lock().unwrap());
+            }
+            out
+        } else {
+            let mut out = Vec::new();
+            for r in 0..self.k {
+                out.extend_from_slice(&self.parts[r].lock().unwrap());
+            }
+            out
+        };
         self.barrier.wait();
         out
     }
@@ -402,7 +1009,19 @@ impl Collectives {
             *self.parts[root].lock().unwrap() = data.clone();
         }
         self.barrier.wait();
-        if rank != root {
+        if let Some(s) = self.staging() {
+            // Node leaders pull from the root once; their node-mates
+            // read the local stage. Pure copies, so trivially
+            // bit-identical to the flat path.
+            if s.is_leader(rank) {
+                *self.stage[s.node_of(rank)].lock().unwrap() =
+                    self.parts[root].lock().unwrap().clone();
+            }
+            self.barrier.wait();
+            if rank != root {
+                *data = self.stage[s.node_of(rank)].lock().unwrap().clone();
+            }
+        } else if rank != root {
             *data = self.parts[root].lock().unwrap().clone();
         }
         self.barrier.wait();
@@ -483,23 +1102,74 @@ pub struct SimComm {
     plan: std::sync::Arc<ExchangePlan>,
     mb: Mailboxes,
     cost: CostModel,
+    net: NetModel,
+    hier: Option<HierSchedule>,
     regions: Vec<Mutex<OverlapRegion>>,
     hidden: Vec<Mutex<f64>>,
     colls: Collectives,
 }
 
 impl SimComm {
-    /// Priced transport over `plan` with the given α-β constants.
+    /// Priced transport over `plan` with the given α-β constants, the
+    /// legacy flat single-hop network, and the flat collective schedule.
     pub fn new(plan: std::sync::Arc<ExchangePlan>, cost: CostModel) -> SimComm {
+        SimComm::with_net(plan, cost, NetModel::FlatAlphaBeta, None)
+    }
+
+    /// Priced transport with an explicit network model and optional
+    /// two-level collective schedule. `with_net(plan, cost,
+    /// FlatAlphaBeta, None)` is charge-for-charge identical to
+    /// [`SimComm::new`] (pinned by `tests/scale.rs`).
+    pub fn with_net(
+        plan: std::sync::Arc<ExchangePlan>,
+        cost: CostModel,
+        net: NetModel,
+        hier: Option<HierSchedule>,
+    ) -> SimComm {
         let mb = Mailboxes::new(&plan);
         let k = plan.k();
+        if let Some(h) = &hier {
+            assert_eq!(h.k(), k, "hierarchical schedule covers {} ranks, plan has {k}", h.k());
+        }
         SimComm {
             plan,
             mb,
             cost,
+            net,
+            hier: hier.clone(),
             regions: (0..k).map(|_| Mutex::new(OverlapRegion::default())).collect(),
             hidden: (0..k).map(|_| Mutex::new(0.0)).collect(),
-            colls: Collectives::new(k),
+            colls: Collectives::new(k, hier),
+        }
+    }
+
+    /// Whether the legacy flat pricing applies verbatim. The flat branch
+    /// runs the *original* formula code, not a hop-factor-1 rewrite:
+    /// e.g. the legacy exchange cost β-prices the rank's aggregate send
+    /// volume in one multiplication, and summing per-segment instead
+    /// would change f64 rounding — the golden baselines notice.
+    fn flat_priced(&self) -> bool {
+        self.net.is_flat() && self.hier.is_none()
+    }
+
+    /// The closed-form pricing model matching this transport's
+    /// configuration (used for the non-flat collective charges).
+    fn model(&self) -> CollectiveModel {
+        CollectiveModel {
+            cost: self.cost,
+            net: self.net,
+            hier: self.hier.as_ref().map(|h| h.shape()),
+        }
+    }
+
+    /// Price of one point-to-point message of `bytes` from `a` to `b`:
+    /// intra-node messages ride the cheap links, inter-node messages pay
+    /// α-β once per network hop.
+    fn p2p_price(&self, a: usize, b: usize, bytes: f64) -> f64 {
+        let base = self.cost.alpha + self.cost.beta * bytes;
+        match &self.hier {
+            Some(h) if h.same_node(a, b) => base / h.intra_speedup(),
+            _ => base * self.net.hops(a, b).max(1.0),
         }
     }
 
@@ -527,8 +1197,19 @@ impl SimComm {
 
     /// The α-β price of one full halo exchange posted by `rank`.
     fn exchange_cost(&self, rank: usize) -> f64 {
-        self.cost.alpha * self.plan.neighbors(rank) as f64
-            + self.cost.beta * self.plan.send_volume(rank) as f64 * 4.0
+        if self.flat_priced() {
+            // Legacy single-hop formula, verbatim: α per neighbor plus β
+            // over the rank's *aggregate* f32 send volume.
+            self.cost.alpha * self.plan.neighbors(rank) as f64
+                + self.cost.beta * self.plan.send_volume(rank) as f64 * 4.0
+        } else {
+            // Per-destination: each neighbor message priced by its own
+            // hop count (or the intra-node discount).
+            self.plan.sends[rank]
+                .iter()
+                .map(|seg| self.p2p_price(rank, seg.to as usize, seg.src.len() as f64 * 4.0))
+                .sum()
+        }
     }
 
     /// Close `rank`'s overlap region: charge the exposed communication,
@@ -577,8 +1258,12 @@ impl Comm for SimComm {
 
     fn reduce_post(&self, chan: usize, rank: usize, v: f64) {
         self.mb.deposit(chan, rank, v);
-        let k = self.k() as f64;
-        self.mb.charge(rank, self.cost.allreduce_base * k.log2().max(1.0));
+        if self.flat_priced() {
+            let k = self.k() as f64;
+            self.mb.charge(rank, self.cost.allreduce_base * k.log2().max(1.0));
+        } else {
+            self.mb.charge(rank, self.model().scalar_reduce_secs(self.k()));
+        }
     }
 
     fn reduce_sum(&self, chan: usize) -> f64 {
@@ -639,8 +1324,12 @@ impl Comm for SimComm {
         // a single latency charge (the pipelined-CG saving).
         self.mb.deposit(0, rank, v0);
         self.mb.deposit(1, rank, v1);
-        let k = self.k() as f64;
-        self.mb.charge(rank, self.cost.allreduce_base * k.log2().max(1.0));
+        if self.flat_priced() {
+            let k = self.k() as f64;
+            self.mb.charge(rank, self.cost.allreduce_base * k.log2().max(1.0));
+        } else {
+            self.mb.charge(rank, self.model().scalar_reduce_secs(self.k()));
+        }
     }
 
     fn comm_hidden_secs(&self) -> Vec<f64> {
@@ -648,15 +1337,23 @@ impl Comm for SimComm {
     }
 
     fn allreduce_vec(&self, rank: usize, data: &mut [f64], op: ReduceOp) {
-        // A tree allreduce moves the vector once per level.
-        self.charge_collective(rank, 8.0 * data.len() as f64 * self.tree_depth());
+        if self.flat_priced() {
+            // A tree allreduce moves the vector once per level.
+            self.charge_collective(rank, 8.0 * data.len() as f64 * self.tree_depth());
+        } else if self.k() > 1 {
+            self.mb.charge(rank, self.model().allreduce_secs(self.k(), data.len()));
+        }
         self.colls.allreduce(rank, data, op);
     }
 
     fn allgatherv(&self, rank: usize, local: &[f64]) -> Vec<f64> {
         let out = self.colls.allgatherv(rank, local);
-        // Receive-dominated: each rank pulls in everyone else's share.
-        self.charge_collective(rank, 8.0 * (out.len() - local.len()) as f64);
+        if self.flat_priced() {
+            // Receive-dominated: each rank pulls in everyone else's share.
+            self.charge_collective(rank, 8.0 * (out.len() - local.len()) as f64);
+        } else if self.k() > 1 {
+            self.mb.charge(rank, self.model().allgather_secs(self.k(), out.len(), local.len()));
+        }
         out
     }
 
@@ -675,25 +1372,58 @@ impl Comm for SimComm {
             .map(|(_, p)| p.len())
             .sum();
         if self.k() > 1 {
-            // One message per peer plus β for every word shipped each way.
-            self.mb.charge(
-                rank,
-                self.cost.alpha * (self.k() - 1) as f64
-                    + self.cost.beta * 8.0 * (sent + recvd) as f64,
-            );
+            if self.flat_priced() {
+                // One message per peer plus β for every word shipped
+                // each way.
+                self.mb.charge(
+                    rank,
+                    self.cost.alpha * (self.k() - 1) as f64
+                        + self.cost.beta * 8.0 * (sent + recvd) as f64,
+                );
+            } else {
+                // The transport knows exactly which pairs exchanged
+                // data, so price each message by its own hops (still α
+                // per peer even when the part is empty, matching the
+                // flat model's per-peer latency).
+                let mut secs = 0.0;
+                for (d, p) in parts.iter().enumerate() {
+                    if d != rank {
+                        secs += self.p2p_price(rank, d, 8.0 * p.len() as f64);
+                    }
+                }
+                // Receives: bandwidth only (the sender paid its α).
+                for (s, p) in out.iter().enumerate() {
+                    if s != rank {
+                        let bytes = self.cost.beta * 8.0 * p.len() as f64;
+                        secs += match &self.hier {
+                            Some(h) if h.same_node(rank, s) => bytes / h.intra_speedup(),
+                            _ => bytes * self.net.hops(rank, s).max(1.0),
+                        };
+                    }
+                }
+                self.mb.charge(rank, secs);
+            }
         }
         out
     }
 
     fn broadcast(&self, rank: usize, root: usize, data: &mut Vec<f64>) {
         if rank == root {
-            // The payload length is known before the call on the root
-            // only; price both ends from it (symmetric tree).
-            self.charge_collective(rank, 8.0 * data.len() as f64);
+            if self.flat_priced() {
+                // The payload length is known before the call on the
+                // root only; price both ends from it (symmetric tree).
+                self.charge_collective(rank, 8.0 * data.len() as f64);
+            } else if self.k() > 1 {
+                self.mb.charge(rank, self.model().broadcast_secs(self.k(), data.len()));
+            }
         }
         self.colls.broadcast(rank, root, data);
         if rank != root {
-            self.charge_collective(rank, 8.0 * data.len() as f64);
+            if self.flat_priced() {
+                self.charge_collective(rank, 8.0 * data.len() as f64);
+            } else if self.k() > 1 {
+                self.mb.charge(rank, self.model().broadcast_secs(self.k(), data.len()));
+            }
         }
     }
 }
@@ -736,6 +1466,16 @@ pub struct ThreadComm {
 impl ThreadComm {
     /// Measured transport over `plan` for `plan.k()` rank threads.
     pub fn new(plan: std::sync::Arc<ExchangePlan>) -> ThreadComm {
+        ThreadComm::with_schedule(plan, None)
+    }
+
+    /// Measured transport running the two-level collective schedule —
+    /// the same staged phases [`SimComm`] prices, executed for real, so
+    /// hierarchical results stay bit-identical across backends.
+    pub fn with_schedule(
+        plan: std::sync::Arc<ExchangePlan>,
+        sched: Option<HierSchedule>,
+    ) -> ThreadComm {
         let mb = Mailboxes::new(&plan);
         let k = plan.k();
         let barrier = Barrier::new(k);
@@ -761,7 +1501,7 @@ impl ThreadComm {
             nb_expected,
             nb_got: (0..k).map(|_| Mutex::new(0usize)).collect(),
             nb_open: (0..k).map(|_| Mutex::new((false, 0u32))).collect(),
-            colls: Collectives::new(k),
+            colls: Collectives::new(k, sched),
         }
     }
 
@@ -1285,6 +2025,159 @@ mod tests {
         for b in 0..4 {
             for (j, &g) in h.blocks[b].ghosts.iter().enumerate() {
                 assert_eq!(results[b][j], g as f32, "rank {b} ghost {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn net_model_hops_are_symmetric_with_zero_diagonal() {
+        for net in [NetModel::FlatAlphaBeta, NetModel::fat_tree(), NetModel::torus_for(16)] {
+            for a in 0..16 {
+                assert_eq!(net.hops(a, a), 0.0, "{} self-hops", net.name());
+                for b in 0..16 {
+                    assert_eq!(net.hops(a, b), net.hops(b, a), "{} asymmetric", net.name());
+                    if a != b {
+                        assert!(net.hops(a, b) >= 1.0, "{} hops below one", net.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_hops_grow_with_block_distance() {
+        let net = NetModel::FatTree { radix: 4 };
+        assert_eq!(net.hops(0, 1), 2.0, "same edge switch");
+        assert_eq!(net.hops(0, 5), 4.0, "one level up");
+        assert_eq!(net.hops(0, 17), 6.0, "two levels up");
+    }
+
+    #[test]
+    fn torus_hops_wrap_around() {
+        let net = NetModel::Torus { dims: [4, 4] };
+        // (0,0) → (3,0): wraparound distance 1, not 3.
+        assert_eq!(net.hops(0, 3), 1.0);
+        // (0,0) → (2,2): 2 + 2.
+        assert_eq!(net.hops(0, 10), 4.0);
+    }
+
+    #[test]
+    fn round_factor_is_monotone_in_participants() {
+        for net in [NetModel::fat_tree(), NetModel::torus_for(16384)] {
+            let mut prev = 0.0;
+            for n in [1usize, 2, 64, 256, 1024, 4096, 16384] {
+                let f = net.round_factor(n);
+                assert!(f >= prev, "{} round factor dropped at n={n}", net.name());
+                assert!(f >= 1.0);
+                prev = f;
+            }
+        }
+        assert_eq!(NetModel::FlatAlphaBeta.round_factor(16384), 1.0);
+    }
+
+    #[test]
+    fn net_kind_parses_and_materializes() {
+        assert_eq!(NetKind::parse("flat"), Some(NetKind::Flat));
+        assert_eq!(NetKind::parse("fat-tree"), Some(NetKind::FatTree));
+        assert_eq!(NetKind::parse("TORUS"), Some(NetKind::Torus));
+        assert_eq!(NetKind::parse("mesh"), None);
+        assert!(NetKind::Flat.model(8).is_flat());
+        assert_eq!(NetKind::Torus.model(16).name(), "torus4x4");
+        for kind in NetKind::ALL {
+            assert_eq!(NetKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn hier_schedule_uniform_partitions_ranks() {
+        let s = HierSchedule::uniform(10, 4);
+        assert_eq!(s.k(), 10);
+        assert_eq!(s.nodes(), 3);
+        assert_eq!(s.group(0), &[0, 1, 2, 3]);
+        assert_eq!(s.group(2), &[8, 9]);
+        assert_eq!(s.max_group(), 4);
+        assert!(s.is_leader(0) && s.is_leader(4) && s.is_leader(8));
+        assert!(!s.is_leader(1));
+        assert!(s.same_node(4, 7) && !s.same_node(3, 4));
+        assert_eq!(s.shape().nodes, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguously")]
+    fn hier_schedule_rejects_non_contiguous_groups() {
+        HierSchedule::new(vec![vec![0, 2], vec![1, 3]]);
+    }
+
+    #[test]
+    fn collective_model_flat_matches_legacy_allreduce_charge() {
+        let cost = CostModel::default();
+        let m = CollectiveModel::flat_schedule(cost, NetModel::FlatAlphaBeta);
+        for k in [2usize, 4, 8, 64] {
+            let d = (k as f64).log2().ceil();
+            let len = 17usize;
+            let expect = cost.allreduce_base * d + cost.beta * (8.0 * len as f64 * d);
+            assert_eq!(m.allreduce_secs(k, len), expect, "k={k}");
+        }
+        assert_eq!(m.allreduce_secs(1, 100), 0.0);
+    }
+
+    #[test]
+    fn two_level_allreduce_prices_strictly_below_flat_beyond_one_node() {
+        let cost = CostModel::default();
+        for net in [NetModel::FlatAlphaBeta, NetModel::fat_tree()] {
+            for k in [128usize, 1024, 16384] {
+                let flat = CollectiveModel::flat_schedule(cost, net);
+                let hier = CollectiveModel::two_level(cost, net, k, 64);
+                assert!(
+                    hier.allreduce_secs(k, 100) < flat.allreduce_secs(k, 100),
+                    "hier not cheaper at k={k} on {}",
+                    net.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sim_with_net_flat_matches_legacy_charges() {
+        let (h, part) = setup();
+        let plan = Arc::new(ExchangePlan::new(&h, &part));
+        let legacy = SimComm::new(plan.clone(), CostModel::default());
+        let seamed =
+            SimComm::with_net(plan.clone(), CostModel::default(), NetModel::FlatAlphaBeta, None);
+        for rank in 0..plan.k() {
+            let owned: Vec<f32> = h.blocks[rank].own.iter().map(|&g| g as f32).collect();
+            legacy.post_halo(rank, &owned);
+            seamed.post_halo(rank, &owned);
+            legacy.reduce_post(0, rank, 1.0);
+            seamed.reduce_post(0, rank, 1.0);
+        }
+        assert_eq!(legacy.comm_secs(), seamed.comm_secs());
+    }
+
+    #[test]
+    fn sim_nonflat_halo_charges_more_than_flat() {
+        let (h, part) = setup();
+        let plan = Arc::new(ExchangePlan::new(&h, &part));
+        let flat = SimComm::new(plan.clone(), CostModel::default());
+        // Radix-2 fat tree: every cross-rank message crosses ≥ 2 hops,
+        // so the hop-priced halo must be *strictly* dearer than flat.
+        let tree = SimComm::with_net(
+            plan.clone(),
+            CostModel::default(),
+            NetModel::FatTree { radix: 2 },
+            None,
+        );
+        for rank in 0..plan.k() {
+            let owned: Vec<f32> = h.blocks[rank].own.iter().map(|&g| g as f32).collect();
+            flat.post_halo(rank, &owned);
+            tree.post_halo(rank, &owned);
+        }
+        for rank in 0..plan.k() {
+            if plan.neighbors(rank) > 0 {
+                assert!(
+                    tree.comm_secs()[rank] > flat.comm_secs()[rank],
+                    "hop-priced halo not dearer than flat at rank {rank}"
+                );
             }
         }
     }

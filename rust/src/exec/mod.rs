@@ -43,6 +43,16 @@
 //! as bulk `alltoallv` exchanges, amortizing the α latency across the
 //! whole buffer — with a `direct` baseline mode ([`AggMode`]) so the
 //! aggregation win is measurable on both transports.
+//!
+//! At scale the flat α-β picture stops being credible, so the seam also
+//! models the machine's shape: a [`NetModel`] prices messages and
+//! collective rounds by hop count (fat-tree / torus, [`NetKind`] is the
+//! CLI axis), a [`HierSchedule`] runs the collectives as a two-level
+//! intra-node/inter-node schedule (bit-identical to flat, strictly
+//! cheaper in sim once ranks span nodes), and the closed-form
+//! [`CollectiveModel`] prices the same schedules at rank counts far
+//! beyond what rendezvous transports can instantiate (the `--matrix
+//! scale` sweep runs it at 16384 virtual ranks).
 
 mod agg;
 mod cluster;
@@ -56,7 +66,8 @@ pub use cluster::{
 // into `solver::sell`.
 pub use crate::solver::SpmvLayout;
 pub use agg::{AggComm, AggMode, AggStats};
-pub use partition::{run_dist_partition, DistPartReport};
+pub use partition::{run_dist_partition, run_dist_partition_net, DistPartReport};
 pub use comm::{
-    Comm, CommRequest, CostModel, ExchangePlan, ReduceOp, SendSegment, SimComm, ThreadComm,
+    Comm, CommRequest, CollectiveModel, CostModel, ExchangePlan, HierSchedule, HierShape,
+    NetKind, NetModel, ReduceOp, SendSegment, SimComm, ThreadComm, INTRA_SPEEDUP,
 };

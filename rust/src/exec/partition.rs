@@ -15,7 +15,7 @@
 //! shares are measured.
 
 use super::cluster::ExecBackend;
-use super::comm::{Comm, CostModel, ExchangePlan, SimComm, ThreadComm};
+use super::comm::{Comm, CostModel, ExchangePlan, NetModel, SimComm, ThreadComm};
 use crate::graph::Csr;
 use crate::partition::Partition;
 use crate::partitioners::dist::{build_strips, DistCtx, DistPartitioner};
@@ -82,6 +82,35 @@ pub fn run_dist_partition(
     ranks: usize,
     cost: CostModel,
 ) -> Result<(Partition, DistPartReport)> {
+    run_dist_partition_net(
+        g,
+        targets,
+        epsilon,
+        seed,
+        algo,
+        backend,
+        ranks,
+        cost,
+        NetModel::FlatAlphaBeta,
+    )
+}
+
+/// [`run_dist_partition`] with an explicit network model for the priced
+/// backend (`--net` on the CLI). `NetModel::FlatAlphaBeta` reproduces
+/// the legacy charges exactly; the `threads` backend measures wall-clock
+/// and ignores the model.
+#[allow(clippy::too_many_arguments)]
+pub fn run_dist_partition_net(
+    g: &Csr,
+    targets: &[f64],
+    epsilon: f64,
+    seed: u64,
+    algo: &dyn DistPartitioner,
+    backend: ExecBackend,
+    ranks: usize,
+    cost: CostModel,
+    net: NetModel,
+) -> Result<(Partition, DistPartReport)> {
     ensure!(g.n() >= 1, "empty graph");
     let k = targets.len();
     let wall = Timer::start();
@@ -89,7 +118,7 @@ pub fn run_dist_partition(
     let dim = g.coords[0].dim;
     let plan = Arc::new(ExchangePlan::collectives_only(ranks));
     let comm: Box<dyn Comm> = match backend {
-        ExecBackend::Sim => Box::new(SimComm::new(plan, cost)),
+        ExecBackend::Sim => Box::new(SimComm::with_net(plan, cost, net, None)),
         ExecBackend::Threads => Box::new(ThreadComm::new(plan)),
     };
     let comm = &*comm;

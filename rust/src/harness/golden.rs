@@ -282,6 +282,8 @@ mod tests {
                 part_ranks: 0,
                 serve: None,
                 app: None,
+                net: crate::exec::NetKind::Flat,
+                scale: None,
             },
             n: 100,
             m: 180,
@@ -300,6 +302,8 @@ mod tests {
             dynamic: None,
             serve: None,
             app: None,
+            bottleneck_volume: None,
+            scale: None,
         }
     }
 

@@ -8,7 +8,11 @@
 //!   plus a `dynamic` axis for multi-epoch repartitioning traces);
 //!   [`MatrixKind`](scenario::MatrixKind) registers the named sweeps
 //!   (`smoke`, `paper-small`, `paper-full`, `dynamic`, `partdist`,
-//!   `serve`, `apps`) reachable via `hetpart harness --matrix <name>`;
+//!   `serve`, `apps`, `scale`) reachable via
+//!   `hetpart harness --matrix <name>`; the `scale` matrix prices
+//!   thousand-rank virtual clusters (flat vs hierarchical collectives ×
+//!   fat-tree/torus networks) through the analytic
+//!   [`CollectiveModel`](crate::exec::CollectiveModel);
 //! - [`runner`] — executes a matrix in parallel and writes structured
 //!   artifacts (CSV + JSON per run, per-partitioner geomean summaries);
 //! - [`golden`] — compares a deterministic matrix against checked-in
@@ -37,10 +41,11 @@ pub use bench_snapshot::{BenchSnapshot, Fingerprint, KernelEntry};
 pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
 pub use runner::{
     run_matrix, run_scenario, summarize, write_artifacts, AppSummary, DynamicSummary,
-    ScenarioResult, ServeSummary,
+    ScaleSummary, ScenarioResult, ServeSummary,
 };
 pub use scenario::{
-    alg1_targets, AppSpec, MatrixKind, Scenario, ServeSpec, TopoPreset, ALL_PRESETS,
+    alg1_targets, AppSpec, MatrixKind, ScaleSpec, Scenario, ServeSpec, TopoPreset,
+    ALL_PRESETS, SCALE_NODE_RANKS,
 };
 
 use crate::util::table::Table;

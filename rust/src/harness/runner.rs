@@ -9,13 +9,13 @@
 //!   Algorithm-1 optimum), plus cut and volume relative to geoKM on the
 //!   same (graph, topology) cell, as the paper reports (Figs. 2–4).
 
-use super::scenario::{AppSpec, Scenario, ServeSpec};
+use super::scenario::{AppSpec, ScaleSpec, Scenario, ServeSpec, SCALE_NODE_RANKS};
 use crate::apps::{by_name as app_by_name, run_app, AppConfig};
 use crate::coordinator::serve::{run_serve, ServeConfig, Tenant};
 use crate::coordinator::{instance, run_jobs, run_one, run_solve_opts};
-use crate::exec::{ExecBackend, SolveOpts};
+use crate::exec::{CollectiveModel, CostModel, ExecBackend, NetModel, SolveOpts};
 use crate::gen::Family;
-use crate::graph::Csr;
+use crate::graph::{Csr, QuotientGraph};
 use crate::repart::{
     repartitioner_for_trace, run_trace, DynamicKind, EpochTrace, TraceOptions,
 };
@@ -74,6 +74,31 @@ pub struct ScenarioResult {
     /// Application-kernel aggregates for scenarios on the app axis (None
     /// otherwise — the historical CG-only pipeline).
     pub app: Option<AppSummary>,
+    /// Bytes over the most-congested link under the scenario's topology
+    /// (`mapping::bottleneck_volume` of the partition's quotient graph
+    /// with blocks placed identically on PUs). None for dynamic
+    /// scenarios, whose quotient changes every epoch.
+    pub bottleneck_volume: Option<f64>,
+    /// Closed-form scale-axis pricing (None off the scale axis).
+    pub scale: Option<ScaleSummary>,
+}
+
+/// Analytic pricing of one CG-style iteration at the scale axis's
+/// virtual rank count — no per-rank state, so it reaches 16384 ranks
+/// and beyond in microseconds.
+#[derive(Debug, Clone)]
+pub struct ScaleSummary {
+    /// Virtual rank count the iteration was priced at.
+    pub ranks: usize,
+    /// Collective schedule that was priced (`flat`/`hier`).
+    pub sched: &'static str,
+    /// Network model name (e.g. `fattree16`, `torus128x128`).
+    pub net: String,
+    /// Priced seconds for one iteration under the requested schedule.
+    pub iter_secs: f64,
+    /// Priced seconds for the same iteration under the flat schedule on
+    /// the same network (the baseline for the `scaleVsFlat` ratio).
+    pub flat_iter_secs: f64,
 }
 
 /// Aggregates of one irregular-kernel run (`apps::run_app`) — the
@@ -164,6 +189,11 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
             "scenario {}: the app axis applies to static scenarios only",
             s.id()
         );
+        anyhow::ensure!(
+            s.scale.is_none(),
+            "scenario {}: the scale axis applies to static scenarios only",
+            s.id()
+        );
         return run_dynamic_scenario(s, g);
     }
     let topo = s.topology();
@@ -175,7 +205,7 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         None => run_one(graph_name, g, &topo, &s.algo, s.epsilon, s.seed)
             .with_context(|| format!("scenario {}", s.id()))?,
         Some(backend) => {
-            let (r, part, report) = crate::coordinator::run_one_dist(
+            let (r, part, report) = crate::coordinator::run_one_dist_net(
                 graph_name,
                 g,
                 &topo,
@@ -184,12 +214,20 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
                 s.seed,
                 backend,
                 s.part_ranks,
+                s.net.model(s.part_ranks),
             )
             .with_context(|| format!("scenario {}", s.id()))?;
             part_secs = Some(report.part_secs());
             (r, part)
         }
     };
+    // Bottleneck-link volume of the achieved partition: build the block
+    // quotient and charge each inter-block volume to the link its
+    // (identity-placed) endpoints share under the scenario's topology.
+    let quotient = QuotientGraph::build(g, &part.assignment, s.k);
+    let identity: Vec<u32> = (0..s.k as u32).collect();
+    let bottleneck_volume =
+        Some(crate::mapping::bottleneck_volume(&quotient, &topo, &identity));
     let ldht_ratio = if r.ldht_optimum > 0.0 {
         r.ldht_objective / r.ldht_optimum
     } else {
@@ -198,8 +236,12 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
     let (mut sim_time_per_iter, mut final_residual) = (None, None);
     let (mut comm_hidden_secs, mut overlap_efficiency) = (None, None);
     if s.solve_iters > 0 {
-        let opts =
-            SolveOpts { overlap: s.overlap, layout: s.layout, ..SolveOpts::default() };
+        let opts = SolveOpts {
+            overlap: s.overlap,
+            layout: s.layout,
+            net: s.net.model(s.k),
+            ..SolveOpts::default()
+        };
         let (solve, _cg) =
             run_solve_opts(g, &part, &topo, ExecBackend::Sim, 0.05, s.solve_iters, 0.0, opts)
                 .with_context(|| format!("solve for scenario {}", s.id()))?;
@@ -217,9 +259,11 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
     let app = match &s.app {
         None => None,
         Some(spec) => Some(
-            run_app_axis(spec, g).with_context(|| format!("app axis for {}", s.id()))?,
+            run_app_axis(spec, g, s.net.model(spec.ranks))
+                .with_context(|| format!("app axis for {}", s.id()))?,
         ),
     };
+    let scale = s.scale.as_ref().map(|spec| run_scale_axis(s, spec, g.n()));
     Ok(ScenarioResult {
         scenario: s.clone(),
         n: g.n(),
@@ -239,7 +283,37 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
         dynamic: None,
         serve,
         app,
+        bottleneck_volume,
+        scale,
     })
+}
+
+/// Price one CG-style iteration at the scale axis's virtual rank count
+/// through the analytic [`CollectiveModel`] — both the requested
+/// schedule and the flat baseline on the same network, so the
+/// `scaleVsFlat` ratio isolates the two-level schedule's effect. The
+/// halo follows a 2-D strip decomposition of the generated instance:
+/// each rank owns ~n/ranks vertices and exchanges a boundary that
+/// scales with the local side length.
+fn run_scale_axis(s: &Scenario, spec: &ScaleSpec, n: usize) -> ScaleSummary {
+    let cost = CostModel::default();
+    let net = s.net.model(spec.ranks);
+    let flat = CollectiveModel::flat_schedule(cost, net);
+    let model = if spec.hier {
+        CollectiveModel::two_level(cost, net, spec.ranks, SCALE_NODE_RANKS)
+    } else {
+        flat
+    };
+    let local = (n / spec.ranks.max(1)).max(1) as f64;
+    let halo_words = (local.sqrt().ceil() as usize).max(1);
+    let neighbors = spec.ranks.saturating_sub(1).min(4);
+    ScaleSummary {
+        ranks: spec.ranks,
+        sched: if spec.hier { "hier" } else { "flat" },
+        net: net.name(),
+        iter_secs: model.cg_iteration_secs(spec.ranks, neighbors, halo_words),
+        flat_iter_secs: flat.cg_iteration_secs(spec.ranks, neighbors, halo_words),
+    }
 }
 
 /// Run the scenario's irregular kernel over the generated instance on
@@ -247,13 +321,14 @@ pub fn run_scenario(s: &Scenario, graph_name: &str, g: &Csr) -> Result<ScenarioR
 /// columns. The kernel runs over plain row strips of the instance (the
 /// partition under study is orthogonal: this axis measures the
 /// *transport*, aggregated vs direct).
-fn run_app_axis(spec: &AppSpec, g: &Csr) -> Result<AppSummary> {
+fn run_app_axis(spec: &AppSpec, g: &Csr, net: NetModel) -> Result<AppSummary> {
     let kernel =
         app_by_name(&spec.kernel).ok_or_else(|| anyhow!("unknown app kernel {}", spec.kernel))?;
     let cfg = AppConfig {
         backend: spec.backend,
         ranks: spec.ranks,
         mode: spec.agg,
+        net,
         ..AppConfig::default()
     };
     let (_, rep) = run_app(g, kernel.as_ref(), &cfg)?;
@@ -356,6 +431,8 @@ fn run_dynamic_scenario(s: &Scenario, g: &Csr) -> Result<ScenarioResult> {
         }),
         serve: None,
         app: None,
+        bottleneck_volume: None,
+        scale: None,
     })
 }
 
@@ -487,7 +564,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
         "layout", "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
         "objVsScratch", "reqs", "reqPerSec", "latP50(ms)", "latP95(ms)", "latP99(ms)",
         "cacheHit", "rejected", "app", "aggMode", "flushes", "aggBytes", "maxLinkBytes",
-        "appSecs(ms)",
+        "bottleneckVol", "appSecs(ms)", "net", "scaleRanks", "sched", "scaleIter(ms)",
+        "scaleVsFlat",
     ]);
     for r in results {
         let s = &r.scenario;
@@ -556,6 +634,24 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 format!("{:.6}", a.app_secs * 1e3),
             ),
         };
+        let (scale_ranks, sched, scale_iter, scale_vs_flat) = match &r.scale {
+            None => (
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ),
+            Some(sc) => (
+                sc.ranks.to_string(),
+                sc.sched.to_string(),
+                format!("{:.6}", sc.iter_secs * 1e3),
+                if sc.flat_iter_secs > 0.0 {
+                    format!("{:.4}", sc.iter_secs / sc.flat_iter_secs)
+                } else {
+                    "-".to_string()
+                },
+            ),
+        };
         t.row(vec![
             s.id(),
             s.family.name().to_string(),
@@ -612,7 +708,13 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             flushes,
             agg_bytes,
             max_link,
+            fmt_opt(r.bottleneck_volume, 1.0),
             app_secs,
+            s.net.name().to_string(),
+            scale_ranks,
+            sched,
+            scale_iter,
+            scale_vs_flat,
         ]);
     }
     t
@@ -652,6 +754,7 @@ pub fn result_json(r: &ScenarioResult) -> Json {
         ("algo", Json::Str(s.algo.clone())),
         ("epsilon", Json::Num(s.epsilon)),
         ("seed", Json::Num(s.seed as f64)),
+        ("net", Json::Str(s.net.name().to_string())),
         ("cut", Json::Num(r.cut)),
         ("max_comm_volume", Json::Num(r.max_comm_volume)),
         ("total_comm_volume", Json::Num(r.total_comm_volume)),
@@ -749,6 +852,31 @@ pub fn result_json(r: &ScenarioResult) -> Json {
                 ]),
             },
         ),
+        (
+            "bottleneck_volume",
+            r.bottleneck_volume.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "scale",
+            match &r.scale {
+                None => Json::Null,
+                Some(sc) => obj(vec![
+                    ("ranks", Json::Num(sc.ranks as f64)),
+                    ("sched", Json::Str(sc.sched.to_string())),
+                    ("net", Json::Str(sc.net.clone())),
+                    ("iter_secs", Json::Num(sc.iter_secs)),
+                    ("flat_iter_secs", Json::Num(sc.flat_iter_secs)),
+                    (
+                        "vs_flat",
+                        if sc.flat_iter_secs > 0.0 {
+                            Json::Num(sc.iter_secs / sc.flat_iter_secs)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ]),
+            },
+        ),
     ])
 }
 
@@ -822,6 +950,7 @@ pub fn write_artifacts(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::NetKind;
     use crate::harness::scenario::TopoPreset;
     use crate::solver::SpmvLayout;
 
@@ -845,6 +974,8 @@ mod tests {
                 part_ranks: 0,
                 serve: None,
                 app: None,
+                net: NetKind::Flat,
+                scale: None,
             })
             .collect()
     }
@@ -1055,6 +1186,72 @@ mod tests {
     }
 
     #[test]
+    fn bottleneck_volume_is_populated_for_static_runs() {
+        let (ok, failed) = run_matrix(&tiny_scenarios(), 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        for r in &ok {
+            let b = r.bottleneck_volume.expect("static runs carry a bottleneck volume");
+            assert!(b > 0.0 && b.is_finite(), "bottleneck {b}");
+        }
+        let table = runs_table(&ok);
+        let bi = table.header.iter().position(|h| h == "bottleneckVol").unwrap();
+        assert_ne!(table.rows[0][bi], "-");
+        let back = Json::parse(&result_json(&ok[0]).render()).unwrap();
+        assert!(back.get("bottleneck_volume").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scale_axis_populates_columns_and_hier_beats_flat() {
+        let mut flat = tiny_scenarios();
+        flat.truncate(1);
+        flat[0].net = NetKind::FatTree;
+        flat[0].scale = Some(ScaleSpec { ranks: 1024, hier: false });
+        let mut hier = flat.clone();
+        hier[0].scale = Some(ScaleSpec { ranks: 1024, hier: true });
+        assert!(
+            hier[0].id().ends_with("-netfattree-scaleR1024-hier"),
+            "{}",
+            hier[0].id()
+        );
+        let (r_flat, f1) = run_matrix(&flat, 1);
+        let (r_hier, f2) = run_matrix(&hier, 1);
+        assert!(f1.is_empty() && f2.is_empty(), "{f1:?} {f2:?}");
+        let a = r_flat[0].scale.as_ref().expect("scale summary missing");
+        let b = r_hier[0].scale.as_ref().expect("scale summary missing");
+        // The flat schedule is its own baseline, bit for bit; beyond one
+        // node the two-level schedule is strictly cheaper.
+        assert_eq!(a.iter_secs, a.flat_iter_secs);
+        assert_eq!(a.iter_secs, b.flat_iter_secs, "same baseline on both rows");
+        assert!(
+            b.iter_secs < b.flat_iter_secs,
+            "hier {} !< flat {}",
+            b.iter_secs,
+            b.flat_iter_secs
+        );
+        // The table renders the new columns...
+        let table = runs_table(&r_hier);
+        let ni = table.header.iter().position(|h| h == "net").unwrap();
+        assert_eq!(table.rows[0][ni], "fattree");
+        let si = table.header.iter().position(|h| h == "sched").unwrap();
+        assert_eq!(table.rows[0][si], "hier");
+        let ri = table.header.iter().position(|h| h == "scaleRanks").unwrap();
+        assert_eq!(table.rows[0][ri], "1024");
+        // ...and the JSON carries the scale block.
+        let back = Json::parse(&result_json(&r_hier[0]).render()).unwrap();
+        assert_eq!(back.get("net").unwrap().as_str().unwrap(), "fattree");
+        let sj = back.get("scale").unwrap();
+        assert_eq!(sj.get("ranks").unwrap().as_f64().unwrap(), 1024.0);
+        assert_eq!(sj.get("sched").unwrap().as_str().unwrap(), "hier");
+        assert!(sj.get("vs_flat").unwrap().as_f64().unwrap() < 1.0);
+        // Off the axis the columns stay empty.
+        let (ok2, _) = run_matrix(&tiny_scenarios()[..1].to_vec(), 1);
+        assert!(ok2[0].scale.is_none());
+        let back2 = Json::parse(&result_json(&ok2[0]).render()).unwrap();
+        assert_eq!(back2.get("scale").unwrap(), &Json::Null);
+        assert_eq!(back2.get("net").unwrap().as_str().unwrap(), "flat");
+    }
+
+    #[test]
     fn summary_geomeans() {
         let (ok, _) = run_matrix(&tiny_scenarios(), 1);
         let sums = summarize(&ok);
@@ -1104,6 +1301,8 @@ mod tests {
             part_ranks: 0,
             serve: None,
             app: None,
+            net: NetKind::Flat,
+            scale: None,
         };
         let (ok, failed) = run_matrix(&[s], 1);
         assert!(failed.is_empty(), "{failed:?}");

@@ -8,7 +8,7 @@
 //! golden gate ([`super::golden`]) keys baselines by [`Scenario::id`].
 
 use crate::blocksizes::{block_sizes, TABLE3_FILL};
-use crate::exec::{AggMode, ExecBackend};
+use crate::exec::{AggMode, ExecBackend, NetKind};
 use crate::gen::Family;
 use crate::graph::Csr;
 use crate::partitioners::dist::DIST_NAMES;
@@ -152,7 +152,35 @@ pub struct Scenario {
     /// the virtual cluster and records `app`/`aggMode`/`flushes`/
     /// `aggBytes`/`maxLinkBytes` columns.
     pub app: Option<AppSpec>,
+    /// The network-model axis: which `exec::NetModel` the priced
+    /// backend charges messages and collective rounds with. The default
+    /// `Flat` is the legacy single-hop α-β model and never perturbs
+    /// golden ids; non-flat kinds append `-net<name>` to the id.
+    pub net: NetKind,
+    /// The scale axis: `Some(spec)` additionally prices the scenario's
+    /// communication at `spec.ranks` *virtual* ranks through the
+    /// closed-form `exec::CollectiveModel` (no transport is built — the
+    /// whole point is rank counts no thread pool can host) and records
+    /// the `scaleRanks`/`sched`/`scaleIter(ms)`/`scaleVsFlat` columns.
+    pub scale: Option<ScaleSpec>,
 }
+
+/// Parameters of the scale axis: how many virtual ranks the analytic
+/// pricing runs at, and whether the collectives use the two-level
+/// hierarchical schedule ([`SCALE_NODE_RANKS`] ranks per node) or the
+/// flat one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleSpec {
+    /// Virtual rank count (64 … 16384 in `--matrix scale`).
+    pub ranks: usize,
+    /// Two-level hierarchical collective schedule instead of flat.
+    pub hier: bool,
+}
+
+/// Ranks per physical node assumed by the scale axis's hierarchical
+/// schedule — a dense modern node (64 cores), so 16384 ranks span 256
+/// nodes.
+pub const SCALE_NODE_RANKS: usize = 64;
 
 /// Parameters of the application axis: which irregular kernel runs, and
 /// how its messages travel.
@@ -191,7 +219,9 @@ impl Scenario {
     /// `-l<layout>`, distributed-partitioning scenarios append
     /// `-pb<backend>R<ranks>`, serving scenarios append
     /// `-serveD<duration>R<rate>`, application scenarios append
-    /// `-app<kernel>-<aggmode><backend>R<ranks>`.
+    /// `-app<kernel>-<aggmode><backend>R<ranks>`, non-flat network
+    /// models append `-net<name>`, and scale scenarios append
+    /// `-scaleR<ranks>[-hier]`.
     pub fn id(&self) -> String {
         let mut id = format!(
             "{}-n{}-k{}-{}-{}-e{}-s{}",
@@ -226,6 +256,15 @@ impl Scenario {
                 spec.backend.name(),
                 spec.ranks
             ));
+        }
+        if self.net != NetKind::Flat {
+            id.push_str(&format!("-net{}", self.net.name()));
+        }
+        if let Some(spec) = &self.scale {
+            id.push_str(&format!("-scaleR{}", spec.ranks));
+            if spec.hier {
+                id.push_str("-hier");
+            }
         }
         id
     }
@@ -281,6 +320,13 @@ pub enum MatrixKind {
     /// 4 ranks — one run reproduces the aggregation-win table (`flushes`,
     /// `aggBytes`, and the bottleneck-link `maxLinkBytes` columns).
     Apps,
+    /// The scale matrix: 2 graph families × 2 algorithms × virtual rank
+    /// counts {64, 256, 1024, 4096, 16384} × flat-vs-hierarchical
+    /// collective schedule × 2 non-flat network models, priced through
+    /// the closed-form `exec::CollectiveModel` on the sim backend — the
+    /// scaling chapter the paper never had (`scaleRanks`/`sched`/
+    /// `scaleIter(ms)`/`scaleVsFlat` columns).
+    Scale,
 }
 
 impl MatrixKind {
@@ -294,6 +340,7 @@ impl MatrixKind {
             MatrixKind::PartDist => "partdist",
             MatrixKind::Serve => "serve",
             MatrixKind::Apps => "apps",
+            MatrixKind::Scale => "scale",
         }
     }
 
@@ -307,6 +354,7 @@ impl MatrixKind {
             "partdist" | "part-dist" | "part_dist" => MatrixKind::PartDist,
             "serve" | "serving" => MatrixKind::Serve,
             "apps" | "app" => MatrixKind::Apps,
+            "scale" | "scaling" => MatrixKind::Scale,
             _ => return None,
         })
     }
@@ -342,6 +390,8 @@ impl MatrixKind {
                                 layout: SpmvLayout::Ell,
                                 serve: None,
                                 app: None,
+                                net: NetKind::Flat,
+                                scale: None,
                             });
                         }
                     }
@@ -367,6 +417,8 @@ impl MatrixKind {
                             layout: SpmvLayout::Ell,
                             serve: None,
                             app: None,
+                            net: NetKind::Flat,
+                            scale: None,
                         });
                     }
                 }
@@ -421,6 +473,8 @@ impl MatrixKind {
                                 layout: SpmvLayout::Ell,
                                 serve: None,
                                 app: None,
+                                net: NetKind::Flat,
+                                scale: None,
                             });
                         }
                     }
@@ -455,6 +509,8 @@ impl MatrixKind {
                                 servers: 2,
                             }),
                             app: None,
+                            net: NetKind::Flat,
+                            scale: None,
                         });
                     }
                 }
@@ -490,7 +546,52 @@ impl MatrixKind {
                                         backend,
                                         ranks: 4,
                                     }),
+                                    net: NetKind::Flat,
+                                    scale: None,
                                 });
+                            }
+                        }
+                    }
+                }
+            }
+            MatrixKind::Scale => {
+                // Virtual-scale pricing: the partition still runs at
+                // k = 8 on the real instance (quality metrics stay
+                // meaningful), while the communication is priced at
+                // `ranks` virtual ranks through the closed-form model —
+                // flat vs hierarchical schedule under two non-flat
+                // fabrics. Rank counts are powers of two so the
+                // hier-strictly-cheaper property holds exactly (tree
+                // depths add: ceil(log2 g) + ceil(log2 nodes) =
+                // ceil(log2 k)).
+                let graphs = [(Family::Tri2d, 900usize), (Family::Rdg2d, 800)];
+                let ranks_axis = [64usize, 256, 1024, 4096, 16384];
+                for (family, n) in graphs {
+                    for algo in ["geoKM", "zSFC"] {
+                        for ranks in ranks_axis {
+                            for hier in [false, true] {
+                                for net in [NetKind::FatTree, NetKind::Torus] {
+                                    out.push(Scenario {
+                                        family,
+                                        n,
+                                        k: 8,
+                                        topo: TopoPreset::Uniform,
+                                        algo: algo.to_string(),
+                                        epsilon: EPS,
+                                        seed: SEED,
+                                        solve_iters: 0,
+                                        dynamic: DynamicKind::None,
+                                        epochs: 0,
+                                        overlap: false,
+                                        part_backend: None,
+                                        part_ranks: 0,
+                                        layout: SpmvLayout::Ell,
+                                        serve: None,
+                                        app: None,
+                                        net,
+                                        scale: Some(ScaleSpec { ranks, hier }),
+                                    });
+                                }
                             }
                         }
                     }
@@ -540,6 +641,8 @@ fn push_paper_grid(
                     layout: SpmvLayout::Ell,
                     serve: None,
                     app: None,
+                    net: NetKind::Flat,
+                    scale: None,
                 });
             }
         }
@@ -595,6 +698,7 @@ mod tests {
             MatrixKind::PartDist,
             MatrixKind::Serve,
             MatrixKind::Apps,
+            MatrixKind::Scale,
         ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
@@ -697,6 +801,8 @@ mod tests {
             layout: SpmvLayout::Ell,
             serve: None,
             app: None,
+            net: NetKind::Flat,
+            scale: None,
         };
         // Static ids keep the historical shape (golden-baseline keys).
         assert_eq!(s.id(), "tri_2d-n900-k8-uniform-geoKM-e0.03-s42");
@@ -802,6 +908,49 @@ mod tests {
         assert_eq!(s.id(), format!("{base}-appbfs-directthreadsR2"));
         // The default (None) never perturbs the historical golden key.
         s.app = None;
+        assert_eq!(s.id(), base);
+    }
+
+    #[test]
+    fn scale_matrix_shape_and_determinism() {
+        let s = MatrixKind::Scale.scenarios();
+        // 2 graphs × 2 algos × 5 rank counts × 2 schedules × 2 nets.
+        assert_eq!(s.len(), 2 * 2 * 5 * 2 * 2);
+        for x in &s {
+            let spec = x.scale.expect("scale scenario without a spec");
+            assert!(spec.ranks.is_power_of_two(), "ranks {} not a power of two", spec.ranks);
+            assert!(spec.ranks >= 64 && spec.ranks <= 16384);
+            assert_ne!(x.net, NetKind::Flat, "scale matrix sweeps non-flat fabrics");
+            assert_eq!(x.solve_iters, 0);
+            assert!(x.app.is_none() && x.serve.is_none());
+        }
+        assert!(s.iter().any(|x| x.scale.unwrap().ranks == 16384 && x.scale.unwrap().hier));
+        // IDs unique and deterministic call to call (seed-determinism of
+        // the scenario ids — the golden gate depends on it).
+        let ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate scale scenario ids");
+        let again: Vec<String> =
+            MatrixKind::Scale.scenarios().iter().map(|x| x.id()).collect();
+        assert_eq!(ids, again);
+    }
+
+    #[test]
+    fn net_and_scale_id_suffixes() {
+        let mut s = MatrixKind::Smoke.scenarios().remove(0);
+        let base = s.id();
+        s.net = NetKind::FatTree;
+        assert_eq!(s.id(), format!("{base}-netfattree"));
+        s.scale = Some(ScaleSpec { ranks: 1024, hier: true });
+        assert_eq!(s.id(), format!("{base}-netfattree-scaleR1024-hier"));
+        s.scale = Some(ScaleSpec { ranks: 64, hier: false });
+        s.net = NetKind::Torus;
+        assert_eq!(s.id(), format!("{base}-nettorus-scaleR64"));
+        // The defaults never perturb the historical golden keys.
+        s.net = NetKind::Flat;
+        s.scale = None;
         assert_eq!(s.id(), base);
     }
 

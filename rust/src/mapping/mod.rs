@@ -83,6 +83,88 @@ pub fn mapping_cost(q: &QuotientGraph, cost: &CommCost, pi: &[u32]) -> f64 {
         .sum()
 }
 
+/// The *bottleneck* (max-congested-link) mapping objective from
+/// Langguth, Schlag & Schulz (arXiv:2001.09645): instead of summing
+/// volume × distance over all edges, report the traffic on the single
+/// most-loaded link — the quantity that actually bounds iteration time
+/// on a real fabric.
+///
+/// Links are derived from the topology's node grouping
+/// ([`Topology::node_groups`]): traffic between blocks mapped to
+/// different nodes loads that ordered *node pair*'s fabric link; traffic
+/// between distinct PUs of one node loads their ordered intra-node PU
+/// link. Quotient-edge volumes count in both directions (halo exchanges
+/// are symmetric), matching how `AggComm` records its per-(src,dst)
+/// `link_bytes` matrix — on a flat topology (singleton node groups) this
+/// is exactly the max ordered PU-pair volume, i.e. the apps layer's
+/// `maxLinkBytes` computed from volumes (cross-checked in
+/// `tests/scale.rs`).
+pub fn bottleneck_volume(q: &QuotientGraph, topo: &Topology, pi: &[u32]) -> f64 {
+    let vols = q
+        .edges()
+        .iter()
+        .flat_map(|&(i, j, vol)| {
+            let (a, b) = (pi[i as usize] as usize, pi[j as usize] as usize);
+            [(a, b, vol), (b, a, vol)]
+        })
+        .collect::<Vec<_>>();
+    bottleneck_over_links(&vols, topo)
+}
+
+/// [`bottleneck_volume`] computed from a measured per-(src,dst) byte
+/// matrix (the `link_bytes` an `AggComm` application run records)
+/// instead of quotient-edge volumes. `links[s][d]` is bytes from rank
+/// `s` to rank `d`; `pi` maps ranks to PUs. Returns bytes on the
+/// most-congested link.
+pub fn bottleneck_from_links(links: &[Vec<usize>], topo: &Topology, pi: &[u32]) -> f64 {
+    let mut vols = Vec::new();
+    for (s, row) in links.iter().enumerate() {
+        for (d, &bytes) in row.iter().enumerate() {
+            if s != d && bytes > 0 {
+                vols.push((pi[s] as usize, pi[d] as usize, bytes as f64));
+            }
+        }
+    }
+    bottleneck_over_links(&vols, topo)
+}
+
+/// Shared accumulator: fold directed (src PU, dst PU, volume) traffic
+/// onto the topology's links and return the max. Inter-node traffic
+/// accumulates per ordered node pair (the shared fabric link); traffic
+/// between distinct PUs of one node accumulates per ordered PU pair.
+fn bottleneck_over_links(vols: &[(usize, usize, f64)], topo: &Topology) -> f64 {
+    let k = topo.k();
+    let groups = topo.node_groups();
+    let mut node_of = vec![0usize; k];
+    for (n, g) in groups.iter().enumerate() {
+        for &pu in g {
+            node_of[pu] = n;
+        }
+    }
+    let nodes = groups.len();
+    let mut inter = std::collections::HashMap::<(usize, usize), f64>::new();
+    let mut intra = std::collections::HashMap::<(usize, usize), f64>::new();
+    let mut best = 0.0f64;
+    for &(a, b, vol) in vols {
+        if a == b {
+            continue;
+        }
+        let (na, nb) = (node_of[a], node_of[b]);
+        let loaded = if na != nb {
+            debug_assert!(na < nodes && nb < nodes);
+            let e = inter.entry((na, nb)).or_insert(0.0);
+            *e += vol;
+            *e
+        } else {
+            let e = intra.entry((a, b)).or_insert(0.0);
+            *e += vol;
+            *e
+        };
+        best = best.max(loaded);
+    }
+    best
+}
+
 /// Speed classes: blocks may only map to PUs of (nearly) the same speed,
 /// because Algorithm 1 sized block i for PU i's capability. Public so the
 /// repartitioning subsystem's scratch-remap step shares the exact same
@@ -274,6 +356,73 @@ mod tests {
         let mut fast: Vec<u32> = vec![pi[0], pi[1]];
         fast.sort_unstable();
         assert_eq!(fast, vec![0, 1]);
+    }
+
+    /// Quotient-graph literal from symmetric (i, j, vol) edges.
+    fn quotient_from_edges(k: usize, edges: &[(u32, u32, f64)]) -> QuotientGraph {
+        let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); k];
+        for &(i, j, v) in edges {
+            adj[i as usize].push((j, v));
+            adj[j as usize].push((i, v));
+        }
+        for l in adj.iter_mut() {
+            l.sort_by_key(|&(j, _)| j);
+        }
+        QuotientGraph { k, adj: adj.clone(), cut: adj }
+    }
+
+    #[test]
+    fn bottleneck_volume_star_is_heaviest_spoke() {
+        // Star: center block 0 talks to 1, 2, 3 with volumes 5, 7, 3.
+        // On a flat topology every PU is its own node, so each spoke is
+        // its own link: the bottleneck is the heaviest spoke.
+        let q = quotient_from_edges(4, &[(0, 1, 5.0), (0, 2, 7.0), (0, 3, 3.0)]);
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        assert_eq!(bottleneck_volume(&q, &topo, &identity_mapping(4)), 7.0);
+    }
+
+    #[test]
+    fn bottleneck_volume_ring_is_heaviest_edge() {
+        let q = quotient_from_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0), (0, 3, 4.0)],
+        );
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        assert_eq!(bottleneck_volume(&q, &topo, &identity_mapping(4)), 4.0);
+    }
+
+    #[test]
+    fn bottleneck_volume_accumulates_on_the_node_link() {
+        // 2 nodes × 2 PUs. Intra edge (0,1) carries 5; inter edges
+        // (0,2) = 3 and (1,3) = 4 *share* the node0→node1 fabric link,
+        // so the bottleneck is their sum 7 — larger than any single
+        // edge. Total-volume objectives cannot see this.
+        let q = quotient_from_edges(4, &[(0, 1, 5.0), (0, 2, 3.0), (1, 3, 4.0)]);
+        let topo = hier_topo(2, 2);
+        assert_eq!(bottleneck_volume(&q, &topo, &identity_mapping(4)), 7.0);
+        // A mapping that swaps blocks 1 and 2 across nodes moves edge
+        // (0,1) onto the fabric too: link load becomes 5 + 3 = 8
+        // outbound... and the (1,3) edge turns intra. Recompute by hand:
+        // node0 now hosts blocks {0, 2}, node1 hosts {1, 3}.
+        //   (0,1): inter, 5   (0,2): intra PU link, 3   (1,3): intra, 4
+        let pi = vec![0, 2, 1, 3];
+        assert_eq!(bottleneck_volume(&q, &topo, &pi), 5.0);
+    }
+
+    #[test]
+    fn bottleneck_from_links_matches_volume_on_flat_topology() {
+        // A measured byte matrix on a flat topology: the bottleneck is
+        // simply the max ordered-pair entry (what `maxLinkBytes`
+        // reports).
+        let links = vec![
+            vec![0usize, 10, 0, 2],
+            vec![9, 0, 1, 0],
+            vec![0, 3, 0, 12],
+            vec![2, 0, 11, 0],
+        ];
+        let topo = Topology::homogeneous(4, 1.0, 2.0);
+        let max_entry = links.iter().flatten().copied().max().unwrap() as f64;
+        assert_eq!(bottleneck_from_links(&links, &topo, &identity_mapping(4)), max_entry);
     }
 
     #[test]

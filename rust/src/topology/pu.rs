@@ -168,6 +168,23 @@ impl Topology {
             TreeNode::Leaf { .. } => vec![self.root],
         }
     }
+
+    /// PU groups per *physical node* — one group per child of the root,
+    /// each holding its subtree's PU indices in leaf order. This is the
+    /// node grouping that drives the two-level collective schedule
+    /// (`exec::HierSchedule`) and the bottleneck mapping objective.
+    ///
+    /// Flat topologies (root directly over the leaves) yield `k`
+    /// singleton groups — every PU its own node, so node-aware costs
+    /// degenerate to their per-PU counterparts.
+    pub fn node_groups(&self) -> Vec<Vec<usize>> {
+        match &self.nodes[self.root] {
+            TreeNode::Leaf { pu } => vec![vec![*pu]],
+            TreeNode::Inner { children } => {
+                children.iter().map(|&c| self.leaves_under(c)).collect()
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -222,5 +239,21 @@ mod tests {
     fn leaves_in_order() {
         let t = Topology::hierarchical(&[3, 2], |_| Pu { speed: 1.0, memory: 1.0 }, "h32");
         assert_eq!(t.leaves_under(t.root), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn node_groups_partition_the_pus() {
+        let t = Topology::hierarchical(&[2, 3], |_| Pu { speed: 1.0, memory: 1.0 }, "h23");
+        let groups = t.node_groups();
+        assert_eq!(groups, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        let mut all: Vec<usize> = groups.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..t.k()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flat_node_groups_are_singletons() {
+        let t = Topology::homogeneous(4, 1.0, 2.0);
+        assert_eq!(t.node_groups(), vec![vec![0], vec![1], vec![2], vec![3]]);
     }
 }

@@ -1,0 +1,378 @@
+//! Scale-invariant property suite for the thousand-rank virtual-scale
+//! work (ISSUE 9): hierarchical (two-level) collectives, non-flat
+//! network pricing, and the bottleneck mapping objective.
+//!
+//! Pinned properties:
+//! 1. the two-level collective schedule is **bitwise identical** to the
+//!    flat schedule on both transports — it stages pure data movement,
+//!    never re-associating arithmetic;
+//! 2. the priced two-level schedule is strictly cheaper than flat beyond
+//!    one node and never worse at k = 1;
+//! 3. fat-tree/torus pricing is monotone in rank count and message size;
+//! 4. `NetModel::FlatAlphaBeta` reproduces the legacy charges exactly,
+//!    and the new scenario axes leave every historical golden id
+//!    untouched;
+//! 5. the bottleneck objective cross-checks against `maxLinkBytes` from
+//!    an actual kernel run's link matrix;
+//! 6. the `scale` matrix is deterministic and completes at 16384 virtual
+//!    ranks through the analytic collective model.
+
+use hetpart::apps::{by_name as app_by_name, run_app, AppConfig};
+use hetpart::exec::{
+    CollectiveModel, Comm, CostModel, ExchangePlan, HierSchedule, NetKind, NetModel,
+    ReduceOp, SimComm, ThreadComm,
+};
+use hetpart::harness::{run_matrix, MatrixKind, ScaleSpec, SCALE_NODE_RANKS};
+use hetpart::mapping::{bottleneck_from_links, identity_mapping};
+use hetpart::topology::Topology;
+use hetpart::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(rank)` on `k` concurrent rank threads (the rendezvous calling
+/// convention), collecting results in rank order.
+fn on_ranks<R: Send>(k: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let slots: Vec<Mutex<Option<R>>> = (0..k).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for (rank, slot) in slots.iter().enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                *slot.lock().unwrap() = Some(f(rank));
+            });
+        }
+    });
+    slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Deterministic pseudo-random payload for (seed, rank).
+fn payload(seed: u64, rank: usize, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed.wrapping_mul(131).wrapping_add(rank as u64));
+    (0..len).map(|_| rng.f64() * 200.0 - 100.0).collect()
+}
+
+fn plan(k: usize) -> Arc<ExchangePlan> {
+    Arc::new(ExchangePlan::collectives_only(k))
+}
+
+/// The four transports under test: flat and two-level (2 ranks/node)
+/// schedules on both the priced and the measured backend.
+fn transports(k: usize) -> Vec<(String, Box<dyn Comm>)> {
+    let sched = HierSchedule::uniform(k, 2);
+    vec![
+        (
+            "sim-flat".into(),
+            Box::new(SimComm::with_net(
+                plan(k),
+                CostModel::default(),
+                NetModel::FlatAlphaBeta,
+                None,
+            )) as Box<dyn Comm>,
+        ),
+        (
+            "sim-hier".into(),
+            Box::new(SimComm::with_net(
+                plan(k),
+                CostModel::default(),
+                NetModel::fat_tree(),
+                Some(sched.clone()),
+            )),
+        ),
+        ("threads-flat".into(), Box::new(ThreadComm::new(plan(k)))),
+        (
+            "threads-hier".into(),
+            Box::new(ThreadComm::with_schedule(plan(k), Some(sched))),
+        ),
+    ]
+}
+
+// ---- 1. bitwise identity of the two-level schedule ---------------------
+
+#[test]
+fn hier_allreduce_is_bitwise_identical_to_flat_on_both_backends() {
+    for k in [1usize, 2, 4, 8] {
+        for op in [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max] {
+            let mut reference: Option<Vec<Vec<f64>>> = None;
+            for (label, comm) in transports(k) {
+                let got = on_ranks(k, |rank| {
+                    let mut v = payload(5, rank, 33);
+                    comm.allreduce_vec(rank, &mut v, op);
+                    v
+                });
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        assert_eq!(&got, want, "k={k} {op:?} transport={label}")
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_allgatherv_alltoallv_broadcast_match_flat_bitwise() {
+    for k in [1usize, 2, 4, 8] {
+        let mut reference: Option<(Vec<Vec<f64>>, Vec<Vec<Vec<f64>>>, Vec<Vec<f64>>)> = None;
+        for (label, comm) in transports(k) {
+            let gathered = on_ranks(k, |rank| {
+                // Ragged contributions: rank r contributes r+1 values.
+                comm.allgatherv(rank, &payload(7, rank, rank + 1))
+            });
+            let exchanged = on_ranks(k, |rank| {
+                let parts: Vec<Vec<f64>> =
+                    (0..k).map(|d| payload(11 + d as u64, rank, (rank + d) % 3 + 1)).collect();
+                comm.alltoallv(rank, &parts)
+            });
+            let bcast = on_ranks(k, |rank| {
+                let mut v = if rank == k - 1 { payload(13, rank, 9) } else { Vec::new() };
+                comm.broadcast(rank, k - 1, &mut v);
+                v
+            });
+            let got = (gathered, exchanged, bcast);
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "k={k} transport={label}"),
+            }
+        }
+    }
+}
+
+// ---- 2. two-level pricing: strictly cheaper beyond one node ------------
+
+#[test]
+fn hier_transport_prices_strictly_below_flat_beyond_one_node() {
+    // k = 4, 8 with 2 ranks/node → 2, 4 nodes: the staged schedule must
+    // be strictly cheaper on the priced transport; at k = 1 both are 0.
+    for k in [4usize, 8] {
+        let run = |hier: Option<HierSchedule>| -> f64 {
+            let comm =
+                SimComm::with_net(plan(k), CostModel::default(), NetModel::FlatAlphaBeta, hier);
+            on_ranks(k, |rank| {
+                let mut v = payload(17, rank, 64);
+                comm.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+            });
+            comm.comm_secs().iter().cloned().fold(0.0, f64::max)
+        };
+        let flat = run(None);
+        let hier = run(Some(HierSchedule::uniform(k, 2)));
+        assert!(flat > 0.0);
+        assert!(hier < flat, "k={k}: hier {hier} !< flat {flat}");
+    }
+    let free = SimComm::with_net(
+        plan(1),
+        CostModel::default(),
+        NetModel::FlatAlphaBeta,
+        Some(HierSchedule::uniform(1, 2)),
+    );
+    on_ranks(1, |rank| {
+        let mut v = payload(17, rank, 64);
+        free.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+    });
+    assert_eq!(free.comm_secs(), vec![0.0], "k=1 collectives stay free");
+}
+
+#[test]
+fn collective_model_hier_never_worse_and_strictly_better_past_one_node() {
+    let cost = CostModel::default();
+    for net in [NetModel::FlatAlphaBeta, NetModel::fat_tree(), NetModel::torus_for(16384)] {
+        for k in [64usize, 256, 1024, 4096, 16384] {
+            let flat = CollectiveModel::flat_schedule(cost, net);
+            let hier = CollectiveModel::two_level(cost, net, k, SCALE_NODE_RANKS);
+            for len in [1usize, 64, 4096] {
+                let (f, h) = (flat.allreduce_secs(k, len), hier.allreduce_secs(k, len));
+                if k > SCALE_NODE_RANKS {
+                    assert!(h < f, "allreduce k={k} len={len} {}: {h} !< {f}", net.name());
+                } else {
+                    assert!(h <= f, "allreduce k={k} len={len}: {h} > {f}");
+                }
+            }
+            let (f, h) = (
+                flat.cg_iteration_secs(k, 4, 256),
+                hier.cg_iteration_secs(k, 4, 256),
+            );
+            if k > SCALE_NODE_RANKS {
+                assert!(h < f, "cg iter k={k} {}: {h} !< {f}", net.name());
+            }
+        }
+        // One node (or less): the two-level schedule degenerates to flat
+        // pricing intra-node at worst, never costing extra.
+        let flat = CollectiveModel::flat_schedule(cost, net);
+        let hier = CollectiveModel::two_level(cost, net, 1, SCALE_NODE_RANKS);
+        assert_eq!(hier.allreduce_secs(1, 64), 0.0);
+        assert_eq!(flat.allreduce_secs(1, 64), 0.0);
+    }
+}
+
+// ---- 3. non-flat pricing monotonicity ----------------------------------
+
+#[test]
+fn nonflat_pricing_is_monotone_in_ranks_and_message_size() {
+    let cost = CostModel::default();
+    for kind in [NetKind::FatTree, NetKind::Torus] {
+        let ranks = [64usize, 256, 1024, 4096, 16384];
+        let mut prev_k = 0.0;
+        for &k in &ranks {
+            let m = CollectiveModel::flat_schedule(cost, kind.model(k));
+            let secs = m.allreduce_secs(k, 128);
+            assert!(
+                secs >= prev_k,
+                "{}: allreduce_secs({k}) = {secs} < {prev_k}",
+                kind.name()
+            );
+            prev_k = secs;
+            // Monotone in message size at fixed k.
+            let mut prev_len = 0.0;
+            for len in [1usize, 16, 256, 4096, 65536] {
+                let s = m.allreduce_secs(k, len);
+                assert!(s > prev_len, "{}: len={len}", kind.name());
+                prev_len = s;
+            }
+            // Halo pricing grows with words too.
+            assert!(
+                m.halo_exchange_secs(k, 4, 2048) > m.halo_exchange_secs(k, 4, 16),
+                "{}: halo not monotone in words",
+                kind.name()
+            );
+        }
+        // The network factor itself grows with the participant count.
+        let net = kind.model(16384);
+        assert!(net.round_factor(16384) >= net.round_factor(64));
+        assert!(net.round_factor(64) >= 1.0);
+    }
+}
+
+// ---- 4. FlatAlphaBeta reproduces the legacy charges exactly ------------
+
+#[test]
+fn flat_net_seam_reproduces_legacy_charges_bit_for_bit() {
+    for k in [2usize, 4, 8] {
+        let battery = |comm: &dyn Comm| -> Vec<f64> {
+            on_ranks(k, |rank| {
+                let mut v = payload(23, rank, 40);
+                comm.allreduce_vec(rank, &mut v, ReduceOp::Sum);
+                let _ = comm.allgatherv(rank, &payload(29, rank, rank + 2));
+                let parts: Vec<Vec<f64>> = (0..k).map(|d| payload(31, rank, d + 1)).collect();
+                let _ = comm.alltoallv(rank, &parts);
+                let mut b = if rank == 0 { payload(37, rank, 12) } else { Vec::new() };
+                comm.broadcast(rank, 0, &mut b);
+            });
+            comm.comm_secs()
+        };
+        let legacy = SimComm::new(plan(k), CostModel::default());
+        let seamed =
+            SimComm::with_net(plan(k), CostModel::default(), NetModel::FlatAlphaBeta, None);
+        assert_eq!(battery(&legacy), battery(&seamed), "k={k}");
+    }
+}
+
+#[test]
+fn empty_alltoallv_charges_exactly_alpha_per_peer() {
+    let cost = CostModel::default();
+    for k in [2usize, 4, 8] {
+        let comm = SimComm::with_net(plan(k), cost, NetModel::FlatAlphaBeta, None);
+        on_ranks(k, |rank| {
+            let _ = comm.alltoallv(rank, &vec![Vec::new(); k]);
+        });
+        for (rank, secs) in comm.comm_secs().iter().enumerate() {
+            assert_eq!(*secs, cost.alpha * (k - 1) as f64, "k={k} rank={rank}");
+        }
+    }
+}
+
+#[test]
+fn historical_golden_ids_are_unchanged_by_the_new_axes() {
+    let smoke = MatrixKind::Smoke.scenarios();
+    let ids: Vec<String> = smoke.iter().map(|s| s.id()).collect();
+    // The seed matrix's pinned id — any drift here invalidates the
+    // checked-in golden baselines.
+    assert!(
+        ids.iter().any(|id| id == "tri_2d-n900-k8-uniform-geoKM-e0.03-s42"),
+        "pinned smoke id missing: {ids:?}"
+    );
+    for id in &ids {
+        assert!(!id.contains("-net"), "flat default must not tag ids: {id}");
+        assert!(!id.contains("-scale"), "scale axis leaked into {id}");
+    }
+}
+
+// ---- 5. bottleneck objective cross-checks ------------------------------
+
+#[test]
+fn bottleneck_from_links_matches_max_link_bytes_of_a_kernel_run() {
+    let (_, g) = hetpart::coordinator::instance(hetpart::gen::Family::Tri2d, 400, 7);
+    let kernel = app_by_name("bfs").expect("bfs kernel");
+    let ranks = 4usize;
+    let cfg = AppConfig { ranks, ..AppConfig::default() };
+    let (_, rep) = run_app(&g, kernel.as_ref(), &cfg).expect("app run");
+    assert!(rep.max_link_bytes() > 0, "BFS must cross strip boundaries");
+    // On a flat topology every PU is its own node, so the heaviest link
+    // is exactly the heaviest ordered rank pair — maxLinkBytes.
+    let topo = Topology::homogeneous(ranks, 1.0, 2.0);
+    let got = bottleneck_from_links(&rep.link_bytes, &topo, &identity_mapping(ranks));
+    assert_eq!(got, rep.max_link_bytes() as f64);
+    // Grouping ranks {0,1} and {2,3} onto two nodes can only accumulate
+    // volume onto the shared inter-node links: the bottleneck is ≥ the
+    // flat one, and ≤ the total off-rank traffic.
+    let two_nodes = Topology::hierarchical(
+        &[2, 2],
+        |_| hetpart::topology::Pu { speed: 1.0, memory: 2.0 },
+        "2x2",
+    );
+    let grouped = bottleneck_from_links(&rep.link_bytes, &two_nodes, &identity_mapping(ranks));
+    assert!(grouped >= got, "grouping dropped the bottleneck: {grouped} < {got}");
+    assert!(grouped <= rep.agg_bytes as f64);
+}
+
+// ---- 6. the scale matrix -----------------------------------------------
+
+#[test]
+fn scale_matrix_is_deterministic_with_unique_ids() {
+    let a = MatrixKind::Scale.scenarios();
+    let b = MatrixKind::Scale.scenarios();
+    assert_eq!(a.len(), 80);
+    let ids: Vec<String> = a.iter().map(|s| s.id()).collect();
+    let ids_b: Vec<String> = b.iter().map(|s| s.id()).collect();
+    assert_eq!(ids, ids_b, "scale scenario ids must be seed-deterministic");
+    let mut dedup = ids.clone();
+    dedup.sort();
+    dedup.dedup();
+    assert_eq!(dedup.len(), ids.len(), "duplicate scale ids");
+    for s in &a {
+        let spec = s.scale.expect("every scale cell sits on the scale axis");
+        assert!(spec.ranks.is_power_of_two() && (64..=16384).contains(&spec.ranks));
+        assert_ne!(s.net, NetKind::Flat, "scale cells price a real network");
+    }
+    assert!(
+        a.iter().any(|s| s.scale == Some(ScaleSpec { ranks: 16384, hier: true })),
+        "the 16384-rank hierarchical cell must be present"
+    );
+}
+
+#[test]
+fn scale_scenario_completes_at_16384_ranks_with_hier_strictly_cheaper() {
+    let all = MatrixKind::Scale.scenarios();
+    let cells: Vec<_> = all
+        .into_iter()
+        .filter(|s| s.scale.is_some_and(|sp| sp.ranks == 16384) && s.algo == "geoKM")
+        .take(4) // 2 nets × {flat, hier} of one graph/algo cell
+        .collect();
+    assert!(!cells.is_empty());
+    let (ok, failed) = run_matrix(&cells, 2);
+    assert!(failed.is_empty(), "{failed:?}");
+    for r in &ok {
+        let sc = r.scale.as_ref().expect("scale summary missing");
+        assert_eq!(sc.ranks, 16384);
+        assert!(sc.iter_secs > 0.0 && sc.iter_secs.is_finite());
+        if r.scenario.scale.unwrap().hier {
+            assert!(
+                sc.iter_secs < sc.flat_iter_secs,
+                "{}: hier {} !< flat {}",
+                r.scenario.id(),
+                sc.iter_secs,
+                sc.flat_iter_secs
+            );
+        } else {
+            assert_eq!(sc.iter_secs, sc.flat_iter_secs);
+        }
+        assert!(r.bottleneck_volume.unwrap() > 0.0);
+    }
+}
