@@ -8,7 +8,7 @@
 //! hetpart solve      --family rdg2d --n 16384 --algo geoRef --k 96 [--pjrt] [--iters 100]
 //!                    [--backend sim|threads] [--overlap on|off] [--cg classic|pipelined]
 //!                    [--layout ell|sellcs] [--net flat|fattree|torus]
-//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale
+//! hetpart harness    --matrix smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale|sweep
 //!                    [--overlap on|off] [--layout ell|sellcs] [--net flat|fattree|torus]
 //!                    [--max-ranks N] [--out results/harness] [--workers N] [--verbose]
 //! hetpart app        --app bfs|sssp|pagerank [--agg on|off] [--backend sim|threads]
@@ -17,7 +17,8 @@
 //! hetpart serve      --duration 5 --arrival-rate 50 --seed 1
 //!                    [--family tri2d --n 800 --k 8 --preset uniform --algo geoKM]
 //!                    [--backend threads|sim] [--workers N] [--queue-cap 64]
-//!                    [--cache-cap N] [--out results/serve/summary.json]
+//!                    [--cache-cap N] [--clients N] [--coalesce on|off]
+//!                    [--batch on|off] [--shards N] [--out results/serve/summary.json]
 //! hetpart repart     --family refined2d --n 2000 --k 8 --preset twospeed
 //!                    --dynamic refine-front|speed-drift --epochs 6
 //!                    --repart scratchRemap|diffusion|increKM
@@ -86,10 +87,14 @@ SUBCOMMANDS
                (table3|fig1|fig2a|fig2b|fig3|fig4|fig5|table4)
   harness      run a declarative scenario matrix in parallel and write
                CSV + JSON artifacts (--matrix smoke|paper-small|paper-full
-               |dynamic|partdist|serve|apps|scale — partdist sweeps the
-               distributed partitioners over backend/rank axes for the
+               |dynamic|partdist|serve|apps|scale|sweep — partdist sweeps
+               the distributed partitioners over backend/rank axes for the
                quality-vs-partition-time scatter; serve replays open-loop
                serving traces through the resident partition service;
+               sweep steps one serving cell across ~6 offered rates so
+               the saturation knee (goodput flattens, latP99 grows) is
+               readable from one CSV, and snapshots per-rate goodput as
+               BENCH_serve.json;
                apps sweeps the irregular kernels × aggregation × backend;
                scale prices 64–16384-rank virtual clusters, flat vs
                hierarchical collectives on fat-tree/torus networks,
@@ -112,8 +117,12 @@ SUBCOMMANDS
                 threads|sim — threads measures wall-clock latencies,
                 sim replays in deterministic virtual time; --workers N,
                 --queue-cap C bounds admission, --cache-cap N bounds the
-                resident caches with LRU eviction, --out FILE writes the
-                summary JSON)
+                resident caches with LRU eviction, --clients N switches
+                to a closed loop of N think-time-zero clients,
+                --coalesce on|off gates single-flight build sharing,
+                --batch on|off gates same-tenant solve batching,
+                --shards N sizes the sharded caches, --out FILE writes
+                the summary JSON)
   app          run one irregular graph kernel on the virtual cluster
                through the aggregating message layer
                (--app bfs|sssp|pagerank, --agg on|off switches bulk
@@ -293,7 +302,7 @@ fn cmd_harness(args: &Args) -> i32 {
     let name: String = args.get("matrix", "smoke".to_string());
     let Some(kind) = MatrixKind::parse(&name) else {
         eprintln!(
-            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale)"
+            "unknown --matrix {name} (expected smoke|paper-small|paper-full|dynamic|partdist|serve|apps|scale|sweep)"
         );
         return 2;
     };
@@ -380,10 +389,34 @@ fn cmd_harness(args: &Args) -> i32 {
         eprintln!("FAILED {id}: {e}");
     }
     match write_artifacts(&out, &matrix_label, &ok, &failed) {
-        Ok(dir) => println!(
-            "[artifacts: {}/runs.csv, runs/<id>.json, summary.csv, summary.json]",
-            dir.display()
-        ),
+        Ok(dir) => {
+            println!(
+                "[artifacts: {}/runs.csv, runs/<id>.json, summary.csv, summary.json]",
+                dir.display()
+            );
+            // The sweep matrix additionally snapshots per-rate goodput as
+            // a higher-is-better BENCH_serve.json, so bench_compare can
+            // gate serving-throughput regressions in the right direction.
+            if kind == MatrixKind::Sweep {
+                let mut snap = crate::harness::bench_snapshot::BenchSnapshot::new("serve");
+                for r in &ok {
+                    if let Some(v) = &r.serve {
+                        snap.push_rate(
+                            &format!("goodput@{:.0}", v.offered_rate),
+                            r.n,
+                            v.goodput,
+                        );
+                    }
+                }
+                match snap.save(&dir) {
+                    Ok(p) => println!("[bench snapshot: {}]", p.display()),
+                    Err(e) => {
+                        eprintln!("bench snapshot write failed: {e}");
+                        return 1;
+                    }
+                }
+            }
+        }
         Err(e) => {
             eprintln!("artifact write failed: {e}");
             return 1;
@@ -503,7 +536,7 @@ fn cmd_repart(args: &Args) -> i32 {
 /// deterministic synthetic open-loop trace (see `coordinator::serve`)
 /// and report throughput, latency percentiles, and cache hit rate.
 fn cmd_serve(args: &Args) -> i32 {
-    use crate::coordinator::serve::{run_serve, ServeConfig, Tenant};
+    use crate::coordinator::serve::{run_serve, ClientMode, ServeConfig, Tenant};
     use crate::harness::TopoPreset;
     let fam: String = args.get("family", "tri2d".to_string());
     let Some(family) = Family::parse(&fam) else {
@@ -547,20 +580,57 @@ fn cmd_serve(args: &Args) -> i32 {
     // 0 (or absent) keeps the historical unbounded caches.
     let cache_cap = args.get("cache-cap", 0usize);
     cfg.cache_cap = if cache_cap == 0 { None } else { Some(cache_cap) };
+    // Throughput knobs: --clients N switches to a closed loop of N
+    // think-time-zero clients (0 = the default open-loop trace);
+    // --coalesce/--batch (default on) gate single-flight build sharing
+    // and same-tenant solve batching; --shards sizes the sharded caches.
+    let clients = args.get("clients", 0usize);
+    cfg.client_mode = if clients == 0 {
+        ClientMode::Open
+    } else {
+        ClientMode::Closed { clients }
+    };
+    match args.get("coalesce", "on".to_string()).to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => cfg.coalesce = true,
+        "off" | "false" | "0" => cfg.coalesce = false,
+        v => {
+            eprintln!("unknown --coalesce {v} (expected on|off)");
+            return 2;
+        }
+    }
+    match args.get("batch", "on".to_string()).to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => cfg.batch = true,
+        "off" | "false" | "0" => cfg.batch = false,
+        v => {
+            eprintln!("unknown --batch {v} (expected on|off)");
+            return 2;
+        }
+    }
+    cfg.shards = args.get("shards", cfg.shards);
+    if cfg.shards == 0 {
+        eprintln!("--shards must be at least 1");
+        return 2;
+    }
     println!(
-        "serve: {} tenants over {}_{} preset {} k={} | λ={}/s for {}s (seed {}) | \
-         backend {} x{} workers, queue cap {}",
+        "serve: {} tenants over {}_{} preset {} k={} | {} for {}s (seed {}) | \
+         backend {} x{} workers, queue cap {} | coalesce {} batch {} shards {}",
         cfg.tenants.len(),
         cfg.tenants[0].family.name(),
         cfg.tenants[0].n,
         cfg.tenants[0].preset.name(),
         cfg.tenants[0].k,
-        cfg.arrival_rate,
+        match cfg.client_mode {
+            ClientMode::Open => format!("open loop λ={}/s", cfg.arrival_rate),
+            ClientMode::Closed { clients } => format!("closed loop x{clients} clients"),
+        },
         cfg.duration_secs,
         cfg.seed,
         backend.name(),
         cfg.servers,
         cfg.queue_cap,
+        if cfg.coalesce { "on" } else { "off" },
+        if cfg.batch { "on" } else { "off" },
+        cfg.shards,
     );
     let rep = match run_serve(&cfg) {
         Ok(r) => r,
@@ -571,13 +641,18 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     print!("{}", rep.table().to_text());
     println!(
-        "throughput {:.1} req/s | p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms | cache hit rate {:.3} | \
+        "throughput {:.1} req/s (goodput {:.1}/s) | p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms | \
+         cache hit rate {:.3} | {} builds, {} coalesced, {} batched | \
          {} warm starts (mean migrated frac {:.3})",
         rep.req_per_sec,
+        rep.goodput,
         rep.latency_p50_ms,
         rep.latency_p95_ms,
         rep.latency_p99_ms,
         rep.cache_hit_rate,
+        rep.builds,
+        rep.coalesced,
+        rep.batched,
         rep.warm_starts,
         rep.mean_migrated_frac,
     );

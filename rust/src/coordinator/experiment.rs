@@ -275,6 +275,50 @@ pub fn run_solve_prepared(
     ))
 }
 
+/// [`run_solve_prepared`] for a *batch* of solves against one prepared
+/// instance: the cluster model calibrates once and the right-hand side
+/// assembles once, then each entry of `iters` runs as its own CG solve.
+/// The serve loop drains consecutive same-tenant solve requests through
+/// this to amortize per-request setup. Numerics are bitwise identical to
+/// calling [`run_solve_prepared`] once per entry: `run_cg_virtual_opts`
+/// builds a fresh virtual cluster per call, and calibration only affects
+/// priced timings, never the iteration arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub fn run_solve_batch(
+    ell: &EllMatrix,
+    part: &Partition,
+    topo: &Topology,
+    backend: ExecBackend,
+    iters: &[usize],
+    tol: f32,
+    opts: SolveOpts,
+) -> Result<Vec<(SolveResult, CgResult)>> {
+    let mut sim = ClusterSim::default();
+    sim.calibrate(ell);
+    let b = default_rhs(ell.n);
+    let mut out = Vec::with_capacity(iters.len());
+    for &max_iters in iters {
+        let (cg, rep) =
+            sim.run_cg_virtual_opts(ell, part, topo, backend, &b, max_iters, tol, opts)?;
+        out.push((
+            SolveResult {
+                backend: rep.backend,
+                iterations: cg.iterations,
+                final_residual: cg.residual_norms.last().copied().unwrap_or(0.0),
+                time_per_iter: rep.time_per_iter(),
+                bottleneck_rank: rep.bottleneck_rank(),
+                wall_secs: rep.wall_secs,
+                overlap: opts.overlap,
+                comm_hidden_secs: rep.comm_hidden_total(),
+                overlap_efficiency: rep.overlap_efficiency(),
+                layout: opts.layout.name(),
+            },
+            cg,
+        ));
+    }
+    Ok(out)
+}
+
 /// A grid: instances × topologies × algorithms.
 pub struct Grid {
     /// Named instances to partition.
@@ -430,6 +474,51 @@ mod tests {
         };
         let rs = grid.run();
         assert_eq!(rs.len(), 4);
+    }
+
+    #[test]
+    fn run_solve_batch_is_bitwise_identical_to_individual_solves() {
+        let (name, g) = instance(Family::Tri2d, 400, 1);
+        let topo = Topology::homogeneous(4, 1.0, 1e9);
+        let (_, p) = run_one(&name, &g, &topo, "geoKM", 0.05, 1).unwrap();
+        let ell = EllMatrix::from_graph(&g, 0.05);
+        let iters = [5usize, 9, 6];
+        let batch = run_solve_batch(
+            &ell,
+            &p,
+            &topo,
+            ExecBackend::Sim,
+            &iters,
+            0.0,
+            SolveOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(batch.len(), iters.len());
+        for (&it, (s, cg)) in iters.iter().zip(&batch) {
+            let (s1, cg1) = run_solve_prepared(
+                &ell,
+                &p,
+                &topo,
+                ExecBackend::Sim,
+                it,
+                0.0,
+                SolveOpts::default(),
+            )
+            .unwrap();
+            // Sharing one calibrated cluster model across the batch must
+            // not move a single bit of the CG arithmetic.
+            assert_eq!(cg.iterations, cg1.iterations);
+            assert_eq!(
+                cg.residual_norms.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                cg1.residual_norms.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                cg.x.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                cg1.x.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(s.iterations, s1.iterations);
+            assert_eq!(s.final_residual.to_bits(), s1.final_residual.to_bits());
+        }
     }
 
     #[test]

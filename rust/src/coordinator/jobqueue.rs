@@ -6,9 +6,10 @@
 //! atomic cursor and write results into their slot — no locks on the
 //! result path, results come back in job order regardless of scheduling.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Run `jobs` through `f` on `workers` threads; results in job order.
 /// Panics in `f` are propagated to the caller (fail fast, like the tests
@@ -67,6 +68,111 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|p| p.get().saturating_sub(1).max(1))
         .unwrap_or(1)
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer FIFO over a mutex + condvar:
+/// the admission queue of the serve loop. `push` never blocks — it
+/// *rejects* (returns `false`) when the queue is full or closed, which
+/// is exactly the admission-control contract; `pop` blocks until an item
+/// arrives or the queue is closed and drained. [`BoundedQueue::pop_group`]
+/// additionally drains a run of consecutive matching items in one
+/// critical section, the seam solve batching hangs off.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    inner: Mutex<QueueInner<T>>,
+    ready: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue bounded to `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Try to enqueue `item`. Returns `false` — dropping the item — when
+    /// the queue is at capacity or closed; never blocks the producer.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed || q.items.len() >= self.cap {
+            return false;
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Dequeue one item, blocking while the queue is open and empty.
+    /// Returns `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = q.items.pop_front() {
+                return Some(x);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+
+    /// Dequeue one item plus the run of *consecutive* front items that
+    /// `same(&group[0], next)` accepts, up to `max` total, all in one
+    /// critical section. Blocks like [`BoundedQueue::pop`] for the first
+    /// item; never blocks to grow the group (what is queued now is the
+    /// batch). Returns `None` once closed and drained.
+    pub fn pop_group<F>(&self, same: F, max: usize) -> Option<Vec<T>>
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let max = max.max(1);
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(first) = q.items.pop_front() {
+                let mut group = vec![first];
+                while group.len() < max {
+                    let Some(next) = q.items.front() else { break };
+                    if !same(&group[0], next) {
+                        break;
+                    }
+                    let next = q.items.pop_front().expect("front just observed");
+                    group.push(next);
+                }
+                return Some(group);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items still drain, new pushes are
+    /// rejected, and blocked consumers wake to observe the close.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Items currently queued (racy by nature; for tests and telemetry).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty (racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 #[cfg(test)]
@@ -191,5 +297,81 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed)
         });
         assert_eq!(count.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn bounded_queue_is_fifo() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_past_capacity_and_after_close() {
+        let q = BoundedQueue::new(2);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert!(!q.push(3), "push past cap must reject, not block");
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.push(3), "a pop frees a slot");
+        q.close();
+        assert!(!q.push(4), "closed queue rejects new items");
+        // Pending items still drain after close.
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_blocking_pop_wakes_on_push() {
+        let q = BoundedQueue::new(4);
+        std::thread::scope(|scope| {
+            let consumer = scope.spawn(|| q.pop());
+            // Give the consumer a moment to park, then feed it.
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            assert!(q.push(42));
+            assert_eq!(consumer.join().unwrap(), Some(42));
+            let drained = scope.spawn(|| q.pop());
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            q.close();
+            assert_eq!(drained.join().unwrap(), None, "close wakes parked consumers");
+        });
+    }
+
+    #[test]
+    fn pop_group_drains_consecutive_matching_items() {
+        let q = BoundedQueue::new(16);
+        // Runs of equal parity: [2, 4, 6, 1, 3, 8].
+        for x in [2, 4, 6, 1, 3, 8] {
+            assert!(q.push(x));
+        }
+        let same_parity = |a: &i32, b: &i32| a % 2 == b % 2;
+        assert_eq!(q.pop_group(same_parity, 8), Some(vec![2, 4, 6]));
+        assert_eq!(q.pop_group(same_parity, 8), Some(vec![1, 3]));
+        assert_eq!(q.pop_group(same_parity, 8), Some(vec![8]));
+        q.close();
+        assert_eq!(q.pop_group(same_parity, 8), None);
+    }
+
+    #[test]
+    fn pop_group_respects_the_batch_cap() {
+        let q = BoundedQueue::new(16);
+        for x in 0..6 {
+            assert!(q.push(x));
+        }
+        let any = |_: &i32, _: &i32| true;
+        assert_eq!(q.pop_group(any, 4), Some(vec![0, 1, 2, 3]));
+        assert_eq!(q.pop_group(any, 4), Some(vec![4, 5]));
+        // A zero cap clamps to single-item groups instead of looping.
+        assert!(q.push(9));
+        assert_eq!(q.pop_group(any, 0), Some(vec![9]));
     }
 }

@@ -8,12 +8,12 @@ pub mod serve;
 
 pub use experiment::{
     default_rhs, instance, relative_to, run_one, run_one_dist, run_one_dist_net, run_solve,
-    run_solve_opts, run_solve_prepared, Grid, RunResult, SolveResult,
+    run_solve_batch, run_solve_opts, run_solve_prepared, Grid, RunResult, SolveResult,
 };
-pub use jobqueue::{default_workers, run_jobs};
+pub use jobqueue::{default_workers, run_jobs, BoundedQueue};
 pub use serve::{
-    generate_trace, run_serve, PartitionService, Request, RequestKind, ServeConfig, ServeReport,
-    Tenant,
+    generate_trace, run_serve, ClientMode, PartitionService, Request, RequestKind, ServeConfig,
+    ServeReport, Tenant,
 };
 
 /// Crate version (used by the CLI banner).

@@ -18,6 +18,39 @@ use crate::util::json::{obj, Json};
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Which way "better" points for a kernel's pinned metric.
+///
+/// Latency-style metrics (ns/row) regress when they *grow*; rate-style
+/// metrics (goodput in req/s) regress when they *shrink*. The baseline
+/// entry's direction governs how `tools/bench_compare.py` reads a delta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Lower is better (latencies, ns/row). The historical default.
+    Lower,
+    /// Higher is better (throughput rates such as serve goodput).
+    Higher,
+}
+
+impl Direction {
+    /// The on-disk string (`"lower"` / `"higher"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Lower => "lower",
+            Direction::Higher => "higher",
+        }
+    }
+
+    /// Parse the on-disk string; unknown values read as `Lower` so old
+    /// snapshots (which predate the field) keep their meaning.
+    pub fn parse(s: &str) -> Direction {
+        if s == "higher" {
+            Direction::Higher
+        } else {
+            Direction::Lower
+        }
+    }
+}
+
 /// One measured kernel inside a snapshot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelEntry {
@@ -29,11 +62,14 @@ pub struct KernelEntry {
     pub median_ms: f64,
     /// Median time divided by rows, nanoseconds (the pinned metric —
     /// scale-independent enough to compare across quick/default runs of
-    /// the same machine).
+    /// the same machine). For `Direction::Higher` entries this slot
+    /// carries the rate itself (e.g. req/s) rather than a per-row time.
     pub ns_per_row: f64,
     /// Effective bandwidth: bytes the kernel streams per invocation
     /// divided by the median time, GB/s.
     pub gbs: f64,
+    /// Which way "better" points for the pinned metric.
+    pub direction: Direction,
 }
 
 /// Identity of the machine a snapshot was recorded on. Comparisons
@@ -106,6 +142,22 @@ impl BenchSnapshot {
             median_ms: median_secs * 1e3,
             ns_per_row: safe * 1e9 / n.max(1) as f64,
             gbs: bytes / safe / 1e9,
+            direction: Direction::Lower,
+        });
+    }
+
+    /// Append one rate-style entry (higher is better). The rate (e.g.
+    /// serve goodput in req/s) rides in the `ns_per_row` slot — the
+    /// pinned metric `bench_compare.py` diffs — with the time/bandwidth
+    /// fields zeroed because they have no meaning for a rate.
+    pub fn push_rate(&mut self, name: &str, n: usize, rate: f64) {
+        self.kernels.push(KernelEntry {
+            name: name.to_string(),
+            n,
+            median_ms: 0.0,
+            ns_per_row: rate,
+            gbs: 0.0,
+            direction: Direction::Higher,
         });
     }
 
@@ -135,6 +187,7 @@ impl BenchSnapshot {
                                 ("median_ms", Json::Num(k.median_ms)),
                                 ("ns_per_row", Json::Num(k.ns_per_row)),
                                 ("gbs", Json::Num(k.gbs)),
+                                ("direction", Json::Str(k.direction.name().to_string())),
                             ])
                         })
                         .collect(),
@@ -165,6 +218,13 @@ impl BenchSnapshot {
                         median_ms: num_of(k, "median_ms")?,
                         ns_per_row: num_of(k, "ns_per_row")?,
                         gbs: num_of(k, "gbs")?,
+                        // Tolerant: snapshots written before the field
+                        // existed read as lower-is-better.
+                        direction: k
+                            .get("direction")
+                            .and_then(Json::as_str)
+                            .map(Direction::parse)
+                            .unwrap_or(Direction::Lower),
                     })
                 })
                 .collect::<Result<Vec<_>>>()?,
@@ -239,6 +299,49 @@ mod tests {
         assert!((k.ns_per_row - 1000.0).abs() < 1e-9, "{}", k.ns_per_row);
         assert!((k.gbs - 8.0).abs() < 1e-9, "{}", k.gbs);
         assert!((k.median_ms - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_defaults_to_lower_is_better() {
+        let mut s = BenchSnapshot::new("spmv");
+        s.push("k", 1000, 1e-3, 8e6);
+        assert_eq!(s.kernels[0].direction, Direction::Lower);
+    }
+
+    #[test]
+    fn push_rate_marks_higher_is_better_and_pins_the_rate() {
+        let mut s = BenchSnapshot::new("serve");
+        s.push_rate("goodput@500", 800, 498.5);
+        let k = &s.kernels[0];
+        assert_eq!(k.direction, Direction::Higher);
+        assert!((k.ns_per_row - 498.5).abs() < 1e-12);
+        assert_eq!(k.median_ms, 0.0);
+        assert_eq!(k.gbs, 0.0);
+    }
+
+    #[test]
+    fn direction_survives_the_json_round_trip() {
+        let mut s = BenchSnapshot::new("serve");
+        s.push("lat", 800, 1e-3, 0.0);
+        s.push_rate("goodput@500", 800, 498.5);
+        let back = BenchSnapshot::from_json(&Json::parse(&s.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.kernels[0].direction, Direction::Lower);
+        assert_eq!(back.kernels[1].direction, Direction::Higher);
+    }
+
+    #[test]
+    fn missing_direction_reads_as_lower() {
+        // A hand-built kernel object without the field — the pre-field
+        // on-disk shape.
+        let text = r#"{"bench":"spmv","bootstrap":false,"scale":"quick",
+            "fingerprint":{"cpu":"x","threads":1,"os":"linux/x86_64"},
+            "kernels":[{"name":"k","n":10,"median_ms":1.0,
+                        "ns_per_row":5.0,"gbs":2.0}]}"#;
+        let back = BenchSnapshot::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(back.kernels[0].direction, Direction::Lower);
+        assert_eq!(Direction::parse("weird"), Direction::Lower);
+        assert_eq!(Direction::parse("higher"), Direction::Higher);
     }
 
     #[test]

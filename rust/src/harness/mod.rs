@@ -8,7 +8,7 @@
 //!   plus a `dynamic` axis for multi-epoch repartitioning traces);
 //!   [`MatrixKind`](scenario::MatrixKind) registers the named sweeps
 //!   (`smoke`, `paper-small`, `paper-full`, `dynamic`, `partdist`,
-//!   `serve`, `apps`, `scale`) reachable via
+//!   `serve`, `sweep`, `apps`, `scale`) reachable via
 //!   `hetpart harness --matrix <name>`; the `scale` matrix prices
 //!   thousand-rank virtual clusters (flat vs hierarchical collectives ×
 //!   fat-tree/torus networks) through the analytic
@@ -37,7 +37,7 @@ pub mod golden;
 pub mod runner;
 pub mod scenario;
 
-pub use bench_snapshot::{BenchSnapshot, Fingerprint, KernelEntry};
+pub use bench_snapshot::{BenchSnapshot, Direction, Fingerprint, KernelEntry};
 pub use golden::{compare, GoldenFile, GoldenMetrics, GoldenReport, Tolerances};
 pub use runner::{
     run_matrix, run_scenario, summarize, write_artifacts, AppSummary, DynamicSummary,

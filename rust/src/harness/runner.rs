@@ -153,6 +153,11 @@ pub struct ServeSummary {
     pub warm_starts: usize,
     /// Mean migrated-weight fraction over warm repartitions.
     pub mean_migrated_frac: f64,
+    /// Offered load in requests/second (the sweep's x-axis).
+    pub offered_rate: f64,
+    /// Completions per second of trace time (the sweep's y-axis; flat
+    /// past the saturation knee while `latency_p99_ms` grows).
+    pub goodput: f64,
 }
 
 /// Aggregates of a dynamic (multi-epoch) scenario. The per-epoch quality
@@ -380,6 +385,8 @@ fn run_serve_axis(s: &Scenario, spec: &ServeSpec) -> Result<ServeSummary> {
         cache_hit_rate: rep.cache_hit_rate,
         warm_starts: rep.warm_starts,
         mean_migrated_frac: rep.mean_migrated_frac,
+        offered_rate: rep.offered_rate,
+        goodput: rep.goodput,
     })
 }
 
@@ -562,8 +569,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
         "maxCommVol", "totalCommVol", "imbalance", "ldhtObj", "ldhtRatio", "timePart(s)",
         "partBackend", "partRanks", "partSecs(ms)", "simT/iter(ms)", "residual", "overlap",
         "layout", "commHidden(ms)", "ovEff", "dynamic", "epochs", "migWeight", "migW/naive",
-        "objVsScratch", "reqs", "reqPerSec", "latP50(ms)", "latP95(ms)", "latP99(ms)",
-        "cacheHit", "rejected", "app", "aggMode", "flushes", "aggBytes", "maxLinkBytes",
+        "objVsScratch", "reqs", "reqPerSec", "offeredRate", "goodput", "latP50(ms)",
+        "latP95(ms)", "latP99(ms)", "cacheHit", "rejected", "app", "aggMode", "flushes", "aggBytes", "maxLinkBytes",
         "bottleneckVol", "appSecs(ms)", "net", "scaleRanks", "sched", "scaleIter(ms)",
         "scaleVsFlat",
     ]);
@@ -593,9 +600,11 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 },
             ),
         };
-        let (reqs, req_per_sec, lat_p50, lat_p95, lat_p99, cache_hit, rejected) =
+        let (reqs, req_per_sec, offered_rate, goodput, lat_p50, lat_p95, lat_p99, cache_hit, rejected) =
             match &r.serve {
                 None => (
+                    "-".to_string(),
+                    "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
                     "-".to_string(),
@@ -607,6 +616,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
                 Some(v) => (
                     v.offered.to_string(),
                     format!("{:.1}", v.req_per_sec),
+                    format!("{:.1}", v.offered_rate),
+                    format!("{:.1}", v.goodput),
                     format!("{:.3}", v.latency_p50_ms),
                     format!("{:.3}", v.latency_p95_ms),
                     format!("{:.3}", v.latency_p99_ms),
@@ -698,6 +709,8 @@ pub fn runs_table(results: &[ScenarioResult]) -> Table {
             obj_vs,
             reqs,
             req_per_sec,
+            offered_rate,
+            goodput,
             lat_p50,
             lat_p95,
             lat_p99,
@@ -830,6 +843,8 @@ pub fn result_json(r: &ScenarioResult) -> Json {
                     ("cache_hit_rate", Json::Num(v.cache_hit_rate)),
                     ("warm_starts", Json::Num(v.warm_starts as f64)),
                     ("mean_migrated_frac", Json::Num(v.mean_migrated_frac)),
+                    ("offered_rate", Json::Num(v.offered_rate)),
+                    ("goodput", Json::Num(v.goodput)),
                 ]),
             },
         ),
@@ -1118,15 +1133,25 @@ mod tests {
         assert!(v.latency_p50_ms <= v.latency_p99_ms);
         // Quality columns still come from the one-shot pipeline.
         assert!(ok[0].cut > 0.0);
+        // The sweep columns: offered rate echoes the spec's λ, goodput is
+        // completions over trace time.
+        assert_eq!(v.offered_rate, 40.0);
+        assert!(v.goodput > 0.0);
         // The table renders the serve columns...
         let table = runs_table(&ok);
         let ci = table.header.iter().position(|h| h == "cacheHit").unwrap();
         assert_ne!(table.rows[0][ci], "-");
+        let gi = table.header.iter().position(|h| h == "goodput").unwrap();
+        assert_ne!(table.rows[0][gi], "-");
+        let oi = table.header.iter().position(|h| h == "offeredRate").unwrap();
+        assert_eq!(table.rows[0][oi], "40.0");
         // ...and the JSON carries the serve block.
         let back = Json::parse(&result_json(&ok[0]).render()).unwrap();
         let sj = back.get("serve").unwrap();
         assert!(sj.get("req_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(sj.get("cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(sj.get("goodput").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(sj.get("offered_rate").unwrap().as_f64().unwrap(), 40.0);
         // Static results leave the column empty.
         let plain = tiny_scenarios();
         let (ok2, _) = run_matrix(&plain[..1].to_vec(), 1);
@@ -1321,5 +1346,62 @@ mod tests {
         let table = runs_table(&ok);
         assert_eq!(table.rows.len(), 1);
         assert!(table.rows[0].iter().any(|c| c == "refine-front"));
+    }
+
+    #[test]
+    fn runs_table_stays_rectangular_across_every_axis() {
+        // One scenario per axis kind (static, dynamic, serve, sweep-style
+        // serve, app, scale): every new axis adds columns to runs.csv,
+        // and a header/row length mismatch silently shears the CSV. Pin
+        // header width == row width for all of them at once.
+        use crate::exec::AggMode;
+        let base = &tiny_scenarios()[0];
+        let mut dynamic = base.clone();
+        dynamic.family = Family::Refined2d;
+        dynamic.algo = "diffusion".to_string();
+        dynamic.dynamic = DynamicKind::RefineFront;
+        dynamic.epochs = 2;
+        let mut serve = base.clone();
+        serve.serve = Some(ServeSpec {
+            duration_secs: 0.5,
+            arrival_rate: 40.0,
+            queue_cap: 16,
+            servers: 2,
+        });
+        // The sweep rows are serve rows on a single server pushed past
+        // capacity — structurally the shape `--matrix sweep` emits.
+        let mut sweep = base.clone();
+        sweep.serve = Some(ServeSpec {
+            duration_secs: 0.5,
+            arrival_rate: 400.0,
+            queue_cap: 16,
+            servers: 1,
+        });
+        let mut app = base.clone();
+        app.app = Some(AppSpec {
+            kernel: "bfs".into(),
+            agg: AggMode::Agg,
+            backend: ExecBackend::Sim,
+            ranks: 2,
+        });
+        let mut scale = base.clone();
+        scale.net = NetKind::FatTree;
+        scale.scale = Some(ScaleSpec { ranks: 64, hier: true });
+        let scenarios = vec![base.clone(), dynamic, serve, sweep, app, scale];
+        let (ok, failed) = run_matrix(&scenarios, 1);
+        assert!(failed.is_empty(), "{failed:?}");
+        assert_eq!(ok.len(), scenarios.len());
+        let table = runs_table(&ok);
+        assert_eq!(table.rows.len(), scenarios.len());
+        for (i, row) in table.rows.iter().enumerate() {
+            assert_eq!(
+                row.len(),
+                table.header.len(),
+                "row {i} ({}) width {} != header width {}",
+                row[0],
+                row.len(),
+                table.header.len()
+            );
+        }
     }
 }

@@ -327,6 +327,11 @@ pub enum MatrixKind {
     /// scaling chapter the paper never had (`scaleRanks`/`sched`/
     /// `scaleIter(ms)`/`scaleVsFlat` columns).
     Scale,
+    /// The saturation sweep: one serving cell stepped across ~6 offered
+    /// arrival rates on the virtual-time backend — `offeredRate` /
+    /// `goodput` / `latP99(ms)` become harness columns, so the knee
+    /// (goodput flattens while p99 grows) is readable from one CSV.
+    Sweep,
 }
 
 impl MatrixKind {
@@ -341,6 +346,7 @@ impl MatrixKind {
             MatrixKind::Serve => "serve",
             MatrixKind::Apps => "apps",
             MatrixKind::Scale => "scale",
+            MatrixKind::Sweep => "sweep",
         }
     }
 
@@ -355,6 +361,7 @@ impl MatrixKind {
             "serve" | "serving" => MatrixKind::Serve,
             "apps" | "app" => MatrixKind::Apps,
             "scale" | "scaling" => MatrixKind::Scale,
+            "sweep" | "saturation" => MatrixKind::Sweep,
             _ => return None,
         })
     }
@@ -513,6 +520,41 @@ impl MatrixKind {
                             scale: None,
                         });
                     }
+                }
+            }
+            MatrixKind::Sweep => {
+                // One serving cell, offered load stepped across the
+                // saturation knee on a single virtual server: early rates
+                // are far below capacity (goodput tracks offeredRate),
+                // the top rates are past it (goodput flattens at
+                // capacity, latP99 and rejections grow). Deterministic
+                // like the serve matrix — same bits every run.
+                for rate in [250.0f64, 500.0, 1000.0, 2000.0, 4000.0, 8000.0] {
+                    out.push(Scenario {
+                        family: Family::Tri2d,
+                        n: 800,
+                        k: 8,
+                        topo: TopoPreset::Uniform,
+                        algo: "geoKM".to_string(),
+                        epsilon: EPS,
+                        seed: SEED,
+                        solve_iters: 0,
+                        dynamic: DynamicKind::None,
+                        epochs: 0,
+                        overlap: false,
+                        part_backend: None,
+                        part_ranks: 0,
+                        layout: SpmvLayout::Ell,
+                        serve: Some(ServeSpec {
+                            duration_secs: 2.0,
+                            arrival_rate: rate,
+                            queue_cap: 32,
+                            servers: 1,
+                        }),
+                        app: None,
+                        net: NetKind::Flat,
+                        scale: None,
+                    });
                 }
             }
             MatrixKind::Apps => {
@@ -699,10 +741,38 @@ mod tests {
             MatrixKind::Serve,
             MatrixKind::Apps,
             MatrixKind::Scale,
+            MatrixKind::Sweep,
         ] {
             assert_eq!(MatrixKind::parse(m.name()), Some(m));
         }
+        assert_eq!(MatrixKind::parse("saturation"), Some(MatrixKind::Sweep));
         assert!(MatrixKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn sweep_matrix_shape() {
+        let s = MatrixKind::Sweep.scenarios();
+        assert_eq!(s.len(), 6);
+        let rates: Vec<f64> =
+            s.iter().map(|x| x.serve.expect("sweep rows carry a ServeSpec").arrival_rate).collect();
+        // The offered-load axis must be strictly monotone so the knee is
+        // readable straight down the CSV.
+        for w in rates.windows(2) {
+            assert!(w[0] < w[1], "offered load not monotone: {rates:?}");
+        }
+        // The top rate must sit well past a single server's capacity so
+        // the sweep actually saturates.
+        assert!(rates[rates.len() - 1] >= 16.0 * rates[0]);
+        for x in &s {
+            let spec = x.serve.unwrap();
+            assert_eq!(spec.servers, 1, "saturation is measured against one server");
+            assert!(spec.duration_secs > 0.0);
+        }
+        // IDs unique (the -serveD…R… suffix disambiguates rates).
+        let mut ids: Vec<String> = s.iter().map(|x| x.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), s.len());
     }
 
     #[test]

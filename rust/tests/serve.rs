@@ -8,7 +8,8 @@
 //! trace end to end with a positive throughput and cache hit rate.
 
 use hetpart::coordinator::serve::{
-    generate_trace, run_serve, PartitionService, Request, RequestKind, ServeConfig, Tenant,
+    generate_trace, run_serve, ClientMode, PartitionService, Request, RequestKind, ServeConfig,
+    Tenant,
 };
 use hetpart::coordinator::run_one;
 use hetpart::exec::ExecBackend;
@@ -132,6 +133,59 @@ fn sim_backend_is_deterministic_down_to_the_summary_bits() {
     assert!(a.warm_starts > 0, "trace mixed in no repartitions");
     assert!(a.latency_p50_ms <= a.latency_p95_ms);
     assert!(a.latency_p95_ms <= a.latency_p99_ms);
+}
+
+#[test]
+fn concurrent_cold_requests_coalesce_into_a_single_build() {
+    // Eight threads hammer the same cold fingerprint through the public
+    // service API; single-flight must run exactly one build and hand
+    // every caller the same bits.
+    let t = tenant();
+    let service = PartitionService::new(1);
+    let barrier = std::sync::Barrier::new(8);
+    let outs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let service = &service;
+                let barrier = &barrier;
+                let t = t.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    service.handle(&request(i, &t, RequestKind::Partition, 0.0)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(service.builds(), 1, "single-flight must run exactly one build");
+    let reference = service.cached_partition(&t).unwrap();
+    let (name, g) = hetpart::coordinator::instance(t.family, t.n, t.graph_seed);
+    let topo = t.topology();
+    let (_r, fresh) = run_one(&name, &g, &topo, &t.algo, t.epsilon, t.graph_seed).unwrap();
+    assert_eq!(reference.assignment, fresh.assignment, "coalesced build broke bit-identity");
+    // Every caller completed; exactly one carried the build, the rest
+    // were either coalesced followers or late cache hits.
+    assert_eq!(outs.len(), 8);
+    let built = outs.iter().filter(|o| !o.hit && !o.coalesced).count();
+    assert_eq!(built, 1, "exactly one caller must report the build");
+}
+
+#[test]
+fn closed_loop_threads_backend_sustains_its_clients() {
+    // A short closed-loop run: 3 clients issue back-to-back, nothing is
+    // rejected (closed loops self-throttle), and the report carries the
+    // goodput/offered-rate columns.
+    let mut cfg = ServeConfig::new(tenant(), 0.3, 50.0, 1, ExecBackend::Threads);
+    cfg.servers = 2;
+    cfg.client_mode = ClientMode::Closed { clients: 3 };
+    let rep = run_serve(&cfg).unwrap();
+    assert_eq!(rep.backend, "threads");
+    assert_eq!(rep.clients, 3);
+    assert_eq!(rep.rejected, 0, "closed-loop clients must never be rejected");
+    assert!(rep.completed > 0);
+    assert!(rep.goodput > 0.0);
+    assert!(rep.offered_rate > 0.0);
+    assert_eq!(rep.builds + rep.coalesced + rep.hits, rep.completed);
 }
 
 #[test]

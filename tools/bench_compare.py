@@ -49,6 +49,18 @@ def ns_per_row(entry):
     return float(v)
 
 
+def direction(entry):
+    """Which way "better" points for the entry's pinned metric.
+
+    ``"higher"`` marks rate-style entries (e.g. serve goodput in req/s,
+    stored in the ns_per_row slot); anything else — including the
+    missing field on snapshots that predate it — reads as ``"lower"``,
+    the historical latency semantics. The *baseline* entry's direction
+    governs a comparison.
+    """
+    return "higher" if entry.get("direction") == "higher" else "lower"
+
+
 def compare_one(base, fresh, tolerance):
     """Compare one snapshot pair; returns (regressions, notes)."""
     regressions, notes = [], []
@@ -76,13 +88,19 @@ def compare_one(base, fresh, tolerance):
             )
             continue
         delta = (fresh_ns - base_ns) / base_ns
+        higher_is_better = direction(bk[name]) == "higher"
+        unit = "(rate, higher is better)" if higher_is_better else "ns/row"
         line = (
-            f"kernel '{name}': {base_ns:.1f} -> {fresh_ns:.1f} ns/row "
+            f"kernel '{name}': {base_ns:.1f} -> {fresh_ns:.1f} {unit} "
             f"({delta:+.1%}, tolerance ±{tolerance:.0%})"
         )
-        if delta > tolerance:
+        # A grown latency regresses; a shrunk rate regresses. The
+        # opposite-sign excursion is an improvement worth refreshing.
+        worse = delta < -tolerance if higher_is_better else delta > tolerance
+        better = delta > tolerance if higher_is_better else delta < -tolerance
+        if worse:
             regressions.append("REGRESSION " + line)
-        elif delta < -tolerance:
+        elif better:
             notes.append("faster " + line + " — consider refreshing the baseline")
         else:
             notes.append("ok " + line)

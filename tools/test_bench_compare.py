@@ -94,6 +94,44 @@ class CompareOneGuards(unittest.TestCase):
         self.assertEqual(regressions, [])
         self.assertTrue(any("not in fresh run" in n for n in notes), notes)
 
+    def test_higher_is_better_rate_drop_is_a_regression(self):
+        # A goodput entry (direction "higher") that shrinks regresses.
+        base = snap([{"name": "goodput@500", "ns_per_row": 500.0, "direction": "higher"}])
+        fresh = snap([{"name": "goodput@500", "ns_per_row": 200.0, "direction": "higher"}])
+        regressions, _ = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(len(regressions), 1)
+        self.assertIn("REGRESSION", regressions[0])
+        self.assertIn("higher is better", regressions[0])
+
+    def test_higher_is_better_rate_gain_is_an_improvement_note(self):
+        base = snap([{"name": "goodput@500", "ns_per_row": 500.0, "direction": "higher"}])
+        fresh = snap([{"name": "goodput@500", "ns_per_row": 900.0, "direction": "higher"}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any("refreshing the baseline" in n for n in notes), notes)
+
+    def test_higher_is_better_within_tolerance_is_ok(self):
+        base = snap([{"name": "goodput@500", "ns_per_row": 500.0, "direction": "higher"}])
+        fresh = snap([{"name": "goodput@500", "ns_per_row": 480.0, "direction": "higher"}])
+        regressions, notes = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(regressions, [])
+        self.assertTrue(any(n.startswith("ok ") for n in notes), notes)
+
+    def test_baseline_direction_governs(self):
+        # Only the committed baseline says which way is better — a fresh
+        # entry claiming "higher" against a latency baseline still uses
+        # latency semantics.
+        base = snap([{"name": "k", "ns_per_row": 100.0}])
+        fresh = snap([{"name": "k", "ns_per_row": 300.0, "direction": "higher"}])
+        regressions, _ = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(len(regressions), 1)
+
+    def test_unknown_direction_reads_as_lower(self):
+        base = snap([{"name": "k", "ns_per_row": 100.0, "direction": "sideways"}])
+        fresh = snap([{"name": "k", "ns_per_row": 300.0}])
+        regressions, _ = bench_compare.compare_one(base, fresh, 0.25)
+        self.assertEqual(len(regressions), 1)
+
     def test_unnamed_kernel_entries_are_ignored(self):
         base = snap([{"ns_per_row": 5.0}])
         fresh = snap([{"ns_per_row": 6.0}])
